@@ -1,0 +1,47 @@
+//! Quickstart: profile the 5-layer CNN family on a simulated Jetson
+//! Xavier, then estimate the training energy of unseen variants and
+//! compare against the device's measured consumption.
+//!
+//!     cargo run --release --example quickstart
+
+use thor::exp::measured_energy;
+use thor::model::zoo;
+use thor::simdevice::{devices, Device};
+use thor::thor::{Thor, ThorConfig};
+use thor::util::stats::mape;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a simulated device (stand-in for the paper's physical Jetson)
+    let mut dev = Device::new(devices::xavier(), 42);
+
+    // 2. profile the model family once (active-learning GP fitting) —
+    //    paper-scale budgets; ThorConfig::quick() exists for smoke tests
+    let mut thor = Thor::new(ThorConfig { iterations: 200, ..ThorConfig::default() });
+    let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
+    let report = thor.profile(&mut dev, &reference);
+    println!(
+        "profiled {} layer families with {} measurements ({:.0} simulated device-seconds)",
+        report.families.len(),
+        report.total_points(),
+        report.device_seconds()
+    );
+
+    // 3. estimate unseen architectures — no further device access needed
+    let mut actual = Vec::new();
+    let mut est = Vec::new();
+    for ch in [[16usize, 32, 64, 128], [5, 50, 100, 20], [30, 60, 120, 250], [2, 4, 8, 16]] {
+        let g = zoo::cnn5(&ch, 28, 10);
+        let e = thor.estimate("xavier", &g)?;
+        let a = measured_energy(&mut dev, &g, 200, 1);
+        println!(
+            "cnn5{ch:?}: estimated {:.4e} J/iter, measured {:.4e} J/iter ({:+.1}%)",
+            e.energy_per_iter,
+            a,
+            100.0 * (e.energy_per_iter - a) / a
+        );
+        actual.push(a);
+        est.push(e.energy_per_iter);
+    }
+    println!("MAPE over the 4 unseen variants: {:.1}%", mape(&actual, &est));
+    Ok(())
+}

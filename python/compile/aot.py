@@ -1,0 +1,104 @@
+"""AOT compile path: lower L2 graphs (which embed the L1 Pallas kernels)
+to HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT the proto bytes:
+jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`).  The HLO *text* parser reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Lowered with ``return_tuple=True``; the rust side unwraps the tuple.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (the Makefile runs this
+once; python never executes on the estimation path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all() -> dict:
+    """Lower every artifact; returns name -> (hlo_text, spec dict)."""
+    arts = {}
+
+    for dim in (1, 2):
+        lowered = jax.jit(model.gp_posterior_fn).lower(*model.example_args_posterior(dim))
+        arts[f"gp_posterior_d{dim}"] = (
+            to_hlo_text(lowered),
+            {
+                "kind": "gp_posterior",
+                "dim": dim,
+                "n_inducing": model.N_INDUCING,
+                "n_queries": model.N_QUERIES,
+                "inputs": ["xq", "xi", "alpha", "kinv", "lengthscale", "variance"],
+                "outputs": ["mean", "variance"],
+            },
+        )
+
+    lowered = jax.jit(model.cnn_train_step).lower(*model.example_args_train())
+    arts["cnn_train_step"] = (
+        to_hlo_text(lowered),
+        {
+            "kind": "train_step",
+            "batch": model.BATCH,
+            "img": model.IMG,
+            "c1": model.C1,
+            "c2": model.C2,
+            "n_classes": model.N_CLASSES,
+            "inputs": ["x", "y", "w1", "b1", "w2", "b2", "wf", "bf", "m1", "m2", "lr"],
+            "outputs": ["w1", "b1", "w2", "b2", "wf", "bf", "loss", "acc"],
+        },
+    )
+
+    lowered = jax.jit(model.cnn_eval).lower(*model.example_args_eval())
+    arts["cnn_eval"] = (
+        to_hlo_text(lowered),
+        {
+            "kind": "eval",
+            "batch": model.BATCH,
+            "img": model.IMG,
+            "c1": model.C1,
+            "c2": model.C2,
+            "inputs": ["x", "y", "w1", "b1", "w2", "b2", "wf", "bf", "m1", "m2"],
+            "outputs": ["loss", "acc"],
+        },
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, (text, spec) in lower_all().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {**spec, "file": f"{name}.hlo.txt", "bytes": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

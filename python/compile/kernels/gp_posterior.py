@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: fused GP posterior (mean + variance) — the estimation
+hot path.
+
+One grid step handles a (TILE_Q, D) block of query points against the FULL
+(padded) inducing set: the whole (N, D) inducing matrix, the (N,) alpha
+vector and the (N, N) precision matrix stay resident in VMEM across the
+grid (N ≤ 128 → K⁻¹ is ≤ 64 KiB f32), so the kernel is a single pass over
+HBM for the queries:
+
+    kstar = matern52(q_tile, Xi)              (TILE_Q, N)   VPU + MXU
+    mean  = kstar @ alpha                     (TILE_Q,)     MXU
+    tmp   = kstar @ Kinv                      (TILE_Q, N)   MXU
+    var   = sigma2 - rowsum(tmp * kstar)      (TILE_Q,)     VPU
+
+Fusing mean and variance into one kernel means kstar is computed once and
+never round-trips to HBM — this is the paper-relevant hot spot because the
+pruning search (Fig 13) and the end-to-end sweeps (Fig 8) evaluate 10⁴-10⁵
+candidate layer configurations per run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 5.0 ** 0.5
+
+TILE_Q = 128
+
+
+def _posterior_kernel(xq_ref, xi_ref, alpha_ref, kinv_ref, ls_ref, var_ref,
+                      mean_ref, varo_ref):
+    xq = xq_ref[...]                                 # (TQ, D)
+    xi = xi_ref[...]                                 # (N, D)
+    ls = ls_ref[0]
+    sigma2 = var_ref[0]
+    # -- Matérn-5/2 cross-covariance tile (same closed form as matern.py) --
+    q2 = jnp.sum(xq * xq, axis=-1, keepdims=True)
+    i2 = jnp.sum(xi * xi, axis=-1, keepdims=True).T
+    cross = jax.lax.dot_general(
+        xq, xi, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(q2 + i2 - 2.0 * cross, 0.0)
+    r = jnp.sqrt(d2 + 1e-12)
+    s = SQRT5 * r / ls
+    kstar = sigma2 * (1.0 + s + s * s / 3.0) * jnp.exp(-s)   # (TQ, N)
+    # -- fused posterior --
+    mean_ref[...] = jax.lax.dot_general(
+        kstar, alpha_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    tmp = jax.lax.dot_general(
+        kstar, kinv_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    varo_ref[...] = sigma2 - jnp.sum(tmp * kstar, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q",))
+def gp_posterior(xq, xi, alpha, kinv, lengthscale, variance, *, tile_q: int = TILE_Q):
+    """Posterior mean/var at `xq` (Q, D) given inducing set `xi` (N, D),
+    `alpha = K⁻¹y` (N,) and `kinv = K⁻¹` (N, N).  Q must be a multiple of
+    tile_q.  Padded inducing rows must carry zero alpha and zero kinv
+    rows/cols (see ref.gp_posterior)."""
+    q, d = xq.shape
+    n, _ = xi.shape
+    assert q % tile_q == 0, (q, tile_q)
+    ls = jnp.asarray(lengthscale, jnp.float32).reshape(1)
+    var = jnp.asarray(variance, jnp.float32).reshape(1)
+    grid = (q // tile_q,)
+    return pl.pallas_call(
+        _posterior_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),      # resident
+            pl.BlockSpec((n,), lambda i: (0,)),          # resident
+            pl.BlockSpec((n, n), lambda i: (0, 0)),      # resident
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_q,), lambda i: (i,)),
+            pl.BlockSpec((tile_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+        ],
+        interpret=True,
+    )(xq.astype(jnp.float32), xi.astype(jnp.float32),
+      alpha.astype(jnp.float32), kinv.astype(jnp.float32), ls, var)

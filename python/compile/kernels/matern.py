@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: tiled Matérn-5/2 cross-covariance matrix.
+
+TPU mental model (see DESIGN.md §Hardware-Adaptation): each grid step keeps
+one (TILE_M, D) block of queries and one (TILE_N, D) block of inducing
+points in VMEM, forms the (TILE_M, TILE_N) squared-distance tile through an
+MXU-shaped `x @ z.T` plus rank-1 row/col corrections, and applies the
+closed-form Matérn-5/2 response elementwise on the VPU.  The BlockSpec grid
+is the HBM↔VMEM schedule a CUDA implementation would express with
+threadblocks.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+runs unmodified.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT5 = 5.0 ** 0.5
+
+# Default tile sizes.  D (feature dim) is always tiny (1 or 2 here), so the
+# VMEM footprint per grid step is TILE_M*D + TILE_N*D + TILE_M*TILE_N f32
+# ≈ 64*64*4 B = 16 KiB for the default tiles — far below the ~16 MiB VMEM
+# budget, leaving room for double buffering (see EXPERIMENTS.md §Perf for
+# the sweep).
+TILE_M = 64
+TILE_N = 64
+
+
+def _matern_kernel(x_ref, z_ref, ls_ref, var_ref, o_ref):
+    x = x_ref[...]                                   # (TM, D)
+    z = z_ref[...]                                   # (TN, D)
+    ls = ls_ref[0]
+    var = var_ref[0]
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)      # (TM, 1)
+    z2 = jnp.sum(z * z, axis=-1, keepdims=True).T    # (1, TN)
+    # MXU-shaped cross term; accumulate in f32 regardless of input dtype.
+    cross = jax.lax.dot_general(
+        x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(x2 + z2 - 2.0 * cross, 0.0)
+    r = jnp.sqrt(d2 + 1e-12)
+    s = SQRT5 * r / ls
+    o_ref[...] = (var * (1.0 + s + s * s / 3.0) * jnp.exp(-s)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def matern52(x, z, lengthscale, variance, *, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Matérn-5/2 cross-covariance k(x, z), shapes (M, D), (N, D) -> (M, N).
+
+    M and N must be multiples of the tile sizes (aot.py pads; the pytest
+    sweep covers exact and padded shapes through the public wrapper).
+    """
+    m, d = x.shape
+    n, _ = z.shape
+    assert m % tile_m == 0 and n % tile_n == 0, (m, n, tile_m, tile_n)
+    ls = jnp.asarray(lengthscale, jnp.float32).reshape(1)
+    var = jnp.asarray(variance, jnp.float32).reshape(1)
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        _matern_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), z.astype(jnp.float32), ls, var)
+
+
+def matern52_padded(x, z, lengthscale, variance):
+    """Convenience wrapper that pads M/N up to tile multiples and slices back."""
+    m, n = x.shape[0], z.shape[0]
+    mp = -(-m // TILE_M) * TILE_M
+    np_ = -(-n // TILE_N) * TILE_N
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    zp = jnp.pad(z, ((0, np_ - n), (0, 0)))
+    return matern52(xp, zp, lengthscale, variance)[:m, :n]

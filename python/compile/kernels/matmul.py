@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+This is the compute hot-spot of the L2 train step (conv layers are lowered
+to im2col matmuls, FC layers are matmuls).  The backward pass reuses the
+same kernel on transposed operands (dA = dY @ Bᵀ, dB = Aᵀ @ dY), so the
+whole train step — forward AND backward — runs through Pallas.
+
+The kernel keeps an f32 accumulator tile in VMEM scratch across the K
+grid dimension (classic MXU schedule: output-stationary, K-innermost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _pad_dim(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# The f32 accumulator lives in the output ref (output-stationary: the same
+# (TM, TN) output tile is revisited across the K grid dimension, which
+# Pallas keeps resident in VMEM between consecutive grid steps).
+def _matmul_accum_out(a, b, tm, tn, tk):
+    m, k = a.shape
+    _, n = b.shape
+    grid = (m // tm, n // tn, k // tk)
+    k_steps = grid[2]
+
+    def kernel(a_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jax.lax.dot_general(
+            a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((tk, tn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """`a @ b` through the Pallas tile kernel, any (M, K) x (K, N) f32."""
+    return _matmul_impl(a, b)
+
+
+def _matmul_impl(a, b):
+    m, k = a.shape
+    _, n = b.shape
+    tm = min(TILE_M, -(-m // 8) * 8 if m < TILE_M else TILE_M)
+    tn = min(TILE_N, -(-n // 8) * 8 if n < TILE_N else TILE_N)
+    tk = min(TILE_K, -(-k // 8) * 8 if k < TILE_K else TILE_K)
+    ap = _pad_dim(_pad_dim(a.astype(jnp.float32), tm, 0), tk, 1)
+    bp = _pad_dim(_pad_dim(b.astype(jnp.float32), tk, 0), tn, 1)
+    out = _matmul_accum_out(ap, bp, tm, tn, tk)
+    return out[:m, :n]
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = _matmul_impl(g, b.T)
+    db = _matmul_impl(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

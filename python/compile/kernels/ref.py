@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+asserts `assert_allclose(pallas(...), ref(...))` across hypothesis-driven
+shape/parameter sweeps.  These oracles are also what `rust/src/gp` is
+validated against (the rust integration tests reproduce the same closed
+forms and the runtime cross-check compares artifact outputs to them).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SQRT5 = 5.0 ** 0.5
+
+
+def sq_dists(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared Euclidean distances, (M, D) x (N, D) -> (M, N)."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (M, 1)
+    z2 = jnp.sum(z * z, axis=-1, keepdims=True).T        # (1, N)
+    d2 = x2 + z2 - 2.0 * (x @ z.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def matern52(x: jnp.ndarray, z: jnp.ndarray, lengthscale, variance) -> jnp.ndarray:
+    """Matérn ν=5/2 cross-covariance (closed form, no Bessel needed).
+
+    k(r) = σ² (1 + √5 r/ℓ + 5 r²/(3ℓ²)) exp(−√5 r/ℓ)
+    """
+    r = jnp.sqrt(sq_dists(x, z) + 1e-12)
+    s = SQRT5 * r / lengthscale
+    return variance * (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+
+
+def rbf(x: jnp.ndarray, z: jnp.ndarray, lengthscale, variance) -> jnp.ndarray:
+    """Squared-exponential kernel — used in the A15 kernel ablation."""
+    return variance * jnp.exp(-0.5 * sq_dists(x, z) / (lengthscale * lengthscale))
+
+
+def gp_posterior(xq, xi, alpha, kinv, lengthscale, variance):
+    """GP posterior mean and variance at query points.
+
+    mean(q) = k(q, Xi) @ alpha,   alpha = K⁻¹ y
+    var(q)  = σ² − k(q, Xi) @ K⁻¹ @ k(q, Xi)ᵀ   (diagonal only)
+
+    Padding convention: rows of `xi` beyond the real inducing set must come
+    with zero `alpha` entries and zero `kinv` rows/columns, which leaves
+    both mean and variance untouched.
+    """
+    kstar = matern52(xq, xi, lengthscale, variance)      # (Q, N)
+    mean = kstar @ alpha                                 # (Q,)
+    tmp = kstar @ kinv                                   # (Q, N)
+    var = variance - jnp.sum(tmp * kstar, axis=-1)       # (Q,)
+    return mean, var
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a @ b

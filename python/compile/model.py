@@ -1,0 +1,162 @@
+"""L2: JAX compute graphs, AOT-lowered to HLO text by aot.py.
+
+Two families:
+
+* ``gp_posterior_fn`` — the estimation hot path: batched GP posterior
+  (mean, variance) over a padded query block, backed by the fused L1
+  Pallas kernel (`kernels.gp_posterior`).  The rust coordinator calls the
+  compiled artifact for every layer-family prediction during estimation,
+  acquisition, and the pruning search.
+
+* ``cnn_train_step`` / ``cnn_eval`` — a real training workload: a masked
+  two-conv CNN (im2col + the L1 Pallas matmul kernel, so fwd AND bwd run
+  through Pallas) with inline SGD.  Used by the end-to-end example, the
+  Fig-6 time/energy experiment and the Fig-13 pruning case study; channel
+  masks let one artifact serve every pruned sub-network.
+
+Shapes are fixed at AOT time (PJRT executables are shape-specialized);
+`aot.py` records them in artifacts/manifest.json.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pk_matmul
+from .kernels import gp_posterior as pk_posterior
+
+# ---------------------------------------------------------------------------
+# GP posterior (estimation hot path)
+# ---------------------------------------------------------------------------
+
+# Padded artifact shapes: N inducing points, Q queries per call.  Padded
+# inducing rows carry zero alpha and zero K⁻¹ rows/cols (exactness proven in
+# tests/test_posterior.py::test_padding_invariance).
+N_INDUCING = 64
+N_QUERIES = 256
+
+
+def gp_posterior_fn(xq, xi, alpha, kinv, lengthscale, variance):
+    """(Q, D) queries -> ((Q,) mean, (Q,) variance), via the fused L1 kernel."""
+    mean, var = pk_posterior.gp_posterior(xq, xi, alpha, kinv, lengthscale, variance)
+    return mean, var
+
+
+# ---------------------------------------------------------------------------
+# CNN train step (real workload)
+# ---------------------------------------------------------------------------
+
+BATCH = 16
+IMG = 16          # 16x16 single-channel synthetic images
+C1, C2 = 8, 16    # full (unpruned) channel counts
+N_CLASSES = 2     # CelebA-gender-like binary task
+
+
+def _im2col_conv(x, w, b):
+    """3x3 SAME conv as im2col + Pallas matmul.  x: (B, H, W, Cin),
+    w: (3, 3, Cin, Cout), b: (Cout,)."""
+    bsz, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(3, 3), window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H, W, Cin*9) with feature order (Cin, 3, 3)
+    cols = patches.reshape(bsz * h * wd, cin * 9)
+    # conv_general_dilated_patches emits features as (Cin, KH, KW); reorder
+    # the weight to match.
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * 9, cout)
+    out = pk_matmul.matmul(cols, wmat).reshape(bsz, h, wd, cout)
+    return out + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _forward(params, x, m1, m2):
+    w1, b1, w2, b2, wf, bf = params
+    h = jax.nn.relu(_im2col_conv(x, w1, b1)) * m1          # (B,16,16,C1)
+    h = _maxpool2(h)                                       # (B,8,8,C1)
+    h = jax.nn.relu(_im2col_conv(h, w2, b2)) * m2          # (B,8,8,C2)
+    h = _maxpool2(h)                                       # (B,4,4,C2)
+    h = h.reshape(h.shape[0], -1)                          # (B, 4*4*C2)
+    logits = pk_matmul.matmul(h, wf) + bf                  # (B, N_CLASSES)
+    return logits
+
+
+def _loss_acc(params, x, y, m1, m2):
+    logits = _forward(params, x, m1, m2)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, N_CLASSES)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def cnn_train_step(x, y, w1, b1, w2, b2, wf, bf, m1, m2, lr):
+    """One SGD step.  Returns (w1', b1', w2', b2', wf', bf', loss, acc).
+
+    `m1`/`m2` are {0,1} channel masks (pruning); gradients flow only to
+    surviving channels because masked activations are exactly zero.
+    """
+    params = (w1, b1, w2, b2, wf, bf)
+    (loss, acc), grads = jax.value_and_grad(_loss_acc, has_aux=True)(
+        params, x, y, m1, m2
+    )
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, loss, acc)
+
+
+def cnn_eval(x, y, w1, b1, w2, b2, wf, bf, m1, m2):
+    """Forward-only loss/accuracy on a batch (held-out evaluation)."""
+    loss, acc = _loss_acc((w1, b1, w2, b2, wf, bf), x, y, m1, m2)
+    return loss, acc
+
+
+def init_params(key):
+    """He-initialized full-width parameters (the rust trainer re-implements
+    this exactly; fixture parity is tested)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jax.random.normal(k1, (3, 3, 1, C1)) * (2.0 / 9.0) ** 0.5
+    b1 = jnp.zeros((C1,))
+    w2 = jax.random.normal(k2, (3, 3, C1, C2)) * (2.0 / (9.0 * C1)) ** 0.5
+    b2 = jnp.zeros((C2,))
+    wf = jax.random.normal(k3, (4 * 4 * C2, N_CLASSES)) * (2.0 / (4 * 4 * C2)) ** 0.5
+    bf = jnp.zeros((N_CLASSES,))
+    return w1, b1, w2, b2, wf, bf
+
+
+def example_args_train():
+    """ShapeDtypeStructs for AOT lowering of cnn_train_step."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((BATCH, IMG, IMG, 1), f32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+        jax.ShapeDtypeStruct((3, 3, 1, C1), f32),
+        jax.ShapeDtypeStruct((C1,), f32),
+        jax.ShapeDtypeStruct((3, 3, C1, C2), f32),
+        jax.ShapeDtypeStruct((C2,), f32),
+        jax.ShapeDtypeStruct((4 * 4 * C2, N_CLASSES), f32),
+        jax.ShapeDtypeStruct((N_CLASSES,), f32),
+        jax.ShapeDtypeStruct((C1,), f32),
+        jax.ShapeDtypeStruct((C2,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def example_args_eval():
+    return example_args_train()[:10]
+
+
+def example_args_posterior(dim: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((N_QUERIES, dim), f32),
+        jax.ShapeDtypeStruct((N_INDUCING, dim), f32),
+        jax.ShapeDtypeStruct((N_INDUCING,), f32),
+        jax.ShapeDtypeStruct((N_INDUCING, N_INDUCING), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )

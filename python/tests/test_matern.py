@@ -1,0 +1,87 @@
+"""L1 correctness: Pallas Matérn-5/2 kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes, dims and hyper-parameters per the repro spec.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matern, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _data(key, m, n, d, scale):
+    kx, kz = jax.random.split(jax.random.PRNGKey(key))
+    x = jax.random.normal(kx, (m, d)) * scale
+    z = jax.random.normal(kz, (n, d)) * scale
+    return x, z
+
+
+@given(
+    key=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 150),
+    n=st.integers(1, 150),
+    d=st.sampled_from([1, 2, 3]),
+    ls=st.floats(0.05, 10.0),
+    var=st.floats(0.1, 50.0),
+)
+def test_matern_matches_ref(key, m, n, d, ls, var):
+    x, z = _data(key, m, n, d, 2.0)
+    got = matern.matern52_padded(x, z, ls, var)
+    want = ref.matern52(x, z, ls, var)
+    # f32: tiny lengthscales make exp(-√5 r/ℓ) extremely steep, so a
+    # one-ulp distance difference moves the result by ~1e-4 relative.
+    tol = 2e-4 if ls < 0.1 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_exact_tile_shapes():
+    """Shapes that are exact tile multiples skip the padding path."""
+    x, z = _data(7, 128, 64, 2, 1.0)
+    got = matern.matern52(x, z, 1.0, 1.0)
+    want = ref.matern52(x, z, 1.0, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_diagonal_is_variance():
+    """k(x, x) == sigma^2 (up to the 1e-12 distance-jitter)."""
+    x, _ = _data(3, 64, 1, 2, 1.0)
+    k = matern.matern52(x, x, 0.5, 3.0)
+    np.testing.assert_allclose(np.asarray(jnp.diag(k)), 3.0, rtol=1e-3)
+
+
+def test_symmetry():
+    x, _ = _data(11, 64, 1, 2, 1.0)
+    k = np.asarray(matern.matern52(x, x, 0.8, 2.0))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+
+
+def test_psd():
+    """Gram matrix must be positive semi-definite (kernel validity)."""
+    x, _ = _data(13, 64, 1, 2, 1.5)
+    k = np.asarray(matern.matern52(x, x, 0.8, 2.0))
+    eig = np.linalg.eigvalsh(k)
+    assert eig.min() > -1e-4, eig.min()
+
+
+def test_decay_with_distance():
+    """Covariance is monotonically non-increasing in distance."""
+    x = jnp.zeros((1, 1))
+    z = jnp.linspace(0.0, 10.0, 64).reshape(64, 1)
+    k = np.asarray(matern.matern52_padded(x, z, 1.0, 1.0))[0]
+    assert np.all(np.diff(k) <= 1e-7)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    """Inputs in bf16 still accumulate in f32 (preferred_element_type)."""
+    x, z = _data(5, 64, 64, 2, 1.0)
+    got = matern.matern52(x.astype(dtype), z.astype(dtype), 1.0, 1.0)
+    want = ref.matern52(x, z, 1.0, 1.0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)

@@ -1,0 +1,86 @@
+"""L1 correctness: fused GP posterior kernel vs the jnp oracle and vs the
+textbook GP formulas; padding-invariance (the property the rust runtime
+relies on when it pads inducing sets to N_INDUCING)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gp_posterior as pk, ref
+from compile import model
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _gp_problem(key, n, d, ls=0.8, var=2.0, noise=0.05, smooth_y=False):
+    kx, ky = jax.random.split(jax.random.PRNGKey(key))
+    xi = jax.random.normal(kx, (n, d))
+    if smooth_y:
+        # A function the GP prior can actually represent — required for the
+        # interpolation sanity test (random y at closely-spaced points is
+        # not smooth and the posterior rightly refuses to interpolate it).
+        y = jnp.sin(2.0 * jnp.sum(xi, axis=-1))
+    else:
+        y = jax.random.normal(ky, (n,))
+    kmat = ref.matern52(xi, xi, ls, var) + noise * jnp.eye(n)
+    kinv = jnp.linalg.inv(kmat)
+    alpha = kinv @ y
+    return xi, y, kinv, alpha, ls, var
+
+
+@given(
+    key=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([8, 16, 32, 64, 128]),
+    d=st.sampled_from([1, 2]),
+    q_tiles=st.integers(1, 3),
+)
+def test_posterior_matches_ref(key, n, d, q_tiles):
+    xi, _, kinv, alpha, ls, var = _gp_problem(key, n, d)
+    xq = jax.random.normal(jax.random.PRNGKey(key + 1), (128 * q_tiles, d))
+    m1, v1 = pk.gp_posterior(xq, xi, alpha, kinv, ls, var)
+    m2, v2 = ref.gp_posterior(xq, xi, alpha, kinv, ls, var)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4, atol=1e-4)
+
+
+def test_posterior_interpolates_training_targets():
+    """With small noise the posterior mean at inducing points ≈ y and the
+    variance there is far below the prior variance (textbook GP sanity).
+    Noise is kept at 1e-2: the whole pipeline is f32, and a 32-point Matérn
+    gram with 1e-4 jitter is too ill-conditioned to invert in f32."""
+    xi, y, kinv, alpha, ls, var = _gp_problem(3, 32, 1, noise=1e-2, smooth_y=True)
+    xq = jnp.pad(xi, ((0, 128 - 32), (0, 0)))
+    mean, varo = pk.gp_posterior(xq, xi, alpha, kinv, ls, var)
+    resid = np.abs(np.asarray(mean[:32]) - np.asarray(y))
+    assert resid.max() < 0.15, resid.max()
+    assert float(jnp.max(varo[:32])) < 0.1 * var
+
+
+def test_variance_positive_and_bounded():
+    xi, _, kinv, alpha, ls, var = _gp_problem(5, 64, 2)
+    xq = jax.random.normal(jax.random.PRNGKey(9), (256, 2)) * 3.0
+    _, v = pk.gp_posterior(xq, xi, alpha, kinv, ls, var)
+    v = np.asarray(v)
+    assert v.min() > -1e-4         # numerically non-negative
+    assert v.max() <= var + 1e-4   # never exceeds the prior variance
+
+
+@given(key=st.integers(0, 2**31 - 1), n_real=st.integers(2, 60))
+def test_padding_invariance(key, n_real):
+    """Zero-padded inducing rows (zero alpha, zero K⁻¹ rows/cols) must not
+    change the posterior — this is the contract the AOT artifact exposes to
+    the rust runtime for variable-size inducing sets."""
+    d = 2
+    xi, _, kinv, alpha, ls, var = _gp_problem(key, n_real, d)
+    xq = jax.random.normal(jax.random.PRNGKey(key + 7), (128, d))
+
+    n_pad = model.N_INDUCING
+    xi_p = jnp.pad(xi, ((0, n_pad - n_real), (0, 0)))
+    alpha_p = jnp.pad(alpha, (0, n_pad - n_real))
+    kinv_p = jnp.pad(kinv, ((0, n_pad - n_real), (0, n_pad - n_real)))
+
+    m_ref, v_ref = ref.gp_posterior(xq, xi, alpha, kinv, ls, var)
+    m_pad, v_pad = pk.gp_posterior(xq, xi_p, alpha_p, kinv_p, ls, var)
+    np.testing.assert_allclose(np.asarray(m_pad), np.asarray(m_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_pad), np.asarray(v_ref), rtol=1e-4, atol=1e-4)

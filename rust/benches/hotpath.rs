@@ -1,0 +1,87 @@
+//! `cargo bench --bench hotpath` — §Perf microbenchmarks for the three
+//! optimization targets (EXPERIMENTS.md §Perf records before/after):
+//!
+//!   L3  GP predict (native) / estimate() / simulator trace execution
+//!   L2+L1  artifact-backed batched GP posterior through PJRT
+//!          (skipped with a notice if artifacts/ are missing)
+
+use std::time::Duration;
+
+use thor::gp::{GpModel, KernelKind};
+use thor::model::zoo;
+use thor::runtime::{GpExecutor, Runtime};
+use thor::simdevice::{devices, Device};
+use thor::thor::{Thor, ThorConfig};
+use thor::util::bench::{bench, black_box};
+use thor::util::table;
+use thor::workload::{fusion::fuse, lower::lower};
+
+fn main() {
+    let budget = Duration::from_millis(
+        std::env::var("THOR_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800),
+    );
+    let mut rows = Vec::new();
+
+    // --- L3: native GP predict (the per-layer estimation primitive) -------
+    let xs: Vec<Vec<f64>> = (0..48).map(|i| vec![(i % 8) as f64 / 7.0, (i / 8) as f64 / 5.0]).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| (1.0 + x[0] + x[1]).ln()).collect();
+    let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+    let queries: Vec<Vec<f64>> = (0..256).map(|i| vec![(i % 16) as f64 / 15.0, (i / 16) as f64 / 15.0]).collect();
+    rows.push(
+        bench("L3 gp.predict_batch(256q, n=48)", budget, || {
+            black_box(gp.predict_batch(black_box(&queries)));
+        })
+        .row(),
+    );
+
+    // --- L3: full-model estimate() -----------------------------------------
+    let mut dev = Device::new(devices::xavier(), 1);
+    let mut thor = Thor::new(ThorConfig::quick());
+    let reference = zoo::cnn5(&[32, 64, 128, 256], 16, 10);
+    thor.profile(&mut dev, &reference);
+    let target = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
+    rows.push(
+        bench("L3 thor.estimate(cnn5)", budget, || {
+            black_box(thor.estimate("xavier", black_box(&target)).unwrap());
+        })
+        .row(),
+    );
+
+    // --- L3: simulator trace execution (profiling inner loop) --------------
+    let trace = fuse(&lower(&target));
+    rows.push(
+        bench("L3 device.run(trace, 10 iters)", budget, || {
+            black_box(dev.run(black_box(&trace), 10));
+        })
+        .row(),
+    );
+
+    // --- L3: lowering + fusion ----------------------------------------------
+    rows.push(
+        bench("L3 lower+fuse(cnn5)", budget, || {
+            black_box(fuse(&lower(black_box(&target))));
+        })
+        .row(),
+    );
+
+    // --- L1+L2: artifact GP posterior through PJRT --------------------------
+    match Runtime::open(&Runtime::default_dir()) {
+        Ok(mut rt) => {
+            let export = gp.export();
+            // warm the executable cache before timing
+            let _ = GpExecutor::posterior(&mut rt, &export, &queries);
+            rows.push(
+                bench("L1+L2 artifact gp_posterior (256q)", budget, || {
+                    black_box(GpExecutor::posterior(&mut rt, &export, black_box(&queries)).unwrap());
+                })
+                .row(),
+            );
+        }
+        Err(e) => println!("(skipping artifact benches: {e})"),
+    }
+
+    println!(
+        "{}",
+        table::render(&["benchmark", "iters", "mean", "p50", "p95", "min"], &rows)
+    );
+}

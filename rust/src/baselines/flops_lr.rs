@@ -1,0 +1,96 @@
+//! FLOPs → energy linear regression (the paper's primary baseline,
+//! Appendix A5.1 "Comparison Baseline"): measure a set of training
+//! structures, regress energy-per-iteration on training FLOPs, predict
+//! unseen structures from their FLOPs alone.
+
+use crate::model::{flops::model_train_flops, ModelGraph};
+use crate::simdevice::Device;
+use crate::util::stats::linreg;
+use crate::workload::{fusion::fuse, lower::lower};
+
+/// Fitted FLOPs-LR baseline.
+#[derive(Clone, Debug)]
+pub struct FlopsLr {
+    pub slope: f64,
+    pub intercept: f64,
+    pub n_train: usize,
+}
+
+impl FlopsLr {
+    /// Fit from (model, measured energy-per-iter) pairs.
+    pub fn fit(data: &[(f64, f64)]) -> Self {
+        let xs: Vec<f64> = data.iter().map(|d| d.0).collect();
+        let ys: Vec<f64> = data.iter().map(|d| d.1).collect();
+        let (slope, intercept) = linreg(&xs, &ys);
+        Self { slope, intercept, n_train: data.len() }
+    }
+
+    /// Fit by measuring `train_models` on a device.
+    pub fn fit_on_device(dev: &mut Device, train_models: &[ModelGraph], iterations: usize) -> Self {
+        let data: Vec<(f64, f64)> = train_models
+            .iter()
+            .map(|g| {
+                let m = dev.run(&fuse(&lower(g)), iterations);
+                (model_train_flops(g), m.energy_per_iter())
+            })
+            .collect();
+        Self::fit(&data)
+    }
+
+    /// Predict energy-per-iteration from the architecture's FLOPs.
+    pub fn predict(&self, g: &ModelGraph) -> f64 {
+        (self.slope * model_train_flops(g) + self.intercept).max(0.0)
+    }
+
+    /// Ratio-style guidance used by FLOPs-guided pruning (§4.3): the
+    /// predicted energy *ratio* of a pruned model equals its FLOPs ratio.
+    pub fn predict_ratio(original: &ModelGraph, pruned: &ModelGraph) -> f64 {
+        model_train_flops(pruned) / model_train_flops(original)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simdevice::devices;
+
+    #[test]
+    fn recovers_linear_world() {
+        // If energy really were a*flops + b, the LR is exact.
+        let data: Vec<(f64, f64)> = (1..20).map(|i| {
+            let f = i as f64 * 1e8;
+            (f, 2e-10 * f + 0.5)
+        }).collect();
+        let lr = FlopsLr::fit(&data);
+        assert!((lr.slope - 2e-10).abs() < 1e-15);
+        assert!((lr.intercept - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn misestimates_occupancy_plateaus() {
+        // Fig 7's mechanism: fit on random widths, then the narrowest
+        // models (low FLOPs, low occupancy) are badly predicted.
+        let mut dev = Device::new(devices::xavier(), 3);
+        let train: Vec<ModelGraph> = crate::model::sampler::sample_n(
+            crate::model::sampler::Family::Cnn5, 20, 11, 10,
+        );
+        let lr = FlopsLr::fit_on_device(&mut dev, &train, 60);
+        let tiny = zoo::cnn5(&[1, 1, 1, 1], 28, 10);
+        let truth = crate::simdevice::exec::ideal_energy_per_iter(
+            &dev.profile,
+            &crate::workload::fusion::fuse(&crate::workload::lower::lower(&tiny)),
+        );
+        let pred = lr.predict(&tiny);
+        let rel = ((pred - truth) / truth).abs();
+        assert!(rel > 0.15, "FLOPs-LR unexpectedly accurate on tiny model: rel {rel}");
+    }
+
+    #[test]
+    fn ratio_guidance_tracks_flops() {
+        let orig = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
+        let half = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let r = FlopsLr::predict_ratio(&orig, &half);
+        assert!(r > 0.15 && r < 0.5, "{r}"); // conv flops scale ~quadratically in width
+    }
+}

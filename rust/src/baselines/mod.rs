@@ -1,0 +1,12 @@
+//! Comparison baselines from the paper's evaluation:
+//!
+//! * [`flops_lr`] — the proxy-based SoTA: linear regression from training
+//!   FLOPs to energy (Figs 7–10 comparison arm);
+//! * [`neuralpower`] — NeuralPower (Cai et al. 2017) extended to training:
+//!   per-stage standalone profiling summed per layer, which overestimates
+//!   because it breaks inter-op data reuse (Fig 2);
+//! * [`paramcount`] — parameter-count regressor (extra ablation arm).
+
+pub mod flops_lr;
+pub mod neuralpower;
+pub mod paramcount;

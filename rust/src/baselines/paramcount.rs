@@ -1,0 +1,48 @@
+//! Parameter-count linear regressor — a proxy-based ablation arm even
+//! simpler than FLOPs-LR (mentioned in §2.3 among proxy methods:
+//! "parameter size, and number of layers").
+
+use crate::model::ModelGraph;
+use crate::simdevice::Device;
+use crate::util::stats::linreg;
+use crate::workload::{fusion::fuse, lower::lower};
+
+#[derive(Clone, Debug)]
+pub struct ParamCountLr {
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl ParamCountLr {
+    pub fn fit_on_device(dev: &mut Device, train_models: &[ModelGraph], iterations: usize) -> Self {
+        let xs: Vec<f64> = train_models.iter().map(|g| g.total_params() as f64).collect();
+        let ys: Vec<f64> = train_models
+            .iter()
+            .map(|g| dev.run(&fuse(&lower(g)), iterations).energy_per_iter())
+            .collect();
+        let (slope, intercept) = linreg(&xs, &ys);
+        Self { slope, intercept }
+    }
+
+    pub fn predict(&self, g: &ModelGraph) -> f64 {
+        (self.slope * g.total_params() as f64 + self.intercept).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sampler::{sample_n, Family};
+    use crate::simdevice::devices;
+
+    #[test]
+    fn fits_and_predicts_positive() {
+        let mut dev = Device::new(devices::server(), 4);
+        let train = sample_n(Family::Cnn5, 10, 3, 10);
+        let lr = ParamCountLr::fit_on_device(&mut dev, &train, 30);
+        let test = sample_n(Family::Cnn5, 3, 4, 10);
+        for g in &test {
+            assert!(lr.predict(g) >= 0.0);
+        }
+    }
+}

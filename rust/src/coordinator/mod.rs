@@ -1,0 +1,23 @@
+//! Decoupled profiling architecture (paper Appendix A5.2): the *fitting
+//! server* (leader) owns GP state and picks probe points; *device
+//! workers* (clients) run variant trainings and stream measurements
+//! back over TCP with a line-delimited JSON protocol.  `std::net` +
+//! scoped threads (no async runtime is available offline).
+//!
+//! Invariants (property-tested):
+//! * every issued job is eventually resolved exactly once (no
+//!   double-assignment, no loss on worker failure — jobs are re-queued);
+//! * per-family measurement order does not affect the final GP (the GP
+//!   is permutation-invariant in its training set);
+//! * the scheduler terminates once every family converges or exhausts
+//!   its budget.
+
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+pub mod worker;
+
+pub use protocol::Msg;
+pub use scheduler::{JobQueue, JobState};
+pub use server::FleetServer;
+pub use worker::DeviceWorker;

@@ -1,0 +1,121 @@
+//! Wire protocol: one JSON object per line.
+
+use crate::util::json::Json;
+
+/// Protocol messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// worker → server: registration.
+    Hello { device: String },
+    /// server → worker: measure a variant (channels on the *raw* scale).
+    Job { job_id: u64, family: String, channels: Vec<usize>, iterations: usize },
+    /// worker → server: measurement result.
+    Result { job_id: u64, energy_per_iter: f64, device_seconds: f64 },
+    /// server → worker: nothing to do right now.
+    Idle,
+    /// server → worker: profiling finished; worker exits.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Msg::Hello { device } => Json::obj(vec![
+                ("type", Json::str("hello")),
+                ("device", Json::str(device)),
+            ]),
+            Msg::Job { job_id, family, channels, iterations } => Json::obj(vec![
+                ("type", Json::str("job")),
+                ("job_id", Json::Num(*job_id as f64)),
+                ("family", Json::str(family)),
+                ("channels", Json::arr_f64(&channels.iter().map(|&c| c as f64).collect::<Vec<_>>())),
+                ("iterations", Json::Num(*iterations as f64)),
+            ]),
+            Msg::Result { job_id, energy_per_iter, device_seconds } => Json::obj(vec![
+                ("type", Json::str("result")),
+                ("job_id", Json::Num(*job_id as f64)),
+                ("energy_per_iter", Json::Num(*energy_per_iter)),
+                ("device_seconds", Json::Num(*device_seconds)),
+            ]),
+            Msg::Idle => Json::obj(vec![("type", Json::str("idle"))]),
+            Msg::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Option<Msg> {
+        match j.get("type")?.as_str()? {
+            "hello" => Some(Msg::Hello { device: j.get("device")?.as_str()?.to_string() }),
+            "job" => Some(Msg::Job {
+                job_id: j.get("job_id")?.as_f64()? as u64,
+                family: j.get("family")?.as_str()?.to_string(),
+                channels: j.get("channels")?.as_f64_vec()?.iter().map(|&c| c as usize).collect(),
+                iterations: j.get("iterations")?.as_usize()?,
+            }),
+            "result" => Some(Msg::Result {
+                job_id: j.get("job_id")?.as_f64()? as u64,
+                energy_per_iter: j.get("energy_per_iter")?.as_f64()?,
+                device_seconds: j.get("device_seconds")?.as_f64()?,
+            }),
+            "idle" => Some(Msg::Idle),
+            "shutdown" => Some(Msg::Shutdown),
+            _ => None,
+        }
+    }
+
+    pub fn encode(&self) -> String {
+        format!("{}\n", self.to_json())
+    }
+
+    pub fn decode(line: &str) -> Option<Msg> {
+        Json::parse(line.trim()).ok().and_then(|j| Msg::from_json(&j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::rng::Pcg64;
+
+    fn arbitrary_msg(r: &mut Pcg64) -> Msg {
+        match r.range_usize(0, 4) {
+            0 => Msg::Hello { device: format!("dev{}", r.range_usize(0, 9)) },
+            1 => Msg::Job {
+                job_id: r.next_u64() % 1_000_000,
+                family: "hid:conv3s1p:h14w14b10:bn-r-mp2".into(),
+                channels: (0..r.range_usize(1, 2)).map(|_| r.range_usize(1, 512)).collect(),
+                iterations: r.range_usize(1, 1000),
+            },
+            2 => Msg::Result {
+                job_id: r.next_u64() % 1_000_000,
+                energy_per_iter: r.range_f64(1e-6, 10.0),
+                device_seconds: r.range_f64(0.0, 100.0),
+            },
+            3 => Msg::Idle,
+            _ => Msg::Shutdown,
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        check("msg json roundtrip", Config { cases: 200, seed: 31 }, arbitrary_msg, |m| {
+            let line = m.encode();
+            let back = Msg::decode(&line).ok_or("decode failed")?;
+            // floats survive with full precision through our writer
+            match (m, &back) {
+                (Msg::Result { energy_per_iter: a, .. }, Msg::Result { energy_per_iter: b, .. }) => {
+                    crate::prop_assert!((a - b).abs() < 1e-12 * a.abs().max(1.0), "{a} vs {b}");
+                }
+                _ => crate::prop_assert!(m == &back, "{m:?} vs {back:?}"),
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Msg::decode("{}").is_none());
+        assert!(Msg::decode("not json").is_none());
+        assert!(Msg::decode(r#"{"type":"job"}"#).is_none()); // missing fields
+    }
+}

@@ -1,0 +1,213 @@
+//! Job queue + assignment state machine for the fitting leader.
+//!
+//! The leader serializes GP acquisition (one probe per family at a
+//! time — max-variance acquisition is sequential by nature) but keeps
+//! every *worker* busy by interleaving jobs from different families and
+//! devices.  Workers can die at any time: their in-flight jobs re-queue.
+
+use std::collections::BTreeMap;
+
+/// Lifecycle of one measurement job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Assigned { worker: usize },
+    Done,
+}
+
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub family: String,
+    pub channels: Vec<usize>,
+    pub iterations: usize,
+    pub state: JobState,
+}
+
+/// FIFO queue with at-most-one-outstanding-job-per-worker routing.
+#[derive(Default)]
+pub struct JobQueue {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, family: &str, channels: Vec<usize>, iterations: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.insert(
+            id,
+            Job { id, family: family.to_string(), channels, iterations, state: JobState::Queued },
+        );
+        id
+    }
+
+    /// Assign the oldest queued job to `worker` unless it already holds
+    /// one (at-most-one-outstanding invariant).
+    pub fn assign(&mut self, worker: usize) -> Option<Job> {
+        if self.jobs.values().any(|j| j.state == (JobState::Assigned { worker })) {
+            return None;
+        }
+        let id = self
+            .jobs
+            .values()
+            .find(|j| j.state == JobState::Queued)
+            .map(|j| j.id)?;
+        let job = self.jobs.get_mut(&id).unwrap();
+        job.state = JobState::Assigned { worker };
+        Some(job.clone())
+    }
+
+    /// Record completion; returns false if the job was not assigned to
+    /// this worker (stale/duplicate results are dropped).
+    pub fn complete(&mut self, id: u64, worker: usize) -> bool {
+        match self.jobs.get_mut(&id) {
+            Some(j) if j.state == (JobState::Assigned { worker }) => {
+                j.state = JobState::Done;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A worker died: re-queue its in-flight jobs.
+    pub fn requeue_worker(&mut self, worker: usize) -> usize {
+        let mut n = 0;
+        for j in self.jobs.values_mut() {
+            if j.state == (JobState::Assigned { worker }) {
+                j.state = JobState::Queued;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    pub fn pending(&self) -> usize {
+        self.jobs.values().filter(|j| j.state != JobState::Done).count()
+    }
+
+    pub fn done(&self) -> usize {
+        self.jobs.values().filter(|j| j.state == JobState::Done).count()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn fifo_assignment() {
+        let mut q = JobQueue::new();
+        let a = q.submit("f", vec![1], 10);
+        let b = q.submit("f", vec![2], 10);
+        assert_eq!(q.assign(0).unwrap().id, a);
+        assert_eq!(q.assign(1).unwrap().id, b);
+    }
+
+    #[test]
+    fn at_most_one_outstanding_per_worker() {
+        let mut q = JobQueue::new();
+        q.submit("f", vec![1], 10);
+        q.submit("f", vec![2], 10);
+        assert!(q.assign(0).is_some());
+        assert!(q.assign(0).is_none(), "worker 0 double-assigned");
+    }
+
+    #[test]
+    fn stale_results_dropped() {
+        let mut q = JobQueue::new();
+        let id = q.submit("f", vec![1], 10);
+        let j = q.assign(0).unwrap();
+        assert_eq!(j.id, id);
+        assert!(!q.complete(id, 1), "result from wrong worker accepted");
+        assert!(q.complete(id, 0));
+        assert!(!q.complete(id, 0), "duplicate completion accepted");
+    }
+
+    #[test]
+    fn requeue_on_worker_death() {
+        let mut q = JobQueue::new();
+        let id = q.submit("f", vec![1], 10);
+        q.assign(0).unwrap();
+        assert_eq!(q.requeue_worker(0), 1);
+        // the job can be assigned to another worker now
+        assert_eq!(q.assign(1).unwrap().id, id);
+        assert!(q.complete(id, 1));
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn prop_every_job_resolves_exactly_once() {
+        // Random interleaving of submit/assign/complete/death; at the end
+        // drain everything and verify each job completed exactly once.
+        check(
+            "jobs resolve exactly once",
+            Config { cases: 64, seed: 77 },
+            |r| {
+                let ops: Vec<u8> = (0..r.range_usize(10, 60)).map(|_| r.range_usize(0, 3) as u8).collect();
+                (ops, r.range_usize(1, 4))
+            },
+            |(ops, n_workers)| {
+                let mut q = JobQueue::new();
+                let mut completions: BTreeMap<u64, usize> = BTreeMap::new();
+                let mut inflight: Vec<(u64, usize)> = Vec::new();
+                let mut submitted = 0u64;
+                for (i, op) in ops.iter().enumerate() {
+                    match op {
+                        0 => {
+                            q.submit("f", vec![i], 10);
+                            submitted += 1;
+                        }
+                        1 => {
+                            let w = i % n_workers;
+                            if let Some(j) = q.assign(w) {
+                                inflight.push((j.id, w));
+                            }
+                        }
+                        2 => {
+                            if let Some((id, w)) = inflight.pop() {
+                                if q.complete(id, w) {
+                                    *completions.entry(id).or_insert(0) += 1;
+                                }
+                            }
+                        }
+                        _ => {
+                            let w = i % n_workers;
+                            q.requeue_worker(w);
+                            inflight.retain(|&(_, iw)| iw != w);
+                        }
+                    }
+                }
+                // drain: first release any jobs still held by workers from
+                // the random phase (a held worker can't take a new one)
+                for w in 0..*n_workers {
+                    q.requeue_worker(w);
+                }
+                inflight.clear();
+                let mut guard = 0;
+                while q.pending() > 0 {
+                    guard += 1;
+                    crate::prop_assert!(guard < 100_000, "drain did not terminate");
+                    for w in 0..*n_workers {
+                        if let Some(j) = q.assign(w) {
+                            crate::prop_assert!(q.complete(j.id, w), "drain completion rejected");
+                            *completions.entry(j.id).or_insert(0) += 1;
+                        }
+                    }
+                }
+                crate::prop_assert!(completions.len() as u64 == submitted, "{} != {submitted}", completions.len());
+                crate::prop_assert!(completions.values().all(|&c| c == 1), "double completion: {completions:?}");
+                Ok(())
+            },
+        );
+    }
+}

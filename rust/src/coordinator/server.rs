@@ -1,0 +1,407 @@
+//! Fitting leader: accepts device workers over TCP, drives each
+//! family's active-learning loop by issuing measurement jobs, fits the
+//! GPs server-side (the paper's client/server split: the device only
+//! trains, the server only fits), and returns a populated
+//! [`crate::thor::store::GpStore`].
+//!
+//! Concurrency model: one accept loop; per-connection reader threads
+//! push (worker, msg) events into an mpsc channel; the leader thread
+//! owns all state (queue + fit loops) — no shared-state locking beyond
+//! the channel.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::coordinator::protocol::Msg;
+use crate::coordinator::scheduler::JobQueue;
+use crate::model::ModelGraph;
+use crate::thor::fit::FitConfig;
+use crate::thor::parse::{parse, Position};
+use crate::thor::pipeline::{log_channel, ThorConfig};
+use crate::thor::profiler::{fc_in_after, ranges};
+use crate::thor::store::{GpStore, StoredGp};
+use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
+use crate::gp::GpModel;
+
+enum Event {
+    Connected(usize, TcpStream),
+    Message(usize, Msg),
+    Disconnected(usize),
+}
+
+/// Per-family sequential fit state driven by remote measurements.
+struct FamilyFit {
+    family: String,
+    dim: usize,
+    x_max: Vec<f64>,
+    /// Pending start points not yet issued.
+    start_queue: Vec<Vec<f64>>,
+    /// (normalized point, energy, device seconds).
+    points: Vec<(Vec<f64>, f64, f64)>,
+    /// Outstanding job (job id, normalized point, subtraction terms).
+    outstanding: Option<(u64, Vec<f64>, f64)>,
+    converged: bool,
+    device_seconds: f64,
+    /// Families whose GPs must exist before this one can run
+    /// (subtractivity ordering: out → in → hidden).
+    stage: usize,
+}
+
+/// The fleet fitting server.
+pub struct FleetServer {
+    pub cfg: ThorConfig,
+}
+
+impl FleetServer {
+    pub fn new(cfg: ThorConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Serve on `addr` until every family of `reference` is fitted for
+    /// `expect_workers` workers' devices, then shut workers down.
+    ///
+    /// Single-device fleet: all workers must expose the same device type
+    /// (heterogeneous fleets run one server per device type — matching
+    /// the paper, where GPs never transfer across devices).
+    pub fn run(&self, addr: &str, reference: &ModelGraph, expect_workers: usize) -> Result<GpStore> {
+        let listener = TcpListener::bind(addr)?;
+        let real_addr = listener.local_addr()?;
+        let (tx, rx) = mpsc::channel::<Event>();
+
+        // accept loop
+        let accept_tx = tx.clone();
+        let accept_handle = std::thread::spawn(move || {
+            for (i, stream) in listener.incoming().enumerate() {
+                let Ok(stream) = stream else { break };
+                let _ = accept_tx.send(Event::Connected(i, stream));
+                if i + 1 >= expect_workers {
+                    break;
+                }
+            }
+        });
+        let _ = real_addr;
+
+        // leader state
+        let parsed = parse(reference);
+        let rg = ranges(&parsed);
+        let out_tmpl = parsed.output_groups().next().unwrap().clone();
+        let in_tmpl = parsed.input_groups().next().unwrap().clone();
+        let fit_cfg_1 = self.fit_cfg(1);
+        let fit_cfg_2 = self.fit_cfg(2);
+
+        let mut fits: Vec<FamilyFit> = Vec::new();
+        fits.push(FamilyFit {
+            family: out_tmpl.key.id(),
+            dim: 1,
+            x_max: vec![rg.out_max as f64],
+            start_queue: vec![vec![0.0], vec![1.0], vec![0.5]],
+            points: Vec::new(),
+            outstanding: None,
+            converged: false,
+            device_seconds: 0.0,
+            stage: 0,
+        });
+        fits.push(FamilyFit {
+            family: in_tmpl.key.id(),
+            dim: 1,
+            x_max: vec![rg.in_max as f64],
+            start_queue: vec![vec![0.0], vec![1.0], vec![0.5]],
+            points: Vec::new(),
+            outstanding: None,
+            converged: false,
+            device_seconds: 0.0,
+            stage: 1,
+        });
+        for (fi, fam) in parsed.families.iter().enumerate() {
+            if fam.position != Position::Hidden {
+                continue;
+            }
+            let (a, b) = rg.hidden_max[fi];
+            fits.push(FamilyFit {
+                family: fam.id(),
+                dim: 2,
+                x_max: vec![a.max(2) as f64, b.max(2) as f64],
+                start_queue: vec![
+                    vec![0.0, 0.0],
+                    vec![0.0, 1.0],
+                    vec![1.0, 0.0],
+                    vec![1.0, 1.0],
+                    vec![0.5, 0.5],
+                ],
+                points: Vec::new(),
+                outstanding: None,
+                converged: false,
+                device_seconds: 0.0,
+                stage: 2,
+            });
+        }
+
+        let mut queue = JobQueue::new();
+        let mut job_meta: HashMap<u64, usize> = HashMap::new(); // job -> fit index
+        let mut writers: HashMap<usize, TcpStream> = HashMap::new();
+        let mut device_name = String::new();
+        let mut store = GpStore::new();
+
+        // Helper: (re)fit a family GP from its points; store when done.
+        let finalize = |fit: &FamilyFit, store: &mut GpStore, dev: &str, cfg: &FitConfig| {
+            let xs: Vec<Vec<f64>> = fit.points.iter().map(|p| p.0.clone()).collect();
+            let ys: Vec<f64> = fit.points.iter().map(|p| p.1.max(1e-15).ln()).collect();
+            if let Some(gp) = GpModel::fit(cfg.kind, xs, &ys) {
+                store.insert(
+                    dev,
+                    &fit.family,
+                    StoredGp {
+                        gp,
+                        x_max: fit.x_max.clone(),
+                        log_x: true,
+                        log_y: true,
+                        device_seconds: fit.device_seconds,
+                        fit_seconds: 0.0,
+                        converged: fit.converged,
+                    },
+                );
+            }
+        };
+
+        loop {
+            // issue next probes for ready, unconverged families
+            // (stage gating: out → in → hidden, per subtractivity)
+            if !device_name.is_empty() {
+                for (fi, fit) in fits.iter_mut().enumerate() {
+                    if fit.converged || fit.outstanding.is_some() {
+                        continue;
+                    }
+                    if !stage_ready_impl(&store, &device_name, fit.stage, &stage_gate_names(fit.stage, &out_tmpl, &in_tmpl)) {
+                        continue;
+                    }
+                    let cfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
+                    let next = next_probe(fit, cfg);
+                    match next {
+                        Some(p) => {
+                            let channels: Vec<usize> =
+                                p.iter().zip(&fit.x_max).map(|(v, m)| log_channel(*v, *m)).collect();
+                            // subtraction terms computed server-side from stored GPs
+                            let subtract = subtraction_for(
+                                &store,
+                                &device_name,
+                                fit.stage,
+                                &channels,
+                                &out_tmpl,
+                                &in_tmpl,
+                                &parsed,
+                                &fit.family,
+                            );
+                            let id = queue.submit(&fit.family, channels, self.cfg.iterations);
+                            job_meta.insert(id, fi);
+                            fit.outstanding = Some((id, p, subtract));
+                        }
+                        None => {
+                            fit.converged = true;
+                            finalize(fit, &mut store, &device_name, cfg);
+                        }
+                    }
+                }
+            }
+
+            // assign queued jobs to idle workers
+            let worker_ids: Vec<usize> = writers.keys().copied().collect();
+            for w in worker_ids {
+                if let Some(job) = queue.assign(w) {
+                    let msg = Msg::Job {
+                        job_id: job.id,
+                        family: job.family.clone(),
+                        channels: job.channels.clone(),
+                        iterations: job.iterations,
+                    };
+                    if let Some(stream) = writers.get_mut(&w) {
+                        let _ = stream.write_all(msg.encode().as_bytes());
+                    }
+                }
+            }
+
+            // done?
+            if !device_name.is_empty() && fits.iter().all(|f| f.converged) {
+                break;
+            }
+
+            // wait for events
+            match rx.recv() {
+                Err(_) => break,
+                Ok(Event::Connected(w, stream)) => {
+                    let reader_tx = tx.clone();
+                    let read_stream = stream.try_clone()?;
+                    writers.insert(w, stream);
+                    std::thread::spawn(move || {
+                        let mut reader = BufReader::new(read_stream);
+                        loop {
+                            let mut line = String::new();
+                            match reader.read_line(&mut line) {
+                                Ok(0) | Err(_) => {
+                                    let _ = reader_tx.send(Event::Disconnected(w));
+                                    break;
+                                }
+                                Ok(_) => {
+                                    if let Some(m) = Msg::decode(&line) {
+                                        if reader_tx.send(Event::Message(w, m)).is_err() {
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+                Ok(Event::Message(w, Msg::Hello { device })) => {
+                    if device_name.is_empty() {
+                        device_name = device;
+                    }
+                    let _ = w;
+                }
+                Ok(Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds })) => {
+                    if queue.complete(job_id, w) {
+                        if let Some(&fi) = job_meta.get(&job_id) {
+                            let fit = &mut fits[fi];
+                            if let Some((oid, p, subtract)) = fit.outstanding.take() {
+                                debug_assert_eq!(oid, job_id);
+                                let e = (energy_per_iter - subtract).max(1e-12);
+                                fit.points.push((p, e, device_seconds));
+                                fit.device_seconds += device_seconds;
+                            }
+                        }
+                    }
+                }
+                Ok(Event::Message(_, _)) => {}
+                Ok(Event::Disconnected(w)) => {
+                    queue.requeue_worker(w);
+                    // drop outstanding markers pointing at requeued jobs
+                    for fit in fits.iter_mut() {
+                        if let Some((id, _, _)) = &fit.outstanding {
+                            if queue.get(*id).map(|j| j.state == crate::coordinator::scheduler::JobState::Queued).unwrap_or(false) {
+                                // leave outstanding: job will be re-assigned under same id
+                                let _ = id;
+                            }
+                        }
+                    }
+                    writers.remove(&w);
+                    if writers.is_empty() && queue.pending() > 0 {
+                        // no workers left: abort
+                        break;
+                    }
+                }
+            }
+        }
+
+        // finalize any unconverged-but-budgeted fits
+        for fit in &fits {
+            if !store.contains(&device_name, &fit.family) && !fit.points.is_empty() {
+                let cfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
+                finalize(fit, &mut store, &device_name, cfg);
+            }
+        }
+
+        // shut down workers
+        for (_, mut s) in writers {
+            let _ = s.write_all(Msg::Shutdown.encode().as_bytes());
+        }
+        drop(accept_handle);
+        Ok(store)
+    }
+
+    fn fit_cfg(&self, dim: usize) -> FitConfig {
+        FitConfig {
+            kind: self.cfg.kind,
+            max_points: if dim == 1 { self.cfg.max_points_1d } else { self.cfg.max_points_2d },
+            threshold_frac: self.cfg.threshold_frac,
+            grid_n: if dim == 1 { self.cfg.grid_n_1d } else { self.cfg.grid_n_2d },
+            time_surrogate: self.cfg.time_surrogate,
+            random_sampling: self.cfg.random_sampling,
+            log_targets: true,
+            seed: self.cfg.seed,
+        }
+    }
+}
+
+fn stage_gate_names(
+    stage: usize,
+    out_tmpl: &crate::thor::parse::Group,
+    in_tmpl: &crate::thor::parse::Group,
+) -> Vec<String> {
+    match stage {
+        0 => vec![],
+        1 => vec![out_tmpl.key.id()],
+        _ => vec![out_tmpl.key.id(), in_tmpl.key.id()],
+    }
+}
+
+fn stage_ready_impl(store: &GpStore, dev: &str, _stage: usize, gates: &[String]) -> bool {
+    gates.iter().all(|g| store.contains(dev, g))
+}
+
+/// Server-side subtraction terms (eqs. 1–2) for a probe.
+#[allow(clippy::too_many_arguments)]
+fn subtraction_for(
+    store: &GpStore,
+    dev: &str,
+    stage: usize,
+    channels: &[usize],
+    out_tmpl: &crate::thor::parse::Group,
+    in_tmpl: &crate::thor::parse::Group,
+    parsed: &crate::thor::parse::ParsedModel,
+    family: &str,
+) -> f64 {
+    match stage {
+        0 => 0.0,
+        1 => {
+            let gi = in_tmpl.with_channels(in_tmpl.anchor.c_in, channels[0].max(1));
+            let fc_in = fc_in_after(&gi).max(1);
+            store
+                .get(dev, &out_tmpl.key.id())
+                .map(|g| g.predict_raw(&[fc_in as f64]).0.max(0.0))
+                .unwrap_or(0.0)
+        }
+        _ => {
+            let tmpl = parsed
+                .groups
+                .iter()
+                .find(|g| g.key.id() == family)
+                .expect("family template");
+            let gh = tmpl.with_channels(channels[0].max(1), channels[1].max(1));
+            let fc_in = fc_in_after(&gh).max(1);
+            let e_in = store
+                .get(dev, &in_tmpl.key.id())
+                .map(|g| g.predict_raw(&[1.0]).0.max(0.0))
+                .unwrap_or(0.0);
+            let e_out = store
+                .get(dev, &out_tmpl.key.id())
+                .map(|g| g.predict_raw(&[fc_in as f64]).0.max(0.0))
+                .unwrap_or(0.0);
+            e_in + e_out
+        }
+    }
+}
+
+/// Next probe for a family fit (start points, then max-variance).
+fn next_probe(fit: &mut FamilyFit, cfg: &FitConfig) -> Option<Vec<f64>> {
+    if let Some(p) = fit.start_queue.pop() {
+        return Some(p);
+    }
+    if fit.points.len() >= cfg.max_points {
+        return None;
+    }
+    let xs: Vec<Vec<f64>> = fit.points.iter().map(|p| p.0.clone()).collect();
+    let ys: Vec<f64> = fit.points.iter().map(|p| p.1.max(1e-15).ln()).collect();
+    let gp = GpModel::fit(cfg.kind, xs, &ys)?;
+    let grid = if fit.dim == 1 {
+        CandidateGrid::dim1(0.0, 1.0, cfg.grid_n)
+    } else {
+        CandidateGrid::dim2(0.0, 1.0, cfg.grid_n)
+    };
+    match max_variance(&gp, &grid, cfg.threshold_frac, 1.0) {
+        Acquire::Next(p, _) => Some(p),
+        Acquire::Converged(_) => None,
+    }
+}

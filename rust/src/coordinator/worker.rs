@@ -1,0 +1,129 @@
+//! Device worker: connects to the fitting server, receives variant jobs,
+//! runs them on its (simulated) device, streams results back.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::protocol::Msg;
+use crate::model::ModelGraph;
+use crate::simdevice::Device;
+use crate::thor::parse::Group;
+use crate::thor::profiler;
+
+/// Rebuilds variant graphs from (family, channels) using the templates
+/// of a reference model — the worker and server share the reference
+/// architecture, so only channels travel on the wire.
+pub struct VariantBuilder {
+    input: Group,
+    output: Group,
+    hidden: Vec<Group>,
+}
+
+impl VariantBuilder {
+    pub fn from_reference(reference: &ModelGraph) -> Self {
+        let parsed = crate::thor::parse::parse(reference);
+        let input = parsed.input_groups().next().expect("input group").clone();
+        let output = parsed.output_groups().next().expect("output group").clone();
+        let hidden: Vec<Group> = parsed.hidden_groups().cloned().collect();
+        Self { input, output, hidden }
+    }
+
+    /// Build the variant graph for a family id + raw channels.
+    pub fn build(&self, family: &str, channels: &[usize]) -> Result<ModelGraph> {
+        if family == self.output.key.id() {
+            return Ok(profiler::output_variant(&self.output, channels[0]));
+        }
+        if family == self.input.key.id() {
+            return Ok(profiler::input_variant(&self.input, &self.output, channels[0]).0);
+        }
+        for h in &self.hidden {
+            if family == h.key.id() {
+                let (g, _, _) =
+                    profiler::hidden_variant(&self.input, h, &self.output, channels[0], channels[1]);
+                return Ok(g);
+            }
+        }
+        Err(anyhow!("unknown family '{family}'"))
+    }
+}
+
+/// A worker process bound to one simulated device.
+pub struct DeviceWorker {
+    pub device: Device,
+    pub builder: VariantBuilder,
+}
+
+impl DeviceWorker {
+    pub fn new(device: Device, reference: &ModelGraph) -> Self {
+        Self { device, builder: VariantBuilder::from_reference(reference) }
+    }
+
+    /// Connect and serve until Shutdown.  Returns jobs completed.
+    pub fn run(&mut self, addr: &str) -> Result<usize> {
+        let stream = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        writer.write_all(Msg::Hello { device: self.device.profile.name.to_string() }.encode().as_bytes())?;
+        let mut done = 0;
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                break; // server hung up
+            }
+            match Msg::decode(&line) {
+                Some(Msg::Job { job_id, family, channels, iterations }) => {
+                    let g = self.builder.build(&family, &channels)?;
+                    let (e, dt) = profiler::measure(&mut self.device, &g, iterations);
+                    writer.write_all(
+                        Msg::Result { job_id, energy_per_iter: e, device_seconds: dt }
+                            .encode()
+                            .as_bytes(),
+                    )?;
+                    done += 1;
+                }
+                Some(Msg::Idle) => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    writer.write_all(Msg::Hello { device: self.device.profile.name.to_string() }.encode().as_bytes())?;
+                }
+                Some(Msg::Shutdown) => break,
+                _ => return Err(anyhow!("unexpected message: {line}")),
+            }
+        }
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simdevice::devices;
+
+    #[test]
+    fn builder_covers_all_families() {
+        let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
+        let parsed = crate::thor::parse::parse(&reference);
+        let b = VariantBuilder::from_reference(&reference);
+        for fam in &parsed.families {
+            let dim = if fam.position == crate::thor::Position::Hidden { 2 } else { 1 };
+            let chans = vec![4; dim];
+            let g = b.build(&fam.id(), &chans).unwrap();
+            assert!(!g.layers.is_empty());
+        }
+        assert!(b.build("nonexistent", &[1]).is_err());
+    }
+
+    #[test]
+    fn built_variant_measurable() {
+        let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
+        let b = VariantBuilder::from_reference(&reference);
+        let parsed = crate::thor::parse::parse(&reference);
+        let fam = parsed.families[1].id();
+        let g = b.build(&fam, &[4, 8]).unwrap();
+        let mut dev = Device::new(devices::tx2(), 5);
+        let (e, t) = profiler::measure(&mut dev, &g, 30);
+        assert!(e > 0.0 && t > 0.0);
+    }
+}

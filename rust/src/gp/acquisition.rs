@@ -1,0 +1,137 @@
+//! Guided profiling (paper §3.3 "Guided Profiling", Fig 4): pick the next
+//! profiling point as the candidate with the largest posterior variance
+//! (pure-exploration active learning), with the paper's two end
+//! conditions: point budget exhausted, or max posterior std below 5 % of
+//! the profiled data scale.
+
+use crate::gp::GpModel;
+
+/// Candidate grid over channel configurations (already normalized).
+pub struct CandidateGrid {
+    pub points: Vec<Vec<f64>>,
+}
+
+impl CandidateGrid {
+    /// 1-D grid of `n` points over [lo, hi] inclusive.
+    pub fn dim1(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(n >= 2);
+        let points = (0..n)
+            .map(|i| vec![lo + (hi - lo) * i as f64 / (n - 1) as f64])
+            .collect();
+        Self { points }
+    }
+
+    /// 2-D grid (n × n) over [lo, hi]².
+    pub fn dim2(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(n >= 2);
+        let mut points = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                points.push(vec![
+                    lo + (hi - lo) * i as f64 / (n - 1) as f64,
+                    lo + (hi - lo) * j as f64 / (n - 1) as f64,
+                ]);
+            }
+        }
+        Self { points }
+    }
+}
+
+/// Result of one acquisition decision.
+#[derive(Clone, Debug)]
+pub enum Acquire {
+    /// Profile this point next (it had the given posterior std).
+    Next(Vec<f64>, f64),
+    /// Converged: the max posterior std is below the threshold.
+    Converged(f64),
+}
+
+/// Pick the unprofiled candidate with the largest posterior variance.
+///
+/// `threshold_frac`: the paper's 5 % — converged when max posterior std
+/// < threshold_frac × mean(|y|) of the profiled data (in raw target
+/// units).
+pub fn max_variance(gp: &GpModel, grid: &CandidateGrid, threshold_frac: f64, y_abs_mean: f64) -> Acquire {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, q) in grid.points.iter().enumerate() {
+        // skip (numerically) already-profiled candidates
+        if gp.xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9) {
+            continue;
+        }
+        let (_, var) = gp.predict(q);
+        if best.map_or(true, |(_, b)| var > b) {
+            best = Some((i, var));
+        }
+    }
+    match best {
+        None => Acquire::Converged(0.0),
+        Some((i, var)) => {
+            let std = var.sqrt();
+            if std < threshold_frac * y_abs_mean {
+                Acquire::Converged(std)
+            } else {
+                Acquire::Next(grid.points[i].clone(), std)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{GpModel, KernelKind};
+
+    fn fit_on(points: &[f64]) -> GpModel {
+        let xs: Vec<Vec<f64>> = points.iter().map(|&p| vec![p]).collect();
+        let ys: Vec<f64> = points.iter().map(|&p| 100.0 + 40.0 * (4.0 * p).sin()).collect();
+        GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap()
+    }
+
+    #[test]
+    fn picks_point_far_from_data() {
+        // data clustered at the ends -> next point should be central
+        let gp = fit_on(&[0.0, 0.05, 0.95, 1.0]);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 21);
+        match max_variance(&gp, &grid, 0.0, 100.0) {
+            Acquire::Next(p, _) => {
+                assert!((p[0] - 0.5).abs() < 0.25, "picked {p:?}");
+            }
+            Acquire::Converged(_) => panic!("should not converge with threshold 0 until grid is dense"),
+        }
+    }
+
+    #[test]
+    fn converges_when_grid_covered() {
+        let pts: Vec<f64> = (0..21).map(|i| i as f64 / 20.0).collect();
+        let gp = fit_on(&pts);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 21);
+        match max_variance(&gp, &grid, 0.05, 100.0) {
+            Acquire::Converged(_) => {}
+            Acquire::Next(p, s) => panic!("expected convergence, got {p:?} std {s}"),
+        }
+    }
+
+    #[test]
+    fn variance_of_next_point_decreases_after_profiling_it() {
+        // Fig 4's mechanism: fitting the max-variance point kills its
+        // uncertainty.
+        let mut points = vec![0.0, 1.0];
+        let gp = fit_on(&points);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 41);
+        let (p, std_before) = match max_variance(&gp, &grid, 0.0, 100.0) {
+            Acquire::Next(p, s) => (p, s),
+            _ => panic!(),
+        };
+        points.push(p[0]);
+        let gp2 = fit_on(&points);
+        let (_, var_after) = gp2.predict(&p);
+        assert!(var_after.sqrt() < 0.6 * std_before, "{} vs {std_before}", var_after.sqrt());
+    }
+
+    #[test]
+    fn dim2_grid_shape() {
+        let g = CandidateGrid::dim2(0.0, 1.0, 7);
+        assert_eq!(g.points.len(), 49);
+        assert!(g.points.iter().all(|p| p.len() == 2));
+    }
+}

@@ -1,0 +1,152 @@
+//! Covariance kernels.  All operate on feature vectors of dimension 1 or 2
+//! (channel configurations), pre-normalized to ~[0, 1] by the caller.
+
+pub const SQRT5: f64 = 2.236_067_977_499_79;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Matérn ν = 5/2 — the paper's kernel (eq. 3 with ν = 2.5).
+    Matern52,
+    /// Squared exponential (A6.2 ablation: overfits, worst).
+    Rbf,
+    /// Linear / dot-product (A6.2 ablation: second).
+    DotProduct,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Kernel {
+    pub kind: KernelKind,
+    /// Length-scale ℓ (ignored by DotProduct).
+    pub lengthscale: f64,
+    /// Signal variance σ².
+    pub variance: f64,
+}
+
+impl Kernel {
+    pub fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), z.len());
+        match self.kind {
+            KernelKind::Matern52 => {
+                let r = dist(x, z);
+                let s = SQRT5 * r / self.lengthscale;
+                self.variance * (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+            KernelKind::Rbf => {
+                let d2 = sq_dist(x, z);
+                self.variance * (-0.5 * d2 / (self.lengthscale * self.lengthscale)).exp()
+            }
+            KernelKind::DotProduct => {
+                let dot: f64 = x.iter().zip(z).map(|(a, b)| a * b).sum();
+                self.variance * (dot + 1.0)
+            }
+        }
+    }
+
+    /// Gram matrix K(X, X) (+ nothing on the diagonal; noise added by the
+    /// GP model).
+    pub fn gram(&self, xs: &[Vec<f64>]) -> crate::util::linalg::Mat {
+        let n = xs.len();
+        let mut k = crate::util::linalg::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.eval(&xs[i], &xs[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+        }
+        k
+    }
+
+    /// Cross-covariance vector k(q, X).
+    pub fn cross(&self, q: &[f64], xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.eval(q, x)).collect()
+    }
+}
+
+pub fn sq_dist(x: &[f64], z: &[f64]) -> f64 {
+    x.iter().zip(z).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+pub fn dist(x: &[f64], z: &[f64]) -> f64 {
+    sq_dist(x, z).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    fn matern(ls: f64, var: f64) -> Kernel {
+        Kernel { kind: KernelKind::Matern52, lengthscale: ls, variance: var }
+    }
+
+    #[test]
+    fn matern_at_zero_distance_is_variance() {
+        let k = matern(0.7, 3.0);
+        assert!((k.eval(&[0.5], &[0.5]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matern_matches_python_oracle() {
+        // Values from python/compile/kernels/ref.py: matern52 with ℓ=0.8,
+        // σ²=2.0 at r=0.5 ->  2*(1+s+s²/3)exp(-s), s=√5*0.5/0.8
+        let s = SQRT5 * 0.5 / 0.8;
+        let want = 2.0 * (1.0 + s + s * s / 3.0) * (-s as f64).exp();
+        let k = matern(0.8, 2.0);
+        let got = k.eval(&[0.0], &[0.5]);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn kernels_symmetric() {
+        for kind in [KernelKind::Matern52, KernelKind::Rbf, KernelKind::DotProduct] {
+            let k = Kernel { kind, lengthscale: 0.5, variance: 1.5 };
+            let a = [0.2, 0.9];
+            let b = [0.7, 0.1];
+            assert!((k.eval(&a, &b) - k.eval(&b, &a)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn gram_psd_via_cholesky() {
+        use crate::util::linalg::cholesky;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(3);
+        for kind in [KernelKind::Matern52, KernelKind::Rbf] {
+            let xs: Vec<Vec<f64>> = (0..20).map(|_| vec![rng.f64(), rng.f64()]).collect();
+            let k = Kernel { kind, lengthscale: 0.4, variance: 1.0 };
+            let mut g = k.gram(&xs);
+            for i in 0..20 {
+                g[(i, i)] += 1e-9; // jitter
+            }
+            assert!(cholesky(&g).is_some(), "{kind:?} gram not PSD");
+        }
+    }
+
+    #[test]
+    fn prop_matern_decays_with_distance() {
+        check(
+            "matern monotone in r",
+            Config { cases: 128, seed: 9 },
+            |r| {
+                let a = r.range_f64(0.0, 2.0);
+                let b = a + r.range_f64(0.01, 2.0);
+                (a, b, r.range_f64(0.1, 3.0))
+            },
+            |&(r1, r2, ls)| {
+                let k = Kernel { kind: KernelKind::Matern52, lengthscale: ls, variance: 1.0 };
+                let v1 = k.eval(&[0.0], &[r1]);
+                let v2 = k.eval(&[0.0], &[r2]);
+                crate::prop_assert!(v1 >= v2, "k({r1})={v1} < k({r2})={v2} at ls={ls}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rbf_narrower_than_matern_at_large_r() {
+        let m = Kernel { kind: KernelKind::Matern52, lengthscale: 0.5, variance: 1.0 };
+        let r = Kernel { kind: KernelKind::Rbf, lengthscale: 0.5, variance: 1.0 };
+        assert!(m.eval(&[0.0], &[2.0]) > r.eval(&[0.0], &[2.0])); // heavier tail
+    }
+}

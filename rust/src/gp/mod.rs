@@ -1,0 +1,25 @@
+//! Gaussian-process regression library (paper §3.3).
+//!
+//! Kernels: Matérn-5/2 (the paper's choice, ν = 2.5 — twice
+//! differentiable, robust to length-scale misspecification), RBF and
+//! DotProduct (the Appendix A6.2 ablation).  Fitting maximizes the log
+//! marginal likelihood over (lengthscale, signal variance, noise) with
+//! multi-start coordinate descent in log-space; prediction gives posterior
+//! mean and variance; the max-variance acquisition drives guided profiling
+//! (active learning, Fig 4).
+//!
+//! Inducing sets are small (≤ `MAX_POINTS`), so fitting uses the native
+//! Cholesky path; *batched prediction* — the estimation hot path — can be
+//! offloaded to the AOT Pallas artifact through
+//! [`crate::runtime::GpExecutor`], which is bit-compatible with
+//! [`GpModel::predict`] (cross-checked in integration tests).
+
+pub mod acquisition;
+pub mod kernel;
+pub mod model;
+
+pub use kernel::{Kernel, KernelKind};
+pub use model::{GpHyper, GpModel};
+
+/// Cap on profiled points per layer family (end condition 1, §3.3).
+pub const MAX_POINTS: usize = 64;

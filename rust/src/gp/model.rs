@@ -1,0 +1,355 @@
+//! GP regression: NLML hyper-parameter fitting, posterior prediction.
+
+use crate::gp::kernel::{Kernel, KernelKind};
+use crate::util::linalg::{chol_inverse, chol_logdet, chol_solve, cholesky, Mat};
+
+/// Hyper-parameters under optimization (log-space internally).
+#[derive(Clone, Copy, Debug)]
+pub struct GpHyper {
+    pub lengthscale: f64,
+    pub variance: f64,
+    pub noise: f64,
+}
+
+impl Default for GpHyper {
+    fn default() -> Self {
+        Self { lengthscale: 0.3, variance: 1.0, noise: 1e-3 }
+    }
+}
+
+/// A fitted GP over normalized inputs (dimension 1 or 2) with
+/// standardized targets (the model stores the de-standardization).
+#[derive(Clone, Debug)]
+pub struct GpModel {
+    pub kind: KernelKind,
+    pub hyper: GpHyper,
+    pub xs: Vec<Vec<f64>>,
+    /// Standardized targets.
+    ys: Vec<f64>,
+    /// Target standardization: y_std = (y − y_mean) / y_scale.
+    pub y_mean: f64,
+    pub y_scale: f64,
+    /// α = K⁻¹ y (standardized).
+    alpha: Vec<f64>,
+    /// K⁻¹ (needed for predictive variance and for export to the Pallas
+    /// posterior artifact).
+    kinv: Mat,
+}
+
+impl GpModel {
+    /// Fit with fixed hyper-parameters.
+    pub fn fit_fixed(kind: KernelKind, hyper: GpHyper, xs: Vec<Vec<f64>>, ys_raw: &[f64]) -> Option<Self> {
+        assert_eq!(xs.len(), ys_raw.len());
+        assert!(!xs.is_empty());
+        let y_mean = crate::util::stats::mean(ys_raw);
+        let y_scale = crate::util::stats::std_dev(ys_raw).max(1e-12 * y_mean.abs()).max(1e-12);
+        let ys: Vec<f64> = ys_raw.iter().map(|y| (y - y_mean) / y_scale).collect();
+        let kern = Kernel { kind, lengthscale: hyper.lengthscale, variance: hyper.variance };
+        let mut k = kern.gram(&xs);
+        for i in 0..xs.len() {
+            k[(i, i)] += hyper.noise + 1e-10;
+        }
+        let l = cholesky(&k)?;
+        let alpha = chol_solve(&l, &ys);
+        let kinv = chol_inverse(&l);
+        Some(Self { kind, hyper, xs, ys, y_mean, y_scale, alpha, kinv })
+    }
+
+    /// Fit hyper-parameters by maximizing the log marginal likelihood with
+    /// multi-start coordinate descent over (log ℓ, log σ², log σ_n²).
+    pub fn fit(kind: KernelKind, xs: Vec<Vec<f64>>, ys_raw: &[f64]) -> Option<Self> {
+        let starts: &[GpHyper] = &[
+            GpHyper { lengthscale: 0.1, variance: 1.0, noise: 1e-3 },
+            GpHyper { lengthscale: 0.3, variance: 1.0, noise: 1e-2 },
+            GpHyper { lengthscale: 1.0, variance: 1.0, noise: 1e-3 },
+        ];
+        let y_mean = crate::util::stats::mean(ys_raw);
+        let y_scale = crate::util::stats::std_dev(ys_raw).max(1e-12 * y_mean.abs()).max(1e-12);
+        let ys: Vec<f64> = ys_raw.iter().map(|y| (y - y_mean) / y_scale).collect();
+
+        let mut best: Option<(f64, GpHyper)> = None;
+        for &start in starts {
+            let h = coord_descent(kind, &xs, &ys, start);
+            if let Some(nlml) = nlml(kind, &xs, &ys, h) {
+                if best.map_or(true, |(b, _)| nlml < b) {
+                    best = Some((nlml, h));
+                }
+            }
+        }
+        let (_, hyper) = best?;
+        Self::fit_fixed(kind, hyper, xs, ys_raw)
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn kernel(&self) -> Kernel {
+        Kernel { kind: self.kind, lengthscale: self.hyper.lengthscale, variance: self.hyper.variance }
+    }
+
+    /// Posterior (mean, variance) at one point, de-standardized.
+    /// Variance is in *standardized* units scaled back by y_scale² (so it
+    /// is comparable across refits of the same family).
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let kern = self.kernel();
+        let kstar = kern.cross(q, &self.xs);
+        let mean_std: f64 = kstar.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        let tmp = self.kinv.matvec(&kstar);
+        let var_std = (self.hyper.variance
+            - kstar.iter().zip(&tmp).map(|(a, b)| a * b).sum::<f64>())
+        .max(0.0);
+        (self.y_mean + self.y_scale * mean_std, self.y_scale * self.y_scale * var_std)
+    }
+
+    /// Batch prediction through the native path (the artifact-backed path
+    /// lives in `runtime::GpExecutor` and is cross-checked against this).
+    ///
+    /// §Perf: reuses one kstar/tmp scratch pair across the batch instead
+    /// of allocating per query, and walks `kinv` row-major in a single
+    /// fused pass that accumulates both `kstar·α` and `kstarᵀK⁻¹kstar`
+    /// (see EXPERIMENTS.md §Perf for the before/after).
+    pub fn predict_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
+        let n = self.xs.len();
+        let kern = self.kernel();
+        let mut means = Vec::with_capacity(qs.len());
+        let mut vars = Vec::with_capacity(qs.len());
+        let mut kstar = vec![0.0f64; n];
+        for q in qs {
+            let mut mean_std = 0.0;
+            for (i, x) in self.xs.iter().enumerate() {
+                let k = kern.eval(q, x);
+                kstar[i] = k;
+                mean_std += k * self.alpha[i];
+            }
+            // quad = kstarᵀ K⁻¹ kstar, fused over rows of K⁻¹
+            let mut quad = 0.0;
+            for (i, &ki) in kstar.iter().enumerate() {
+                if ki == 0.0 {
+                    continue;
+                }
+                let row = self.kinv.row(i);
+                let mut dot = 0.0;
+                for (r, &kj) in row.iter().zip(kstar.iter()) {
+                    dot += r * kj;
+                }
+                quad += ki * dot;
+            }
+            let var_std = (self.hyper.variance - quad).max(0.0);
+            means.push(self.y_mean + self.y_scale * mean_std);
+            vars.push(self.y_scale * self.y_scale * var_std);
+        }
+        (means, vars)
+    }
+
+    /// Export (xs, alpha, kinv, hyper) for the AOT Pallas posterior
+    /// artifact (padding handled by the runtime).
+    pub fn export(&self) -> GpExport<'_> {
+        GpExport {
+            xs: &self.xs,
+            alpha: &self.alpha,
+            kinv: &self.kinv,
+            lengthscale: self.hyper.lengthscale,
+            variance: self.hyper.variance,
+            y_mean: self.y_mean,
+            y_scale: self.y_scale,
+        }
+    }
+
+    /// Serialize to JSON (the store + the coordinator protocol).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let ys_raw: Vec<f64> = self.ys.iter().map(|y| self.y_mean + self.y_scale * y).collect();
+        Json::obj(vec![
+            ("kind", Json::str(match self.kind {
+                KernelKind::Matern52 => "matern52",
+                KernelKind::Rbf => "rbf",
+                KernelKind::DotProduct => "dot",
+            })),
+            ("lengthscale", Json::Num(self.hyper.lengthscale)),
+            ("variance", Json::Num(self.hyper.variance)),
+            ("noise", Json::Num(self.hyper.noise)),
+            ("xs", Json::Arr(self.xs.iter().map(|x| Json::arr_f64(x)).collect())),
+            ("ys", Json::arr_f64(&ys_raw)),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Self> {
+        let kind = match j.get("kind")?.as_str()? {
+            "matern52" => KernelKind::Matern52,
+            "rbf" => KernelKind::Rbf,
+            "dot" => KernelKind::DotProduct,
+            _ => return None,
+        };
+        let hyper = GpHyper {
+            lengthscale: j.get("lengthscale")?.as_f64()?,
+            variance: j.get("variance")?.as_f64()?,
+            noise: j.get("noise")?.as_f64()?,
+        };
+        let xs: Option<Vec<Vec<f64>>> = j.get("xs")?.as_arr()?.iter().map(|x| x.as_f64_vec()).collect();
+        let ys = j.get("ys")?.as_f64_vec()?;
+        Self::fit_fixed(kind, hyper, xs?, &ys)
+    }
+}
+
+/// Borrowed view of the fitted state, consumed by the runtime executor.
+pub struct GpExport<'a> {
+    pub xs: &'a [Vec<f64>],
+    pub alpha: &'a [f64],
+    pub kinv: &'a Mat,
+    pub lengthscale: f64,
+    pub variance: f64,
+    pub y_mean: f64,
+    pub y_scale: f64,
+}
+
+/// Negative log marginal likelihood (standardized targets).
+pub fn nlml(kind: KernelKind, xs: &[Vec<f64>], ys: &[f64], h: GpHyper) -> Option<f64> {
+    let kern = Kernel { kind, lengthscale: h.lengthscale, variance: h.variance };
+    let mut k = kern.gram(xs);
+    for i in 0..xs.len() {
+        k[(i, i)] += h.noise + 1e-10;
+    }
+    let l = cholesky(&k)?;
+    let alpha = chol_solve(&l, ys);
+    let fit: f64 = ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+    Some(0.5 * fit + 0.5 * chol_logdet(&l) + 0.5 * xs.len() as f64 * (2.0 * std::f64::consts::PI).ln())
+}
+
+/// Coordinate descent in log-space with shrinking step, 3 sweeps.
+fn coord_descent(kind: KernelKind, xs: &[Vec<f64>], ys: &[f64], start: GpHyper) -> GpHyper {
+    let mut logs = [start.lengthscale.ln(), start.variance.ln(), start.noise.ln()];
+    let bounds = [(-4.0, 2.0), (-4.0, 4.0), (-9.0, 0.0)];
+    let mut best = nlml(kind, xs, ys, from_logs(logs)).unwrap_or(f64::INFINITY);
+    let mut step = 0.8;
+    for _sweep in 0..6 {
+        for d in 0..3 {
+            for dir in [-1.0, 1.0] {
+                let mut cand = logs;
+                cand[d] = (cand[d] + dir * step).clamp(bounds[d].0, bounds[d].1);
+                if let Some(v) = nlml(kind, xs, ys, from_logs(cand)) {
+                    if v < best {
+                        best = v;
+                        logs = cand;
+                    }
+                }
+            }
+        }
+        step *= 0.6;
+    }
+    from_logs(logs)
+}
+
+fn from_logs(l: [f64; 3]) -> GpHyper {
+    GpHyper { lengthscale: l[0].exp(), variance: l[1].exp(), noise: l[2].exp() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy_1d(n: usize, noise: f64, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let xs: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 50.0 + 30.0 * (6.0 * x[0]).sin() + noise * rng.normal())
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let (xs, ys) = toy_1d(15, 0.0, 1);
+        let gp = GpModel::fit(KernelKind::Matern52, xs.clone(), &ys).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let (m, _) = gp.predict(x);
+            assert!((m - y).abs() < 2.0, "{m} vs {y}");
+        }
+        // interpolation between points is sane
+        let (m, v) = gp.predict(&[0.5 / 14.0 + 1.0 / 14.0]);
+        assert!(m.is_finite() && v >= 0.0);
+    }
+
+    #[test]
+    fn variance_shrinks_near_data_grows_far() {
+        let (xs, ys) = toy_1d(10, 0.5, 2);
+        let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+        let (_, v_near) = gp.predict(&[0.0]);
+        let (_, v_far) = gp.predict(&[3.0]);
+        assert!(v_far > 5.0 * v_near.max(1e-12), "near {v_near} far {v_far}");
+    }
+
+    #[test]
+    fn fit_beats_bad_fixed_hypers_on_nlml() {
+        let (xs, ys) = toy_1d(20, 1.0, 3);
+        let y_mean = crate::util::stats::mean(&ys);
+        let y_scale = crate::util::stats::std_dev(&ys);
+        let ys_std: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_scale).collect();
+        let fitted = GpModel::fit(KernelKind::Matern52, xs.clone(), &ys).unwrap();
+        let bad = GpHyper { lengthscale: 10.0, variance: 0.01, noise: 0.9 };
+        let n_fit = nlml(KernelKind::Matern52, &xs, &ys_std, fitted.hyper).unwrap();
+        let n_bad = nlml(KernelKind::Matern52, &xs, &ys_std, bad).unwrap();
+        assert!(n_fit < n_bad, "{n_fit} vs {n_bad}");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let (xs, ys) = toy_1d(12, 0.3, 4);
+        let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+        let j = gp.to_json();
+        let back = GpModel::from_json(&crate::util::json::Json::parse(&j.to_string()).unwrap()).unwrap();
+        for q in [[0.1], [0.45], [0.99]] {
+            let (m1, v1) = gp.predict(&q);
+            let (m2, v2) = back.predict(&q);
+            assert!((m1 - m2).abs() < 1e-6 * m1.abs().max(1.0), "{m1} {m2}");
+            assert!((v1 - v2).abs() < 1e-6 * v1.abs().max(1e-9));
+        }
+    }
+
+    #[test]
+    fn predict_batch_matches_scalar() {
+        let (xs, ys) = toy_1d(10, 0.2, 5);
+        let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+        let qs: Vec<Vec<f64>> = (0..7).map(|i| vec![i as f64 / 6.0]).collect();
+        let (ms, vs) = gp.predict_batch(&qs);
+        for (i, q) in qs.iter().enumerate() {
+            let (m, v) = gp.predict(q);
+            assert_eq!(ms[i], m);
+            assert_eq!(vs[i], v);
+        }
+    }
+
+    #[test]
+    fn handles_2d_inputs() {
+        let mut rng = Pcg64::new(6);
+        let xs: Vec<Vec<f64>> = (0..25).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 10.0 * x[0] + 5.0 * (4.0 * x[1]).cos()).collect();
+        let gp = GpModel::fit(KernelKind::Matern52, xs.clone(), &ys).unwrap();
+        let mut err = 0.0;
+        for (x, y) in xs.iter().zip(&ys) {
+            err += (gp.predict(x).0 - y).abs();
+        }
+        assert!(err / 25.0 < 1.0, "mean abs err {}", err / 25.0);
+    }
+
+    #[test]
+    fn dotproduct_fits_linear_data_well() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 9.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 4.0 + 2.0 * x[0]).collect();
+        let gp = GpModel::fit(KernelKind::DotProduct, xs, &ys).unwrap();
+        let (m, _) = gp.predict(&[0.55]);
+        assert!((m - 5.1).abs() < 0.1, "{m}");
+    }
+
+    #[test]
+    fn singular_inputs_do_not_panic() {
+        // duplicate points with different noise-free targets: noise floor
+        // keeps the gram invertible
+        let xs = vec![vec![0.5], vec![0.5], vec![0.5]];
+        let ys = [1.0, 2.0, 3.0];
+        let gp = GpModel::fit(KernelKind::Matern52, xs, &ys);
+        assert!(gp.is_some());
+    }
+}

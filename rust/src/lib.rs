@@ -1,0 +1,34 @@
+//! THOR: a generic energy-estimation framework for on-device DNN training.
+//!
+//! Reproduction of "THOR: A Generic Energy Estimation Approach for On-Device
+//! Training" (Zhang et al., 2025) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: profiling orchestration,
+//!   Gaussian-process fitting with active learning, layer parsing, the
+//!   estimator, the device-fleet leader/worker protocol, baselines, and the
+//!   device-energy simulator substrate that stands in for the paper's five
+//!   physical devices.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs (GP batch
+//!   posterior, CNN train step) AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (Matérn-5/2
+//!   cross-covariance, fused GP posterior, tiled matmul with custom VJP)
+//!   called from layer 2.
+//!
+//! Python never runs on the estimation path: artifacts are compiled once by
+//! `make artifacts` and executed from [`runtime`] through PJRT.
+//!
+//! Start at [`thor::Thor`] for the estimation pipeline, [`simdevice`] for
+//! the device substrate, and [`exp`] for the paper's tables and figures.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod exp;
+pub mod gp;
+pub mod model;
+pub mod pruning;
+pub mod runtime;
+pub mod simdevice;
+pub mod thor;
+pub mod trainer;
+pub mod util;
+pub mod workload;

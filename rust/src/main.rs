@@ -1,0 +1,153 @@
+//! `thor` — CLI for the THOR energy-estimation framework.
+//!
+//! Subcommands:
+//!   profile   profile a model family on a simulated device, save the GP store
+//!   estimate  estimate a model's training energy from a saved store
+//!   exp       regenerate a paper table/figure (fig2..fig13, tab1, a14..a16)
+//!   serve     run the fleet fitting leader (TCP)
+//!   worker    run a device worker against a leader
+//!   devices   list the simulated device fleet
+
+use anyhow::{anyhow, Result};
+
+use thor::coordinator::{DeviceWorker, FleetServer};
+use thor::exp::{self, ExpConfig};
+use thor::model::sampler::Family;
+use thor::simdevice::{devices, Device};
+use thor::thor::{Thor, ThorConfig};
+use thor::util::cli::{parse, Spec};
+
+fn specs() -> Vec<Spec> {
+    vec![
+        Spec { name: "device", takes_value: true, help: "device name (oppo|iphone|xavier|tx2|server)" },
+        Spec { name: "model", takes_value: true, help: "model family (lenet5|cnn5|har|lstm|transformer|resnet20|...)" },
+        Spec { name: "store", takes_value: true, help: "GP store JSON path (default thor_store.json)" },
+        Spec { name: "seed", takes_value: true, help: "rng seed (default 2025)" },
+        Spec { name: "quick", takes_value: false, help: "reduced sample counts" },
+        Spec { name: "iterations", takes_value: true, help: "profiling iterations per measurement (default 500)" },
+        Spec { name: "addr", takes_value: true, help: "leader address (default 127.0.0.1:7707)" },
+        Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1)" },
+        Spec { name: "help", takes_value: false, help: "print usage" },
+    ]
+}
+
+fn family_by_name(name: &str) -> Result<Family> {
+    Ok(match name {
+        "lenet5" => Family::LeNet5,
+        "cnn5" => Family::Cnn5,
+        "har" => Family::Har,
+        "lstm" => Family::Lstm,
+        "transformer" => Family::Transformer,
+        "resnet20" => Family::ResNet20,
+        "resnet56" => Family::ResNet56,
+        "resnet110" => Family::ResNet110,
+        other => return Err(anyhow!("unknown model family '{other}'")),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse(&argv, &specs()).map_err(|e| anyhow!("{e}\n{}", thor::util::cli::usage("thor", &specs())))?;
+    if args.has("help") || args.positional().is_empty() {
+        println!("{}", thor::util::cli::usage("thor <profile|estimate|exp|serve|worker|devices>", &specs()));
+        return Ok(());
+    }
+    let cmd = args.positional()[0].as_str();
+    let seed = args.get_usize("seed", 2025)? as u64;
+    let store_path = std::path::PathBuf::from(args.get_str("store", "thor_store.json"));
+
+    match cmd {
+        "devices" => {
+            for d in devices::all() {
+                println!(
+                    "{:8}  slots={:6}  peak={:.2e} FLOP/s  idle={:5.1} W  governor={:?}  meter={} ms",
+                    d.name, d.slots, d.peak_flops, d.idle_power_w, d.governor, d.meter.interval_s * 1e3
+                );
+            }
+        }
+        "profile" => {
+            let dev_name = args.get_str("device", "xavier");
+            let fam = family_by_name(args.get_str("model", "cnn5"))?;
+            let profile = devices::by_name(dev_name).ok_or_else(|| anyhow!("unknown device {dev_name}"))?;
+            let mut dev = Device::new(profile, seed);
+            let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
+            cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
+            let mut thor = Thor::new(cfg);
+            if store_path.exists() {
+                if let Ok(Some(s)) = thor::thor::store::GpStore::load(&store_path) {
+                    thor.store = s;
+                }
+            }
+            let report = thor.profile(&mut dev, &exp::reference_model(fam));
+            for f in &report.families {
+                println!(
+                    "fitted {:45} points={:3} device={:8.1}s fit={:6.2}s converged={}",
+                    f.family, f.points, f.device_seconds, f.fit_seconds, f.converged
+                );
+            }
+            thor.store.save(&store_path)?;
+            println!("saved {} family GPs to {store_path:?}", thor.store.len());
+        }
+        "estimate" => {
+            let dev_name = args.get_str("device", "xavier");
+            let fam = family_by_name(args.get_str("model", "cnn5"))?;
+            let store = thor::thor::store::GpStore::load(&store_path)?
+                .ok_or_else(|| anyhow!("cannot parse {store_path:?}"))?;
+            let g = exp::reference_model(fam);
+            let est = thor::thor::estimator::estimate(&store, dev_name, &g)?;
+            println!("model {}  on {dev_name}:", g.name);
+            for (fam_id, feats, e) in &est.per_layer {
+                println!("  {:45} {:?} -> {:.4e} J/iter", fam_id, feats, e);
+            }
+            println!("total: {:.4e} J/iter ({:.1} J per 1000 iterations)", est.energy_per_iter, est.total(1000));
+        }
+        "exp" => {
+            let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("fig8");
+            let cfg = ExpConfig::new(args.has("quick"), seed);
+            let out = match which {
+                "fig2" => exp::fig2::run(&cfg),
+                "fig4" => exp::fig4::run(&cfg),
+                "fig5" => exp::fig5::run(&cfg),
+                "fig6" => exp::fig6::run(&cfg),
+                "fig7" => exp::fig7::run(&cfg),
+                "fig8" => {
+                    let (a, b) = exp::fig8::run(&cfg);
+                    format!("{a}\n# Table 1 — profiling + fitting cost\n{b}")
+                }
+                "tab1" => exp::fig8::run(&cfg).1,
+                "fig9" => exp::fig9::run(&cfg),
+                "fig10" => exp::fig10::run(&cfg),
+                "fig11" => exp::fig11::run(&cfg),
+                "fig12" => exp::fig12::run(&cfg),
+                "a14" => exp::a14::run(&cfg),
+                "a15" => exp::a15::run(&cfg),
+                "a16" => exp::a16::run(&cfg),
+                other => return Err(anyhow!("unknown experiment '{other}' (fig13 lives in examples/energy_aware_pruning)")),
+            };
+            println!("{out}");
+        }
+        "serve" => {
+            let addr = args.get_str("addr", "127.0.0.1:7707");
+            let fam = family_by_name(args.get_str("model", "cnn5"))?;
+            let workers = args.get_usize("workers", 1)?;
+            let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
+            cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
+            let server = FleetServer::new(cfg);
+            println!("fitting leader on {addr} (model {} , expecting {workers} workers)", fam.name());
+            let store = server.run(addr, &exp::reference_model(fam), workers)?;
+            store.save(&store_path)?;
+            println!("saved {} family GPs to {store_path:?}", store.len());
+        }
+        "worker" => {
+            let addr = args.get_str("addr", "127.0.0.1:7707");
+            let dev_name = args.get_str("device", "xavier");
+            let fam = family_by_name(args.get_str("model", "cnn5"))?;
+            let profile = devices::by_name(dev_name).ok_or_else(|| anyhow!("unknown device {dev_name}"))?;
+            let mut worker = DeviceWorker::new(Device::new(profile, seed), &exp::reference_model(fam));
+            let done = worker.run(addr)?;
+            println!("worker {dev_name} finished {done} jobs");
+        }
+        other => return Err(anyhow!("unknown command '{other}'")),
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Training-iteration FLOPs / parameter / activation-byte accounting.
+//!
+//! This is the information content available to the paper's comparison
+//! baseline (proxy-based estimation): forward FLOPs from the architecture,
+//! backward ≈ 2× forward (grad-input + grad-weight), update ≈ a few ops
+//! per parameter.  The FLOPs-LR baseline regresses measured energy on
+//! exactly these numbers; its failure modes (utilization plateaus, DVFS,
+//! fusion) are what THOR's GP absorbs.
+
+use super::{LayerKind, LayerSpec, ModelGraph};
+
+/// Forward-pass FLOPs for one layer (multiply-add counted as 2 FLOPs).
+pub fn fwd_flops(l: &LayerSpec) -> f64 {
+    let b = l.batch as f64;
+    let (oh, ow) = l.out_hw();
+    match &l.kind {
+        LayerKind::Conv2d { kernel, .. } => {
+            2.0 * (kernel * kernel) as f64 * l.c_in as f64 * l.c_out as f64 * (oh * ow) as f64 * b
+        }
+        LayerKind::Fc => 2.0 * l.c_in as f64 * l.c_out as f64 * b,
+        LayerKind::BatchNorm => 4.0 * l.out_elems() as f64,
+        LayerKind::Relu | LayerKind::Dropout | LayerKind::ResidualAdd => l.out_elems() as f64,
+        LayerKind::MaxPool { size } => (size * size) as f64 * l.out_elems() as f64,
+        LayerKind::Softmax => 5.0 * l.out_elems() as f64,
+        LayerKind::Embedding => l.out_elems() as f64, // gather
+        LayerKind::Lstm => {
+            // 4 gates, each a (c_in + c_out) x c_out matmul per timestep.
+            2.0 * 4.0 * (l.c_in + l.c_out) as f64 * l.c_out as f64 * l.h as f64 * b
+                + 9.0 * l.out_elems() as f64 // gate nonlinearities + cell update
+        }
+        LayerKind::Attention { .. } => {
+            let d = l.c_in as f64;
+            let s = l.h as f64;
+            // qkv + output projections, plus the two s×s attention matmuls.
+            2.0 * 4.0 * d * d * s * b + 2.0 * 2.0 * s * s * d * b
+        }
+        LayerKind::LayerNorm => 6.0 * l.out_elems() as f64,
+    }
+}
+
+/// Backward-pass FLOPs: grad-input + grad-weight ≈ 2× forward for
+/// parametric layers, ≈ 1× for elementwise.
+pub fn bwd_flops(l: &LayerSpec) -> f64 {
+    if l.kind.is_parametric() {
+        2.0 * fwd_flops(l)
+    } else {
+        fwd_flops(l)
+    }
+}
+
+/// Optimizer-update FLOPs (plain SGD: ~2 per parameter).
+pub fn update_flops(l: &LayerSpec) -> f64 {
+    2.0 * l.params() as f64
+}
+
+/// Full training-iteration FLOPs for one layer.
+pub fn train_flops(l: &LayerSpec) -> f64 {
+    fwd_flops(l) + bwd_flops(l) + update_flops(l)
+}
+
+/// Full training-iteration FLOPs for a model.
+pub fn model_train_flops(g: &ModelGraph) -> f64 {
+    g.layers.iter().map(train_flops).sum()
+}
+
+/// Activation bytes written per iteration (f32).
+pub fn activation_bytes(l: &LayerSpec) -> f64 {
+    4.0 * l.out_elems() as f64
+}
+
+/// Parameter bytes (weights + grads + optimizer state read/write).
+pub fn param_bytes(l: &LayerSpec) -> f64 {
+    4.0 * l.params() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn conv_flops_formula() {
+        let l = LayerSpec {
+            kind: LayerKind::Conv2d { kernel: 3, stride: 1, padded: true },
+            c_in: 4,
+            c_out: 8,
+            h: 10,
+            w: 10,
+            batch: 2,
+        };
+        assert_eq!(fwd_flops(&l), 2.0 * 9.0 * 4.0 * 8.0 * 100.0 * 2.0);
+    }
+
+    #[test]
+    fn fc_flops_formula() {
+        let l = LayerSpec { kind: LayerKind::Fc, c_in: 100, c_out: 10, h: 1, w: 1, batch: 5 };
+        assert_eq!(fwd_flops(&l), 2.0 * 100.0 * 10.0 * 5.0);
+    }
+
+    #[test]
+    fn training_is_roughly_3x_forward_for_parametric() {
+        let l = LayerSpec { kind: LayerKind::Fc, c_in: 512, c_out: 512, h: 1, w: 1, batch: 32 };
+        let ratio = train_flops(&l) / fwd_flops(&l);
+        assert!(ratio > 2.9 && ratio < 3.2, "{ratio}");
+    }
+
+    #[test]
+    fn model_flops_monotone_in_width() {
+        let small = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let big = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
+        assert!(model_train_flops(&big) > 2.0 * model_train_flops(&small));
+    }
+
+    #[test]
+    fn flops_positive_for_all_zoo_models() {
+        for g in zoo::all_default_models() {
+            assert!(model_train_flops(&g) > 0.0, "{}", g.name);
+        }
+    }
+}

@@ -1,0 +1,237 @@
+//! Model IR: layer specifications and sequential model graphs.
+//!
+//! THOR never executes these graphs itself — it parses them
+//! ([`crate::thor::parse`]), counts their FLOPs for the baseline
+//! ([`flops`]), lowers them to op traces for the simulated devices
+//! ([`crate::workload`]), and sums per-layer GP estimates over them
+//! ([`crate::thor::estimator`]).
+
+pub mod flops;
+pub mod sampler;
+pub mod zoo;
+
+/// Layer type plus the *structural* hyper-parameters that the paper's
+/// layer-parsing rule keys on (kernel size, stride, ...).  Channel counts
+/// and spatial sizes live in [`LayerSpec`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// 2-D convolution (kernel, stride, same-padding flag).
+    Conv2d { kernel: usize, stride: usize, padded: bool },
+    /// Fully-connected.
+    Fc,
+    /// Batch normalization (parametric but grouped with its producer).
+    BatchNorm,
+    Relu,
+    MaxPool { size: usize },
+    Dropout,
+    Softmax,
+    /// Token embedding lookup; `c_in` is the vocabulary size.
+    Embedding,
+    /// LSTM layer; `c_out` is the unit count, `h` the sequence length.
+    Lstm,
+    /// Multi-head self-attention; `c_in == c_out == d_model`.
+    Attention { heads: usize },
+    LayerNorm,
+    /// Residual skip-add closing a ResNet block (elementwise).
+    ResidualAdd,
+}
+
+impl LayerKind {
+    /// Non-parametric layers are grouped with their preceding parametric
+    /// layer during parsing (paper §3.2).  BatchNorm is treated as
+    /// non-parametric for grouping because frameworks fuse it into the
+    /// producing conv (Conv-BN-ReLU fusion).
+    pub fn is_parametric(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv2d { .. }
+                | LayerKind::Fc
+                | LayerKind::Embedding
+                | LayerKind::Lstm
+                | LayerKind::Attention { .. }
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Conv2d { .. } => "conv2d",
+            LayerKind::Fc => "fc",
+            LayerKind::BatchNorm => "batchnorm",
+            LayerKind::Relu => "relu",
+            LayerKind::MaxPool { .. } => "maxpool",
+            LayerKind::Dropout => "dropout",
+            LayerKind::Softmax => "softmax",
+            LayerKind::Embedding => "embedding",
+            LayerKind::Lstm => "lstm",
+            LayerKind::Attention { .. } => "attention",
+            LayerKind::LayerNorm => "layernorm",
+            LayerKind::ResidualAdd => "residual_add",
+        }
+    }
+}
+
+/// One layer instance with concrete dimensions.
+///
+/// Dimension conventions:
+/// * conv/pool: input is `(batch, c_in, h, w)`, output channels `c_out`;
+/// * fc: input features `c_in`, output features `c_out` (`h = w = 1`);
+/// * embedding: vocabulary `c_in`, embedding dim `c_out`, seq len `h`;
+/// * lstm: input dim `c_in`, units `c_out`, seq len `h`;
+/// * attention: `d_model = c_in = c_out`, seq len `h`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub h: usize,
+    pub w: usize,
+    pub batch: usize,
+}
+
+impl LayerSpec {
+    /// Output spatial size (for conv/pool chains).
+    pub fn out_hw(&self) -> (usize, usize) {
+        match &self.kind {
+            LayerKind::Conv2d { kernel, stride, padded } => {
+                let eff = |d: usize| {
+                    let d = if *padded { d } else { d.saturating_sub(kernel - 1) };
+                    d.div_ceil(*stride).max(1)
+                };
+                (eff(self.h), eff(self.w))
+            }
+            LayerKind::MaxPool { size } => ((self.h / size).max(1), (self.w / size).max(1)),
+            _ => (self.h, self.w),
+        }
+    }
+
+    /// Parameter count (for FLOPs/bytes accounting).
+    pub fn params(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv2d { kernel, .. } => kernel * kernel * self.c_in * self.c_out + self.c_out,
+            LayerKind::Fc => self.c_in * self.c_out + self.c_out,
+            LayerKind::BatchNorm => 2 * self.c_out,
+            LayerKind::Embedding => self.c_in * self.c_out,
+            LayerKind::Lstm => 4 * ((self.c_in + self.c_out) * self.c_out + self.c_out),
+            LayerKind::Attention { .. } => 4 * (self.c_in * self.c_out + self.c_out),
+            LayerKind::LayerNorm => 2 * self.c_out,
+            _ => 0,
+        }
+    }
+
+    /// Output activation element count per iteration.
+    pub fn out_elems(&self) -> usize {
+        let (oh, ow) = self.out_hw();
+        match &self.kind {
+            LayerKind::Fc => self.batch * self.c_out,
+            LayerKind::Embedding | LayerKind::Lstm | LayerKind::Attention { .. } => {
+                self.batch * self.h * self.c_out
+            }
+            _ => self.batch * self.c_out * oh * ow,
+        }
+    }
+}
+
+/// A sequential model: layers chained input → output.
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelGraph {
+    pub fn new(name: &str, layers: Vec<LayerSpec>) -> Self {
+        Self { name: name.to_string(), layers }
+    }
+
+    /// Validate the dimension chaining between consecutive parametric
+    /// layers (panics describe the first mismatch — used by zoo tests).
+    pub fn check_dims(&self) -> Result<(), String> {
+        let mut cur_c: Option<usize> = None;
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.kind.is_parametric() {
+                if let Some(c) = cur_c {
+                    // Fc after conv consumes flattened features; allow both
+                    // exact channel chaining and flattened chaining.
+                    let ok = l.c_in == c || l.c_in % c == 0;
+                    if !ok {
+                        return Err(format!(
+                            "layer {i} ({}) c_in {} incompatible with producer channels {c}",
+                            l.kind.name(),
+                            l.c_in
+                        ));
+                    }
+                }
+                cur_c = Some(l.c_out);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(c_in: usize, c_out: usize, h: usize) -> LayerSpec {
+        LayerSpec {
+            kind: LayerKind::Conv2d { kernel: 3, stride: 1, padded: true },
+            c_in,
+            c_out,
+            h,
+            w: h,
+            batch: 10,
+        }
+    }
+
+    #[test]
+    fn conv_same_padding_keeps_hw() {
+        let l = conv(3, 16, 28);
+        assert_eq!(l.out_hw(), (28, 28));
+    }
+
+    #[test]
+    fn conv_valid_shrinks() {
+        let l = LayerSpec {
+            kind: LayerKind::Conv2d { kernel: 5, stride: 1, padded: false },
+            c_in: 1,
+            c_out: 6,
+            h: 28,
+            w: 28,
+            batch: 10,
+        };
+        assert_eq!(l.out_hw(), (24, 24));
+    }
+
+    #[test]
+    fn pool_halves() {
+        let l = LayerSpec { kind: LayerKind::MaxPool { size: 2 }, c_in: 8, c_out: 8, h: 28, w: 28, batch: 10 };
+        assert_eq!(l.out_hw(), (14, 14));
+    }
+
+    #[test]
+    fn params_conv_fc() {
+        assert_eq!(conv(3, 16, 28).params(), 3 * 3 * 3 * 16 + 16);
+        let fc = LayerSpec { kind: LayerKind::Fc, c_in: 100, c_out: 10, h: 1, w: 1, batch: 10 };
+        assert_eq!(fc.params(), 1010);
+    }
+
+    #[test]
+    fn dims_check_catches_mismatch() {
+        let g = ModelGraph::new("bad", vec![conv(3, 16, 28), conv(17, 8, 28)]);
+        assert!(g.check_dims().is_err());
+        let good = ModelGraph::new("ok", vec![conv(3, 16, 28), conv(16, 8, 28)]);
+        assert!(good.check_dims().is_ok());
+    }
+
+    #[test]
+    fn grouping_classification() {
+        assert!(LayerKind::Conv2d { kernel: 3, stride: 1, padded: true }.is_parametric());
+        assert!(!LayerKind::Relu.is_parametric());
+        assert!(!LayerKind::BatchNorm.is_parametric()); // fused with producer
+        assert!(LayerKind::Lstm.is_parametric());
+    }
+}

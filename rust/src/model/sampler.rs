@@ -1,0 +1,156 @@
+//! Random architecture sampling (paper §4.1): "we randomly sample the DNN
+//! architectures across channels ranging from 1 to the original channel.
+//! For the Transformer model, we randomly sample the number of encoder
+//! layers and hidden dimensions."
+
+use super::{zoo, ModelGraph};
+use crate::util::rng::Pcg64;
+
+/// The model families evaluated in Fig 8 (plus Transformer/ResNet for
+/// Figs 9-10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    LeNet5,
+    Cnn5,
+    Har,
+    Lstm,
+    Transformer,
+    ResNet20,
+    ResNet56,
+    ResNet110,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::LeNet5 => "lenet5",
+            Family::Cnn5 => "cnn5",
+            Family::Har => "har",
+            Family::Lstm => "lstm",
+            Family::Transformer => "transformer",
+            Family::ResNet20 => "resnet20",
+            Family::ResNet56 => "resnet56",
+            Family::ResNet110 => "resnet110",
+        }
+    }
+
+    pub fn fig8_families() -> [Family; 4] {
+        [Family::LeNet5, Family::Cnn5, Family::Har, Family::Lstm]
+    }
+}
+
+/// Maximum ("original") channel widths per family — random structures are
+/// drawn with each channel uniform in [1, original].
+pub fn original_widths(f: Family) -> Vec<usize> {
+    match f {
+        Family::LeNet5 => vec![6, 16, 120, 84],
+        Family::Cnn5 => vec![32, 64, 128, 256],
+        Family::Har => vec![32, 64, 128],
+        Family::Lstm => vec![64, 128, 128],
+        Family::Transformer => vec![4, 256], // (#encoder layers, d_model)
+        Family::ResNet20 | Family::ResNet56 | Family::ResNet110 => vec![16],
+    }
+}
+
+/// Draw one random structure from a family.
+pub fn sample(f: Family, rng: &mut Pcg64, batch: usize) -> ModelGraph {
+    let orig = original_widths(f);
+    let draw = |rng: &mut Pcg64, hi: usize| rng.range_usize(1, hi);
+    match f {
+        Family::LeNet5 => {
+            let ch = [draw(rng, orig[0]), draw(rng, orig[1]), draw(rng, orig[2]), draw(rng, orig[3])];
+            zoo::lenet5(&ch, batch)
+        }
+        Family::Cnn5 => {
+            let ch = [draw(rng, orig[0]), draw(rng, orig[1]), draw(rng, orig[2]), draw(rng, orig[3])];
+            zoo::cnn5(&ch, 28, batch)
+        }
+        Family::Har => {
+            let ch = [draw(rng, orig[0]), draw(rng, orig[1]), draw(rng, orig[2])];
+            zoo::har(&ch, batch)
+        }
+        Family::Lstm => {
+            let e = draw(rng, orig[0]);
+            let u = [draw(rng, orig[1]), draw(rng, orig[2])];
+            zoo::lstm(e, &u, 2000, 32, batch)
+        }
+        Family::Transformer => {
+            let n = rng.range_usize(1, orig[0]);
+            // d_model must be divisible by heads; sample multiples of 8.
+            let d = 8 * rng.range_usize(2, orig[1] / 8);
+            zoo::transformer(n, d, 4, 32, 2000, batch)
+        }
+        Family::ResNet20 => zoo::resnet(20, rng.range_usize(4, orig[0]), batch),
+        Family::ResNet56 => zoo::resnet(56, rng.range_usize(4, orig[0]), batch),
+        Family::ResNet110 => zoo::resnet(110, rng.range_usize(4, orig[0]), batch),
+    }
+}
+
+/// Draw `n` random structures (the paper uses 100 per family, 3 repeats).
+pub fn sample_n(f: Family, n: usize, seed: u64, batch: usize) -> Vec<ModelGraph> {
+    let mut rng = Pcg64::new(seed);
+    (0..n).map(|_| sample(f, &mut rng, batch)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::flops::model_train_flops;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn samples_are_valid_models() {
+        for f in [Family::LeNet5, Family::Cnn5, Family::Har, Family::Lstm, Family::Transformer, Family::ResNet20] {
+            for g in sample_n(f, 10, 1, 10) {
+                g.check_dims().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+                assert!(model_train_flops(&g) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let a = sample_n(Family::Cnn5, 5, 9, 10);
+        let b = sample_n(Family::Cnn5, 5, 9, 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.layers, y.layers);
+        }
+    }
+
+    #[test]
+    fn prop_channels_within_bounds() {
+        check(
+            "sampled channels ≤ original",
+            Config { cases: 64, seed: 3 },
+            |r| sample(Family::Cnn5, r, 10),
+            |g| {
+                let orig = original_widths(Family::Cnn5);
+                let mut ci = 0;
+                for l in &g.layers {
+                    if let crate::model::LayerKind::Conv2d { .. } = l.kind {
+                        crate::prop_assert!(
+                            l.c_out >= 1 && l.c_out <= orig[ci],
+                            "conv{} c_out {} out of [1, {}]",
+                            ci,
+                            l.c_out,
+                            orig[ci]
+                        );
+                        ci += 1;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn transformer_d_model_divisible_by_heads() {
+        for g in sample_n(Family::Transformer, 20, 11, 10) {
+            for l in &g.layers {
+                if let crate::model::LayerKind::Attention { heads } = l.kind {
+                    assert_eq!(l.c_in % heads, 0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! The paper's model families (Appendix A5.1), parameterized by channel
+//! widths so the architecture sampler can draw random variants.
+//!
+//! * LeNet-5 (MNIST/FEMNIST shapes)
+//! * 5-layer CNN: four Conv-BN-MaxPool blocks + FC
+//! * HAR CNN (MotionSense shapes: 9-channel inertial windows)
+//! * LSTM: embedding + 2 stacked LSTMs with dropout + FC
+//! * Transformer encoder (sampled over #layers and d_model)
+//! * ResNet-20/56/110 (CIFAR-style, modular residual stages)
+
+use super::{LayerKind, LayerSpec, ModelGraph};
+
+fn conv(kernel: usize, c_in: usize, c_out: usize, h: usize, w: usize, batch: usize, padded: bool) -> LayerSpec {
+    LayerSpec { kind: LayerKind::Conv2d { kernel, stride: 1, padded }, c_in, c_out, h, w, batch }
+}
+
+fn np_layer(kind: LayerKind, c: usize, h: usize, w: usize, batch: usize) -> LayerSpec {
+    LayerSpec { kind, c_in: c, c_out: c, h, w, batch }
+}
+
+fn fc(c_in: usize, c_out: usize, batch: usize) -> LayerSpec {
+    LayerSpec { kind: LayerKind::Fc, c_in, c_out, h: 1, w: 1, batch }
+}
+
+/// LeNet-5: conv5(c0) pool conv5(c1) pool fc(f0) fc(f1) fc(classes).
+/// Default channels (6, 16, 120, 84), input 28x28x1.
+pub fn lenet5(ch: &[usize; 4], batch: usize) -> ModelGraph {
+    let (c0, c1, f0, f1) = (ch[0], ch[1], ch[2], ch[3]);
+    let mut layers = Vec::new();
+    layers.push(conv(5, 1, c0, 28, 28, batch, false)); // -> 24
+    layers.push(np_layer(LayerKind::Relu, c0, 24, 24, batch));
+    layers.push(np_layer(LayerKind::MaxPool { size: 2 }, c0, 24, 24, batch)); // -> 12
+    layers.push(conv(5, c0, c1, 12, 12, batch, false)); // -> 8
+    layers.push(np_layer(LayerKind::Relu, c1, 8, 8, batch));
+    layers.push(np_layer(LayerKind::MaxPool { size: 2 }, c1, 8, 8, batch)); // -> 4
+    layers.push(fc(c1 * 16, f0, batch));
+    layers.push(np_layer(LayerKind::Relu, f0, 1, 1, batch));
+    layers.push(fc(f0, f1, batch));
+    layers.push(np_layer(LayerKind::Relu, f1, 1, 1, batch));
+    layers.push(fc(f1, 10, batch));
+    layers.push(np_layer(LayerKind::Softmax, 10, 1, 1, batch));
+    ModelGraph::new("lenet5", layers)
+}
+
+/// The paper's 5-layer CNN: four Conv3x3-BN-MaxPool blocks + FC.
+/// Default channels (32, 64, 128, 256), input `img`x`img`x3.
+pub fn cnn5(ch: &[usize; 4], img: usize, batch: usize) -> ModelGraph {
+    let mut layers = Vec::new();
+    let mut c_prev = 3;
+    let mut hw = img;
+    for &c in ch {
+        layers.push(conv(3, c_prev, c, hw, hw, batch, true));
+        layers.push(np_layer(LayerKind::BatchNorm, c, hw, hw, batch));
+        layers.push(np_layer(LayerKind::Relu, c, hw, hw, batch));
+        layers.push(np_layer(LayerKind::MaxPool { size: 2 }, c, hw, hw, batch));
+        hw = (hw / 2).max(1);
+        c_prev = c;
+    }
+    layers.push(fc(c_prev * hw * hw, 10, batch));
+    layers.push(np_layer(LayerKind::Softmax, 10, 1, 1, batch));
+    ModelGraph::new("cnn5", layers)
+}
+
+/// HAR CNN over MotionSense-like windows: input (batch, 9, 128, 1);
+/// two temporal conv blocks + two FC layers.
+pub fn har(ch: &[usize; 3], batch: usize) -> ModelGraph {
+    let (c0, c1, f0) = (ch[0], ch[1], ch[2]);
+    let mut layers = Vec::new();
+    layers.push(conv(3, 9, c0, 128, 1, batch, true));
+    layers.push(np_layer(LayerKind::Relu, c0, 128, 1, batch));
+    layers.push(np_layer(LayerKind::MaxPool { size: 2 }, c0, 128, 1, batch)); // 64x1... pool w=1 floor
+    layers.push(conv(3, c0, c1, 64, 1, batch, true));
+    layers.push(np_layer(LayerKind::Relu, c1, 64, 1, batch));
+    layers.push(np_layer(LayerKind::MaxPool { size: 2 }, c1, 64, 1, batch));
+    layers.push(fc(c1 * 32, f0, batch));
+    layers.push(np_layer(LayerKind::Relu, f0, 1, 1, batch));
+    layers.push(fc(f0, 6, batch)); // 6 activity classes
+    layers.push(np_layer(LayerKind::Softmax, 6, 1, 1, batch));
+    ModelGraph::new("har", layers)
+}
+
+/// LSTM language model: embedding + LSTM(u0) + dropout + LSTM(u1) + FC(vocab).
+pub fn lstm(embed: usize, units: &[usize; 2], vocab: usize, seq: usize, batch: usize) -> ModelGraph {
+    let (u0, u1) = (units[0], units[1]);
+    let layers = vec![
+        LayerSpec { kind: LayerKind::Embedding, c_in: vocab, c_out: embed, h: seq, w: 1, batch },
+        LayerSpec { kind: LayerKind::Lstm, c_in: embed, c_out: u0, h: seq, w: 1, batch },
+        np_layer(LayerKind::Dropout, u0, seq, 1, batch),
+        LayerSpec { kind: LayerKind::Lstm, c_in: u0, c_out: u1, h: seq, w: 1, batch },
+        np_layer(LayerKind::Dropout, u1, seq, 1, batch),
+        fc(u1, vocab, batch),
+        np_layer(LayerKind::Softmax, vocab, 1, 1, batch),
+    ];
+    ModelGraph::new("lstm", layers)
+}
+
+/// Transformer encoder: embedding + n_layers × (MHA + LN + FFN + LN) + FC.
+pub fn transformer(n_layers: usize, d_model: usize, heads: usize, seq: usize, vocab: usize, batch: usize) -> ModelGraph {
+    let mut layers = Vec::new();
+    layers.push(LayerSpec { kind: LayerKind::Embedding, c_in: vocab, c_out: d_model, h: seq, w: 1, batch });
+    for _ in 0..n_layers {
+        layers.push(LayerSpec { kind: LayerKind::Attention { heads }, c_in: d_model, c_out: d_model, h: seq, w: 1, batch });
+        layers.push(np_layer(LayerKind::ResidualAdd, d_model, seq, 1, batch));
+        layers.push(np_layer(LayerKind::LayerNorm, d_model, seq, 1, batch));
+        // FFN as two FCs applied per token (batch·seq rows).
+        layers.push(LayerSpec { kind: LayerKind::Fc, c_in: d_model, c_out: 4 * d_model, h: 1, w: 1, batch: batch * seq });
+        layers.push(np_layer(LayerKind::Relu, 4 * d_model, 1, 1, batch * seq));
+        layers.push(LayerSpec { kind: LayerKind::Fc, c_in: 4 * d_model, c_out: d_model, h: 1, w: 1, batch: batch * seq });
+        layers.push(np_layer(LayerKind::ResidualAdd, d_model, seq, 1, batch));
+        layers.push(np_layer(LayerKind::LayerNorm, d_model, seq, 1, batch));
+    }
+    layers.push(fc(d_model, vocab, batch));
+    layers.push(np_layer(LayerKind::Softmax, vocab, 1, 1, batch));
+    ModelGraph::new("transformer", layers)
+}
+
+/// CIFAR-style ResNet: depth ∈ {20, 56, 110} ⇒ n = (depth − 2) / 6 blocks
+/// per stage, 3 stages with widths (w, 2w, 4w), each block = two 3x3 convs
+/// + residual add.
+pub fn resnet(depth: usize, width: usize, batch: usize) -> ModelGraph {
+    assert!((depth - 2) % 6 == 0, "resnet depth must be 6n+2");
+    let n = (depth - 2) / 6;
+    let widths = [width, 2 * width, 4 * width];
+    let mut layers = Vec::new();
+    let mut hw = 32;
+    layers.push(conv(3, 3, widths[0], hw, hw, batch, true));
+    layers.push(np_layer(LayerKind::BatchNorm, widths[0], hw, hw, batch));
+    layers.push(np_layer(LayerKind::Relu, widths[0], hw, hw, batch));
+    let mut c_prev = widths[0];
+    for (stage, &c) in widths.iter().enumerate() {
+        if stage > 0 {
+            hw /= 2; // stride-2 downsample at stage entry
+        }
+        for _ in 0..n {
+            layers.push(conv(3, c_prev, c, hw, hw, batch, true));
+            layers.push(np_layer(LayerKind::BatchNorm, c, hw, hw, batch));
+            layers.push(np_layer(LayerKind::Relu, c, hw, hw, batch));
+            layers.push(conv(3, c, c, hw, hw, batch, true));
+            layers.push(np_layer(LayerKind::BatchNorm, c, hw, hw, batch));
+            layers.push(np_layer(LayerKind::ResidualAdd, c, hw, hw, batch));
+            layers.push(np_layer(LayerKind::Relu, c, hw, hw, batch));
+            c_prev = c;
+        }
+    }
+    layers.push(fc(c_prev, 10, batch));
+    layers.push(np_layer(LayerKind::Softmax, 10, 1, 1, batch));
+    ModelGraph::new(&format!("resnet{depth}"), layers)
+}
+
+/// Default-width instances of every family (used by tests and quick runs).
+pub fn all_default_models() -> Vec<ModelGraph> {
+    vec![
+        lenet5(&[6, 16, 120, 84], 10),
+        cnn5(&[32, 64, 128, 256], 28, 10),
+        har(&[32, 64, 128], 10),
+        lstm(64, &[128, 128], 2000, 32, 10),
+        transformer(2, 128, 4, 32, 2000, 10),
+        resnet(20, 16, 10),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_have_consistent_dims() {
+        for g in all_default_models() {
+            g.check_dims().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn lenet_param_count_matches_classic() {
+        // Classic LeNet-5 has ~61.7k parameters (conv padding variant
+        // dependent); ours with (6,16,120,84) on 28x28 valid convs:
+        let g = lenet5(&[6, 16, 120, 84], 10);
+        let p = g.total_params();
+        assert!(p > 40_000 && p < 80_000, "{p}");
+    }
+
+    #[test]
+    fn resnet_depth_counts() {
+        let g20 = resnet(20, 16, 10);
+        let g56 = resnet(56, 16, 10);
+        let convs20 = g20.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv2d { .. })).count();
+        let convs56 = g56.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv2d { .. })).count();
+        assert_eq!(convs20, 19); // 1 stem + 18 block convs
+        assert_eq!(convs56, 55);
+    }
+
+    #[test]
+    #[should_panic(expected = "6n+2")]
+    fn resnet_rejects_bad_depth() {
+        resnet(21, 16, 10);
+    }
+
+    #[test]
+    fn transformer_scales_with_layers() {
+        let t2 = transformer(2, 128, 4, 32, 2000, 10);
+        let t4 = transformer(4, 128, 4, 32, 2000, 10);
+        assert!(t4.layers.len() > t2.layers.len());
+        assert!(t4.total_params() > t2.total_params());
+    }
+
+    #[test]
+    fn cnn5_has_four_conv_blocks() {
+        let g = cnn5(&[32, 64, 128, 256], 28, 10);
+        let convs = g.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv2d { .. })).count();
+        assert_eq!(convs, 4);
+    }
+}

@@ -1,0 +1,90 @@
+//! Batched GP posterior through the AOT Pallas artifact — the estimation
+//! hot path.  Pads the inducing set to N_INDUCING (zero alpha / zero K⁻¹
+//! rows, proven exact in python/tests/test_posterior.py) and the query
+//! batch to N_QUERIES per call.
+
+use anyhow::{anyhow, Result};
+
+use crate::gp::model::GpExport;
+use crate::runtime::{lit_f32, lit_scalar_f32, to_vec_f32, Runtime};
+
+pub const N_INDUCING: usize = 64;
+pub const N_QUERIES: usize = 256;
+
+pub struct GpExecutor;
+
+impl GpExecutor {
+    /// Posterior (means, variances) for raw *normalized* query points
+    /// through the artifact.  `export` must come from a GP fitted on ≤
+    /// N_INDUCING points (the paper's end conditions guarantee this).
+    /// Means/variances are returned in the GP's (possibly log) target
+    /// space — the caller applies the same de-standardization as the
+    /// native path.
+    pub fn posterior(rt: &mut Runtime, export: &GpExport, queries: &[Vec<f64>]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let dim = export.xs.first().map(|x| x.len()).unwrap_or(1);
+        let name = match dim {
+            1 => "gp_posterior_d1",
+            2 => "gp_posterior_d2",
+            d => return Err(anyhow!("unsupported GP dim {d}")),
+        };
+        let n = export.xs.len();
+        if n > N_INDUCING {
+            return Err(anyhow!("inducing set {n} exceeds artifact capacity {N_INDUCING}"));
+        }
+
+        // Padded inducing tensors.
+        let mut xi = vec![0f32; N_INDUCING * dim];
+        for (i, x) in export.xs.iter().enumerate() {
+            for (d, v) in x.iter().enumerate() {
+                xi[i * dim + d] = *v as f32;
+            }
+        }
+        let mut alpha = vec![0f32; N_INDUCING];
+        for (i, a) in export.alpha.iter().enumerate() {
+            alpha[i] = *a as f32;
+        }
+        let mut kinv = vec![0f32; N_INDUCING * N_INDUCING];
+        for i in 0..n {
+            for j in 0..n {
+                kinv[i * N_INDUCING + j] = export.kinv[(i, j)] as f32;
+            }
+        }
+
+        let xi_l = lit_f32(&xi, &[N_INDUCING as i64, dim as i64])?;
+        let alpha_l = lit_f32(&alpha, &[N_INDUCING as i64])?;
+        let kinv_l = lit_f32(&kinv, &[N_INDUCING as i64, N_INDUCING as i64])?;
+        let ls_l = lit_scalar_f32(export.lengthscale as f32);
+        let var_l = lit_scalar_f32(export.variance as f32);
+
+        let mut means = Vec::with_capacity(queries.len());
+        let mut vars = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(N_QUERIES) {
+            let mut xq = vec![0f32; N_QUERIES * dim];
+            for (i, q) in chunk.iter().enumerate() {
+                for (d, v) in q.iter().enumerate() {
+                    xq[i * dim + d] = *v as f32;
+                }
+            }
+            let xq_l = lit_f32(&xq, &[N_QUERIES as i64, dim as i64])?;
+            let out = rt.execute(
+                name,
+                &[
+                    xq_l,
+                    xi_l.clone(),
+                    alpha_l.clone(),
+                    kinv_l.clone(),
+                    ls_l.clone(),
+                    var_l.clone(),
+                ],
+            )?;
+            let m = to_vec_f32(&out[0])?;
+            let v = to_vec_f32(&out[1])?;
+            for i in 0..chunk.len() {
+                // De-standardize exactly like GpModel::predict.
+                means.push(export.y_mean + export.y_scale * m[i] as f64);
+                vars.push(export.y_scale * export.y_scale * (v[i] as f64).max(0.0));
+            }
+        }
+        Ok((means, vars))
+    }
+}

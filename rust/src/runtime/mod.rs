@@ -1,0 +1,130 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python never runs here — the artifacts are self-contained.
+//!
+//! * [`Runtime`] — PJRT CPU client + compiled-executable cache keyed by
+//!   artifact name (one compile per artifact, reused across calls).
+//! * [`GpExecutor`] — batched GP posterior through the fused L1 Pallas
+//!   kernel artifact (`gp_posterior_d{1,2}`), bit-compatible with the
+//!   native [`crate::gp::GpModel::predict`] path (cross-checked in
+//!   `rust/tests/runtime_integration.rs`).
+//! * [`TrainStep`] — the real CNN training workload (`cnn_train_step` /
+//!   `cnn_eval`), used by the end-to-end example, Fig 6 and the Fig 13
+//!   pruning case study.
+
+pub mod gp_exec;
+pub mod trainstep;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+pub use gp_exec::GpExecutor;
+pub use trainstep::{CnnParams, TrainStep};
+
+/// Artifact manifest entry (from artifacts/manifest.json).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub meta: Json,
+}
+
+/// PJRT client + loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads manifest.json; compiles lazily).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut specs = HashMap::new();
+        for (name, entry) in j.as_obj().ok_or_else(|| anyhow!("manifest not an object"))? {
+            specs.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: entry.get("file").and_then(|f| f.as_str()).unwrap_or_default().to_string(),
+                    kind: entry.get("kind").and_then(|k| k.as_str()).unwrap_or_default().to_string(),
+                    meta: entry.clone(),
+                },
+            );
+        }
+        Ok(Self { client, dir: dir.to_path_buf(), specs, exes: HashMap::new() })
+    }
+
+    /// Default artifact location (repo-root/artifacts), overridable with
+    /// `THOR_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("THOR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Compile (once) and return the executable for an artifact.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(name) {
+            let spec = self
+                .specs
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(self.exes.get(name).unwrap())
+    }
+
+    /// Execute an artifact on literal inputs; unwraps the result tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+/// f32 helpers for literals.
+pub fn lit_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(values)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+pub fn lit_i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(values)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}

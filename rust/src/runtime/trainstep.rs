@@ -1,0 +1,114 @@
+//! Real training through the `cnn_train_step` / `cnn_eval` artifacts
+//! (L2 JAX graph with the L1 Pallas matmul kernel inside, fwd + bwd).
+//!
+//! Shapes are fixed at AOT time: batch 16, 16×16×1 images, conv widths
+//! (8, 16), 2 classes.  Channel *masks* are runtime inputs, so one
+//! artifact serves every pruned sub-network (Fig 13).
+
+use anyhow::Result;
+
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
+use crate::util::rng::Pcg64;
+
+pub const BATCH: usize = 16;
+pub const IMG: usize = 16;
+pub const C1: usize = 8;
+pub const C2: usize = 16;
+pub const N_CLASSES: usize = 2;
+
+/// Host-side parameter tensors (mirrors python/compile/model.py
+/// init_params: He-initialized).
+#[derive(Clone)]
+pub struct CnnParams {
+    pub w1: Vec<f32>, // (3,3,1,C1)
+    pub b1: Vec<f32>, // (C1,)
+    pub w2: Vec<f32>, // (3,3,C1,C2)
+    pub b2: Vec<f32>, // (C2,)
+    pub wf: Vec<f32>, // (4*4*C2, N_CLASSES)
+    pub bf: Vec<f32>, // (N_CLASSES,)
+}
+
+impl CnnParams {
+    pub fn init(seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let he = |rng: &mut Pcg64, n: usize, fan_in: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * (2.0 / fan_in).sqrt()) as f32).collect()
+        };
+        Self {
+            w1: he(&mut rng, 9 * C1, 9.0),
+            b1: vec![0.0; C1],
+            w2: he(&mut rng, 9 * C1 * C2, 9.0 * C1 as f64),
+            b2: vec![0.0; C2],
+            wf: he(&mut rng, 16 * C2 * N_CLASSES, 16.0 * C2 as f64),
+            bf: vec![0.0; N_CLASSES],
+        }
+    }
+}
+
+/// One train/eval step result.
+#[derive(Clone, Copy, Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+pub struct TrainStep {
+    pub params: CnnParams,
+    pub mask1: Vec<f32>,
+    pub mask2: Vec<f32>,
+}
+
+impl TrainStep {
+    pub fn new(seed: u64) -> Self {
+        Self { params: CnnParams::init(seed), mask1: vec![1.0; C1], mask2: vec![1.0; C2] }
+    }
+
+    /// Prune: keep only the first `keep1`/`keep2` channels (masks zeroed
+    /// beyond — gradients provably stop flowing, tested in pytest).
+    pub fn with_pruned(seed: u64, keep1: usize, keep2: usize) -> Self {
+        let mut s = Self::new(seed);
+        for i in keep1.min(C1)..C1 {
+            s.mask1[i] = 0.0;
+        }
+        for i in keep2.min(C2)..C2 {
+            s.mask2[i] = 0.0;
+        }
+        s
+    }
+
+    fn common_inputs(&self, x: &[f32], y: &[i32]) -> Result<Vec<xla::Literal>> {
+        Ok(vec![
+            lit_f32(x, &[BATCH as i64, IMG as i64, IMG as i64, 1])?,
+            lit_i32(y, &[BATCH as i64])?,
+            lit_f32(&self.params.w1, &[3, 3, 1, C1 as i64])?,
+            lit_f32(&self.params.b1, &[C1 as i64])?,
+            lit_f32(&self.params.w2, &[3, 3, C1 as i64, C2 as i64])?,
+            lit_f32(&self.params.b2, &[C2 as i64])?,
+            lit_f32(&self.params.wf, &[(16 * C2) as i64, N_CLASSES as i64])?,
+            lit_f32(&self.params.bf, &[N_CLASSES as i64])?,
+            lit_f32(&self.mask1, &[C1 as i64])?,
+            lit_f32(&self.mask2, &[C2 as i64])?,
+        ])
+    }
+
+    /// One SGD step on a batch: updates `self.params`, returns loss/acc.
+    pub fn step(&mut self, rt: &mut Runtime, x: &[f32], y: &[i32], lr: f32) -> Result<StepResult> {
+        let mut inputs = self.common_inputs(x, y)?;
+        inputs.push(lit_scalar_f32(lr));
+        let out = rt.execute("cnn_train_step", &inputs)?;
+        self.params.w1 = to_vec_f32(&out[0])?;
+        self.params.b1 = to_vec_f32(&out[1])?;
+        self.params.w2 = to_vec_f32(&out[2])?;
+        self.params.b2 = to_vec_f32(&out[3])?;
+        self.params.wf = to_vec_f32(&out[4])?;
+        self.params.bf = to_vec_f32(&out[5])?;
+        Ok(StepResult { loss: to_vec_f32(&out[6])?[0], acc: to_vec_f32(&out[7])?[0] })
+    }
+
+    /// Forward-only evaluation on a batch.
+    pub fn eval(&self, rt: &mut Runtime, x: &[f32], y: &[i32]) -> Result<StepResult> {
+        let inputs = self.common_inputs(x, y)?;
+        let out = rt.execute("cnn_eval", &inputs)?;
+        Ok(StepResult { loss: to_vec_f32(&out[0])?[0], acc: to_vec_f32(&out[1])?[0] })
+    }
+}

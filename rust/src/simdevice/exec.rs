@@ -1,0 +1,299 @@
+//! Op-trace execution model: walks a training-iteration trace
+//! iteration-by-iteration, evolving DVFS frequency, temperature and the
+//! power-meter integrator, and returns the measured [`Measurement`].
+//!
+//! Per-op model:
+//!
+//! * occupancy/waves from [`crate::workload::kernelcfg`] — the source of
+//!   the channel-axis nonlinearity;
+//! * compute time `flops / (peak(f) · efficiency)`;
+//! * memory time from a two-level working-set model (cache hit fraction
+//!   shrinks once the working set spills);
+//! * op time `max(compute, memory) + launch overhead`;
+//! * dynamic energy `flops · e_flop · (V/V_nom)²` plus stall power over
+//!   the op duration plus memory movement energy plus launch energy.
+//!
+//! The true power timeline is integrated by the sampled meter
+//! ([`super::meter`]) exactly as the paper's eq. (6) does, including
+//! sensor noise, quantization and background wakeups.
+
+use crate::simdevice::{meter::Meter, DeviceProfile, Governor, Measurement};
+use crate::util::rng::Pcg64;
+use crate::workload::{kernelcfg, Op, OpClass, Trace};
+
+/// DVFS governor sampling window, seconds (ondemand-style governors
+/// evaluate busy fraction over fixed time windows, so long dense kernels
+/// dominate the decision — op *time*, not op count).
+const GOVERNOR_WINDOW_S: f64 = 0.02;
+
+/// Mutable machine state across ops/iterations.
+struct MachineState {
+    level: usize,
+    temp_c: f64,
+    /// Array-busy and wall seconds accumulated in the open window.
+    busy_acc: f64,
+    wall_acc: f64,
+    throttled: bool,
+}
+
+impl MachineState {
+    fn new(p: &DeviceProfile) -> Self {
+        let level = match p.governor {
+            Governor::Fixed(l) => l.min(p.ladder.len() - 1),
+            Governor::OnDemand => p.ladder.len() / 2,
+        };
+        Self { level, temp_c: p.thermal.ambient_c, busy_acc: 0.0, wall_acc: 0.0, throttled: false }
+    }
+
+    fn freq_volt(&self, p: &DeviceProfile) -> (f64, f64) {
+        let cap = if self.throttled { p.thermal.throttle_level } else { p.ladder.len() - 1 };
+        let l = self.level.min(cap);
+        p.ladder[l]
+    }
+
+    /// `busy`: seconds the compute array was actually filled during the
+    /// op; `wall`: the op's full duration.
+    fn governor_tick(&mut self, p: &DeviceProfile, busy: f64, wall: f64) {
+        self.busy_acc += busy;
+        self.wall_acc += wall;
+        if self.wall_acc < GOVERNOR_WINDOW_S {
+            return;
+        }
+        let frac = self.busy_acc / self.wall_acc;
+        self.busy_acc = 0.0;
+        self.wall_acc = 0.0;
+        if let Governor::OnDemand = p.governor {
+            if frac > 0.6 && self.level + 1 < p.ladder.len() {
+                self.level += 1;
+            } else if frac < 0.3 && self.level > 0 {
+                self.level -= 1;
+            }
+        }
+    }
+
+    fn thermal_tick(&mut self, p: &DeviceProfile, energy_j: f64, dt: f64) {
+        let t = &p.thermal;
+        self.temp_c += energy_j * t.heat_per_joule;
+        self.temp_c -= (self.temp_c - t.ambient_c) * (t.cool_rate * dt).min(1.0);
+        self.throttled = self.temp_c > t.throttle_c;
+    }
+}
+
+/// Cache-hit fraction for a working set against the on-chip cache.
+fn hit_fraction(working_set: f64, capacity: f64, cold: bool) -> f64 {
+    if cold {
+        return 0.0; // standalone stage profiling: nothing is warm
+    }
+    if working_set <= capacity {
+        0.85
+    } else {
+        0.85 * capacity / working_set
+    }
+}
+
+/// Execute one op; returns (duration_s, energy_j, utilization).
+fn exec_op(p: &DeviceProfile, st: &MachineState, op: &Op, cold: bool) -> (f64, f64, f64) {
+    let (freq, volt) = st.freq_volt(p);
+    let ceiling = match op.class {
+        OpClass::Dense => p.dense_ceiling,
+        OpClass::Elementwise | OpClass::Update => p.elementwise_ceiling,
+        OpClass::Gather => p.elementwise_ceiling * 0.5,
+    };
+    // Channel-tile padding: the library executes padded lanes, so both
+    // the time and the dynamic energy are paid on the padded FLOPs —
+    // the staircase non-linearity of Figs 5/11.
+    let pad = kernelcfg::pad_ratio(op.c_in, op.c_out, p.pad_quantum);
+    let flops_exec = op.flops * pad;
+    let mut eff = kernelcfg::compute_efficiency(op.parallelism, p.slots, ceiling);
+    if op.class == OpClass::Dense && op.c_out > 0 {
+        // GEMM shape: M = parallelism / N (threads are one per output
+        // element of the implicit GEMM).
+        let n = kernelcfg::padded_channels(op.c_out, p.pad_quantum) as f64;
+        let m = (op.parallelism / op.c_out as f64).max(1.0);
+        eff *= kernelcfg::shape_efficiency(m, n, p.m_sat, p.n_sat);
+    }
+    // Floor: even a degenerate GEMV gets some fraction of the machine
+    // (prevents unphysical micro-kernel stall blowups).
+    let eff = eff.max(0.004);
+    let compute_time = flops_exec / (p.peak_flops * freq * eff);
+
+    let hit = hit_fraction(op.working_set, p.cache.capacity, cold);
+    let dram_bytes = op.bytes_in * (1.0 - hit) + op.bytes_out;
+    let cache_bytes = op.bytes_in * hit;
+    let mem_time = dram_bytes / p.dram.bandwidth + cache_bytes / p.cache.bandwidth;
+
+    let extra_launch = if cold { 2.0 * p.launch_overhead_s } else { 0.0 };
+    let dur = compute_time.max(mem_time) + p.launch_overhead_s + extra_launch;
+
+    let dyn_energy = flops_exec * p.energy_per_flop * volt * volt;
+    let mem_energy = dram_bytes * p.dram.energy_per_byte + cache_bytes * p.cache.energy_per_byte;
+    // Stall power burns while the kernel is *executing* but underfilled
+    // (partial waves / bandwidth stalls) — this flattens energy across a
+    // partially-filled wave (plateaus).  Dispatch gaps are idle power,
+    // which the measurement protocol subtracts.
+    let exec_busy = compute_time.max(mem_time);
+    let stall_energy = p.stall_power_w * exec_busy * (1.0 - eff).max(0.0);
+    let energy = dyn_energy + mem_energy + stall_energy + p.launch_energy_j;
+
+    // Governor signal: array-busy seconds within this op — dispatch-bound
+    // phases read as idle, so models dominated by small kernels settle at
+    // low clocks while sustained dense models boost.  This is the DVFS
+    // behaviour that degrades proxy-based estimation on phones and the
+    // server (Fig 8) while fixed-clock Jetsons stay well-behaved.
+    let busy = compute_time.min(dur);
+    (dur, energy, busy)
+}
+
+/// Run `iterations` of `trace` on the device and measure with its meter.
+///
+/// `cold`: profile each op standalone (unfused traces passed by the
+/// NeuralPower baseline) with cold caches and per-stage setup.
+pub fn run(
+    p: &DeviceProfile,
+    trace: &Trace,
+    iterations: usize,
+    rng: &mut Pcg64,
+    cold: bool,
+) -> Measurement {
+    let mut st = MachineState::new(p);
+    let mut m = Meter::new(p, rng.fork(0x6d657465));
+    let mut t = 0.0f64;
+    for _ in 0..iterations {
+        for op in &trace.ops {
+            let (dur, energy, busy) = exec_op(p, &st, op, cold);
+            // active power over the op interval = op energy / duration,
+            // plus the device idle floor (meter sees gross power).
+            let power = energy / dur + p.idle_power_w;
+            m.advance(power, dur);
+            st.governor_tick(p, busy, dur);
+            st.thermal_tick(p, energy, dur);
+            t += dur;
+        }
+    }
+    let (gross_j, time_s) = m.finish();
+    debug_assert!((time_s - t).abs() < 1e-6 * t.max(1.0));
+    Measurement {
+        energy_j: (gross_j - p.idle_power_w * time_s).max(0.0),
+        time_s,
+        iterations,
+    }
+}
+
+/// Noise-free per-iteration ground truth (no meter, no governor noise):
+/// used by experiments as the "actual" reference where the paper uses a
+/// long averaged measurement.
+pub fn ideal_energy_per_iter(p: &DeviceProfile, trace: &Trace) -> f64 {
+    let st = MachineState::new(p);
+    trace.ops.iter().map(|op| exec_op(p, &st, op, false).1).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simdevice::devices;
+    use crate::workload::{fusion::fuse, lower::lower};
+
+    fn small_trace() -> Trace {
+        fuse(&lower(&zoo::cnn5(&[8, 16, 32, 64], 28, 10)))
+    }
+
+    #[test]
+    fn energy_and_time_positive() {
+        let p = devices::xavier();
+        let mut rng = Pcg64::new(1);
+        let m = run(&p, &small_trace(), 50, &mut rng, false);
+        assert!(m.energy_j > 0.0 && m.time_s > 0.0);
+    }
+
+    #[test]
+    fn energy_scales_with_iterations() {
+        let p = devices::xavier();
+        let mut rng = Pcg64::new(2);
+        let m1 = run(&p, &small_trace(), 100, &mut rng, false);
+        let mut rng = Pcg64::new(2);
+        let m2 = run(&p, &small_trace(), 200, &mut rng, false);
+        let ratio = m2.energy_j / m1.energy_j;
+        assert!(ratio > 1.8 && ratio < 2.2, "{ratio}");
+    }
+
+    #[test]
+    fn cold_standalone_costs_more() {
+        // The Fig-2 mechanism: per-stage cold profiling overestimates.
+        let p = devices::xavier();
+        let tr = small_trace();
+        let mut rng = Pcg64::new(3);
+        let warm = run(&p, &tr, 50, &mut rng, false);
+        let mut rng = Pcg64::new(3);
+        let cold = run(&p, &tr, 50, &mut rng, true);
+        assert!(
+            cold.energy_j > 1.05 * warm.energy_j,
+            "cold {} vs warm {}",
+            cold.energy_j,
+            warm.energy_j
+        );
+    }
+
+    #[test]
+    fn bigger_model_costs_more() {
+        let p = devices::server();
+        let small = fuse(&lower(&zoo::cnn5(&[8, 16, 32, 64], 28, 10)));
+        let big = fuse(&lower(&zoo::cnn5(&[32, 64, 128, 256], 28, 10)));
+        assert!(ideal_energy_per_iter(&p, &big) > ideal_energy_per_iter(&p, &small));
+    }
+
+    #[test]
+    fn energy_not_proportional_to_flops() {
+        // The central claim motivating THOR: on narrow models energy/FLOP
+        // rises (occupancy plateaus), so FLOPs-proportionality fails.
+        let p = devices::xavier();
+        let narrow = fuse(&lower(&zoo::cnn5(&[2, 2, 2, 2], 28, 10)));
+        let wide = fuse(&lower(&zoo::cnn5(&[32, 64, 128, 256], 28, 10)));
+        let e_per_flop_narrow = ideal_energy_per_iter(&p, &narrow) / narrow.total_flops();
+        let e_per_flop_wide = ideal_energy_per_iter(&p, &wide) / wide.total_flops();
+        assert!(
+            e_per_flop_narrow > 2.0 * e_per_flop_wide,
+            "narrow {e_per_flop_narrow} vs wide {e_per_flop_wide}"
+        );
+    }
+
+    #[test]
+    fn thermal_throttling_engages_on_phone_under_load() {
+        let p = devices::oppo();
+        let tr = fuse(&lower(&zoo::cnn5(&[32, 64, 128, 256], 28, 10)));
+        let mut st = MachineState::new(&p);
+        let mut throttled_any = false;
+        for _ in 0..2000 {
+            for op in &tr.ops {
+                let (dur, energy, busy) = exec_op(&p, &st, op, false);
+                st.governor_tick(&p, busy, dur);
+                st.thermal_tick(&p, energy, dur);
+                throttled_any |= st.throttled;
+            }
+        }
+        assert!(throttled_any, "phone never throttled under sustained load");
+    }
+
+    #[test]
+    fn fixed_governor_never_moves() {
+        let p = devices::xavier(); // Fixed governor
+        let mut st = MachineState::new(&p);
+        let l0 = st.level;
+        for busy in [0.001, 0.09, 0.095, 0.005] {
+            st.governor_tick(&p, busy, 0.1);
+        }
+        assert_eq!(st.level, l0);
+    }
+
+    #[test]
+    fn measurement_determinism_per_seed() {
+        let p = devices::tx2();
+        let tr = small_trace();
+        let mut r1 = Pcg64::new(7);
+        let mut r2 = Pcg64::new(7);
+        let a = run(&p, &tr, 20, &mut r1, false);
+        let b = run(&p, &tr, 20, &mut r2, false);
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}
+

@@ -1,0 +1,214 @@
+//! Sampled power-meter simulation (paper Appendix A5.2, eq. 6).
+//!
+//! The meter integrates the *true* piecewise-constant power timeline at a
+//! fixed sampling interval: `E ≈ Σ P(tᵢ)·Δt`.  Each sample carries
+//! multiplicative Gaussian sensor noise and ADC quantization; background
+//! processes wake up as a Poisson process and add power for a random
+//! duration (the reason the paper closes background apps and still needs
+//! 500-iteration averaging, Fig A16).
+//!
+//! The integrator is *online*: `advance(power, dur)` walks the timeline
+//! op-by-op without materializing it.
+
+use crate::simdevice::DeviceProfile;
+use crate::util::rng::Pcg64;
+
+pub struct Meter {
+    interval: f64,
+    noise_frac: f64,
+    quantum: f64,
+    wakeup_rate: f64,
+    wakeup_power: f64,
+    wakeup_dur: f64,
+    rng: Pcg64,
+    /// Absolute time of the next sample.
+    next_sample: f64,
+    /// Current absolute time.
+    now: f64,
+    /// Accumulated measured energy.
+    energy_j: f64,
+    /// Currently-active background wakeup: (end_time, extra_power).
+    wakeup: Option<(f64, f64)>,
+    /// Time the next wakeup arrives.
+    next_wakeup: f64,
+    /// True power of the most recent op (used for the tail sample when a
+    /// run ends between samples — keeps short runs unbiased, Fig A16).
+    last_power: f64,
+    /// True energy accumulated inside the currently-open window.
+    window_j: f64,
+}
+
+impl Meter {
+    pub fn new(p: &DeviceProfile, mut rng: Pcg64) -> Self {
+        let m = p.meter;
+        let first_wakeup = if m.wakeup_rate > 0.0 {
+            // exponential inter-arrival
+            -rng.f64().max(1e-12).ln() / m.wakeup_rate
+        } else {
+            f64::INFINITY
+        };
+        Self {
+            interval: m.interval_s,
+            noise_frac: m.noise_frac,
+            quantum: m.quantum_w,
+            wakeup_rate: m.wakeup_rate,
+            wakeup_power: m.wakeup_power_w,
+            wakeup_dur: m.wakeup_dur_s,
+            rng,
+            next_sample: m.interval_s,
+            now: 0.0,
+            energy_j: 0.0,
+            wakeup: None,
+            next_wakeup: first_wakeup,
+            last_power: 0.0,
+            window_j: 0.0,
+        }
+    }
+
+    fn instantaneous(&mut self, base_power: f64, t: f64) -> f64 {
+        // background wakeup bookkeeping
+        if t >= self.next_wakeup {
+            let dur = self.wakeup_dur * (0.5 + self.rng.f64());
+            let pw = self.wakeup_power * (0.5 + self.rng.f64());
+            self.wakeup = Some((t + dur, pw));
+            self.next_wakeup = t + (-self.rng.f64().max(1e-12).ln() / self.wakeup_rate).max(1e-3);
+        }
+        let extra = match self.wakeup {
+            Some((end, pw)) if t < end => pw,
+            _ => {
+                self.wakeup = None;
+                0.0
+            }
+        };
+        let raw = (base_power + extra) * (1.0 + self.noise_frac * self.rng.normal());
+        let quantized = if self.quantum > 0.0 { (raw / self.quantum).round() * self.quantum } else { raw };
+        quantized.max(0.0)
+    }
+
+    /// Advance the timeline by one op of constant true power `power`
+    /// lasting `dur` seconds.
+    ///
+    /// Physical ADCs (INA3221, POWER-Z) integrate over a conversion
+    /// window rather than spot-sampling an instantaneous value, so each
+    /// reading is the *window-averaged* power, corrupted by sensor noise,
+    /// quantization and background-process power.  Ops much shorter than
+    /// the window therefore average out; what survives is per-window
+    /// noise — which is exactly why short profiling runs (few windows)
+    /// are unstable (Fig A16).
+    pub fn advance(&mut self, power: f64, dur: f64) {
+        let mut t = self.now;
+        let end = self.now + dur;
+        while self.next_sample <= end {
+            // close the current window at next_sample
+            self.window_j += power * (self.next_sample - t);
+            let avg_power = self.window_j / self.interval;
+            let reading = self.instantaneous(avg_power, self.next_sample);
+            self.energy_j += reading * self.interval;
+            t = self.next_sample;
+            self.window_j = 0.0;
+            self.next_sample += self.interval;
+        }
+        self.window_j += power * (end - t);
+        self.now = end;
+        self.last_power = power;
+    }
+
+    /// Close the run; returns (gross energy J, total time s).  The open
+    /// partial window is flushed with a noisy reading over its elapsed
+    /// fraction, keeping short runs unbiased.
+    pub fn finish(&mut self) -> (f64, f64) {
+        let window_start = self.next_sample - self.interval;
+        let tail = self.now - window_start;
+        if tail > 1e-12 {
+            let avg_power = self.window_j / tail;
+            let reading = self.instantaneous(avg_power, self.now);
+            self.energy_j += reading * tail;
+            self.window_j = 0.0;
+        }
+        (self.energy_j, self.now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simdevice::devices;
+
+    fn quiet_meter(interval: f64) -> Meter {
+        let mut p = devices::xavier();
+        p.meter.interval_s = interval;
+        p.meter.noise_frac = 0.0;
+        p.meter.quantum_w = 0.0;
+        p.meter.wakeup_rate = 0.0;
+        Meter::new(&p, Pcg64::new(1))
+    }
+
+    #[test]
+    fn integrates_constant_power_exactly() {
+        let mut m = quiet_meter(0.01);
+        m.advance(10.0, 2.0); // 10 W for 2 s = 20 J
+        let (e, t) = m.finish();
+        assert!((t - 2.0).abs() < 1e-12);
+        assert!((e - 20.0).abs() < 0.2, "{e}"); // within one sample
+    }
+
+    #[test]
+    fn piecewise_power_integrates() {
+        let mut m = quiet_meter(0.001);
+        m.advance(5.0, 1.0);
+        m.advance(15.0, 1.0);
+        let (e, _) = m.finish();
+        assert!((e - 20.0).abs() < 0.1, "{e}");
+    }
+
+    #[test]
+    fn coarser_sampling_is_noisier_wrt_short_runs() {
+        // Fig A16 mechanism: few samples => unstable estimates.
+        let run = |interval: f64, seed: u64| {
+            let mut p = devices::oppo();
+            p.meter.interval_s = interval;
+            let mut m = Meter::new(&p, Pcg64::new(seed));
+            // alternating power bursts
+            for i in 0..40 {
+                m.advance(if i % 2 == 0 { 3.0 } else { 8.0 }, 0.013);
+            }
+            m.finish().0
+        };
+        let spread = |interval: f64| {
+            let xs: Vec<f64> = (0..20).map(|s| run(interval, s)).collect();
+            crate::util::stats::std_dev(&xs) / crate::util::stats::mean(&xs)
+        };
+        assert!(spread(0.1) > spread(0.005), "{} {}", spread(0.1), spread(0.005));
+    }
+
+    #[test]
+    fn noise_is_unbiased() {
+        let mut p = devices::server();
+        p.meter.wakeup_rate = 0.0;
+        let mut sum = 0.0;
+        let n = 50;
+        for seed in 0..n {
+            let mut m = Meter::new(&p, Pcg64::new(seed));
+            m.advance(100.0, 1.0);
+            sum += m.finish().0;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 100.0).abs() < 2.0, "{mean}");
+    }
+
+    #[test]
+    fn wakeups_add_energy() {
+        let mut p = devices::oppo();
+        p.meter.noise_frac = 0.0;
+        p.meter.quantum_w = 0.0;
+        p.meter.wakeup_rate = 5.0; // frequent
+        let mut with = Meter::new(&p, Pcg64::new(3));
+        with.advance(5.0, 10.0);
+        let (e_with, _) = with.finish();
+        p.meter.wakeup_rate = 0.0;
+        let mut without = Meter::new(&p, Pcg64::new(3));
+        without.advance(5.0, 10.0);
+        let (e_without, _) = without.finish();
+        assert!(e_with > e_without, "{e_with} vs {e_without}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Device-energy simulator: the substrate standing in for the paper's five
+//! physical devices (OPPO Reno6 Pro+, iPhone 13, Jetson Xavier NX, Jetson
+//! TX2, RTX-4090 Windows server) and their power meters (POWER-Z KT002,
+//! INA3221 rails, nvidia-smi).
+//!
+//! THOR only ever observes `(variant architecture) → (energy J, time s)`
+//! through [`Device::run`]; the simulator supplies the phenomenology the
+//! paper reports — occupancy plateaus (Figs 5/11), DVFS + thermal
+//! throttling variance on phones (Fig 8), stage-splitting overestimation
+//! when profiled cold/unfused (Fig 2), and finite-sampling measurement
+//! noise (Fig A16, eq. 6).  See DESIGN.md §2 for the substitution
+//! rationale.
+
+pub mod devices;
+pub mod exec;
+pub mod meter;
+
+use crate::workload::Trace;
+
+/// DVFS governor policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Governor {
+    /// Locked to one ladder level (Jetson `nvpmodel`-style fixed clocks —
+    /// the paper notes these devices estimate best).
+    Fixed(usize),
+    /// Utilization-driven up/down stepping with hysteresis (phone SoCs,
+    /// desktop GPU boost).
+    OnDemand,
+}
+
+/// Thermal throttling parameters (first-order thermal RC + clock cap).
+#[derive(Clone, Copy, Debug)]
+pub struct ThermalSpec {
+    pub ambient_c: f64,
+    /// °C per Joule of dissipated energy.
+    pub heat_per_joule: f64,
+    /// Fraction of (T − ambient) shed per second.
+    pub cool_rate: f64,
+    /// Above this temperature the governor caps the ladder level.
+    pub throttle_c: f64,
+    /// Ladder level cap while throttled.
+    pub throttle_level: usize,
+}
+
+/// Power-meter characteristics (paper Appendix A5.2).
+#[derive(Clone, Copy, Debug)]
+pub struct MeterSpec {
+    /// Sampling interval in seconds (0.1 for POWER-Z/INA3221, 0.02 for
+    /// nvidia-smi).
+    pub interval_s: f64,
+    /// Multiplicative Gaussian sensor noise (std, fraction of reading).
+    pub noise_frac: f64,
+    /// Power quantization step in watts (ADC resolution).
+    pub quantum_w: f64,
+    /// Poisson rate (events/s) of background-process wakeups.
+    pub wakeup_rate: f64,
+    /// Mean extra power of one wakeup, watts.
+    pub wakeup_power_w: f64,
+    /// Mean wakeup duration, seconds.
+    pub wakeup_dur_s: f64,
+}
+
+/// One memory level of the hierarchy.
+#[derive(Clone, Copy, Debug)]
+pub struct MemLevel {
+    /// Capacity in bytes.
+    pub capacity: f64,
+    /// Energy per byte moved, joules.
+    pub energy_per_byte: f64,
+    /// Bandwidth, bytes/s.
+    pub bandwidth: f64,
+}
+
+/// Static description of a device.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Concurrent hardware threads (compute units × threads each): the
+    /// wave-quantization denominator.
+    pub slots: f64,
+    /// Peak FLOP/s at the *top* ladder level.
+    pub peak_flops: f64,
+    /// Dynamic energy per FLOP at nominal voltage, joules.
+    pub energy_per_flop: f64,
+    /// Frequency ladder as (relative frequency, relative voltage), sorted
+    /// ascending; the last entry is nominal (1.0, 1.0).
+    pub ladder: Vec<(f64, f64)>,
+    /// On-chip cache level + DRAM.
+    pub cache: MemLevel,
+    pub dram: MemLevel,
+    /// Idle (standby) power, watts — subtracted by the measurement
+    /// protocol, eq. 6.
+    pub idle_power_w: f64,
+    /// Active-but-stalled power above idle (fraction of chip lit while
+    /// waiting): creates the energy plateaus on partially-filled waves.
+    pub stall_power_w: f64,
+    /// Per-launch overhead (seconds) and energy (joules): WebGL dispatch
+    /// on phones is far costlier than CUDA launches.
+    pub launch_overhead_s: f64,
+    pub launch_energy_j: f64,
+    /// Base channel-tile granularity of the device's kernel library
+    /// (vec4 lanes for WebGL, 8-lane tensor tiles for cuDNN): channel
+    /// dims are padded to tile multiples — see
+    /// [`crate::workload::kernelcfg::padded_channels`].
+    pub pad_quantum: usize,
+    /// GEMM-shape saturation points: row/column extents a dense kernel
+    /// needs before it fills this device's compute array (see
+    /// [`crate::workload::kernelcfg::shape_efficiency`]).
+    pub m_sat: f64,
+    pub n_sat: f64,
+    /// Dense-kernel efficiency ceiling (fraction of peak reachable).
+    pub dense_ceiling: f64,
+    /// Elementwise-kernel efficiency ceiling.
+    pub elementwise_ceiling: f64,
+    pub governor: Governor,
+    pub thermal: ThermalSpec,
+    pub meter: MeterSpec,
+}
+
+/// What one profiling run returns to THOR (and to the baselines).
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Net energy (standby-subtracted), joules, for the whole run.
+    pub energy_j: f64,
+    /// Wall-clock of the run, seconds.
+    pub time_s: f64,
+    /// Iterations executed.
+    pub iterations: usize,
+}
+
+impl Measurement {
+    pub fn energy_per_iter(&self) -> f64 {
+        self.energy_j / self.iterations as f64
+    }
+
+    pub fn time_per_iter(&self) -> f64 {
+        self.time_s / self.iterations as f64
+    }
+}
+
+/// A simulated device instance (owns mutable DVFS/thermal/meter state).
+pub struct Device {
+    pub profile: DeviceProfile,
+    pub(crate) rng: crate::util::rng::Pcg64,
+}
+
+impl Device {
+    pub fn new(profile: DeviceProfile, seed: u64) -> Self {
+        Self { profile, rng: crate::util::rng::Pcg64::new(seed) }
+    }
+
+    /// Train `trace` for `iterations` and measure with the device's power
+    /// meter (paper measurement protocol: standby-subtracted sampled
+    /// integration, eq. 6).
+    pub fn run(&mut self, trace: &Trace, iterations: usize) -> Measurement {
+        exec::run(&self.profile, trace, iterations, &mut self.rng, false)
+    }
+
+    /// Run a trace standalone and *cold* (no warm caches, per-stage launch
+    /// setup) — how an operator-level profiler measures stages in
+    /// isolation.  Used by the NeuralPower-style baseline (Fig 2).
+    pub fn run_cold(&mut self, trace: &Trace, iterations: usize) -> Measurement {
+        exec::run(&self.profile, trace, iterations, &mut self.rng, true)
+    }
+}

@@ -1,0 +1,30 @@
+//! THOR core (paper §3): layer parsing, variant-network profiling with
+//! layer-wise subtractivity, GP fitting with guided (active-learning)
+//! profiling, and additive estimation.
+//!
+//! Flow (Fig 3):
+//!
+//! 1. [`parse`] dissects a model into input / hidden / output layer
+//!    *families* (dedup by layer type + hyper-parameters, non-parametric
+//!    layers grouped with their producer).
+//! 2. [`profiler`] builds 1-/2-/3-layer variant networks per family,
+//!    trains them on the (simulated) device and recovers per-layer
+//!    energies via subtractivity (eqs. 1–2).
+//! 3. [`fit`] drives profiling with the GP max-variance acquisition and
+//!    the paper's end conditions (point budget / 5 % variance).
+//! 4. [`estimator`] sums per-layer GP means over any parsed model (eq. 4).
+//!
+//! Fitted GPs are persisted per `(device, family)` in [`store`] and are
+//! reusable across models sharing families — the paper's "one-time
+//! endeavor" property.
+
+pub mod estimator;
+pub mod fit;
+pub mod parse;
+pub mod pipeline;
+pub mod profiler;
+pub mod store;
+
+pub use estimator::Estimate;
+pub use parse::{FamilyKey, ParsedModel, Position};
+pub use pipeline::{Thor, ThorConfig};

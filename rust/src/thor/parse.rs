@@ -1,0 +1,290 @@
+//! Layer parsing (paper §3.2 "Layer Parsing"):
+//!
+//! * parametric layers anchor *groups*; non-parametric successors (ReLU,
+//!   pooling, dropout, BN — BN is fused with its producer by frameworks)
+//!   are folded into the preceding group;
+//! * the first group is the **input layer**, the last the **output
+//!   layer**, everything between a **hidden layer**;
+//! * groups dedup into *families* by layer type and hyper-parameters
+//!   (kernel size, stride, spatial size, batch) — "layers with different
+//!   kernel sizes, steps, and batchsizes are encoded as different layers
+//!   since their energy cost patterns have a large gap";
+//! * families are characterized by output channels (input layers), input
+//!   channels (output layers) or both (hidden layers).
+
+use crate::model::{LayerKind, LayerSpec, ModelGraph};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Position {
+    Input,
+    Hidden,
+    Output,
+}
+
+/// Dedup key for a layer family.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct FamilyKey {
+    pub position: Position,
+    /// Anchor kind + structural hyper-parameters.
+    pub kind: LayerKind,
+    /// Input spatial size of the anchor.
+    pub h: usize,
+    pub w: usize,
+    pub batch: usize,
+    /// Names of grouped non-parametric successors (affects the group's
+    /// energy, so it is part of the identity).
+    pub group_sig: String,
+}
+
+impl FamilyKey {
+    /// Stable string id (store keys, wire protocol).
+    pub fn id(&self) -> String {
+        let pos = match self.position {
+            Position::Input => "in",
+            Position::Hidden => "hid",
+            Position::Output => "out",
+        };
+        let kind = match &self.kind {
+            LayerKind::Conv2d { kernel, stride, padded } => {
+                format!("conv{kernel}s{stride}{}", if *padded { "p" } else { "v" })
+            }
+            k => k.name().to_string(),
+        };
+        format!("{pos}:{kind}:h{}w{}b{}:{}", self.h, self.w, self.batch, self.group_sig)
+    }
+}
+
+/// One group: anchor parametric layer + its grouped successors, template
+/// (reference-model) widths.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub anchor: LayerSpec,
+    pub tail: Vec<LayerSpec>,
+    pub key: FamilyKey,
+    /// Index of the anchor in the source graph.
+    pub anchor_idx: usize,
+}
+
+impl Group {
+    /// Output elements per sample after the whole group (drives the FC
+    /// input width of downstream variant construction).
+    pub fn out_elems_per_sample(&self) -> usize {
+        let mut hw = self.anchor.out_hw();
+        let c = self.anchor.c_out;
+        for t in &self.tail {
+            let probe = LayerSpec { h: hw.0, w: hw.1, ..t.clone() };
+            hw = probe.out_hw();
+        }
+        match self.anchor.kind {
+            LayerKind::Fc => c,
+            LayerKind::Embedding | LayerKind::Lstm | LayerKind::Attention { .. } => c * self.anchor.h,
+            _ => c * hw.0 * hw.1,
+        }
+    }
+
+    /// Clone the group with new channel widths (variant construction and
+    /// estimation share this).
+    pub fn with_channels(&self, c_in: usize, c_out: usize) -> Group {
+        let mut anchor = self.anchor.clone();
+        anchor.c_in = c_in;
+        anchor.c_out = c_out;
+        let mut hw = anchor.out_hw();
+        let tail = self
+            .tail
+            .iter()
+            .map(|t| {
+                let nt = LayerSpec { c_in: c_out, c_out, h: hw.0, w: hw.1, ..t.clone() };
+                hw = nt.out_hw();
+                nt
+            })
+            .collect();
+        Group { anchor, tail, key: self.key.clone(), anchor_idx: self.anchor_idx }
+    }
+
+    pub fn layers(&self) -> Vec<LayerSpec> {
+        let mut v = vec![self.anchor.clone()];
+        v.extend(self.tail.iter().cloned());
+        v
+    }
+}
+
+/// A model parsed into positioned groups + their family assignment.
+#[derive(Clone, Debug)]
+pub struct ParsedModel {
+    pub name: String,
+    pub groups: Vec<Group>,
+    /// Distinct families, in first-appearance order.
+    pub families: Vec<FamilyKey>,
+    /// `groups[i]` belongs to `families[assignment[i]]`.
+    pub assignment: Vec<usize>,
+}
+
+impl ParsedModel {
+    pub fn input_groups(&self) -> impl Iterator<Item = &Group> {
+        self.groups.iter().filter(|g| g.key.position == Position::Input)
+    }
+
+    pub fn output_groups(&self) -> impl Iterator<Item = &Group> {
+        self.groups.iter().filter(|g| g.key.position == Position::Output)
+    }
+
+    pub fn hidden_groups(&self) -> impl Iterator<Item = &Group> {
+        self.groups.iter().filter(|g| g.key.position == Position::Hidden)
+    }
+
+    /// Representative (template) group of a family.
+    pub fn template(&self, fam: &FamilyKey) -> Option<&Group> {
+        self.groups.iter().find(|g| &g.key == fam)
+    }
+}
+
+/// Parse a model graph into groups and families.
+pub fn parse(g: &ModelGraph) -> ParsedModel {
+    // 1. group non-parametric layers with their preceding parametric layer
+    let mut raw_groups: Vec<(usize, LayerSpec, Vec<LayerSpec>)> = Vec::new();
+    for (i, l) in g.layers.iter().enumerate() {
+        if l.kind.is_parametric() {
+            raw_groups.push((i, l.clone(), Vec::new()));
+        } else if let Some(last) = raw_groups.last_mut() {
+            last.2.push(l.clone());
+        }
+        // leading non-parametric layers (rare) are dropped: they carry no
+        // channels to characterize and negligible energy.
+    }
+    assert!(raw_groups.len() >= 2, "need at least input and output layers");
+
+    // 2. positions
+    let n = raw_groups.len();
+    let mut groups = Vec::with_capacity(n);
+    for (idx, (anchor_idx, anchor, tail)) in raw_groups.into_iter().enumerate() {
+        let position = if idx == 0 {
+            Position::Input
+        } else if idx == n - 1 {
+            Position::Output
+        } else {
+            Position::Hidden
+        };
+        let group_sig: String = tail.iter().map(|t| short_sig(&t.kind)).collect::<Vec<_>>().join("-");
+        let key = FamilyKey {
+            position,
+            kind: anchor.kind.clone(),
+            h: anchor.h,
+            w: anchor.w,
+            batch: anchor.batch,
+            group_sig,
+        };
+        groups.push(Group { anchor, tail, key, anchor_idx });
+    }
+
+    // 3. dedup into families
+    let mut families: Vec<FamilyKey> = Vec::new();
+    let mut assignment = Vec::with_capacity(groups.len());
+    for grp in &groups {
+        match families.iter().position(|f| f == &grp.key) {
+            Some(i) => assignment.push(i),
+            None => {
+                families.push(grp.key.clone());
+                assignment.push(families.len() - 1);
+            }
+        }
+    }
+    ParsedModel { name: g.name.clone(), groups, families, assignment }
+}
+
+fn short_sig(k: &LayerKind) -> String {
+    match k {
+        LayerKind::MaxPool { size } => format!("mp{size}"),
+        LayerKind::BatchNorm => "bn".into(),
+        LayerKind::Relu => "r".into(),
+        LayerKind::Dropout => "do".into(),
+        LayerKind::Softmax => "sm".into(),
+        LayerKind::LayerNorm => "ln".into(),
+        LayerKind::ResidualAdd => "ra".into(),
+        other => other.name().into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn cnn5_parses_to_expected_families() {
+        let p = parse(&zoo::cnn5(&[32, 64, 128, 256], 28, 10));
+        // 4 conv groups + 1 fc group
+        assert_eq!(p.groups.len(), 5);
+        assert_eq!(p.groups[0].key.position, Position::Input);
+        assert_eq!(p.groups[4].key.position, Position::Output);
+        // conv groups at different spatial sizes are distinct families
+        let hidden: Vec<_> = p.hidden_groups().collect();
+        assert_eq!(hidden.len(), 3);
+        let fam_count = p.families.len();
+        assert_eq!(fam_count, 5); // all distinct (h/w differ per block)
+    }
+
+    #[test]
+    fn resnet_dedups_repeated_blocks() {
+        let g = zoo::resnet(56, 16, 10);
+        let p = parse(&g);
+        let convs = p.groups.iter().filter(|gr| matches!(gr.key.kind, LayerKind::Conv2d { .. })).count();
+        // 55 conv groups but far fewer families thanks to modular design
+        assert_eq!(convs, 55);
+        assert!(p.families.len() <= 12, "families {}", p.families.len());
+    }
+
+    #[test]
+    fn resnet110_has_same_family_count_as_resnet56() {
+        // deeper stacks repeat the same blocks -> identical family sets
+        let f56 = parse(&zoo::resnet(56, 16, 10)).families.len();
+        let f110 = parse(&zoo::resnet(110, 16, 10)).families.len();
+        assert_eq!(f56, f110);
+    }
+
+    #[test]
+    fn grouping_folds_non_parametric_tail() {
+        let p = parse(&zoo::cnn5(&[8, 16, 32, 64], 28, 10));
+        // each conv group carries bn + relu + maxpool
+        let g0 = &p.groups[0];
+        assert_eq!(g0.tail.len(), 3);
+        assert_eq!(g0.key.group_sig, "bn-r-mp2");
+    }
+
+    #[test]
+    fn with_channels_rescales_consistently() {
+        let p = parse(&zoo::cnn5(&[8, 16, 32, 64], 28, 10));
+        let g = p.groups[1].with_channels(4, 12);
+        assert_eq!(g.anchor.c_in, 4);
+        assert_eq!(g.anchor.c_out, 12);
+        for t in &g.tail {
+            assert_eq!(t.c_out, 12);
+        }
+    }
+
+    #[test]
+    fn out_elems_accounts_for_pooling() {
+        let p = parse(&zoo::cnn5(&[8, 16, 32, 64], 28, 10));
+        // block 1: conv(28x28, c=8) + pool2 -> 14*14*8
+        assert_eq!(p.groups[0].out_elems_per_sample(), 14 * 14 * 8);
+    }
+
+    #[test]
+    fn family_ids_stable_and_distinct() {
+        let p = parse(&zoo::lenet5(&[6, 16, 120, 84], 10));
+        let ids: Vec<String> = p.families.iter().map(|f| f.id()).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len());
+    }
+
+    #[test]
+    fn lstm_families() {
+        let p = parse(&zoo::lstm(64, &[128, 128], 2000, 32, 10));
+        assert_eq!(p.groups[0].key.kind, LayerKind::Embedding);
+        let hidden: Vec<_> = p.hidden_groups().collect();
+        // two lstm groups + nothing else parametric between
+        assert!(hidden.iter().all(|g| matches!(g.key.kind, LayerKind::Lstm)));
+        assert_eq!(hidden.len(), 2);
+    }
+}

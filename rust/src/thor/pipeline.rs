@@ -1,0 +1,333 @@
+//! The end-to-end THOR pipeline per (device, reference model): profile
+//! every family with guided active learning (subtractivity applied
+//! between stages exactly as eqs. 1–2 prescribe: output first, then
+//! input, then each hidden family), store the fitted GPs, and estimate
+//! arbitrary models from the store.
+
+use crate::gp::KernelKind;
+use crate::model::ModelGraph;
+use crate::simdevice::Device;
+use crate::thor::estimator::{estimate, Estimate, EstimateError};
+use crate::thor::fit::{fit_family, FitConfig};
+use crate::thor::parse::{parse, Position};
+use crate::thor::profiler::{self, ranges};
+use crate::thor::store::{GpStore, StoredGp};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ThorConfig {
+    /// Training iterations per variant measurement (paper: 500).
+    pub iterations: usize,
+    pub kind: KernelKind,
+    pub max_points_1d: usize,
+    pub max_points_2d: usize,
+    pub threshold_frac: f64,
+    pub grid_n_1d: usize,
+    pub grid_n_2d: usize,
+    pub time_surrogate: bool,
+    pub random_sampling: bool,
+    pub seed: u64,
+}
+
+impl Default for ThorConfig {
+    fn default() -> Self {
+        Self {
+            iterations: 500,
+            kind: KernelKind::Matern52,
+            max_points_1d: 16,
+            max_points_2d: 28,
+            threshold_frac: 0.05,
+            grid_n_1d: 33,
+            grid_n_2d: 13,
+            time_surrogate: false,
+            random_sampling: false,
+            seed: 20_25,
+        }
+    }
+}
+
+impl ThorConfig {
+    /// Cheap settings for tests / quick demo runs.
+    pub fn quick() -> Self {
+        Self {
+            iterations: 60,
+            max_points_1d: 10,
+            max_points_2d: 14,
+            grid_n_1d: 17,
+            grid_n_2d: 7,
+            ..Default::default()
+        }
+    }
+
+    fn fit_cfg(&self, dim: usize) -> FitConfig {
+        FitConfig {
+            kind: self.kind,
+            max_points: if dim == 1 { self.max_points_1d } else { self.max_points_2d },
+            threshold_frac: self.threshold_frac,
+            grid_n: if dim == 1 { self.grid_n_1d } else { self.grid_n_2d },
+            time_surrogate: self.time_surrogate,
+            random_sampling: self.random_sampling,
+            log_targets: true,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Map a normalized grid coordinate p ∈ [0, 1] to a channel count on a
+/// log grid: c = round(c_max^p).  Profiling resolution then concentrates
+/// at the narrow end, where the energy surface curves hardest
+/// (occupancy ramps + tile padding).
+pub fn log_channel(p: f64, c_max: f64) -> usize {
+    c_max.powf(p).round().max(1.0) as usize
+}
+
+/// Per-family profiling summary (feeds Table 1 and Fig A14).
+#[derive(Clone, Debug)]
+pub struct FamilyReport {
+    pub family: String,
+    pub points: usize,
+    pub device_seconds: f64,
+    pub fit_seconds: f64,
+    pub converged: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    pub families: Vec<FamilyReport>,
+}
+
+impl ProfileReport {
+    pub fn device_seconds(&self) -> f64 {
+        self.families.iter().map(|f| f.device_seconds).sum()
+    }
+
+    pub fn fit_seconds(&self) -> f64 {
+        self.families.iter().map(|f| f.fit_seconds).sum()
+    }
+
+    pub fn total_points(&self) -> usize {
+        self.families.iter().map(|f| f.points).sum()
+    }
+}
+
+/// THOR instance: a GP store plus configuration.
+pub struct Thor {
+    pub store: GpStore,
+    pub cfg: ThorConfig,
+}
+
+impl Thor {
+    pub fn new(cfg: ThorConfig) -> Self {
+        Self { store: GpStore::new(), cfg }
+    }
+
+    /// Profile every family of `reference` on `dev` (idempotent per
+    /// family: already-profiled families are skipped, the paper's
+    /// "one-time endeavor" reuse property).
+    pub fn profile(&mut self, dev: &mut Device, reference: &ModelGraph) -> ProfileReport {
+        let parsed = parse(reference);
+        let rg = ranges(&parsed);
+        let dev_name = dev.profile.name.to_string();
+        let iterations = self.cfg.iterations;
+        let mut report = ProfileReport::default();
+
+        let out_tmpl = parsed.output_groups().next().expect("no output group").clone();
+        let in_tmpl = parsed.input_groups().next().expect("no input group").clone();
+        let out_fam = out_tmpl.key.id();
+        let in_fam = in_tmpl.key.id();
+
+        // --- stage 1: output family, measured directly -------------------
+        if !self.store.contains(&dev_name, &out_fam) {
+            let out_max = rg.out_max as f64;
+            let outcome = fit_family(
+                |p| {
+                    let c = log_channel(p[0], out_max);
+                    let g = profiler::output_variant(&out_tmpl, c);
+                    profiler::measure(dev, &g, iterations)
+                },
+                1,
+                &self.cfg.fit_cfg(1),
+            );
+            report.families.push(FamilyReport {
+                family: out_fam.clone(),
+                points: outcome.points.len(),
+                device_seconds: outcome.device_seconds,
+                fit_seconds: outcome.fit_seconds,
+                converged: outcome.converged,
+            });
+            self.store.insert(
+                &dev_name,
+                &out_fam,
+                StoredGp {
+                    gp: outcome.gp,
+                    x_max: vec![out_max],
+                    log_x: true,
+                    log_y: true,
+                    device_seconds: outcome.device_seconds,
+                    fit_seconds: outcome.fit_seconds,
+                    converged: outcome.converged,
+                },
+            );
+        }
+
+        // --- stage 2: input family via eq. (1) ----------------------------
+        if !self.store.contains(&dev_name, &in_fam) {
+            let in_max = rg.in_max as f64;
+            let out_gp = self.store.get(&dev_name, &out_fam).expect("stage order").clone();
+            let outcome = fit_family(
+                |p| {
+                    let c = log_channel(p[0], in_max);
+                    let (g, fc_in) = profiler::input_variant(&in_tmpl, &out_tmpl, c);
+                    let (e_total, dt) = profiler::measure(dev, &g, iterations);
+                    let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
+                    ((e_total - e_out.max(0.0)).max(1e-12), dt)
+                },
+                1,
+                &self.cfg.fit_cfg(1),
+            );
+            report.families.push(FamilyReport {
+                family: in_fam.clone(),
+                points: outcome.points.len(),
+                device_seconds: outcome.device_seconds,
+                fit_seconds: outcome.fit_seconds,
+                converged: outcome.converged,
+            });
+            self.store.insert(
+                &dev_name,
+                &in_fam,
+                StoredGp {
+                    gp: outcome.gp,
+                    x_max: vec![in_max],
+                    log_x: true,
+                    log_y: true,
+                    device_seconds: outcome.device_seconds,
+                    fit_seconds: outcome.fit_seconds,
+                    converged: outcome.converged,
+                },
+            );
+        }
+
+        // --- stage 3: each hidden family via eq. (2) ----------------------
+        for (fi, fam) in parsed.families.iter().enumerate() {
+            if fam.position != Position::Hidden {
+                continue;
+            }
+            let fam_id = fam.id();
+            if self.store.contains(&dev_name, &fam_id) {
+                continue;
+            }
+            let tmpl = parsed.template(fam).unwrap().clone();
+            let (a_max, b_max) = rg.hidden_max[fi];
+            let (a_max, b_max) = (a_max.max(2) as f64, b_max.max(2) as f64);
+            let in_gp = self.store.get(&dev_name, &in_fam).expect("stage order").clone();
+            let out_gp = self.store.get(&dev_name, &out_fam).expect("stage order").clone();
+            let outcome = fit_family(
+                |p| {
+                    let a = log_channel(p[0], a_max);
+                    let b = log_channel(p[1], b_max);
+                    let (g, thin, fc_in) = profiler::hidden_variant(&in_tmpl, &tmpl, &out_tmpl, a, b);
+                    let (e_total, dt) = profiler::measure(dev, &g, iterations);
+                    let (e_in, _) = in_gp.predict_raw(&[thin as f64]);
+                    let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
+                    ((e_total - e_in.max(0.0) - e_out.max(0.0)).max(1e-12), dt)
+                },
+                2,
+                &self.cfg.fit_cfg(2),
+            );
+            report.families.push(FamilyReport {
+                family: fam_id.clone(),
+                points: outcome.points.len(),
+                device_seconds: outcome.device_seconds,
+                fit_seconds: outcome.fit_seconds,
+                converged: outcome.converged,
+            });
+            self.store.insert(
+                &dev_name,
+                &fam_id,
+                StoredGp {
+                    gp: outcome.gp,
+                    x_max: vec![a_max, b_max],
+                    log_x: true,
+                    log_y: true,
+                    device_seconds: outcome.device_seconds,
+                    fit_seconds: outcome.fit_seconds,
+                    converged: outcome.converged,
+                },
+            );
+        }
+        report
+    }
+
+    /// Estimate a model's per-iteration energy from the fitted store.
+    pub fn estimate(&self, device: &str, model: &ModelGraph) -> Result<Estimate, EstimateError> {
+        estimate(&self.store, device, model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simdevice::{devices, Device};
+    use crate::util::stats::mape;
+    use crate::workload::{fusion::fuse, lower::lower};
+
+    /// End-to-end sanity: profile the cnn5 family set on Xavier, then
+    /// estimate random variants and compare against the simulator ground
+    /// truth.  This is a miniature of Fig 7/8 and the single most
+    /// important integration test in the repo.
+    #[test]
+    fn thor_beats_trivial_on_cnn5_xavier() {
+        // Full-size reference + default budgets: the quick() budgets are
+        // for smoke tests; estimation quality needs the paper's scale.
+        let reference = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
+        let mut dev = Device::new(devices::xavier(), 42);
+        let mut thor = Thor::new(ThorConfig { iterations: 200, ..ThorConfig::default() });
+        let report = thor.profile(&mut dev, &reference);
+        assert!(report.total_points() > 10);
+        assert_eq!(report.families.len(), 5); // out, in, 3 hidden conv sizes
+
+        // estimate 12 random variants vs measured ground truth (the
+        // paper's protocol: mean of repeated metered runs)
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        let mut actual = Vec::new();
+        let mut est = Vec::new();
+        for _ in 0..12 {
+            let ch = [
+                rng.range_usize(1, 16),
+                rng.range_usize(1, 32),
+                rng.range_usize(1, 64),
+                rng.range_usize(1, 128),
+            ];
+            let g = zoo::cnn5(&ch, 28, 10);
+            let tr = fuse(&lower(&g));
+            let truth = (dev.run(&tr, 200).energy_per_iter() + dev.run(&tr, 200).energy_per_iter()) / 2.0;
+            let e = thor.estimate("xavier", &g).unwrap();
+            actual.push(truth);
+            est.push(e.energy_per_iter);
+        }
+        let m = mape(&actual, &est);
+        assert!(m < 35.0, "THOR MAPE {m}% too high: actual {actual:?} est {est:?}");
+    }
+
+    #[test]
+    fn profile_is_idempotent() {
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let mut dev = Device::new(devices::tx2(), 1);
+        let mut thor = Thor::new(ThorConfig::quick());
+        let r1 = thor.profile(&mut dev, &reference);
+        let r2 = thor.profile(&mut dev, &reference);
+        assert!(!r1.families.is_empty());
+        assert!(r2.families.is_empty(), "second profile should be a no-op");
+    }
+
+    #[test]
+    fn store_reusable_across_models_of_same_family() {
+        // Profiling cnn5 once covers every narrower cnn5 variant.
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let mut dev = Device::new(devices::server(), 5);
+        let mut thor = Thor::new(ThorConfig::quick());
+        thor.profile(&mut dev, &reference);
+        let narrow = zoo::cnn5(&[2, 5, 9, 30], 16, 10);
+        assert!(thor.estimate("server", &narrow).is_ok());
+    }
+}

@@ -1,0 +1,205 @@
+//! Persistence of fitted per-(device, family) GPs.  The paper's fitting
+//! is a "one-time endeavor as the resulted models are reusable" — the
+//! store is that reuse boundary, serialized as JSON so the decoupled
+//! server (coordinator) can ship models across the wire and to disk.
+
+use std::collections::BTreeMap;
+
+use crate::gp::GpModel;
+use crate::util::json::Json;
+
+/// A fitted family model plus its feature normalizers.
+#[derive(Clone, Debug)]
+pub struct StoredGp {
+    pub gp: GpModel,
+    /// Feature scale: raw channels are divided by these before prediction
+    /// (profiling normalized features to [0, 1]).
+    pub x_max: Vec<f64>,
+    /// Features were profiled on a log grid: x = ln(c)/ln(c_max).
+    pub log_x: bool,
+    /// Targets were fitted as ln(E); predictions are exponentiated back.
+    pub log_y: bool,
+    /// Simulated device-seconds spent profiling this family (Table 1).
+    pub device_seconds: f64,
+    pub fit_seconds: f64,
+    pub converged: bool,
+}
+
+impl StoredGp {
+    /// Predict at raw channel features, in linear joules regardless of
+    /// the internal transforms.  The returned variance is mapped back to
+    /// linear units via the delta method when `log_y`.
+    pub fn predict_raw(&self, raw: &[f64]) -> (f64, f64) {
+        let q: Vec<f64> = raw
+            .iter()
+            .zip(&self.x_max)
+            .map(|(v, m)| {
+                if self.log_x {
+                    v.max(1.0).ln() / m.max(1.0 + 1e-9).ln()
+                } else {
+                    v / m
+                }
+            })
+            .collect();
+        let (m, v) = self.gp.predict(&q);
+        if self.log_y {
+            let mean = m.exp();
+            (mean, v * mean * mean)
+        } else {
+            (m, v)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gp", self.gp.to_json()),
+            ("x_max", Json::arr_f64(&self.x_max)),
+            ("log_x", Json::Bool(self.log_x)),
+            ("log_y", Json::Bool(self.log_y)),
+            ("device_seconds", Json::Num(self.device_seconds)),
+            ("fit_seconds", Json::Num(self.fit_seconds)),
+            ("converged", Json::Bool(self.converged)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            gp: GpModel::from_json(j.get("gp")?)?,
+            x_max: j.get("x_max")?.as_f64_vec()?,
+            log_x: j.get("log_x")?.as_bool()?,
+            log_y: j.get("log_y")?.as_bool()?,
+            device_seconds: j.get("device_seconds")?.as_f64()?,
+            fit_seconds: j.get("fit_seconds")?.as_f64()?,
+            converged: j.get("converged")?.as_bool()?,
+        })
+    }
+}
+
+/// (device, family-id) → fitted GP.
+#[derive(Default)]
+pub struct GpStore {
+    map: BTreeMap<String, StoredGp>,
+}
+
+fn key(device: &str, family: &str) -> String {
+    format!("{device}|{family}")
+}
+
+impl GpStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, device: &str, family: &str, gp: StoredGp) {
+        self.map.insert(key(device, family), gp);
+    }
+
+    pub fn get(&self, device: &str, family: &str) -> Option<&StoredGp> {
+        self.map.get(&key(device, family))
+    }
+
+    pub fn contains(&self, device: &str, family: &str) -> bool {
+        self.map.contains_key(&key(device, family))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total profiling + fitting cost per device (Table 1 rows).
+    pub fn cost_seconds(&self, device: &str) -> (f64, f64) {
+        let prefix = format!("{device}|");
+        self.map
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix))
+            .fold((0.0, 0.0), |(d, f), (_, g)| (d + g.device_seconds, f + g.fit_seconds))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.map.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let mut map = BTreeMap::new();
+        for (k, v) in j.as_obj()? {
+            map.insert(k.clone(), StoredGp::from_json(v)?);
+        }
+        Some(Self { map })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Option<Self>> {
+        let s = std::fs::read_to_string(path)?;
+        Ok(Json::parse(&s).ok().and_then(|j| Self::from_json(&j)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::KernelKind;
+
+    fn toy_stored() -> StoredGp {
+        let xs: Vec<Vec<f64>> = (0..8).map(|i| vec![i as f64 / 7.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 5.0 + 3.0 * x[0]).collect();
+        StoredGp {
+            gp: GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap(),
+            x_max: vec![128.0],
+            log_x: false,
+            log_y: false,
+            device_seconds: 12.5,
+            fit_seconds: 0.5,
+            converged: true,
+        }
+    }
+
+    #[test]
+    fn predict_raw_normalizes() {
+        let s = toy_stored();
+        let (m_raw, _) = s.predict_raw(&[64.0]);
+        let (m_norm, _) = s.gp.predict(&[0.5]);
+        assert_eq!(m_raw, m_norm);
+    }
+
+    #[test]
+    fn store_roundtrip_through_json() {
+        let mut st = GpStore::new();
+        st.insert("xavier", "hid:conv3s1p:h14w14b10:bn-r-mp2", toy_stored());
+        st.insert("oppo", "out:fc:h1w1b10:sm", toy_stored());
+        let j = st.to_json().to_string();
+        let back = GpStore::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        let a = st.get("xavier", "hid:conv3s1p:h14w14b10:bn-r-mp2").unwrap();
+        let b = back.get("xavier", "hid:conv3s1p:h14w14b10:bn-r-mp2").unwrap();
+        assert!((a.predict_raw(&[40.0]).0 - b.predict_raw(&[40.0]).0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cost_seconds_sums_per_device() {
+        let mut st = GpStore::new();
+        st.insert("xavier", "f1", toy_stored());
+        st.insert("xavier", "f2", toy_stored());
+        st.insert("oppo", "f1", toy_stored());
+        let (d, f) = st.cost_seconds("xavier");
+        assert!((d - 25.0).abs() < 1e-9);
+        assert!((f - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let mut st = GpStore::new();
+        st.insert("tx2", "fam", toy_stored());
+        let dir = std::env::temp_dir().join("thor_store_test.json");
+        st.save(&dir).unwrap();
+        let back = GpStore::load(&dir).unwrap().unwrap();
+        assert!(back.contains("tx2", "fam"));
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,95 @@
+//! Training driver over the PJRT train-step artifact: synthetic datasets
+//! with matching shapes (DESIGN.md §2 substitutions for MNIST / CelebA
+//! gender) plus the loop that feeds Fig 6 (real wall-clock), Fig 13 and
+//! the end-to-end example.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::runtime::{trainstep::{StepResult, BATCH, IMG}, Runtime, TrainStep};
+use crate::util::rng::Pcg64;
+
+/// Synthetic binary-image task (CelebA-gender stand-in): class is the
+/// sign of a smooth spatial template response + noise — learnable by a
+/// small CNN but not linearly trivial.
+pub struct GenderLikeData {
+    rng: Pcg64,
+    noise: f64,
+}
+
+impl GenderLikeData {
+    pub fn new(seed: u64, noise: f64) -> Self {
+        Self { rng: Pcg64::new(seed), noise }
+    }
+
+    /// Next batch: (images flat NHWC, labels).
+    pub fn batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let mut x = vec![0f32; BATCH * IMG * IMG];
+        let mut y = vec![0i32; BATCH];
+        for b in 0..BATCH {
+            let label = self.rng.bool(0.5);
+            y[b] = label as i32;
+            // template: vertical gradient for class 1, horizontal for 0
+            for i in 0..IMG {
+                for j in 0..IMG {
+                    let t = if label {
+                        (i as f64 / IMG as f64 - 0.5) * 2.0
+                    } else {
+                        (j as f64 / IMG as f64 - 0.5) * 2.0
+                    };
+                    x[b * IMG * IMG + i * IMG + j] =
+                        (t + self.noise * self.rng.normal()) as f32;
+                }
+            }
+        }
+        (x, y)
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    pub final_train: Option<StepResult>,
+    pub eval: Option<StepResult>,
+    /// Wall-clock seconds of the pure train-step executions.
+    pub step_seconds: f64,
+    pub steps: usize,
+}
+
+/// Train for `steps` batches; logs loss every `log_every`.
+pub fn train(
+    rt: &mut Runtime,
+    ts: &mut TrainStep,
+    data: &mut GenderLikeData,
+    steps: usize,
+    lr: f32,
+    log_every: usize,
+) -> Result<TrainReport> {
+    let mut report = TrainReport { steps, ..Default::default() };
+    let mut last = None;
+    for s in 0..steps {
+        let (x, y) = data.batch();
+        let t0 = Instant::now();
+        let r = ts.step(rt, &x, &y, lr)?;
+        report.step_seconds += t0.elapsed().as_secs_f64();
+        if s % log_every == 0 || s + 1 == steps {
+            report.losses.push((s, r.loss));
+        }
+        last = Some(r);
+    }
+    report.final_train = last;
+    // held-out evaluation on fresh batches
+    let mut acc = 0.0;
+    let mut loss = 0.0;
+    let evals = 8;
+    for _ in 0..evals {
+        let (x, y) = data.batch();
+        let r = ts.eval(rt, &x, &y)?;
+        acc += r.acc;
+        loss += r.loss;
+    }
+    report.eval = Some(StepResult { loss: loss / evals as f32, acc: acc / evals as f32 });
+    Ok(report)
+}

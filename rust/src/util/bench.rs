@@ -1,0 +1,124 @@
+//! Measurement harness for `cargo bench` targets (criterion is not
+//! available offline).  Provides warmup, a fixed-iteration or
+//! fixed-duration loop, and mean/p50/p95 reporting — enough to drive the
+//! §Perf optimization loop with before/after numbers.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            self.iters.to_string(),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        ]
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, running for at least `budget` after a 10% warmup.
+/// Each sample is one call; the result folds all samples.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: run until 10% of budget is spent (at least once).
+    let warm_deadline = Instant::now() + budget.mul_f64(0.1);
+    loop {
+        f();
+        if Instant::now() >= warm_deadline {
+            break;
+        }
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let deadline = Instant::now() + budget;
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if Instant::now() >= deadline {
+            break;
+        }
+    }
+    summarize(name, samples_ns)
+}
+
+/// Benchmark with an exact number of iterations (deterministic workloads).
+pub fn bench_n<F: FnMut()>(name: &str, n: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples_ns = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    summarize(name, samples_ns)
+}
+
+fn summarize(name: &str, mut samples_ns: Vec<f64>) -> BenchResult {
+    assert!(!samples_ns.is_empty());
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+        min_ns: samples_ns[0],
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_counts_iters() {
+        let r = bench_n("noop", 50, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn bench_measures_sleep_scale() {
+        let r = bench_n("sleep", 5, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean_ns > 1.5e6, "{}", r.mean_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

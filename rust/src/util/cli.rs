@@ -1,0 +1,159 @@
+//! Minimal declarative CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; generates usage text; unknown flags are hard errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+/// Specification of accepted flags: (name, takes_value, help).
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, CliError> {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+            if spec.takes_value {
+                let v = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                    }
+                };
+                out.flags.insert(name, v);
+            } else {
+                out.flags.insert(name, "true".to_string());
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+pub fn usage(program: &str, specs: &[Spec]) -> String {
+    let mut s = format!("usage: {program} [options] [args...]\n\noptions:\n");
+    for spec in specs {
+        let arg = if spec.takes_value { format!("--{} <v>", spec.name) } else { format!("--{}", spec.name) };
+        s.push_str(&format!("  {arg:<24} {}\n", spec.help));
+    }
+    s
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.to_string(), v.clone())),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(name.to_string(), v.clone())),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<Spec> {
+        vec![
+            Spec { name: "device", takes_value: true, help: "device name" },
+            Spec { name: "quick", takes_value: false, help: "quick mode" },
+            Spec { name: "seed", takes_value: true, help: "rng seed" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = parse(&sv(&["run", "--device=xavier", "--quick", "--seed", "7", "extra"]), &specs()).unwrap();
+        assert_eq!(a.get("device"), Some("xavier"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(matches!(parse(&sv(&["--nope"]), &specs()), Err(CliError::UnknownFlag(_))));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(parse(&sv(&["--device"]), &specs()), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = parse(&sv(&["--seed", "abc"]), &specs()).unwrap();
+        assert!(matches!(a.get_usize("seed", 0), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_usize("seed", 42).unwrap(), 42);
+        assert_eq!(a.get_str("device", "server"), "server");
+    }
+}

@@ -1,0 +1,257 @@
+//! Dense linear algebra for the GP library: column-major-free simple
+//! row-major matrices, Cholesky factorization, triangular solves and a
+//! symmetric inverse.  Sizes are small (inducing sets ≤ 128), so clarity
+//! beats blocking; the hot path (posterior over many query points) runs
+//! through the AOT Pallas artifact instead.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.
+/// Returns None if A is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L x = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve Lᵀ x = b (back substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b given the Cholesky factor of A.
+pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// A⁻¹ for SPD A via its Cholesky factor (column-by-column solves).
+pub fn chol_inverse(l: &Mat) -> Mat {
+    let n = l.rows;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = chol_solve(l, &e);
+        for i in 0..n {
+            inv[(i, j)] = col[i];
+        }
+        e[j] = 0.0;
+    }
+    inv
+}
+
+/// log det A = 2 Σ log L_ii.
+pub fn chol_logdet(l: &Mat) -> f64 {
+    (0..l.rows).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..n {
+            a[(i, i)] += n as f64; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 1);
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul(&l.transpose());
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((llt[(i, j)] - a[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_matches_matvec() {
+        let a = random_spd(9, 2);
+        let l = cholesky(&a).unwrap();
+        let x_true: Vec<f64> = (0..9).map(|i| (i as f64) - 4.0).collect();
+        let b = a.matvec(&x_true);
+        let x = chol_solve(&l, &b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(8, 3);
+        let l = cholesky(&a).unwrap();
+        let inv = chol_inverse(&l);
+        let prod = a.matmul(&inv);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn logdet_matches_identity_scaling() {
+        let mut a = Mat::eye(5);
+        for i in 0..5 {
+            a[(i, i)] = 2.0;
+        }
+        let l = cholesky(&a).unwrap();
+        assert!((chol_logdet(&l) - 5.0 * 2.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let a = random_spd(6, 4);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..6).map(|i| i as f64 + 1.0).collect();
+        let y = solve_lower(&l, &b);
+        // L y should reconstruct b
+        for i in 0..6 {
+            let s: f64 = (0..=i).map(|k| l[(i, k)] * y[k]).sum();
+            assert!((s - b[i]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained substrates (no external crates are available
+//! offline beyond `xla`/`anyhow`/`thiserror`, so the JSON codec, CLI
+//! parser, stats, bench harness and property-testing harness live here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,91 @@
+//! Mini property-testing harness (the `proptest` crate is unavailable
+//! offline).  Deterministic seeded generation, configurable case counts,
+//! and first-failure reporting with the generating seed so a failure is
+//! reproducible by construction.
+//!
+//! Used for the coordinator invariants (routing, batching, state machine),
+//! the GP algebra, the JSON codec and the layer parser.
+
+use crate::util::rng::Pcg64;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` against `cases` inputs produced by `gen`.
+/// Panics with the case index + seed on the first falsified case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' falsified at case {case} (seed {:#x}):\n  input: {input:?}\n  reason: {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check("sum-commutes", Config::default(), |r| (r.f64(), r.f64()), |(a, b)| {
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn fails_false_property() {
+        check(
+            "always-small",
+            Config { cases: 64, seed: 1 },
+            |r| r.range_usize(0, 100),
+            |&n| {
+                prop_assert!(n < 50, "n = {n}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seen_a = Vec::new();
+        let mut seen_b = Vec::new();
+        for out in [&mut seen_a, &mut seen_b] {
+            check("collect", Config { cases: 10, seed: 7 }, |r| r.next_u64(), |&v| {
+                out.push(v);
+                Ok(())
+            });
+        }
+        assert_eq!(seen_a, seen_b);
+    }
+}

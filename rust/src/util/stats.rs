@@ -1,0 +1,153 @@
+//! Statistics helpers shared by the estimator, the experiments and the
+//! bench harness: MAPE (the paper's metric, eq. 5), correlation (Fig 6),
+//! percentiles and CDFs (Fig 10), simple linear regression (the FLOPs
+//! baseline).
+
+/// Mean Absolute Percentage Error, paper eq. (5), in percent.
+pub fn mape(actual: &[f64], estimated: &[f64]) -> f64 {
+    assert_eq!(actual.len(), estimated.len());
+    assert!(!actual.is_empty());
+    let s: f64 = actual
+        .iter()
+        .zip(estimated)
+        .map(|(a, e)| ((a - e) / a).abs())
+        .sum();
+    100.0 * s / actual.len() as f64
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Standard error of the mean (the paper reports mean ± SE over 3 repeats).
+pub fn std_err(xs: &[f64]) -> f64 {
+    std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Pearson correlation coefficient (Fig 6: time vs energy).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    num / (dx.sqrt() * dy.sqrt()).max(1e-300)
+}
+
+/// p-th percentile (0..=100), linear interpolation, on a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Empirical CDF evaluated at `grid` points (Fig 10 ResNet error CDF).
+pub fn cdf(xs: &[f64], grid: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid.iter()
+        .map(|g| {
+            let cnt = v.partition_point(|x| x <= g);
+            cnt as f64 / v.len() as f64
+        })
+        .collect()
+}
+
+/// Ordinary least squares y = a*x + b. Returns (a, b).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let a = if den.abs() < 1e-300 { 0.0 } else { num / den };
+    (a, my - a * mx)
+}
+
+/// Relative error |a - e| / |a| (unsigned, fraction not percent).
+pub fn rel_err(actual: f64, estimated: f64) -> f64 {
+    ((actual - estimated) / actual).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_zero_for_exact() {
+        assert_eq!(mape(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn mape_known_value() {
+        // errors: 10%, 20% -> MAPE 15%
+        let m = mape(&[10.0, 10.0], &[11.0, 8.0]);
+        assert!((m - 15.0).abs() < 1e-9, "{m}");
+    }
+
+    #[test]
+    fn pearson_perfect_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let xs = [0.1, 0.5, 0.9, 0.3];
+        let grid: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+        let c = cdf(&xs, &grid);
+        assert_eq!(*c.last().unwrap(), 1.0);
+        for w in c.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 7.0).collect();
+        let (a, b) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9 && (b - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn std_err_shrinks_with_n() {
+        let xs4 = [1.0, 2.0, 3.0, 4.0];
+        let xs16: Vec<f64> = xs4.repeat(4);
+        assert!(std_err(&xs16) < std_err(&xs4));
+    }
+}

@@ -1,0 +1,104 @@
+//! ASCII table / series printers for the experiment harness.  Every bench
+//! prints the same rows the paper's tables and figures report, through
+//! these helpers, so `cargo bench` output is directly comparable with the
+//! paper.
+
+/// Render a table with a header row; columns are padded to the widest cell.
+pub fn render(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "row arity mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| format!("+{}", "-".repeat(w + 2)))
+        .collect::<String>()
+        + "+\n";
+    let fmt_row = |cells: &[String]| -> String {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("| {:width$} ", c, width = widths[i]));
+        }
+        s.push_str("|\n");
+        s
+    };
+    let mut out = sep.clone();
+    out.push_str(&fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row));
+    }
+    out.push_str(&sep);
+    out
+}
+
+/// A labelled (x, y) series, printed as aligned columns (the "figure"
+/// analogue: pipe into any plotting tool to regenerate the paper's plot).
+pub fn render_series(title: &str, xlabel: &str, series: &[(&str, &[(f64, f64)])]) -> String {
+    let mut out = format!("# {title}\n");
+    out.push_str(&format!("# {:>12}", xlabel));
+    for (name, _) in series {
+        out.push_str(&format!(" {:>14}", name));
+    }
+    out.push('\n');
+    let n = series.iter().map(|(_, pts)| pts.len()).max().unwrap_or(0);
+    for i in 0..n {
+        let x = series
+            .iter()
+            .find_map(|(_, pts)| pts.get(i).map(|p| p.0))
+            .unwrap_or(f64::NAN);
+        out.push_str(&format!("  {x:>12.4}"));
+        for (_, pts) in series {
+            match pts.get(i) {
+                Some(p) => out.push_str(&format!(" {:>14.6}", p.1)),
+                None => out.push_str(&format!(" {:>14}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let s = render(
+            &["device", "MAPE"],
+            &[
+                vec!["OPPO".into(), "9.1".into()],
+                vec!["iPhone".into(), "11.3".into()],
+            ],
+        );
+        assert!(s.contains("| device | MAPE |"));
+        assert!(s.contains("| OPPO   | 9.1  |"));
+        // all lines same width
+        let w: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(w.windows(2).all(|p| p[0] == p[1]));
+    }
+
+    #[test]
+    fn renders_series_with_missing_points() {
+        let a = [(1.0, 2.0), (2.0, 3.0)];
+        let b = [(1.0, 5.0)];
+        let s = render_series("t", "x", &[("a", &a), ("b", &b)]);
+        assert!(s.lines().count() == 4);
+        assert!(s.contains('-'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_ragged_rows() {
+        render(&["a", "b"], &[vec!["1".into()]]);
+    }
+}

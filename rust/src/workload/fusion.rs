@@ -1,0 +1,133 @@
+//! Fusion pass: the runtime optimizations that break naive stage-sum
+//! estimation (paper §2.3 and Fig 2).
+//!
+//! * **Producer fusion** (Conv-BN-ReLU and elementwise-into-producer): a
+//!   memory-bound elementwise op following a dense op on the *same layer
+//!   or a grouped non-parametric successor* is folded into the producer
+//!   launch — its FLOPs are kept but its intermediate tensor no longer
+//!   round-trips DRAM, and one kernel launch disappears.
+//! * **Fused optimizer**: all update ops are coalesced into a single
+//!   launch (frameworks emit one fused optimizer kernel), keeping bytes
+//!   but removing per-layer launch overhead.
+//!
+//! The NeuralPower-style baseline profiles layers/stages standalone, i.e.
+//! *unfused and cold*, which is precisely why it overestimates (Fig 2).
+
+use crate::workload::{Op, OpClass, Phase, Trace};
+
+/// Whether `next` can fold into `prev` as a producer-consumer fusion.
+fn fusible(prev: &Op, next: &Op) -> bool {
+    prev.phase == next.phase
+        && next.class == OpClass::Elementwise
+        && prev.class != OpClass::Update
+        // producer's output feeds the consumer: same or adjacent layer
+        && (next.layer == prev.layer
+            || next.layer == prev.layer + 1
+            || prev.layer == next.layer + 1)
+        // only fuse when the elementwise op is small relative to producer
+        && next.flops <= prev.flops.max(1.0)
+}
+
+/// Apply producer fusion + fused optimizer to a lowered trace.
+pub fn fuse(trace: &Trace) -> Trace {
+    let mut out: Vec<Op> = Vec::with_capacity(trace.ops.len());
+    for op in &trace.ops {
+        if op.phase == Phase::Update {
+            // Coalesce updates into one launch (keep per-layer provenance of
+            // the first update op; bytes/flops accumulate).
+            if let Some(last) = out.last_mut() {
+                if last.phase == Phase::Update {
+                    last.flops += op.flops;
+                    last.bytes_in += op.bytes_in;
+                    last.bytes_out += op.bytes_out;
+                    last.parallelism += op.parallelism;
+                    last.fused += 1;
+                    continue;
+                }
+            }
+            out.push(op.clone());
+            continue;
+        }
+        if let Some(last) = out.last_mut() {
+            if fusible(last, op) {
+                // The intermediate activation stays in registers/VMEM: the
+                // consumer's input read and the producer's output write are
+                // both eliminated.
+                last.bytes_out = op.bytes_out;
+                last.flops += op.flops;
+                last.fused += 1;
+                continue;
+            }
+        }
+        out.push(op.clone());
+    }
+    Trace { ops: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::workload::lower::lower;
+
+    #[test]
+    fn fusion_reduces_launches_preserves_flops() {
+        let g = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
+        let t = lower(&g);
+        let f = fuse(&t);
+        assert!(f.launches() < t.launches(), "{} !< {}", f.launches(), t.launches());
+        assert!((f.total_flops() - t.total_flops()).abs() / t.total_flops() < 1e-9);
+    }
+
+    #[test]
+    fn fusion_reduces_bytes() {
+        let g = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
+        let t = lower(&g);
+        let f = fuse(&t);
+        assert!(f.total_bytes() < t.total_bytes());
+    }
+
+    #[test]
+    fn conv_bn_relu_chain_becomes_one_launch() {
+        // cnn5 forward: conv, bn, relu, pool per block -> fused to at most
+        // 2 launches per block (conv+bn+relu merged, pool may merge too).
+        let g = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let t = lower(&g);
+        let f = fuse(&t);
+        let fwd_launches = f.ops.iter().filter(|o| o.phase == Phase::Forward).count();
+        let fwd_unfused = t.ops.iter().filter(|o| o.phase == Phase::Forward).count();
+        assert!(fwd_launches * 2 <= fwd_unfused, "{fwd_launches} vs {fwd_unfused}");
+    }
+
+    #[test]
+    fn updates_coalesce_to_single_launch() {
+        let g = zoo::lenet5(&[6, 16, 120, 84], 10);
+        let f = fuse(&lower(&g));
+        let upd = f.ops.iter().filter(|o| o.phase == Phase::Update).count();
+        assert_eq!(upd, 1);
+    }
+
+    #[test]
+    fn fused_counter_tracks_members() {
+        let g = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let t = lower(&g);
+        let f = fuse(&t);
+        let members: usize = f.ops.iter().map(|o| o.fused).sum();
+        assert_eq!(members, t.ops.len());
+    }
+
+    #[test]
+    fn dense_ops_never_fuse_into_each_other() {
+        let g = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let f = fuse(&lower(&g));
+        // every layer with a conv still has at least one dense launch
+        for (i, l) in g.layers.iter().enumerate() {
+            if l.kind.is_parametric() {
+                assert!(
+                    f.ops.iter().any(|o| o.layer == i && o.class == OpClass::Dense),
+                    "dense op of layer {i} disappeared"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Kernel-configuration model: how many threads a launch actually uses on
+//! a device, and the resulting utilization.
+//!
+//! This is the structural source of the paper's observed non-linearity
+//! (Figs 5, 11): kernels are scheduled in *waves* of `compute_units ×
+//! threads_per_unit` threads.  A problem that needs one thread more than a
+//! wave boundary pays for a whole extra wave at marginal utilization —
+//! energy plateaus between boundaries and jumps across them, exactly the
+//! plateau/ridge morphology the paper profiles.  Pruned (narrow) models
+//! sit on low-occupancy plateaus where energy is *not* proportional to
+//! FLOPs, which is why FLOPs-ratio-guided pruning overshoots its budget
+//! (Fig 13) and THOR does not.
+
+/// Utilization of the compute array for a launch needing `parallelism`
+/// threads on a device exposing `slots = units × threads_per_unit`
+/// concurrent threads.
+///
+/// Returns (waves, utilization ∈ (0, 1]).
+pub fn occupancy(parallelism: f64, slots: f64) -> (f64, f64) {
+    assert!(parallelism > 0.0 && slots > 0.0);
+    let waves = (parallelism / slots).ceil().max(1.0);
+    let util = parallelism / (waves * slots);
+    (waves, util)
+}
+
+/// Effective compute efficiency: utilization tempered by a per-class
+/// efficiency ceiling (dense kernels reach near-peak; elementwise kernels
+/// are bandwidth-limited and cap much lower), plus a small-launch penalty
+/// modeling under-filled pipelines.
+pub fn compute_efficiency(parallelism: f64, slots: f64, class_ceiling: f64) -> f64 {
+    let (_, util) = occupancy(parallelism, slots);
+    // Launches much smaller than one wave additionally underfill the
+    // pipeline: ramp efficiency with a saturating curve.
+    let fill = (parallelism / slots).min(1.0);
+    let ramp = 0.25 + 0.75 * fill.sqrt();
+    (util * ramp * class_ceiling).clamp(1e-3, 1.0)
+}
+
+/// GEMM-shape efficiency: dense kernels reach peak only when both the
+/// row dimension (M = batch·spatial) and the channel dimension (N =
+/// c_out) are large enough to fill the compute array's pipelines.
+/// Late conv layers (tiny spatial), small-batch FC layers (M = batch)
+/// and narrow/pruned channels all fall off the roofline — by *shape*,
+/// not by FLOP count, which is precisely the signal a FLOPs proxy
+/// cannot see and THOR's per-family GPs can (the family fixes the
+/// shape; the channels are the GP features).
+///
+/// `m_sat` / `n_sat` are device-specific saturation points (a 4090
+/// needs far larger tiles to saturate than a phone GPU).
+pub fn shape_efficiency(m_rows: f64, n_cols: f64, m_sat: f64, n_sat: f64) -> f64 {
+    let fm = (m_rows / m_sat).min(1.0).powf(0.35);
+    let fn_ = (n_cols / n_sat).min(1.0).powf(0.35);
+    (fm * fn_).clamp(0.02, 1.0)
+}
+
+/// Channel-tile padding: the kernel library executes a channel dimension
+/// `c` as `ceil(c / tile) * tile` lanes, where the tile grows with the
+/// problem (vendor libraries pick wider tiles for wider layers).
+/// `quantum` is the device's base lane granularity (vec4 for WebGL,
+/// 8-lane tensor tiles for CUDA).
+///
+/// This staircase is the paper's central non-linearity: energy vs channel
+/// count is flat inside a tile and jumps at tile boundaries (Figs 5/11),
+/// and pruned models keep paying for padded lanes (Fig 13).
+pub fn padded_channels(c: usize, quantum: usize) -> usize {
+    if c == 0 {
+        return 0; // not channel-tiled
+    }
+    let tile = if c < 32 {
+        quantum
+    } else if c < 128 {
+        2 * quantum
+    } else {
+        4 * quantum
+    };
+    c.div_ceil(tile) * tile
+}
+
+/// Multiplicative FLOP inflation from channel padding on both GEMM dims.
+pub fn pad_ratio(c_in: usize, c_out: usize, quantum: usize) -> f64 {
+    let r = |c: usize| {
+        if c == 0 {
+            1.0
+        } else {
+            padded_channels(c, quantum) as f64 / c as f64
+        }
+    };
+    r(c_in) * r(c_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn padding_staircase() {
+        assert_eq!(padded_channels(1, 8), 8);
+        assert_eq!(padded_channels(8, 8), 8);
+        assert_eq!(padded_channels(9, 8), 16);
+        assert_eq!(padded_channels(33, 8), 48); // tile 16 above 32
+        assert_eq!(padded_channels(129, 8), 160); // tile 32 above 128
+        assert_eq!(padded_channels(0, 8), 0);
+    }
+
+    #[test]
+    fn pad_ratio_worst_for_narrow() {
+        assert!(pad_ratio(1, 1, 8) > 16.0); // 8x8 lanes for a 1x1 problem
+        assert!(pad_ratio(256, 256, 8) < 1.01);
+    }
+
+    #[test]
+    fn prop_padding_covers_and_bounded() {
+        check(
+            "padding ≥ c and < c + tile",
+            Config { cases: 256, seed: 21 },
+            |r| (r.range_usize(1, 4096), *r.choose(&[4usize, 8])),
+            |&(c, q)| {
+                let p = padded_channels(c, q);
+                crate::prop_assert!(p >= c, "p {p} < c {c}");
+                crate::prop_assert!(p < c + 4 * q, "p {p} too padded for c {c}");
+                crate::prop_assert!(p % q == 0, "p {p} not multiple of {q}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn one_wave_full_utilization() {
+        let (w, u) = occupancy(1024.0, 1024.0);
+        assert_eq!(w, 1.0);
+        assert!((u - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_boundary_cliff() {
+        // one thread past the boundary halves utilization
+        let (_, u1) = occupancy(1024.0, 1024.0);
+        let (_, u2) = occupancy(1025.0, 1024.0);
+        assert!(u2 < 0.52 && u1 > 0.99);
+    }
+
+    #[test]
+    fn plateau_within_wave() {
+        // within a wave, utilization grows linearly -> time constant
+        let (w1, _) = occupancy(1030.0, 1024.0);
+        let (w2, _) = occupancy(2040.0, 1024.0);
+        assert_eq!(w1, 2.0);
+        assert_eq!(w2, 2.0);
+    }
+
+    #[test]
+    fn prop_utilization_bounded() {
+        check(
+            "occupancy in (0,1]",
+            Config { cases: 256, seed: 5 },
+            |r| (r.range_f64(1.0, 1e8), r.range_f64(32.0, 1e5)),
+            |&(p, s)| {
+                let (w, u) = occupancy(p, s);
+                crate::prop_assert!(u > 0.0 && u <= 1.0 + 1e-12, "u={u}");
+                crate::prop_assert!(w >= 1.0, "w={w}");
+                // waves * slots covers parallelism
+                crate::prop_assert!(w * s >= p - 1e-6, "cover");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn efficiency_monotone_ceiling() {
+        let lo = compute_efficiency(100.0, 1024.0, 0.9);
+        let hi = compute_efficiency(1024.0, 1024.0, 0.9);
+        assert!(hi > lo);
+        assert!(hi <= 0.9 + 1e-12);
+    }
+}

@@ -1,0 +1,205 @@
+//! Lowering: model graph → unfused per-iteration op trace.
+//!
+//! Emission order mirrors a framework's autograd schedule: all forward ops
+//! in layer order, then backward ops in reverse layer order (grad-input
+//! followed by grad-weight per parametric layer), then one update op per
+//! parametric layer.  This sequential, layer-tagged order is what makes
+//! layer-wise energy additivity hold to first order (paper §3.2) — ops of
+//! different layers never overlap in time on the simulated devices.
+
+use crate::model::{flops, LayerKind, LayerSpec, ModelGraph};
+use crate::workload::{Op, OpClass, Phase, Trace};
+
+fn class_of(kind: &LayerKind) -> OpClass {
+    match kind {
+        LayerKind::Conv2d { .. } | LayerKind::Fc | LayerKind::Lstm | LayerKind::Attention { .. } => OpClass::Dense,
+        LayerKind::Embedding => OpClass::Gather,
+        _ => OpClass::Elementwise,
+    }
+}
+
+/// Maximum useful parallelism for a layer's kernels: one thread per output
+/// element for elementwise work; for dense ops, one thread per output
+/// element of the implicit GEMM (rows × cols), independent of the
+/// reduction depth.
+fn parallelism(l: &LayerSpec) -> f64 {
+    match &l.kind {
+        LayerKind::Fc => (l.batch * l.c_out) as f64,
+        LayerKind::Lstm => (l.batch * 4 * l.c_out) as f64, // per-timestep gate GEMM rows
+        LayerKind::Attention { .. } => (l.batch * l.h * l.c_out) as f64,
+        _ => l.out_elems() as f64,
+    }
+}
+
+fn input_elems(l: &LayerSpec) -> f64 {
+    match &l.kind {
+        LayerKind::Fc => (l.batch * l.c_in) as f64,
+        LayerKind::Embedding => (l.batch * l.h) as f64, // token ids
+        LayerKind::Lstm | LayerKind::Attention { .. } => (l.batch * l.h * l.c_in) as f64,
+        _ => (l.batch * l.c_in * l.h * l.w) as f64,
+    }
+}
+
+/// Lower one layer's forward op.
+fn channel_dims(l: &LayerSpec) -> (usize, usize) {
+    // Only dense channel-tiled kernels are padded by the library.
+    if class_of(&l.kind) == OpClass::Dense {
+        (l.c_in, l.c_out)
+    } else {
+        (0, 0)
+    }
+}
+
+fn fwd_op(idx: usize, l: &LayerSpec) -> Op {
+    let (c_in, c_out) = channel_dims(l);
+    Op {
+        layer: idx,
+        class: class_of(&l.kind),
+        phase: Phase::Forward,
+        flops: flops::fwd_flops(l),
+        bytes_in: 4.0 * input_elems(l) + flops::param_bytes(l),
+        bytes_out: flops::activation_bytes(l),
+        working_set: flops::param_bytes(l) + 4.0 * input_elems(l),
+        parallelism: parallelism(l),
+        c_in,
+        c_out,
+        fused: 1,
+    }
+}
+
+/// Backward ops: grad-input (propagates to the previous layer) and, for
+/// parametric layers, grad-weight.
+fn bwd_ops(idx: usize, l: &LayerSpec) -> Vec<Op> {
+    let mut ops = Vec::new();
+    let gin_flops = flops::fwd_flops(l); // dL/dx ≈ same cost as forward
+    let (c_in, c_out) = channel_dims(l);
+    ops.push(Op {
+        layer: idx,
+        class: class_of(&l.kind),
+        phase: Phase::Backward,
+        flops: gin_flops,
+        bytes_in: flops::activation_bytes(l) + flops::param_bytes(l),
+        bytes_out: 4.0 * input_elems(l),
+        working_set: flops::param_bytes(l),
+        parallelism: parallelism(l),
+        c_in,
+        c_out,
+        fused: 1,
+    });
+    if l.kind.is_parametric() {
+        ops.push(Op {
+            layer: idx,
+            class: OpClass::Dense,
+            phase: Phase::Backward,
+            flops: flops::bwd_flops(l) - gin_flops, // grad-weight share
+            bytes_in: flops::activation_bytes(l) + 4.0 * input_elems(l),
+            bytes_out: flops::param_bytes(l),
+            working_set: flops::param_bytes(l),
+            // grad-weight GEMMs have a small output (params) but a large
+            // reduction; libraries recover parallelism with split-k, so
+            // the launch exposes far more threads than `params`.
+            parallelism: (l.params() as f64).max(parallelism(l) / 2.0),
+            c_in,
+            c_out,
+            fused: 1,
+        });
+    }
+    ops
+}
+
+fn update_op(idx: usize, l: &LayerSpec) -> Op {
+    Op {
+        layer: idx,
+        class: OpClass::Update,
+        phase: Phase::Update,
+        flops: flops::update_flops(l),
+        bytes_in: 2.0 * flops::param_bytes(l), // read weight + grad
+        bytes_out: flops::param_bytes(l),
+        working_set: 0.0,
+        parallelism: l.params() as f64,
+        c_in: 0,
+        c_out: 0,
+        fused: 1,
+    }
+}
+
+/// Lower a model to its unfused training-iteration trace.
+pub fn lower(g: &ModelGraph) -> Trace {
+    let mut ops = Vec::new();
+    for (i, l) in g.layers.iter().enumerate() {
+        ops.push(fwd_op(i, l));
+    }
+    for (i, l) in g.layers.iter().enumerate().rev() {
+        ops.extend(bwd_ops(i, l));
+    }
+    for (i, l) in g.layers.iter().enumerate() {
+        // Every layer with parameters gets an update op — including
+        // BatchNorm/LayerNorm, which are grouped as non-parametric for
+        // *parsing* but still own trainable affine parameters.
+        if l.params() > 0 {
+            ops.push(update_op(i, l));
+        }
+    }
+    Trace { ops }
+}
+
+/// Lower only one phase (the NeuralPower-style baseline profiles stages
+/// separately; see `baselines::neuralpower`).
+pub fn lower_phase(g: &ModelGraph, phase: Phase) -> Trace {
+    let full = lower(g);
+    Trace { ops: full.ops.into_iter().filter(|o| o.phase == phase).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn trace_flops_match_flops_module() {
+        let g = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
+        let t = lower(&g);
+        let want = crate::model::flops::model_train_flops(&g);
+        assert!((t.total_flops() - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn backward_emitted_in_reverse_layer_order() {
+        let g = zoo::lenet5(&[6, 16, 120, 84], 10);
+        let t = lower(&g);
+        let bwd_layers: Vec<usize> =
+            t.ops.iter().filter(|o| o.phase == Phase::Backward).map(|o| o.layer).collect();
+        let mut sorted = bwd_layers.clone();
+        sorted.sort_by(|a, b| b.cmp(a));
+        assert_eq!(bwd_layers, sorted);
+    }
+
+    #[test]
+    fn every_layer_with_params_gets_one_update() {
+        let g = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let n_param = g.layers.iter().filter(|l| l.params() > 0).count();
+        let t = lower(&g);
+        let n_upd = t.ops.iter().filter(|o| o.phase == Phase::Update).count();
+        assert_eq!(n_param, n_upd);
+    }
+
+    #[test]
+    fn phases_partition_the_trace() {
+        let g = zoo::har(&[16, 32, 64], 10);
+        let full = lower(&g).ops.len();
+        let parts: usize = [Phase::Forward, Phase::Backward, Phase::Update]
+            .iter()
+            .map(|&p| lower_phase(&g, p).ops.len())
+            .sum();
+        assert_eq!(full, parts);
+    }
+
+    #[test]
+    fn layer_provenance_covers_all_layers() {
+        let g = zoo::cnn5(&[8, 16, 32, 64], 28, 10);
+        let t = lower(&g);
+        for i in 0..g.layers.len() {
+            assert!(t.layer_ops(i).count() >= 1, "layer {i} lost in lowering");
+        }
+    }
+}

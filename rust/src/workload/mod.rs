@@ -1,0 +1,92 @@
+//! Workload compiler: lowers a [`crate::model::ModelGraph`] to the
+//! per-training-iteration op trace a DNN framework would actually execute,
+//! including the runtime optimizations that make proxy-based energy
+//! estimation inaccurate (paper §2.3):
+//!
+//! * forward, backward (grad-input + grad-weight) and optimizer-update op
+//!   emission per layer ([`lower`]);
+//! * Conv-BN-ReLU and elementwise-into-producer fusion, fused optimizer
+//!   update ([`fusion`]);
+//! * kernel-configuration selection — threads-per-kernel as a function of
+//!   problem size, which creates the occupancy plateaus/waves responsible
+//!   for the non-linear energy curves in Figs 5 and 11 ([`kernelcfg`]).
+
+pub mod fusion;
+pub mod kernelcfg;
+pub mod lower;
+
+/// Execution class of an op — determines its parallelism shape and how the
+/// device model schedules it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// MXU/tensor-core style dense compute (conv, matmul, lstm gates).
+    Dense,
+    /// Elementwise / normalization / pooling — memory-bound.
+    Elementwise,
+    /// Gather/scatter (embedding lookup) — latency-bound.
+    Gather,
+    /// Optimizer parameter update — memory-bound over parameters.
+    Update,
+}
+
+/// Training phase an op belongs to (NeuralPower-style baselines profile
+/// these separately; THOR never needs the distinction).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Forward,
+    Backward,
+    Update,
+}
+
+/// One lowered kernel launch.
+#[derive(Clone, Debug)]
+pub struct Op {
+    /// Index of the source layer in the model graph (provenance — used to
+    /// verify layer-wise additivity in tests).
+    pub layer: usize,
+    pub class: OpClass,
+    pub phase: Phase,
+    pub flops: f64,
+    /// Bytes that must come from / go to DRAM if nothing is cached.
+    pub bytes_in: f64,
+    pub bytes_out: f64,
+    /// Resident working set (weights + tiles) the kernel re-touches.
+    pub working_set: f64,
+    /// Maximum useful parallelism (threads) for this problem size.
+    pub parallelism: f64,
+    /// Channel dimensions of the underlying GEMM-shaped kernel, for the
+    /// device's tile-padding rule (0 = not channel-tiled, e.g.
+    /// elementwise).  Kernel libraries pad channels to tile multiples —
+    /// "the kernel configure tends to launch fewer threads for pruned
+    /// models" (paper §2.3) — so narrow/pruned layers waste lanes and
+    /// energy stops being proportional to architectural FLOPs.
+    pub c_in: usize,
+    pub c_out: usize,
+    /// Number of ops fused into this launch (1 = unfused).
+    pub fused: usize,
+}
+
+/// A full training-iteration trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub ops: Vec<Op>,
+}
+
+impl Trace {
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.bytes_in + o.bytes_out).sum()
+    }
+
+    pub fn launches(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Ops restricted to one source layer (additivity checks).
+    pub fn layer_ops(&self, layer: usize) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(move |o| o.layer == layer)
+    }
+}

@@ -1,0 +1,72 @@
+//! Smoke tests for the experiment harness: every generator runs at tiny
+//! scale and emits non-empty, well-formed output with the expected
+//! headline directions (the full-scale numbers live in results/ and
+//! EXPERIMENTS.md; these tests keep the generators from rotting).
+
+use thor::exp::{self, ExpConfig};
+
+fn tiny() -> ExpConfig {
+    ExpConfig::new(true, 7)
+}
+
+#[test]
+fn fig2_shows_overestimation() {
+    let out = exp::fig2::run(&tiny());
+    assert!(out.contains("ratio"));
+    // every data row's ratio column is > 1.0
+    let ratios: Vec<f64> = out
+        .lines()
+        .filter(|l| l.starts_with("| ") && !l.contains("ratio"))
+        .filter_map(|l| l.split('|').nth(4).and_then(|c| c.trim().parse().ok()))
+        .collect();
+    assert!(!ratios.is_empty());
+    assert!(ratios.iter().all(|&r| r > 1.0), "{ratios:?}");
+}
+
+#[test]
+fn fig5_series_nonempty() {
+    let out = exp::fig5::run(&tiny());
+    assert!(out.lines().count() > 5);
+    assert!(out.contains("energy J/iter"));
+}
+
+#[test]
+fn fig6_reports_positive_correlation() {
+    let out = exp::fig6::run(&tiny());
+    let r: f64 = out
+        .lines()
+        .find(|l| l.contains("Pearson"))
+        .and_then(|l| l.split('=').nth(1))
+        .and_then(|s| s.trim().split(' ').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap();
+    assert!(r > 0.5, "time-energy correlation {r}");
+}
+
+#[test]
+fn a16_spread_shrinks_with_iterations() {
+    let out = exp::a16::run(&tiny());
+    let cvs: Vec<f64> = out
+        .lines()
+        .filter(|l| l.starts_with("| ") && l.contains('%'))
+        .filter_map(|l| {
+            l.split('|')
+                .nth(3)
+                .and_then(|c| c.trim().trim_end_matches('%').parse::<f64>().ok())
+        })
+        .collect();
+    assert!(cvs.len() >= 4, "{out}");
+    assert!(
+        cvs.first().unwrap() > cvs.last().unwrap(),
+        "spread should shrink: {cvs:?}"
+    );
+}
+
+#[test]
+fn mape_pair_runs_on_every_device() {
+    for dev in ["xavier", "tx2"] {
+        let (thor_m, flops_m, report) = exp::mape_pair(dev, thor::model::sampler::Family::LeNet5, &tiny());
+        assert!(thor_m.is_finite() && flops_m.is_finite());
+        assert!(report.total_points() > 0);
+    }
+}

@@ -1,0 +1,277 @@
+//! Cross-module property tests: invariants that tie the layer parser,
+//! the workload compiler, the device simulator, the GP library and the
+//! estimator together over randomized inputs (seeded in-repo harness —
+//! `util::proptest`; the proptest crate is unavailable offline).
+
+use thor::model::sampler::{sample, Family};
+use thor::model::{zoo, LayerKind};
+use thor::prop_assert;
+use thor::simdevice::{devices, exec::ideal_energy_per_iter, Device};
+use thor::thor::parse::{parse, Position};
+use thor::thor::profiler;
+use thor::util::json::Json;
+use thor::util::proptest::{check, Config};
+use thor::util::rng::Pcg64;
+use thor::workload::{fusion::fuse, lower::lower, Phase};
+
+fn random_family(r: &mut Pcg64) -> Family {
+    *r.choose(&[
+        Family::LeNet5,
+        Family::Cnn5,
+        Family::Har,
+        Family::Lstm,
+        Family::Transformer,
+        Family::ResNet20,
+    ])
+}
+
+#[test]
+fn prop_parse_positions_well_formed() {
+    // Exactly one input and one output group; hidden strictly between.
+    check(
+        "parse positions",
+        Config { cases: 60, seed: 101 },
+        |r| sample(random_family(r), r, 10),
+        |g| {
+            let p = parse(g);
+            let inputs = p.groups.iter().filter(|x| x.key.position == Position::Input).count();
+            let outputs = p.groups.iter().filter(|x| x.key.position == Position::Output).count();
+            prop_assert!(inputs == 1, "{} inputs", inputs);
+            prop_assert!(outputs == 1, "{} outputs", outputs);
+            prop_assert!(p.groups[0].key.position == Position::Input, "first not input");
+            prop_assert!(p.groups.last().unwrap().key.position == Position::Output, "last not output");
+            // family assignment is a partition
+            prop_assert!(p.assignment.len() == p.groups.len(), "assignment arity");
+            prop_assert!(p.assignment.iter().all(|&i| i < p.families.len()), "dangling family");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parse_groups_cover_all_parametric_layers() {
+    check(
+        "groups cover parametric layers",
+        Config { cases: 40, seed: 103 },
+        |r| sample(random_family(r), r, 10),
+        |g| {
+            let p = parse(g);
+            let parametric = g.layers.iter().filter(|l| l.kind.is_parametric()).count();
+            prop_assert!(p.groups.len() == parametric, "{} groups vs {} parametric", p.groups.len(), parametric);
+            // grouped tails are all non-parametric
+            for grp in &p.groups {
+                prop_assert!(
+                    grp.tail.iter().all(|t| !t.kind.is_parametric()),
+                    "parametric layer in a tail"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fusion_conserves_flops_and_reduces_launches() {
+    check(
+        "fusion conservation",
+        Config { cases: 40, seed: 107 },
+        |r| sample(random_family(r), r, 10),
+        |g| {
+            let t = lower(g);
+            let f = fuse(&t);
+            let rel = (f.total_flops() - t.total_flops()).abs() / t.total_flops();
+            prop_assert!(rel < 1e-9, "flops changed by {rel}");
+            prop_assert!(f.launches() <= t.launches(), "fusion added launches");
+            prop_assert!(f.total_bytes() <= t.total_bytes() + 1.0, "fusion added bytes");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_phases_ordered() {
+    // All forward ops precede all backward ops precede the update.
+    check(
+        "phase ordering",
+        Config { cases: 30, seed: 109 },
+        |r| sample(random_family(r), r, 10),
+        |g| {
+            let t = lower(g);
+            let phase_rank = |p: Phase| match p {
+                Phase::Forward => 0,
+                Phase::Backward => 1,
+                Phase::Update => 2,
+            };
+            let ranks: Vec<u8> = t.ops.iter().map(|o| phase_rank(o.phase)).collect();
+            prop_assert!(ranks.windows(2).all(|w| w[0] <= w[1]), "phases interleaved");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_energy_monotone_in_iterations() {
+    check(
+        "energy grows with iterations",
+        Config { cases: 12, seed: 113 },
+        |r| {
+            let g = sample(Family::Cnn5, r, 10);
+            (g, r.next_u64())
+        },
+        |(g, seed)| {
+            let tr = fuse(&lower(g));
+            let mut d1 = Device::new(devices::tx2(), *seed);
+            let mut d2 = Device::new(devices::tx2(), *seed);
+            let e50 = d1.run(&tr, 50).energy_j;
+            let e200 = d2.run(&tr, 200).energy_j;
+            prop_assert!(e200 > 1.5 * e50, "e200 {e200} vs e50 {e50}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ideal_energy_additive_over_trace_partition() {
+    // Splitting a trace at any point conserves the (state-free) ideal
+    // energy — the simulator-side face of layer-wise additivity.
+    check(
+        "ideal energy additive",
+        Config { cases: 24, seed: 127 },
+        |r| {
+            let g = sample(Family::Cnn5, r, 10);
+            let tr = fuse(&lower(&g));
+            let cut = r.range_usize(1, tr.ops.len().saturating_sub(1).max(1));
+            (tr, cut)
+        },
+        |(tr, cut)| {
+            let p = devices::xavier();
+            let whole = ideal_energy_per_iter(&p, tr);
+            let a = thor::workload::Trace { ops: tr.ops[..*cut].to_vec() };
+            let b = thor::workload::Trace { ops: tr.ops[*cut..].to_vec() };
+            let parts = ideal_energy_per_iter(&p, &a) + ideal_energy_per_iter(&p, &b);
+            prop_assert!(((whole - parts) / whole).abs() < 1e-9, "{whole} vs {parts}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_variant_graphs_simulate_positively_on_all_devices() {
+    check(
+        "variants measurable everywhere",
+        Config { cases: 20, seed: 131 },
+        |r| {
+            let fam = *r.choose(&[Family::Cnn5, Family::LeNet5, Family::Har]);
+            let reference = match fam {
+                Family::Cnn5 => zoo::cnn5(&[32, 64, 128, 256], 28, 10),
+                Family::LeNet5 => zoo::lenet5(&[6, 16, 120, 84], 10),
+                _ => zoo::har(&[32, 64, 128], 10),
+            };
+            (reference, r.range_usize(1, 64), r.range_usize(1, 64), r.next_u64() % 5)
+        },
+        |(reference, a, b, dev_idx)| {
+            let parsed = parse(reference);
+            let inp = parsed.input_groups().next().unwrap();
+            let out = parsed.output_groups().next().unwrap();
+            let hid = parsed.hidden_groups().next().unwrap();
+            let (g, _, _) = profiler::hidden_variant(inp, hid, out, *a, *b);
+            let profile = devices::all()[*dev_idx as usize].clone();
+            let mut dev = Device::new(profile, 1);
+            let (e, t) = profiler::measure(&mut dev, &g, 30);
+            prop_assert!(e > 0.0 && t > 0.0, "e={e} t={t}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_fuzz_never_panics() {
+    // Random byte soup must either parse or return Err — never panic.
+    check(
+        "json fuzz",
+        Config { cases: 500, seed: 137 },
+        |r| {
+            let n = r.range_usize(0, 64);
+            let charset: Vec<char> = r#"{}[]",:0123456789.eE+-truefalsnl \n"#.chars().collect();
+            (0..n).map(|_| *r.choose(&charset)).collect::<String>()
+        },
+        |s| {
+            let _ = Json::parse(s); // Result either way; a panic fails the test
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_estimator_sum_invariance_under_width_scaling() {
+    // Estimates from a synthetic linear store scale monotonically with
+    // uniform width scaling of the model.
+    check(
+        "estimate monotone in width",
+        Config { cases: 16, seed: 139 },
+        |r| (r.range_usize(2, 8), r.range_usize(9, 16)),
+        |&(w_small, w_big)| {
+            let small = zoo::cnn5(&[w_small, 2 * w_small, 4 * w_small, 8 * w_small], 16, 10);
+            let big = zoo::cnn5(&[w_big, 2 * w_big, 4 * w_big, 8 * w_big], 16, 10);
+            let p = devices::xavier();
+            let e_s = ideal_energy_per_iter(&p, &fuse(&lower(&small)));
+            let e_b = ideal_energy_per_iter(&p, &fuse(&lower(&big)));
+            prop_assert!(e_b > e_s, "{e_b} vs {e_s}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_devices_produce_distinct_energy_profiles() {
+    // Heterogeneity: the same model must cost measurably different
+    // energy across device types (the reason per-device GPs exist).
+    check(
+        "device heterogeneity",
+        Config { cases: 10, seed: 149 },
+        |r| sample(Family::Cnn5, r, 10),
+        |g| {
+            let tr = fuse(&lower(g));
+            let energies: Vec<f64> = devices::all()
+                .into_iter()
+                .map(|p| ideal_energy_per_iter(&p, &tr))
+                .collect();
+            // Pairs of devices may legitimately cross for a particular
+            // model; heterogeneity means the fleet-wide spread is large.
+            let max = energies.iter().cloned().fold(0.0f64, f64::max);
+            let min = energies.iter().cloned().fold(f64::INFINITY, f64::min);
+            prop_assert!(max / min > 1.3, "fleet energy spread too small: {energies:?}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_conv_kind_hash_eq_consistent() {
+    // FamilyKey dedup relies on LayerKind Eq/Hash agreement.
+    check(
+        "layerkind eq-hash",
+        Config { cases: 100, seed: 151 },
+        |r| {
+            let mk = |r: &mut Pcg64| LayerKind::Conv2d {
+                kernel: r.range_usize(1, 7),
+                stride: r.range_usize(1, 2),
+                padded: r.bool(0.5),
+            };
+            (mk(r), mk(r))
+        },
+        |(a, b)| {
+            use std::collections::hash_map::DefaultHasher;
+            use std::hash::{Hash, Hasher};
+            let h = |k: &LayerKind| {
+                let mut s = DefaultHasher::new();
+                k.hash(&mut s);
+                s.finish()
+            };
+            if a == b {
+                prop_assert!(h(a) == h(b), "eq but hash differs");
+            }
+            Ok(())
+        },
+    );
+}
