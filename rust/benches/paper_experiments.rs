@@ -1,61 +1,51 @@
 //! `cargo bench --bench paper_experiments` regenerates every table and
-//! figure of the paper's evaluation (DESIGN.md §6 maps each to its
-//! module).  Honors:
-//!   THOR_BENCH_QUICK=1   — reduced sample counts (default here: quick,
-//!                          since `cargo bench` runs everything serially
-//!                          on one core; set =0 for full paper scale)
-//!   THOR_BENCH_ONLY=fig8 — run a single experiment
+//! figure of the paper's evaluation through the experiment registry
+//! (`thor::exp::registry`), fanned across threads by the deterministic
+//! runner.  Honors:
+//!   THOR_BENCH_QUICK=1    — reduced sample counts (default here: quick;
+//!                           set =0 for full paper scale)
+//!   THOR_BENCH_ONLY=fig8  — run a single experiment (`tab1` → fig8)
+//!   THOR_BENCH_SEED=2025  — suite seed
+//!   THOR_BENCH_THREADS=4  — worker threads (default: all cores, min 2)
 
-use thor::exp::{self, ExpConfig};
+use thor::exp::{registry, Experiment as _, Runner};
 
 fn main() {
     let quick = std::env::var("THOR_BENCH_QUICK").map(|v| v != "0").unwrap_or(true);
     let only = std::env::var("THOR_BENCH_ONLY").ok();
-    let cfg = ExpConfig::new(quick, 2025);
-    let run = |name: &str| only.as_deref().map_or(true, |o| o == name);
+    let seed = std::env::var("THOR_BENCH_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(2025);
+    let threads: usize =
+        std::env::var("THOR_BENCH_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(0);
 
-    println!("# THOR paper experiments (quick={quick})\n");
+    let exps: Vec<_> = registry::registry()
+        .into_iter()
+        .filter(|e| match only.as_deref() {
+            None => true,
+            Some("tab1") => e.id() == "fig8",
+            Some(o) => e.id() == o,
+        })
+        .collect();
+    if exps.is_empty() {
+        eprintln!(
+            "THOR_BENCH_ONLY={:?} matches no experiment; registry: {:?}",
+            only,
+            registry::ids()
+        );
+        std::process::exit(2);
+    }
 
-    if run("fig2") {
-        println!("## Fig 2 — NeuralPower-style per-stage estimation overestimates\n{}", exp::fig2::run(&cfg));
-    }
-    if run("fig4") {
-        println!("## Fig 4 — GP + max-variance acquisition steps\n{}", exp::fig4::run(&cfg));
-    }
-    if run("fig5") {
-        println!("## Fig 5 — FC energy vs channel (non-linear)\n{}", exp::fig5::run(&cfg));
-    }
-    if run("fig6") {
-        println!("## Fig 6 — time ↔ energy correlation\n{}", exp::fig6::run(&cfg));
-    }
-    if run("fig7") {
-        println!("## Fig 7 — estimated vs actual (FLOPs vs THOR)\n{}", exp::fig7::run(&cfg));
-    }
-    if run("fig8") || run("tab1") {
-        let (f8, t1) = exp::fig8::run(&cfg);
-        println!("## Fig 8 — end-to-end MAPE across devices\n{f8}");
-        println!("## Table 1 — profiling + fitting time cost (s)\n{t1}");
-    }
-    if run("fig9") {
-        println!("## Fig 9 — Transformer estimation\n{}", exp::fig9::run(&cfg));
-    }
-    if run("fig10") {
-        println!("## Fig 10 — ResNet error CDF\n{}", exp::fig10::run(&cfg));
-    }
-    if run("fig11") {
-        println!("## Fig 11 — conv2d energy surfaces\n{}", exp::fig11::run(&cfg));
-    }
-    if run("fig12") {
-        println!("## Fig 12 — estimation − observation\n{}", exp::fig12::run(&cfg));
-    }
-    if run("a14") {
-        println!("## Fig A14 — profiled points vs MAPE\n{}", exp::a14::run(&cfg));
-    }
-    if run("a15") {
-        println!("## Fig A15 — GP kernel ablation\n{}", exp::a15::run(&cfg));
-    }
-    if run("a16") {
-        println!("## Fig A16 — energy vs profiling iterations\n{}", exp::a16::run(&cfg));
-    }
+    let runner = Runner::from_arg(threads, exps.len());
+    let n = exps.len();
+    let suite = runner.run(exps, quick, seed);
+
+    println!(
+        "# THOR paper experiments (quick={quick}, seed={seed}, {} threads)\n",
+        suite.threads_used
+    );
+    print!("{}", suite.render());
     println!("# (Fig 13 — pruning case study — runs as examples/energy_aware_pruning)");
+    eprintln!("ran {n} experiment(s) in {:.1}s", suite.wall_seconds);
+    if suite.eprint_failures() > 0 {
+        std::process::exit(1);
+    }
 }

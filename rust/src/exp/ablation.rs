@@ -1,0 +1,146 @@
+//! Ablations: a14 (profiling-point budget vs MAPE, energy vs time
+//! acquisition), a15 (GP kernel / sampling ablation), a16 (measurement
+//! stability vs profiling-iteration count).
+
+use crate::exp::registry::Experiment;
+use crate::exp::report::ExpReport;
+use crate::exp::{measured_energy, reference_model, ExpConfig};
+use crate::gp::KernelKind;
+use crate::model::sampler::{sample_n, Family};
+use crate::model::zoo;
+use crate::simdevice::{devices, Device};
+use crate::thor::{Thor, ThorConfig};
+use crate::util::stats::{mape, mean, std_dev};
+use crate::workload::{fusion::fuse, lower::lower};
+
+/// #profiled points vs MAPE (energy acquisition vs time surrogate).
+pub struct A14;
+
+impl Experiment for A14 {
+    fn id(&self) -> &'static str {
+        "a14"
+    }
+
+    fn description(&self) -> &'static str {
+        "profiled-point budget vs MAPE, energy vs time acquisition (OPPO + Xavier)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "profiled points vs MAPE", cfg, &["oppo", "xavier"]);
+        for dev_name in ["oppo", "xavier"] {
+            let mut rows = Vec::new();
+            for budget in [6usize, 10, 16, 24] {
+                for surrogate in [false, true] {
+                    let profile = devices::by_name(dev_name).unwrap();
+                    let mut dev = Device::new(profile, cfg.seed);
+                    let tcfg = ThorConfig {
+                        max_points_1d: budget,
+                        max_points_2d: budget * 2,
+                        threshold_frac: 0.0, // force budget use
+                        time_surrogate: surrogate,
+                        ..cfg.thor_cfg()
+                    };
+                    let mut thor = Thor::new(tcfg);
+                    thor.profile(&mut dev, &reference_model(Family::Cnn5));
+                    let test = sample_n(Family::Cnn5, cfg.n_test().min(20), cfg.seed + 1, 10);
+                    let (mut actual, mut est) = (vec![], vec![]);
+                    for g in &test {
+                        actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
+                        est.push(thor.estimate(dev_name, g).unwrap().energy_per_iter);
+                    }
+                    rows.push(vec![
+                        format!("{budget}"),
+                        if surrogate { "time" } else { "energy" }.into(),
+                        format!("{:.1}", mape(&actual, &est)),
+                    ]);
+                }
+            }
+            rep.push_table(
+                &format!("points-budget sweep ({dev_name})"),
+                &["1D budget", "acquisition", "MAPE %"],
+                rows,
+            );
+        }
+        rep
+    }
+}
+
+/// GP kernel ablation: Matérn vs RBF vs DotProduct vs random-Matérn.
+pub struct A15;
+
+impl Experiment for A15 {
+    fn id(&self) -> &'static str {
+        "a15"
+    }
+
+    fn description(&self) -> &'static str {
+        "GP kernel / sampling ablation on Xavier (Matern, RBF, DotProduct, random)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(self.id(), "GP kernel ablation", cfg, &["xavier"]);
+        let mut rows = Vec::new();
+        for (label, kind, random) in [
+            ("Matern52 (guided)", KernelKind::Matern52, false),
+            ("RBF (guided)", KernelKind::Rbf, false),
+            ("DotProduct (guided)", KernelKind::DotProduct, false),
+            ("Matern52 (random)", KernelKind::Matern52, true),
+        ] {
+            let profile = devices::by_name("xavier").unwrap();
+            let mut dev = Device::new(profile, cfg.seed);
+            let tcfg = ThorConfig { kind, random_sampling: random, ..cfg.thor_cfg() };
+            let mut thor = Thor::new(tcfg);
+            thor.profile(&mut dev, &reference_model(Family::Cnn5));
+            let test = sample_n(Family::Cnn5, cfg.n_test().min(25), cfg.seed + 1, 10);
+            let (mut actual, mut est) = (vec![], vec![]);
+            for g in &test {
+                actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
+                est.push(thor.estimate("xavier", g).unwrap().energy_per_iter);
+            }
+            rows.push(vec![label.to_string(), format!("{:.1}", mape(&actual, &est))]);
+        }
+        rep.push_table("", &["kernel / sampling", "MAPE %"], rows);
+        rep
+    }
+}
+
+/// Energy normalized to 1000 iterations vs profiling-iteration count
+/// (few samples ⇒ unstable).
+pub struct A16;
+
+impl Experiment for A16 {
+    fn id(&self) -> &'static str {
+        "a16"
+    }
+
+    fn description(&self) -> &'static str {
+        "measurement spread vs profiling-iteration count (Xavier)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "energy vs profiling iterations", cfg, &["xavier"]);
+        let mut dev = Device::new(devices::xavier(), cfg.seed);
+        let g = zoo::lenet5(&[6, 16, 120, 84], 10);
+        let tr = fuse(&lower(&g));
+        let reps = if cfg.quick { 5 } else { 15 };
+        let mut rows = Vec::new();
+        for iters in [10usize, 50, 100, 200, 500, 1000] {
+            let vals: Vec<f64> = (0..reps)
+                .map(|_| dev.run(&tr, iters).energy_per_iter() * 1000.0)
+                .collect();
+            rows.push(vec![
+                format!("{iters}"),
+                format!("{:.3}", mean(&vals)),
+                format!("{:.1}%", 100.0 * std_dev(&vals) / mean(&vals)),
+            ]);
+        }
+        rep.push_table(
+            "",
+            &["profiling iterations", "energy per 1000 iters (J)", "spread (CV)"],
+            rows,
+        );
+        rep
+    }
+}

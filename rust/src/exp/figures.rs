@@ -1,0 +1,267 @@
+//! Series-shaped experiments: fig4 (GP acquisition steps), fig5 (FC
+//! energy vs channel), fig6 (time↔energy correlation), fig10 (ResNet
+//! error CDF), fig11 (conv2d energy surface).
+
+use crate::exp::registry::Experiment;
+use crate::exp::report::ExpReport;
+use crate::exp::{fit_flops_lr, measured_energy, reference_model, ExpConfig};
+use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
+use crate::gp::{GpModel, KernelKind};
+use crate::model::flops::model_train_flops;
+use crate::model::sampler::{sample_n, Family};
+use crate::model::zoo;
+use crate::simdevice::{devices, Device};
+use crate::thor::pipeline::log_channel;
+use crate::thor::{profiler, Thor};
+use crate::util::stats::{cdf, pearson};
+use crate::workload::{fusion::fuse, lower::lower};
+
+/// GP + acquisition after k and k+1 steps (FC output family on OPPO).
+pub struct Fig4;
+
+impl Experiment for Fig4 {
+    fn id(&self) -> &'static str {
+        "fig4"
+    }
+
+    fn description(&self) -> &'static str {
+        "GP posterior + max-variance acquisition steps (FC output family, OPPO)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "GP + max-variance acquisition steps", cfg, &["oppo"]);
+        let mut dev = Device::new(devices::oppo(), cfg.seed);
+        let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
+        let parsed = crate::thor::parse::parse(&reference);
+        let out = parsed.output_groups().next().unwrap();
+        let c_max = 512.0;
+        let mut pts: Vec<(Vec<f64>, f64)> = Vec::new();
+        for step in 0..6 {
+            let p = if step == 0 {
+                vec![0.0]
+            } else if step == 1 {
+                vec![1.0]
+            } else {
+                let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
+                let ys: Vec<f64> = pts.iter().map(|p| p.1.ln()).collect();
+                let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+                match max_variance(&gp, &CandidateGrid::dim1(0.0, 1.0, 33), 0.0, 1.0) {
+                    Acquire::Next(p, _) => p,
+                    Acquire::Converged(_) => break,
+                }
+            };
+            let c = log_channel(p[0], c_max);
+            let (e, _) = profiler::measure(&mut dev, &profiler::output_variant(out, c), cfg.iterations());
+            pts.push((p, e));
+            if step >= 4 {
+                // dump posterior after this step
+                let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
+                let ys: Vec<f64> = pts.iter().map(|p| p.1.ln()).collect();
+                let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+                let mean_series: Vec<(f64, f64)> = (0..=32)
+                    .map(|i| {
+                        let x = i as f64 / 32.0;
+                        let (m, _) = gp.predict(&[x]);
+                        (log_channel(x, c_max) as f64, m.exp())
+                    })
+                    .collect();
+                let var_series: Vec<(f64, f64)> = (0..=32)
+                    .map(|i| {
+                        let x = i as f64 / 32.0;
+                        let (_, v) = gp.predict(&[x]);
+                        (log_channel(x, c_max) as f64, v.sqrt())
+                    })
+                    .collect();
+                rep.push_series(
+                    &format!("GP posterior after {} steps (FC output family, OPPO)", pts.len()),
+                    "channel",
+                    vec![
+                        ("mean J/iter".to_string(), mean_series),
+                        ("posterior std (log)".to_string(), var_series),
+                    ],
+                );
+            }
+        }
+        rep
+    }
+}
+
+/// FC-layer energy vs input channel on Xavier: non-linear staircase.
+pub struct Fig5;
+
+impl Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
+    }
+
+    fn description(&self) -> &'static str {
+        "FC-layer energy vs input channel is non-linear in FLOPs (Xavier)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(self.id(), "FC energy vs channel (non-linear)", cfg, &["xavier"]);
+        let mut dev = Device::new(devices::xavier(), cfg.seed);
+        let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
+        let parsed = crate::thor::parse::parse(&reference);
+        let out = parsed.output_groups().next().unwrap();
+        let step = if cfg.quick { 64 } else { 16 };
+        let series: Vec<(f64, f64)> = (1..=512usize)
+            .step_by(step)
+            .map(|c| {
+                let (e, _) =
+                    profiler::measure(&mut dev, &profiler::output_variant(out, c), cfg.iterations());
+                (c as f64, e)
+            })
+            .collect();
+        let flops_line: Vec<(f64, f64)> = series
+            .iter()
+            .map(|(c, _)| {
+                let g = profiler::output_variant(out, *c as usize);
+                (*c, model_train_flops(&g))
+            })
+            .collect();
+        rep.push_series(
+            "FC layer energy vs input channel (Xavier) — energy is NOT linear in FLOPs",
+            "channel",
+            vec![("energy J/iter".to_string(), series), ("train FLOPs".to_string(), flops_line)],
+        );
+        rep
+    }
+}
+
+/// Time ↔ energy correlation across random 5-layer CNNs (justifies the
+/// time-uncertainty surrogate).
+pub struct Fig6;
+
+impl Experiment for Fig6 {
+    fn id(&self) -> &'static str {
+        "fig6"
+    }
+
+    fn description(&self) -> &'static str {
+        "time vs energy correlation across random CNNs (OPPO)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(self.id(), "time ↔ energy correlation", cfg, &["oppo"]);
+        let mut dev = Device::new(devices::oppo(), cfg.seed);
+        let n = if cfg.quick { 10 } else { 40 };
+        let models = sample_n(Family::Cnn5, n, cfg.seed + 5, 10);
+        let mut ts = Vec::new();
+        let mut es = Vec::new();
+        for g in &models {
+            let m = dev.run(&fuse(&lower(g)), cfg.iterations());
+            ts.push(m.time_per_iter());
+            es.push(m.energy_per_iter());
+        }
+        let r = pearson(&ts, &es);
+        let pts: Vec<(f64, f64)> = ts.iter().zip(&es).map(|(t, e)| (*t, *e)).collect();
+        rep.push_series(
+            "time vs energy per iteration (5-layer CNN, OPPO)",
+            "time s/iter",
+            vec![("energy J/iter".to_string(), pts)],
+        );
+        rep.metric("pearson_r", r);
+        rep.note(format!(
+            "Pearson r(time, energy) = {r:.4} (paper: 'obvious positive relationship')"
+        ));
+        rep
+    }
+}
+
+/// ResNet relative-error CDF on Xavier + Server.
+pub struct Fig10;
+
+impl Experiment for Fig10 {
+    fn id(&self) -> &'static str {
+        "fig10"
+    }
+
+    fn description(&self) -> &'static str {
+        "ResNet relative-error CDF, THOR vs FLOPs-LR (Xavier + server)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "ResNet relative-error CDF", cfg, &["xavier", "server"]);
+        let fams = if cfg.quick {
+            vec![Family::ResNet20]
+        } else {
+            vec![Family::ResNet20, Family::ResNet56, Family::ResNet110]
+        };
+        for dev_name in ["xavier", "server"] {
+            let profile = devices::by_name(dev_name).unwrap();
+            let mut dev = Device::new(profile, cfg.seed);
+            let lr = fit_flops_lr(&mut dev, cfg);
+            let mut thor = Thor::new(cfg.thor_cfg());
+            let mut errs_thor = Vec::new();
+            let mut errs_lr = Vec::new();
+            for fam in &fams {
+                thor.profile(&mut dev, &reference_model(*fam));
+                for g in sample_n(*fam, cfg.n_test() / 3 + 2, cfg.seed + 2, 10) {
+                    let act = measured_energy(&mut dev, &g, cfg.iterations(), 1);
+                    let e_t = thor.estimate(dev_name, &g).unwrap().energy_per_iter;
+                    errs_thor.push(((act - e_t) / act).abs());
+                    errs_lr.push(((act - lr.predict(&g)) / act).abs());
+                }
+            }
+            let grid: Vec<f64> = (0..=20).map(|i| i as f64 * 0.05).collect();
+            let c_t = cdf(&errs_thor, &grid);
+            let c_l = cdf(&errs_lr, &grid);
+            let s_t: Vec<(f64, f64)> = grid.iter().zip(&c_t).map(|(g, c)| (*g, *c)).collect();
+            let s_l: Vec<(f64, f64)> = grid.iter().zip(&c_l).map(|(g, c)| (*g, *c)).collect();
+            rep.push_series(
+                &format!("ResNet relative-error CDF ({dev_name})"),
+                "rel err",
+                vec![("THOR".to_string(), s_t), ("FLOPs-LR".to_string(), s_l)],
+            );
+        }
+        rep
+    }
+}
+
+/// Conv2d energy surface vs (C_in, C_out) at several spatial sizes
+/// (profiled points + GP surface values on a grid).
+pub struct Fig11;
+
+impl Experiment for Fig11 {
+    fn id(&self) -> &'static str {
+        "fig11"
+    }
+
+    fn description(&self) -> &'static str {
+        "conv2d variant energy surface vs (C_in, C_out) (Xavier + server)"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "conv2d energy surfaces", cfg, &["xavier", "server"]);
+        for dev_name in ["xavier", "server"] {
+            let profile = devices::by_name(dev_name).unwrap();
+            let mut dev = Device::new(profile, cfg.seed);
+            let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
+            let parsed = crate::thor::parse::parse(&reference);
+            let hid = parsed.hidden_groups().next().unwrap(); // 14x14 conv
+            let inp = parsed.input_groups().next().unwrap();
+            let outg = parsed.output_groups().next().unwrap();
+            let n = if cfg.quick { 4 } else { 8 };
+            let mut rows = Vec::new();
+            for i in 0..n {
+                for j in 0..n {
+                    let a = 1 + i * 32 / n.max(1);
+                    let b = 1 + j * 64 / n.max(1);
+                    let (g, _, _) = profiler::hidden_variant(inp, hid, outg, a, b);
+                    let (e, _) = profiler::measure(&mut dev, &g, cfg.iterations().min(200));
+                    rows.push(vec![format!("{a}"), format!("{b}"), format!("{e:.4e}")]);
+                }
+            }
+            rep.push_table(
+                &format!("conv2d 3x3 @14x14 variant energy surface ({dev_name})"),
+                &["C_in", "C_out", "variant J/iter"],
+                rows,
+            );
+        }
+        rep
+    }
+}

@@ -1,19 +1,78 @@
-//! Experiment harness: one module-level function per paper table/figure
-//! (see DESIGN.md §6 for the index).  Each returns printable rows /
-//! series in the same shape the paper reports, and is invoked both by
-//! `cargo bench` (rust/benches/paper_experiments.rs) and by the
-//! `thor exp <id>` CLI.
+//! Experiment registry: every paper table/figure is a registered
+//! [`registry::Experiment`] producing a structured, JSON-serializable
+//! [`report::ExpReport`], executed (possibly many at a time) by the
+//! multi-threaded [`runner::Runner`].
+//!
+//! # Layout
+//!
+//! | module       | contents                                              |
+//! |--------------|-------------------------------------------------------|
+//! | [`report`]   | `ExpReport` (tables, series, metrics, notes) + JSON   |
+//! | [`registry`] | the `Experiment` trait and the id → experiment table  |
+//! | [`runner`]   | work-stealing thread pool + suite JSON/render         |
+//! | [`tables`]   | fig2, fig7, fig8 (+ Table 1), fig9, fig12             |
+//! | [`figures`]  | fig4, fig5, fig6, fig10, fig11                        |
+//! | [`ablation`] | a14 (point budget), a15 (kernels), a16 (iterations)   |
+//!
+//! Experiment ids: `fig2 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
+//! a14 a15 a16` (`tab1` aliases `fig8`; fig13 is the pruning case study
+//! in `examples/energy_aware_pruning.rs`).
+//!
+//! # Entry points
+//!
+//! * CLI: `thor exp <id> | --all [--quick] [--seed N] [--threads N]
+//!   [--json out.json] [--list]`
+//! * bench: `cargo bench --bench paper_experiments`
+//! * tests: `rust/tests/exp_smoke.rs` (directions), `rust/tests/
+//!   golden_runs.rs` (full-suite regression + determinism)
+//!
+//! # Determinism & the `--json` schema
+//!
+//! Each experiment runs with a seed derived from the suite seed and its
+//! id ([`ExpConfig::for_experiment`]), so results are independent of
+//! thread scheduling: `thor exp --all --quick --json out.json` is
+//! byte-identical run-to-run for a fixed `--seed`.  Wall-clock values
+//! never enter reports (simulated device-seconds do).  Schema (version
+//! 1):
+//!
+//! ```text
+//! { "schema_version": 1, "base_seed": "<u64>", "quick": bool,
+//!   "experiments": [ { "id", "title",
+//!       "meta": { "base_seed", "seed", "quick", "devices": [..] },
+//!       "tables": [ { "title", "headers": [..], "rows": [[..cell..]] } ],
+//!       "series": [ { "title", "xlabel",
+//!                     "series": [ { "name", "points": [[x, y], ..] } ] } ],
+//!       "metrics": [ { "name", "value" } ],
+//!       "notes": [..], "error": null | "<panic message>" } ] }
+//! ```
+//!
+//! # Golden-run workflow
+//!
+//! `rust/tests/golden_runs.rs` runs every registered experiment in quick
+//! mode at a fixed seed and diffs each report's JSON against
+//! `rust/tests/golden/<id>.json`.  Missing goldens are written ("blessed")
+//! on first run; after an intentional change to experiment output, regen
+//! with `UPDATE_GOLDENS=1 cargo test --test golden_runs` and commit the
+//! diff.
+
+pub mod ablation;
+pub mod figures;
+pub mod registry;
+pub mod report;
+pub mod runner;
+pub mod tables;
+
+pub use registry::{by_id, ids, Experiment};
+pub use report::ExpReport;
+pub use runner::{Runner, SuiteResult};
 
 use crate::baselines::flops_lr::FlopsLr;
-use crate::baselines::neuralpower;
 use crate::model::flops::model_train_flops;
-use crate::model::sampler::{sample, sample_n, Family};
+use crate::model::sampler::{sample_n, Family};
 use crate::model::zoo;
 use crate::simdevice::{devices, Device};
 use crate::thor::{Thor, ThorConfig};
-use crate::util::rng::Pcg64;
-use crate::util::stats::{cdf, mape, mean, pearson, std_err};
-use crate::util::table;
+use crate::util::stats::{mape, mean};
 use crate::workload::{fusion::fuse, lower::lower};
 
 /// Global experiment scale: `quick` shrinks sample counts ~10× so the
@@ -27,6 +86,28 @@ pub struct ExpConfig {
 impl ExpConfig {
     pub fn new(quick: bool, seed: u64) -> Self {
         Self { quick, seed }
+    }
+
+    /// The config an experiment runs with inside a suite: quick flag +
+    /// per-experiment seed derived from the suite seed and the id.
+    pub fn for_experiment(base_seed: u64, quick: bool, id: &str) -> Self {
+        Self { quick, seed: Self::derive_seed(base_seed, id) }
+    }
+
+    /// FNV-1a over (base seed ‖ experiment id): stable across platforms
+    /// and releases (unlike `DefaultHasher`), so golden files and suite
+    /// JSON never shift underneath a refactor.
+    pub fn derive_seed(base_seed: u64, id: &str) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        for b in base_seed.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+        for b in id.as_bytes() {
+            h = (h ^ *b as u64).wrapping_mul(PRIME);
+        }
+        h
     }
 
     pub fn n_test(&self) -> usize {
@@ -113,446 +194,22 @@ pub fn mape_pair(
     (mape(&actual, &p_th), mape(&actual, &p_lr), report)
 }
 
-pub mod fig2 {
+#[cfg(test)]
+mod tests {
     use super::*;
 
-    /// NeuralPower-style per-stage estimation vs observation, CNN depth
-    /// sweep (the overestimation validation).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut dev = Device::new(devices::xavier(), cfg.seed);
-        let mut rows = Vec::new();
-        for depth in 1..=4usize {
-            // input conv + (depth-1) hidden convs + fc
-            let ch: Vec<usize> = (0..depth).map(|i| 16 << i.min(3)).collect();
-            let mut padded = [16usize, 32, 64, 128];
-            for (i, c) in ch.iter().enumerate() {
-                padded[i] = *c;
-            }
-            let g = match depth {
-                1 => zoo::cnn5(&[padded[0], 1, 1, 1], 28, 10),
-                2 => zoo::cnn5(&[padded[0], padded[1], 1, 1], 28, 10),
-                3 => zoo::cnn5(&[padded[0], padded[1], padded[2], 1], 28, 10),
-                _ => zoo::cnn5(&padded, 28, 10),
-            };
-            let observed = measured_energy(&mut dev, &g, cfg.iterations(), cfg.repeats());
-            let np_est = neuralpower::estimate(&mut dev, &g, cfg.iterations().min(100));
-            rows.push(vec![
-                format!("{depth}"),
-                format!("{observed:.4e}"),
-                format!("{np_est:.4e}"),
-                format!("{:.2}", np_est / observed),
-            ]);
-        }
-        table::render(&["#conv layers", "observed J/iter", "NeuralPower-style est", "ratio"], &rows)
+    #[test]
+    fn derive_seed_is_stable_and_id_sensitive() {
+        // Pinned: golden files depend on this mapping never changing.
+        assert_eq!(ExpConfig::derive_seed(2025, "fig8"), ExpConfig::derive_seed(2025, "fig8"));
+        assert_ne!(ExpConfig::derive_seed(2025, "fig8"), ExpConfig::derive_seed(2025, "fig9"));
+        assert_ne!(ExpConfig::derive_seed(2025, "fig8"), ExpConfig::derive_seed(2026, "fig8"));
     }
-}
 
-pub mod fig4 {
-    use super::*;
-    use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
-    use crate::gp::{GpModel, KernelKind};
-    use crate::thor::pipeline::log_channel;
-    use crate::thor::profiler;
-
-    /// GP + acquisition after k and k+1 steps (FC output family on OPPO).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut dev = Device::new(devices::oppo(), cfg.seed);
-        let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
-        let parsed = crate::thor::parse::parse(&reference);
-        let out = parsed.output_groups().next().unwrap();
-        let c_max = 512.0;
-        let mut pts: Vec<(Vec<f64>, f64)> = Vec::new();
-        let mut out_s = String::new();
-        for step in 0..6 {
-            let p = if step == 0 {
-                vec![0.0]
-            } else if step == 1 {
-                vec![1.0]
-            } else {
-                let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
-                let ys: Vec<f64> = pts.iter().map(|p| p.1.ln()).collect();
-                let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
-                match max_variance(&gp, &CandidateGrid::dim1(0.0, 1.0, 33), 0.0, 1.0) {
-                    Acquire::Next(p, _) => p,
-                    Acquire::Converged(_) => break,
-                }
-            };
-            let c = log_channel(p[0], c_max);
-            let (e, _) = profiler::measure(&mut dev, &profiler::output_variant(out, c), cfg.iterations());
-            pts.push((p, e));
-            if step >= 4 {
-                // dump posterior after this step
-                let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
-                let ys: Vec<f64> = pts.iter().map(|p| p.1.ln()).collect();
-                let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
-                let series: Vec<(f64, f64)> = (0..=32)
-                    .map(|i| {
-                        let x = i as f64 / 32.0;
-                        let (m, _) = gp.predict(&[x]);
-                        (log_channel(x, c_max) as f64, m.exp())
-                    })
-                    .collect();
-                let var_series: Vec<(f64, f64)> = (0..=32)
-                    .map(|i| {
-                        let x = i as f64 / 32.0;
-                        let (_, v) = gp.predict(&[x]);
-                        (log_channel(x, c_max) as f64, v.sqrt())
-                    })
-                    .collect();
-                out_s.push_str(&table::render_series(
-                    &format!("GP posterior after {} steps (FC output family, OPPO)", pts.len()),
-                    "channel",
-                    &[("mean J/iter", &series), ("posterior std (log)", &var_series)],
-                ));
-            }
-        }
-        out_s
-    }
-}
-
-pub mod fig5 {
-    use super::*;
-
-    /// FC-layer energy vs input channel on Xavier: non-linear staircase.
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut dev = Device::new(devices::xavier(), cfg.seed);
-        let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
-        let parsed = crate::thor::parse::parse(&reference);
-        let out = parsed.output_groups().next().unwrap();
-        let step = if cfg.quick { 64 } else { 16 };
-        let series: Vec<(f64, f64)> = (1..=512usize)
-            .step_by(step)
-            .map(|c| {
-                let (e, _) = crate::thor::profiler::measure(
-                    &mut dev,
-                    &crate::thor::profiler::output_variant(out, c),
-                    cfg.iterations(),
-                );
-                (c as f64, e)
-            })
-            .collect();
-        let flops_line: Vec<(f64, f64)> = series
-            .iter()
-            .map(|(c, _)| {
-                let g = crate::thor::profiler::output_variant(out, *c as usize);
-                (*c, model_train_flops(&g))
-            })
-            .collect();
-        table::render_series(
-            "FC layer energy vs input channel (Xavier) — energy is NOT linear in FLOPs",
-            "channel",
-            &[("energy J/iter", &series), ("train FLOPs", &flops_line)],
-        )
-    }
-}
-
-pub mod fig6 {
-    use super::*;
-
-    /// Time ↔ energy correlation across random 5-layer CNNs (justifies
-    /// the time-uncertainty surrogate).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut dev = Device::new(devices::oppo(), cfg.seed);
-        let n = if cfg.quick { 10 } else { 40 };
-        let models = sample_n(Family::Cnn5, n, cfg.seed + 5, 10);
-        let mut ts = Vec::new();
-        let mut es = Vec::new();
-        for g in &models {
-            let m = dev.run(&fuse(&lower(g)), cfg.iterations());
-            ts.push(m.time_per_iter());
-            es.push(m.energy_per_iter());
-        }
-        let r = pearson(&ts, &es);
-        let pts: Vec<(f64, f64)> = ts.iter().zip(&es).map(|(t, e)| (*t, *e)).collect();
-        format!(
-            "{}\nPearson r(time, energy) = {r:.4} (paper: 'obvious positive relationship')\n",
-            table::render_series("time vs energy per iteration (5-layer CNN, OPPO)", "time s/iter", &[("energy J/iter", &pts)])
-        )
-    }
-}
-
-pub mod fig7 {
-    use super::*;
-
-    /// Estimated-vs-actual scatter (FLOPs vs THOR) for random CNNs on
-    /// Xavier.
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut dev = Device::new(devices::xavier(), cfg.seed);
-        let lr = fit_flops_lr(&mut dev, cfg);
-        let mut thor = Thor::new(cfg.thor_cfg());
-        thor.profile(&mut dev, &reference_model(Family::Cnn5));
-        let test = sample_n(Family::Cnn5, cfg.n_test(), cfg.seed + 1, 10);
-        let mut rows = Vec::new();
-        for g in &test {
-            let act = measured_energy(&mut dev, g, cfg.iterations(), cfg.repeats());
-            rows.push(vec![
-                format!("{act:.4e}"),
-                format!("{:.4e}", lr.predict(g)),
-                format!("{:.4e}", thor.estimate("xavier", g).unwrap().energy_per_iter),
-            ]);
-        }
-        table::render(&["actual J/iter", "FLOPs-LR est", "THOR est"], &rows)
-    }
-}
-
-pub mod fig8 {
-    use super::*;
-
-    /// End-to-end MAPE: 5 devices × 4 families, THOR vs FLOPs-LR, with
-    /// std error over repeats.  Also feeds Table 1.
-    pub fn run(cfg: &ExpConfig) -> (String, String) {
-        let devices_list = if cfg.quick { vec!["xavier", "server"] } else { vec!["oppo", "iphone", "xavier", "tx2", "server"] };
-        let fams = Family::fig8_families();
-        let mut rows = Vec::new();
-        let mut tab1_rows = Vec::new();
-        for dev_name in &devices_list {
-            for fam in &fams {
-                let reps = cfg.repeats();
-                let mut thor_m = Vec::new();
-                let mut lr_m = Vec::new();
-                let mut dev_secs = 0.0;
-                let mut fit_secs = 0.0;
-                for rep in 0..reps {
-                    let cfg_r = ExpConfig { seed: cfg.seed + rep as u64 * 1000, ..*cfg };
-                    let (t, f, report) = mape_pair(dev_name, *fam, &cfg_r);
-                    thor_m.push(t);
-                    lr_m.push(f);
-                    dev_secs += report.device_seconds() / reps as f64;
-                    fit_secs += report.fit_seconds() / reps as f64;
-                }
-                rows.push(vec![
-                    dev_name.to_string(),
-                    fam.name().to_string(),
-                    format!("{:.1} ± {:.1}", mean(&thor_m), std_err(&thor_m)),
-                    format!("{:.1} ± {:.1}", mean(&lr_m), std_err(&lr_m)),
-                ]);
-                tab1_rows.push(vec![
-                    dev_name.to_string(),
-                    fam.name().to_string(),
-                    format!("{:.0}", dev_secs + fit_secs),
-                ]);
-            }
-        }
-        (
-            table::render(&["device", "model", "THOR MAPE %", "FLOPs-LR MAPE %"], &rows),
-            table::render(&["device", "model", "profile+fit sec"], &tab1_rows),
-        )
-    }
-}
-
-pub mod fig9 {
-    use super::*;
-
-    /// Transformer estimation on Xavier + Server.
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut rows = Vec::new();
-        for dev_name in ["xavier", "server"] {
-            let (t, f, _) = mape_pair(dev_name, Family::Transformer, cfg);
-            rows.push(vec![dev_name.to_string(), format!("{t:.1}"), format!("{f:.1}")]);
-        }
-        table::render(&["device", "THOR MAPE %", "FLOPs-LR MAPE %"], &rows)
-    }
-}
-
-pub mod fig10 {
-    use super::*;
-
-    /// ResNet relative-error CDF on Xavier + Server.
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut out = String::new();
-        let fams = if cfg.quick {
-            vec![Family::ResNet20]
-        } else {
-            vec![Family::ResNet20, Family::ResNet56, Family::ResNet110]
-        };
-        for dev_name in ["xavier", "server"] {
-            let profile = devices::by_name(dev_name).unwrap();
-            let mut dev = Device::new(profile, cfg.seed);
-            let lr = fit_flops_lr(&mut dev, cfg);
-            let mut thor = Thor::new(cfg.thor_cfg());
-            let mut errs_thor = Vec::new();
-            let mut errs_lr = Vec::new();
-            for fam in &fams {
-                thor.profile(&mut dev, &reference_model(*fam));
-                for g in sample_n(*fam, cfg.n_test() / 3 + 2, cfg.seed + 2, 10) {
-                    let act = measured_energy(&mut dev, &g, cfg.iterations(), 1);
-                    let e_t = thor.estimate(dev_name, &g).unwrap().energy_per_iter;
-                    errs_thor.push(((act - e_t) / act).abs());
-                    errs_lr.push(((act - lr.predict(&g)) / act).abs());
-                }
-            }
-            let grid: Vec<f64> = (0..=20).map(|i| i as f64 * 0.05).collect();
-            let c_t = cdf(&errs_thor, &grid);
-            let c_l = cdf(&errs_lr, &grid);
-            let s_t: Vec<(f64, f64)> = grid.iter().zip(&c_t).map(|(g, c)| (*g, *c)).collect();
-            let s_l: Vec<(f64, f64)> = grid.iter().zip(&c_l).map(|(g, c)| (*g, *c)).collect();
-            out.push_str(&table::render_series(
-                &format!("ResNet relative-error CDF ({dev_name})"),
-                "rel err",
-                &[("THOR", &s_t), ("FLOPs-LR", &s_l)],
-            ));
-        }
-        out
-    }
-}
-
-pub mod fig11 {
-    use super::*;
-    use crate::thor::profiler;
-
-    /// Conv2d energy surface vs (C_in, C_out) at several spatial sizes
-    /// (profiled points + GP surface values on a grid).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut out = String::new();
-        for dev_name in ["xavier", "server"] {
-            let profile = devices::by_name(dev_name).unwrap();
-            let mut dev = Device::new(profile, cfg.seed);
-            let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
-            let parsed = crate::thor::parse::parse(&reference);
-            let hid = parsed.hidden_groups().next().unwrap(); // 14x14 conv
-            let inp = parsed.input_groups().next().unwrap();
-            let outg = parsed.output_groups().next().unwrap();
-            let n = if cfg.quick { 4 } else { 8 };
-            let mut rows = Vec::new();
-            for i in 0..n {
-                for j in 0..n {
-                    let a = 1 + i * 32 / n.max(1);
-                    let b = 1 + j * 64 / n.max(1);
-                    let (g, _, _) = profiler::hidden_variant(inp, hid, outg, a, b);
-                    let (e, _) = profiler::measure(&mut dev, &g, cfg.iterations().min(200));
-                    rows.push(vec![format!("{a}"), format!("{b}"), format!("{e:.4e}")]);
-                }
-            }
-            out.push_str(&format!("# conv2d 3x3 @14x14 variant energy surface ({dev_name})\n"));
-            out.push_str(&table::render(&["C_in", "C_out", "variant J/iter"], &rows));
-        }
-        out
-    }
-}
-
-pub mod fig12 {
-    use super::*;
-
-    /// Held-out error of the hidden-conv GP surface (est − obs).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut out = String::new();
-        for dev_name in ["xavier", "server"] {
-            let profile = devices::by_name(dev_name).unwrap();
-            let mut dev = Device::new(profile, cfg.seed);
-            let mut thor = Thor::new(cfg.thor_cfg());
-            thor.profile(&mut dev, &reference_model(Family::Cnn5));
-            let mut rng = Pcg64::new(cfg.seed + 3);
-            let mut rows = Vec::new();
-            for _ in 0..if cfg.quick { 6 } else { 20 } {
-                let g = sample(Family::Cnn5, &mut rng, 10);
-                let act = measured_energy(&mut dev, &g, cfg.iterations(), 1);
-                let est = thor.estimate(dev_name, &g).unwrap().energy_per_iter;
-                rows.push(vec![
-                    format!("{act:.4e}"),
-                    format!("{est:.4e}"),
-                    format!("{:+.1}%", 100.0 * (est - act) / act),
-                ]);
-            }
-            out.push_str(&format!("# estimation vs observation ({dev_name})\n"));
-            out.push_str(&table::render(&["observed", "estimated", "diff"], &rows));
-        }
-        out
-    }
-}
-
-pub mod a14 {
-    use super::*;
-    use crate::thor::pipeline::ThorConfig;
-
-    /// #profiled points vs MAPE (energy acquisition vs time surrogate).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut out = String::new();
-        for dev_name in ["oppo", "xavier"] {
-            let mut rows = Vec::new();
-            for budget in [6usize, 10, 16, 24] {
-                for surrogate in [false, true] {
-                    let profile = devices::by_name(dev_name).unwrap();
-                    let mut dev = Device::new(profile, cfg.seed);
-                    let tcfg = ThorConfig {
-                        max_points_1d: budget,
-                        max_points_2d: budget * 2,
-                        threshold_frac: 0.0, // force budget use
-                        time_surrogate: surrogate,
-                        ..cfg.thor_cfg()
-                    };
-                    let mut thor = Thor::new(tcfg);
-                    thor.profile(&mut dev, &reference_model(Family::Cnn5));
-                    let test = sample_n(Family::Cnn5, cfg.n_test().min(20), cfg.seed + 1, 10);
-                    let (mut actual, mut est) = (vec![], vec![]);
-                    for g in &test {
-                        actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
-                        est.push(thor.estimate(dev_name, g).unwrap().energy_per_iter);
-                    }
-                    rows.push(vec![
-                        format!("{budget}"),
-                        if surrogate { "time" } else { "energy" }.into(),
-                        format!("{:.1}", mape(&actual, &est)),
-                    ]);
-                }
-            }
-            out.push_str(&format!("# points-budget sweep ({dev_name})\n"));
-            out.push_str(&table::render(&["1D budget", "acquisition", "MAPE %"], &rows));
-        }
-        out
-    }
-}
-
-pub mod a15 {
-    use super::*;
-    use crate::gp::KernelKind;
-
-    /// GP kernel ablation: Matérn vs RBF vs DotProduct vs random-Matérn.
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut rows = Vec::new();
-        for (label, kind, random) in [
-            ("Matern52 (guided)", KernelKind::Matern52, false),
-            ("RBF (guided)", KernelKind::Rbf, false),
-            ("DotProduct (guided)", KernelKind::DotProduct, false),
-            ("Matern52 (random)", KernelKind::Matern52, true),
-        ] {
-            let profile = devices::by_name("xavier").unwrap();
-            let mut dev = Device::new(profile, cfg.seed);
-            let tcfg = ThorConfig { kind, random_sampling: random, ..cfg.thor_cfg() };
-            let mut thor = Thor::new(tcfg);
-            thor.profile(&mut dev, &reference_model(Family::Cnn5));
-            let test = sample_n(Family::Cnn5, cfg.n_test().min(25), cfg.seed + 1, 10);
-            let (mut actual, mut est) = (vec![], vec![]);
-            for g in &test {
-                actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
-                est.push(thor.estimate("xavier", g).unwrap().energy_per_iter);
-            }
-            rows.push(vec![label.to_string(), format!("{:.1}", mape(&actual, &est))]);
-        }
-        table::render(&["kernel / sampling", "MAPE %"], &rows)
-    }
-}
-
-pub mod a16 {
-    use super::*;
-
-    /// Energy normalized to 1000 iterations vs profiling-iteration count
-    /// (few samples ⇒ unstable).
-    pub fn run(cfg: &ExpConfig) -> String {
-        let mut dev = Device::new(devices::xavier(), cfg.seed);
-        let g = zoo::lenet5(&[6, 16, 120, 84], 10);
-        let tr = fuse(&lower(&g));
-        let reps = if cfg.quick { 5 } else { 15 };
-        let mut rows = Vec::new();
-        for iters in [10usize, 50, 100, 200, 500, 1000] {
-            let vals: Vec<f64> = (0..reps)
-                .map(|_| dev.run(&tr, iters).energy_per_iter() * 1000.0)
-                .collect();
-            rows.push(vec![
-                format!("{iters}"),
-                format!("{:.3}", mean(&vals)),
-                format!("{:.1}%", 100.0 * crate::util::stats::std_dev(&vals) / mean(&vals)),
-            ]);
-        }
-        table::render(&["profiling iterations", "energy per 1000 iters (J)", "spread (CV)"], &rows)
+    #[test]
+    fn for_experiment_threads_quick_flag() {
+        let cfg = ExpConfig::for_experiment(7, true, "fig2");
+        assert!(cfg.quick);
+        assert_eq!(cfg.seed, ExpConfig::derive_seed(7, "fig2"));
     }
 }

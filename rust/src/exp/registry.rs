@@ -1,0 +1,91 @@
+//! The experiment registry: every paper table/figure is a registered
+//! [`Experiment`] with a stable id, discoverable by the CLI
+//! (`thor exp --list`), the bench harness, and the golden-run tests.
+//!
+//! Adding an experiment = implement the trait in `tables.rs` /
+//! `figures.rs` / `ablation.rs` and append it to [`registry`].  Order in
+//! [`registry`] is the canonical presentation order (paper order) and is
+//! preserved by the multi-threaded runner.
+
+use crate::exp::report::ExpReport;
+use crate::exp::{ablation, figures, tables, ExpConfig};
+
+/// One paper table/figure, runnable in isolation or by the suite runner.
+///
+/// `run` must be a pure function of `cfg` (see the determinism contract
+/// in [`crate::exp::report`]): same config, same report, regardless of
+/// thread scheduling or wall-clock.
+pub trait Experiment: Send + Sync {
+    /// Stable identifier (`fig2`, `a15`, ...) — also the golden filename.
+    fn id(&self) -> &'static str;
+    /// One-line description for `thor exp --list`.
+    fn description(&self) -> &'static str;
+    fn run(&self, cfg: &ExpConfig) -> ExpReport;
+}
+
+/// All registered experiments, in paper order.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(tables::Fig2),
+        Box::new(figures::Fig4),
+        Box::new(figures::Fig5),
+        Box::new(figures::Fig6),
+        Box::new(tables::Fig7),
+        Box::new(tables::Fig8),
+        Box::new(tables::Fig9),
+        Box::new(figures::Fig10),
+        Box::new(figures::Fig11),
+        Box::new(tables::Fig12),
+        Box::new(ablation::A14),
+        Box::new(ablation::A15),
+        Box::new(ablation::A16),
+    ]
+}
+
+/// Registered ids, in registry order.
+pub fn ids() -> Vec<&'static str> {
+    registry().iter().map(|e| e.id()).collect()
+}
+
+/// Look up one experiment.  `tab1` is an alias for `fig8` (the Table-1
+/// profiling-cost table is produced by the same device/family sweep).
+pub fn by_id(id: &str) -> Option<Box<dyn Experiment>> {
+    let id = if id == "tab1" { "fig8" } else { id };
+    registry().into_iter().find(|e| e.id() == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_nonempty() {
+        let ids = ids();
+        assert!(ids.len() >= 13, "registry shrank: {ids:?}");
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "duplicate experiment ids");
+    }
+
+    #[test]
+    fn by_id_resolves_every_registered_id() {
+        for id in ids() {
+            assert!(by_id(id).is_some(), "{id} not resolvable");
+        }
+        assert!(by_id("nope").is_none());
+    }
+
+    #[test]
+    fn tab1_aliases_fig8() {
+        assert_eq!(by_id("tab1").unwrap().id(), "fig8");
+    }
+
+    #[test]
+    fn descriptions_are_single_line() {
+        for e in registry() {
+            assert!(!e.description().is_empty(), "{} has no description", e.id());
+            assert!(!e.description().contains('\n'));
+        }
+    }
+}

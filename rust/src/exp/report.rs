@@ -1,0 +1,302 @@
+//! Structured experiment results.
+//!
+//! Every registered [`crate::exp::registry::Experiment`] returns an
+//! [`ExpReport`]: tables (pre-formatted cells), named (x, y) series,
+//! scalar metrics and free-form notes, plus metadata (seeds, quick-mode
+//! flag, device set).  Reports render to the same ASCII tables the paper
+//! prints (via [`crate::util::table`]) and serialize to JSON (via
+//! [`crate::util::json`]) for the golden-run regression harness.
+//!
+//! Determinism contract: everything stored in a report — and therefore
+//! everything serialized — must be a pure function of the experiment's
+//! [`crate::exp::ExpConfig`].  Wall-clock quantities (e.g. GP fitting
+//! seconds, runner elapsed time) are deliberately excluded; simulated
+//! device-seconds are fine.  `util::json::Json` objects are `BTreeMap`s,
+//! so key order is stable by construction.
+
+use crate::exp::ExpConfig;
+use crate::util::json::Json;
+use crate::util::table;
+
+/// Report metadata: which configuration produced the numbers.
+#[derive(Clone, Debug, Default)]
+pub struct ExpMeta {
+    /// Suite-level seed the per-experiment seed was derived from
+    /// (filled in by the runner; 0 when an experiment is run directly).
+    pub base_seed: u64,
+    /// The derived seed the experiment actually ran with
+    /// ([`ExpConfig::derive_seed`]).
+    pub seed: u64,
+    pub quick: bool,
+    /// Simulated devices the experiment touched.
+    pub devices: Vec<String>,
+}
+
+/// One titled table: headers + pre-formatted cell strings.
+#[derive(Clone, Debug)]
+pub struct TableData {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableData {
+    /// Cells of one column, by header name.
+    pub fn column(&self, header: &str) -> Option<Vec<&str>> {
+        let i = self.headers.iter().position(|h| h == header)?;
+        Some(self.rows.iter().map(|r| r[i].as_str()).collect())
+    }
+}
+
+/// One titled set of named (x, y) series sharing an x axis (the "figure"
+/// analogue: pipe into any plotting tool to regenerate the paper's plot).
+#[derive(Clone, Debug)]
+pub struct SeriesData {
+    pub title: String,
+    pub xlabel: String,
+    pub series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+/// Structured result of one experiment.
+#[derive(Clone, Debug, Default)]
+pub struct ExpReport {
+    pub id: String,
+    pub title: String,
+    pub meta: ExpMeta,
+    pub tables: Vec<TableData>,
+    pub series: Vec<SeriesData>,
+    /// Named scalar results (e.g. `pearson_r`), machine-checkable without
+    /// parsing table cells.
+    pub metrics: Vec<(String, f64)>,
+    /// Free-form annotation lines appended to the rendering.
+    pub notes: Vec<String>,
+    /// Set when the experiment panicked inside the runner.
+    pub error: Option<String>,
+}
+
+impl ExpReport {
+    pub fn new(id: &str, title: &str, cfg: &ExpConfig, devices: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            meta: ExpMeta {
+                base_seed: 0,
+                seed: cfg.seed,
+                quick: cfg.quick,
+                devices: devices.iter().map(|d| d.to_string()).collect(),
+            },
+            ..Self::default()
+        }
+    }
+
+    /// A report recording a failed run (runner-caught panic).
+    pub fn failed(id: &str, cfg: &ExpConfig, msg: &str) -> Self {
+        let mut r = Self::new(id, "(failed)", cfg, &[]);
+        r.error = Some(msg.to_string());
+        r
+    }
+
+    pub fn push_table(&mut self, title: &str, headers: &[&str], rows: Vec<Vec<String>>) {
+        self.tables.push(TableData {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows,
+        });
+    }
+
+    pub fn push_series(&mut self, title: &str, xlabel: &str, series: Vec<(String, Vec<(f64, f64)>)>) {
+        self.series.push(SeriesData { title: title.to_string(), xlabel: xlabel.to_string(), series });
+    }
+
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    pub fn get_metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn note(&mut self, line: impl Into<String>) {
+        self.notes.push(line.into());
+    }
+
+    pub fn table(&self, title: &str) -> Option<&TableData> {
+        self.tables.iter().find(|t| t.title == title)
+    }
+
+    /// Human rendering: the same tables/series `cargo bench` and the
+    /// `thor exp` CLI have always printed.
+    pub fn render(&self) -> String {
+        let mut out = format!("## {} — {}\n", self.id, self.title);
+        if let Some(err) = &self.error {
+            out.push_str(&format!("EXPERIMENT FAILED: {err}\n"));
+            return out;
+        }
+        for t in &self.tables {
+            if !t.title.is_empty() {
+                out.push_str(&format!("# {}\n", t.title));
+            }
+            let headers: Vec<&str> = t.headers.iter().map(|h| h.as_str()).collect();
+            out.push_str(&table::render(&headers, &t.rows));
+        }
+        for s in &self.series {
+            let named: Vec<(&str, &[(f64, f64)])> =
+                s.series.iter().map(|(n, pts)| (n.as_str(), pts.as_slice())).collect();
+            out.push_str(&table::render_series(&s.title, &s.xlabel, &named));
+        }
+        for (name, v) in &self.metrics {
+            out.push_str(&format!("{name} = {v:.4}\n"));
+        }
+        for n in &self.notes {
+            out.push_str(n);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Canonical JSON (deterministic: object keys are sorted, values are
+    /// pure functions of the experiment seed).  Schema is documented in
+    /// the [`crate::exp`] module docs.
+    pub fn to_json(&self) -> Json {
+        let meta = Json::obj(vec![
+            ("base_seed", Json::str(&self.meta.base_seed.to_string())),
+            ("seed", Json::str(&self.meta.seed.to_string())),
+            ("quick", Json::Bool(self.meta.quick)),
+            ("devices", Json::Arr(self.meta.devices.iter().map(|d| Json::str(d)).collect())),
+        ]);
+        let tables = Json::Arr(
+            self.tables
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("title", Json::str(&t.title)),
+                        ("headers", Json::Arr(t.headers.iter().map(|h| Json::str(h)).collect())),
+                        (
+                            "rows",
+                            Json::Arr(
+                                t.rows
+                                    .iter()
+                                    .map(|r| Json::Arr(r.iter().map(|c| Json::str(c)).collect()))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let series = Json::Arr(
+            self.series
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("title", Json::str(&s.title)),
+                        ("xlabel", Json::str(&s.xlabel)),
+                        (
+                            "series",
+                            Json::Arr(
+                                s.series
+                                    .iter()
+                                    .map(|(name, pts)| {
+                                        Json::obj(vec![
+                                            ("name", Json::str(name)),
+                                            (
+                                                "points",
+                                                Json::Arr(
+                                                    pts.iter()
+                                                        .map(|(x, y)| Json::arr_f64(&[*x, *y]))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let metrics = Json::Arr(
+            self.metrics
+                .iter()
+                .map(|(name, v)| Json::obj(vec![("name", Json::str(name)), ("value", Json::Num(*v))]))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("title", Json::str(&self.title)),
+            ("meta", meta),
+            ("tables", tables),
+            ("series", series),
+            ("metrics", metrics),
+            ("notes", Json::Arr(self.notes.iter().map(|n| Json::str(n)).collect())),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> ExpReport {
+        let cfg = ExpConfig::new(true, 42);
+        let mut r = ExpReport::new("figX", "sample", &cfg, &["xavier"]);
+        r.push_table(
+            "t",
+            &["a", "b"],
+            vec![vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        r.push_series("s", "x", vec![("y".to_string(), vec![(0.0, 1.5), (1.0, 2.5)])]);
+        r.metric("m", 0.25);
+        r.note("hello");
+        r
+    }
+
+    #[test]
+    fn render_contains_tables_series_notes() {
+        let s = sample_report().render();
+        assert!(s.contains("figX"));
+        assert!(s.contains("| a | b |"));
+        assert!(s.contains("# s"));
+        assert!(s.contains("m = 0.2500"));
+        assert!(s.contains("hello"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let j = sample_report().to_json().to_string();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "figX");
+        assert_eq!(v.get("meta").unwrap().get("seed").unwrap().as_str().unwrap(), "42");
+        assert_eq!(v.get("tables").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(v.get("error").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn json_serialization_is_stable() {
+        assert_eq!(sample_report().to_json().to_string(), sample_report().to_json().to_string());
+    }
+
+    #[test]
+    fn column_lookup() {
+        let r = sample_report();
+        let t = r.table("t").unwrap();
+        assert_eq!(t.column("b").unwrap(), vec!["2", "4"]);
+        assert!(t.column("nope").is_none());
+    }
+
+    #[test]
+    fn failed_report_renders_error() {
+        let cfg = ExpConfig::new(false, 1);
+        let r = ExpReport::failed("figY", &cfg, "boom");
+        assert!(r.render().contains("FAILED"));
+        assert_eq!(r.to_json().get("error").unwrap().as_str().unwrap(), "boom");
+    }
+}

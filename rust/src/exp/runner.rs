@@ -1,0 +1,230 @@
+//! Multi-threaded experiment runner.
+//!
+//! Fans registered experiments across `std::thread` workers pulling from
+//! a shared atomic work queue.  Determinism is by construction: each
+//! experiment runs with its own seed derived from the suite seed + the
+//! experiment id ([`ExpConfig::for_experiment`]), owns its own simulated
+//! devices/RNGs, and results are collected into registry-order slots —
+//! so the suite output is byte-identical regardless of thread count or
+//! scheduling (asserted by `rust/tests/golden_runs.rs`).
+//!
+//! A panicking experiment is caught per-worker and recorded as a failed
+//! [`ExpReport`] instead of tearing down the suite.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::exp::registry::Experiment;
+use crate::exp::report::ExpReport;
+use crate::exp::ExpConfig;
+use crate::util::json::Json;
+
+pub struct Runner {
+    pub threads: usize,
+}
+
+/// Result of one suite run.
+pub struct SuiteResult {
+    /// Reports in registry (submission) order, independent of completion
+    /// order.
+    pub reports: Vec<ExpReport>,
+    pub base_seed: u64,
+    pub quick: bool,
+    pub threads_used: usize,
+    /// Wall-clock of the whole suite — diagnostic only, never serialized
+    /// (see the determinism contract in [`crate::exp::report`]).
+    pub wall_seconds: f64,
+}
+
+impl Runner {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Thread count for `n_tasks` experiments: all available cores, at
+    /// least 2 (the suite must exercise the parallel path), at most one
+    /// per task.
+    pub fn auto(n_tasks: usize) -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        Self::new(cores.max(2).min(n_tasks.max(1)))
+    }
+
+    /// Runner from a user-supplied thread count, where 0 means "auto"
+    /// (shared by the CLI and the bench harness).
+    pub fn from_arg(threads: usize, n_tasks: usize) -> Self {
+        if threads == 0 {
+            Self::auto(n_tasks)
+        } else {
+            Self::new(threads)
+        }
+    }
+
+    /// Run `exps` (quick/full at `base_seed`) across the worker pool.
+    pub fn run(&self, exps: Vec<Box<dyn Experiment>>, quick: bool, base_seed: u64) -> SuiteResult {
+        let t0 = Instant::now();
+        let n = exps.len();
+        let threads = self.threads.min(n.max(1));
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<ExpReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let exp = exps[i].as_ref();
+                    let cfg = ExpConfig::for_experiment(base_seed, quick, exp.id());
+                    let mut report = run_caught(exp, &cfg);
+                    report.meta.base_seed = base_seed;
+                    *slots[i].lock().unwrap() = Some(report);
+                });
+            }
+        });
+
+        let reports = slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("runner slot unfilled"))
+            .collect();
+        SuiteResult {
+            reports,
+            base_seed,
+            quick,
+            threads_used: threads,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Run one experiment, converting a panic into a failed report.
+fn run_caught(exp: &dyn Experiment, cfg: &ExpConfig) -> ExpReport {
+    match std::panic::catch_unwind(AssertUnwindSafe(|| exp.run(cfg))) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            ExpReport::failed(exp.id(), cfg, &msg)
+        }
+    }
+}
+
+impl SuiteResult {
+    /// Canonical suite JSON: suite metadata + per-experiment reports, in
+    /// registry order.  Byte-identical across runs with the same seed
+    /// (wall-clock and thread count are deliberately excluded).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(1.0)),
+            ("base_seed", Json::str(&self.base_seed.to_string())),
+            ("quick", Json::Bool(self.quick)),
+            ("experiments", Json::Arr(self.reports.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
+
+    /// Human rendering of every report, in order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.reports {
+            out.push_str(&r.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn failures(&self) -> Vec<&ExpReport> {
+        self.reports.iter().filter(|r| r.error.is_some()).collect()
+    }
+
+    /// Print one stderr line per failed experiment; returns the failure
+    /// count (shared by the CLI and the bench harness).
+    pub fn eprint_failures(&self) -> usize {
+        let failures = self.failures();
+        for f in &failures {
+            eprintln!("experiment {} FAILED: {}", f.id, f.error.as_deref().unwrap_or(""));
+        }
+        failures.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::report::ExpReport;
+
+    struct Echo(&'static str);
+
+    impl Experiment for Echo {
+        fn id(&self) -> &'static str {
+            self.0
+        }
+        fn description(&self) -> &'static str {
+            "echoes its derived seed"
+        }
+        fn run(&self, cfg: &ExpConfig) -> ExpReport {
+            let mut r = ExpReport::new(self.0, "echo", cfg, &[]);
+            r.metric("seed_lo", (cfg.seed % 1_000_000) as f64);
+            r
+        }
+    }
+
+    struct Boom;
+
+    impl Experiment for Boom {
+        fn id(&self) -> &'static str {
+            "boom"
+        }
+        fn description(&self) -> &'static str {
+            "always panics"
+        }
+        fn run(&self, _cfg: &ExpConfig) -> ExpReport {
+            panic!("intentional test panic");
+        }
+    }
+
+    fn echo_suite() -> Vec<Box<dyn Experiment>> {
+        vec![Box::new(Echo("e1")), Box::new(Echo("e2")), Box::new(Echo("e3")), Box::new(Echo("e4"))]
+    }
+
+    #[test]
+    fn preserves_submission_order_and_derives_distinct_seeds() {
+        let suite = Runner::new(3).run(echo_suite(), true, 9);
+        let ids: Vec<&str> = suite.reports.iter().map(|r| r.id.as_str()).collect();
+        assert_eq!(ids, vec!["e1", "e2", "e3", "e4"]);
+        let seeds: Vec<u64> = suite.reports.iter().map(|r| r.meta.seed).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "per-experiment seeds collide: {seeds:?}");
+        assert!(suite.reports.iter().all(|r| r.meta.base_seed == 9));
+    }
+
+    #[test]
+    fn json_identical_across_thread_counts() {
+        let a = Runner::new(1).run(echo_suite(), true, 5).to_json().to_string();
+        let b = Runner::new(4).run(echo_suite(), true, 5).to_json().to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn panic_becomes_failed_report() {
+        let suite =
+            Runner::new(2).run(vec![Box::new(Echo("ok")), Box::new(Boom)], true, 1);
+        assert_eq!(suite.reports.len(), 2);
+        assert!(suite.reports[0].error.is_none());
+        let err = suite.reports[1].error.as_deref().unwrap();
+        assert!(err.contains("intentional"), "{err}");
+        assert_eq!(suite.failures().len(), 1);
+    }
+
+    #[test]
+    fn auto_uses_multiple_threads() {
+        assert!(Runner::auto(8).threads >= 2);
+        assert_eq!(Runner::auto(1).threads, 1);
+    }
+}

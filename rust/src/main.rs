@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   profile   profile a model family on a simulated device, save the GP store
 //!   estimate  estimate a model's training energy from a saved store
-//!   exp       regenerate a paper table/figure (fig2..fig13, tab1, a14..a16)
+//!   exp       run registered paper experiments: `thor exp <id>` or
+//!             `thor exp --all` (multi-threaded), `--json out.json` for the
+//!             structured report, `--list` for the registry
 //!   serve     run the fleet fitting leader (TCP)
 //!   worker    run a device worker against a leader
 //!   devices   list the simulated device fleet
@@ -11,7 +13,7 @@
 use anyhow::{anyhow, Result};
 
 use thor::coordinator::{DeviceWorker, FleetServer};
-use thor::exp::{self, ExpConfig};
+use thor::exp::{self, Experiment};
 use thor::model::sampler::Family;
 use thor::simdevice::{devices, Device};
 use thor::thor::{Thor, ThorConfig};
@@ -27,6 +29,10 @@ fn specs() -> Vec<Spec> {
         Spec { name: "iterations", takes_value: true, help: "profiling iterations per measurement (default 500)" },
         Spec { name: "addr", takes_value: true, help: "leader address (default 127.0.0.1:7707)" },
         Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1)" },
+        Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
+        Spec { name: "list", takes_value: false, help: "exp: list registered experiment ids" },
+        Spec { name: "json", takes_value: true, help: "exp: write structured suite report to this path" },
+        Spec { name: "threads", takes_value: true, help: "exp: worker threads (default: all cores, min 2)" },
         Spec { name: "help", takes_value: false, help: "print usage" },
     ]
 }
@@ -102,29 +108,42 @@ fn main() -> Result<()> {
             println!("total: {:.4e} J/iter ({:.1} J per 1000 iterations)", est.energy_per_iter, est.total(1000));
         }
         "exp" => {
-            let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("fig8");
-            let cfg = ExpConfig::new(args.has("quick"), seed);
-            let out = match which {
-                "fig2" => exp::fig2::run(&cfg),
-                "fig4" => exp::fig4::run(&cfg),
-                "fig5" => exp::fig5::run(&cfg),
-                "fig6" => exp::fig6::run(&cfg),
-                "fig7" => exp::fig7::run(&cfg),
-                "fig8" => {
-                    let (a, b) = exp::fig8::run(&cfg);
-                    format!("{a}\n# Table 1 — profiling + fitting cost\n{b}")
+            if args.has("list") {
+                for e in exp::registry::registry() {
+                    println!("{:6}  {}", e.id(), e.description());
                 }
-                "tab1" => exp::fig8::run(&cfg).1,
-                "fig9" => exp::fig9::run(&cfg),
-                "fig10" => exp::fig10::run(&cfg),
-                "fig11" => exp::fig11::run(&cfg),
-                "fig12" => exp::fig12::run(&cfg),
-                "a14" => exp::a14::run(&cfg),
-                "a15" => exp::a15::run(&cfg),
-                "a16" => exp::a16::run(&cfg),
-                other => return Err(anyhow!("unknown experiment '{other}' (fig13 lives in examples/energy_aware_pruning)")),
+                println!("tab1    (alias for fig8; fig13 lives in examples/energy_aware_pruning)");
+                return Ok(());
+            }
+            let which = args.positional().get(1).map(|s| s.as_str());
+            let exps: Vec<Box<dyn Experiment>> = if args.has("all") || which == Some("all") {
+                exp::registry::registry()
+            } else {
+                let id = which.unwrap_or("fig8");
+                vec![exp::by_id(id).ok_or_else(|| {
+                    anyhow!(
+                        "unknown experiment '{id}' — `thor exp --list` shows the registry \
+                         (fig13 lives in examples/energy_aware_pruning)"
+                    )
+                })?]
             };
-            println!("{out}");
+            let runner = exp::Runner::from_arg(args.get_usize("threads", 0)?, exps.len());
+            let n_exps = exps.len();
+            let quick = args.has("quick");
+            let suite = runner.run(exps, quick, seed);
+            print!("{}", suite.render());
+            let n_failed = suite.eprint_failures();
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, suite.to_json().to_string())?;
+                eprintln!("wrote {n_exps} experiment report(s) to {path}");
+            }
+            eprintln!(
+                "ran {n_exps} experiment(s) on {} thread(s) in {:.1}s (seed {seed}, quick={quick})",
+                suite.threads_used, suite.wall_seconds
+            );
+            if n_failed > 0 {
+                return Err(anyhow!("{n_failed} experiment(s) failed"));
+            }
         }
         "serve" => {
             let addr = args.get_str("addr", "127.0.0.1:7707");

@@ -6,13 +6,31 @@
 use anyhow::{anyhow, Result};
 
 use crate::gp::model::GpExport;
-use crate::runtime::{lit_f32, lit_scalar_f32, to_vec_f32, Runtime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{lit_f32, lit_scalar_f32, to_vec_f32};
+use crate::runtime::Runtime;
 
 pub const N_INDUCING: usize = 64;
 pub const N_QUERIES: usize = 256;
 
 pub struct GpExecutor;
 
+/// Stub (no `pjrt` feature): the artifact path is unavailable; the native
+/// [`crate::gp::GpModel::predict_batch`] path is the production fallback.
+#[cfg(not(feature = "pjrt"))]
+impl GpExecutor {
+    pub fn posterior(
+        _rt: &mut Runtime,
+        _export: &GpExport,
+        _queries: &[Vec<f64>],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        Err(anyhow!(
+            "artifact-backed GP posterior unavailable: built without the `pjrt` feature"
+        ))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl GpExecutor {
     /// Posterior (means, variances) for raw *normalized* query points
     /// through the artifact.  `export` must come from a GP fitted on ≤

@@ -6,8 +6,12 @@
 //! artifact serves every pruned sub-network (Fig 13).
 
 use anyhow::Result;
+#[cfg(not(feature = "pjrt"))]
+use anyhow::anyhow;
 
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Runtime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32};
+use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
 pub const BATCH: usize = 16;
@@ -76,6 +80,20 @@ impl TrainStep {
         s
     }
 
+    /// Stubs (no `pjrt` feature): artifact execution is unavailable; the
+    /// callers (trainer, examples, Fig-13) guard on `Runtime::open`
+    /// succeeding, which the stub runtime never does.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn step(&mut self, _rt: &mut Runtime, _x: &[f32], _y: &[i32], _lr: f32) -> Result<StepResult> {
+        Err(anyhow!("cnn_train_step artifact unavailable: built without the `pjrt` feature"))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn eval(&self, _rt: &mut Runtime, _x: &[f32], _y: &[i32]) -> Result<StepResult> {
+        Err(anyhow!("cnn_eval artifact unavailable: built without the `pjrt` feature"))
+    }
+
+    #[cfg(feature = "pjrt")]
     fn common_inputs(&self, x: &[f32], y: &[i32]) -> Result<Vec<xla::Literal>> {
         Ok(vec![
             lit_f32(x, &[BATCH as i64, IMG as i64, IMG as i64, 1])?,
@@ -92,6 +110,7 @@ impl TrainStep {
     }
 
     /// One SGD step on a batch: updates `self.params`, returns loss/acc.
+    #[cfg(feature = "pjrt")]
     pub fn step(&mut self, rt: &mut Runtime, x: &[f32], y: &[i32], lr: f32) -> Result<StepResult> {
         let mut inputs = self.common_inputs(x, y)?;
         inputs.push(lit_scalar_f32(lr));
@@ -106,6 +125,7 @@ impl TrainStep {
     }
 
     /// Forward-only evaluation on a batch.
+    #[cfg(feature = "pjrt")]
     pub fn eval(&self, rt: &mut Runtime, x: &[f32], y: &[i32]) -> Result<StepResult> {
         let inputs = self.common_inputs(x, y)?;
         let out = rt.execute("cnn_eval", &inputs)?;

@@ -1,23 +1,28 @@
-//! Smoke tests for the experiment harness: every generator runs at tiny
-//! scale and emits non-empty, well-formed output with the expected
-//! headline directions (the full-scale numbers live in results/ and
-//! EXPERIMENTS.md; these tests keep the generators from rotting).
+//! Smoke tests for the experiment registry: generators run at tiny scale
+//! through the same `Experiment::run` path the CLI/bench/runner use, and
+//! their structured reports carry the expected headline directions (the
+//! exact quick-mode numbers are pinned by tests/golden_runs.rs; these
+//! tests keep the generators from rotting semantically).
 
-use thor::exp::{self, ExpConfig};
+use thor::exp::{by_id, ExpConfig, Experiment as _};
 
-fn tiny() -> ExpConfig {
-    ExpConfig::new(true, 7)
+fn tiny(id: &str) -> ExpConfig {
+    ExpConfig::for_experiment(7, true, id)
+}
+
+fn run(id: &str) -> thor::exp::ExpReport {
+    by_id(id).expect("registered").run(&tiny(id))
 }
 
 #[test]
 fn fig2_shows_overestimation() {
-    let out = exp::fig2::run(&tiny());
-    assert!(out.contains("ratio"));
-    // every data row's ratio column is > 1.0
-    let ratios: Vec<f64> = out
-        .lines()
-        .filter(|l| l.starts_with("| ") && !l.contains("ratio"))
-        .filter_map(|l| l.split('|').nth(4).and_then(|c| c.trim().parse().ok()))
+    let rep = run("fig2");
+    let table = &rep.tables[0];
+    let ratios: Vec<f64> = table
+        .column("ratio")
+        .expect("ratio column")
+        .iter()
+        .map(|c| c.parse().expect("numeric ratio"))
         .collect();
     assert!(!ratios.is_empty());
     assert!(ratios.iter().all(|&r| r > 1.0), "{ratios:?}");
@@ -25,48 +30,52 @@ fn fig2_shows_overestimation() {
 
 #[test]
 fn fig5_series_nonempty() {
-    let out = exp::fig5::run(&tiny());
-    assert!(out.lines().count() > 5);
-    assert!(out.contains("energy J/iter"));
+    let rep = run("fig5");
+    assert_eq!(rep.series.len(), 1);
+    let (name, pts) = &rep.series[0].series[0];
+    assert_eq!(name, "energy J/iter");
+    assert!(pts.len() > 3, "{} points", pts.len());
+    assert!(pts.iter().all(|(_, e)| *e > 0.0));
 }
 
 #[test]
 fn fig6_reports_positive_correlation() {
-    let out = exp::fig6::run(&tiny());
-    let r: f64 = out
-        .lines()
-        .find(|l| l.contains("Pearson"))
-        .and_then(|l| l.split('=').nth(1))
-        .and_then(|s| s.trim().split(' ').next())
-        .and_then(|s| s.parse().ok())
-        .unwrap();
+    let rep = run("fig6");
+    let r = rep.get_metric("pearson_r").expect("pearson_r metric");
     assert!(r > 0.5, "time-energy correlation {r}");
 }
 
 #[test]
 fn a16_spread_shrinks_with_iterations() {
-    let out = exp::a16::run(&tiny());
-    let cvs: Vec<f64> = out
-        .lines()
-        .filter(|l| l.starts_with("| ") && l.contains('%'))
-        .filter_map(|l| {
-            l.split('|')
-                .nth(3)
-                .and_then(|c| c.trim().trim_end_matches('%').parse::<f64>().ok())
-        })
+    let rep = run("a16");
+    let cvs: Vec<f64> = rep.tables[0]
+        .column("spread (CV)")
+        .expect("cv column")
+        .iter()
+        .map(|c| c.trim_end_matches('%').parse().expect("numeric CV"))
         .collect();
-    assert!(cvs.len() >= 4, "{out}");
-    assert!(
-        cvs.first().unwrap() > cvs.last().unwrap(),
-        "spread should shrink: {cvs:?}"
-    );
+    assert!(cvs.len() >= 4, "{cvs:?}");
+    assert!(cvs.first().unwrap() > cvs.last().unwrap(), "spread should shrink: {cvs:?}");
 }
 
 #[test]
 fn mape_pair_runs_on_every_device() {
     for dev in ["xavier", "tx2"] {
-        let (thor_m, flops_m, report) = exp::mape_pair(dev, thor::model::sampler::Family::LeNet5, &tiny());
+        let (thor_m, flops_m, report) =
+            thor::exp::mape_pair(dev, thor::model::sampler::Family::LeNet5, &ExpConfig::new(true, 7));
         assert!(thor_m.is_finite() && flops_m.is_finite());
         assert!(report.total_points() > 0);
     }
+}
+
+#[test]
+fn reports_carry_meta_and_render() {
+    let rep = run("fig2");
+    assert_eq!(rep.id, "fig2");
+    assert!(rep.meta.quick);
+    assert_eq!(rep.meta.seed, ExpConfig::derive_seed(7, "fig2"));
+    assert_eq!(rep.meta.devices, vec!["xavier".to_string()]);
+    let rendered = rep.render();
+    assert!(rendered.contains("fig2"));
+    assert!(rendered.contains("ratio"));
 }

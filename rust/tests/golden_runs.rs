@@ -1,0 +1,108 @@
+//! Golden-run regression harness + determinism check.
+//!
+//! Every registered experiment runs in quick mode at a fixed suite seed
+//! through the multi-threaded runner, and its serialized `ExpReport` is
+//! diffed byte-for-byte against `tests/golden/<id>.json`.
+//!
+//! * Missing goldens are written ("blessed") on first run — commit them.
+//! * After an intentional output change, regenerate with
+//!   `UPDATE_GOLDENS=1 cargo test --test golden_runs` and commit the diff.
+//!
+//! The determinism test runs the full quick suite twice at different
+//! thread counts and asserts byte-identical suite JSON — catching
+//! thread-order and map-iteration nondeterminism anywhere in the
+//! experiment layer.
+
+use std::fs;
+use std::path::PathBuf;
+
+use thor::exp::{registry, Runner};
+
+/// Fixed suite seed for goldens (matches the CLI default of
+/// `thor exp --all --quick --json`).
+const GOLDEN_SEED: u64 = 2025;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// First byte index where `a` and `b` differ, with a context window for
+/// the assertion message (byte-sliced throughout, so the window is
+/// positioned correctly even with multi-byte characters in titles).
+fn first_divergence(a: &str, b: &str) -> String {
+    let i = a.bytes().zip(b.bytes()).position(|(x, y)| x != y).unwrap_or(a.len().min(b.len()));
+    let window = |s: &str| -> String {
+        let lo = i.saturating_sub(60);
+        let hi = (lo + 140).min(s.len());
+        String::from_utf8_lossy(&s.as_bytes()[lo.min(s.len())..hi]).into_owned()
+    };
+    format!("first divergence at byte {i}:\n  got:  …{}…\n  want: …{}…", window(a), window(b))
+}
+
+#[test]
+fn golden_quick_suite_matches_committed_reports() {
+    let suite = Runner::new(2).run(registry::registry(), true, GOLDEN_SEED);
+    let update = std::env::var("UPDATE_GOLDENS").map(|v| v == "1").unwrap_or(false);
+    fs::create_dir_all(golden_dir()).unwrap();
+
+    let mut blessed = Vec::new();
+    let mut mismatches = Vec::new();
+    for rep in &suite.reports {
+        assert!(
+            rep.error.is_none(),
+            "experiment {} panicked: {}",
+            rep.id,
+            rep.error.as_deref().unwrap_or("")
+        );
+        let path = golden_dir().join(format!("{}.json", rep.id));
+        let got = rep.to_json().to_string();
+        if update || !path.exists() {
+            fs::write(&path, &got).unwrap_or_else(|e| panic!("writing {path:?}: {e}"));
+            blessed.push(rep.id.clone());
+            continue;
+        }
+        let want = fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"));
+        if got != want {
+            mismatches.push(format!("{}: {}", rep.id, first_divergence(&got, &want)));
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!(
+            "blessed {} golden file(s) under {:?} — commit them: {blessed:?}",
+            blessed.len(),
+            golden_dir()
+        );
+    }
+    assert!(
+        mismatches.is_empty(),
+        "{} golden mismatch(es) — if the change is intentional, regen with \
+         `UPDATE_GOLDENS=1 cargo test --test golden_runs` and commit:\n{}",
+        mismatches.len(),
+        mismatches.join("\n")
+    );
+
+    // A golden that matches no registered experiment is a rename/removal
+    // that silently escaped regression coverage — fail loudly.
+    let known: Vec<String> = suite.reports.iter().map(|r| format!("{}.json", r.id)).collect();
+    for entry in fs::read_dir(golden_dir()).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        if name.ends_with(".json") {
+            assert!(
+                known.contains(&name),
+                "stale golden {name} matches no registered experiment — \
+                 delete it (or restore the experiment id)"
+            );
+        }
+    }
+}
+
+#[test]
+fn quick_suite_json_is_byte_identical_across_runs_and_thread_counts() {
+    let a = Runner::new(2).run(registry::registry(), true, 7).to_json().to_string();
+    let b = Runner::new(4).run(registry::registry(), true, 7).to_json().to_string();
+    assert!(
+        a == b,
+        "suite JSON differs between identical-seed runs; {}",
+        first_divergence(&a, &b)
+    );
+}

@@ -9,6 +9,7 @@ use thor::prop_assert;
 use thor::simdevice::{devices, exec::ideal_energy_per_iter, Device};
 use thor::thor::parse::{parse, Position};
 use thor::thor::profiler;
+use thor::thor::{estimator, Thor, ThorConfig};
 use thor::util::json::Json;
 use thor::util::proptest::{check, Config};
 use thor::util::rng::Pcg64;
@@ -179,6 +180,55 @@ fn prop_variant_graphs_simulate_positively_on_all_devices() {
             let mut dev = Device::new(profile, 1);
             let (e, t) = profiler::measure(&mut dev, &g, 30);
             prop_assert!(e > 0.0 && t > 0.0, "e={e} t={t}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_layerwise_estimates_sum_to_pipeline_estimate() {
+    // Layer-wise energy additivity (paper eq. 4): the per-layer estimates
+    // reported by `thor::estimator` must sum to the whole-model estimate
+    // returned by the `thor::pipeline` path, across sampled architectures
+    // and every simulated device in the fleet.
+    let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
+    let fleet: Vec<(String, Thor)> = devices::all()
+        .into_iter()
+        .map(|p| {
+            let name = p.name.to_string();
+            let mut dev = Device::new(p, 11);
+            let mut t = Thor::new(ThorConfig::quick());
+            t.profile(&mut dev, &reference);
+            (name, t)
+        })
+        .collect();
+    check(
+        "estimator additivity",
+        Config { cases: 20, seed: 163 },
+        |r| (sample(Family::Cnn5, r, 10), r.range_usize(0, fleet.len() - 1)),
+        |(g, di)| {
+            let (dev_name, thor) = &fleet[*di];
+            let whole = thor.estimate(dev_name, g).map_err(|e| e.to_string())?;
+            let direct = estimator::estimate(&thor.store, dev_name, g).map_err(|e| e.to_string())?;
+            let sum: f64 = whole.per_layer.iter().map(|(_, _, e)| e).sum();
+            let tol = 1e-9 * whole.energy_per_iter.abs().max(1e-12);
+            prop_assert!(
+                (sum - whole.energy_per_iter).abs() <= tol,
+                "per-layer sum {sum} vs whole-model {} on {dev_name}",
+                whole.energy_per_iter
+            );
+            prop_assert!(
+                (direct.energy_per_iter - whole.energy_per_iter).abs() <= tol,
+                "estimator {} vs pipeline {} on {dev_name}",
+                direct.energy_per_iter,
+                whole.energy_per_iter
+            );
+            prop_assert!(
+                whole.per_layer.len() == parse(g).groups.len(),
+                "{} per-layer terms for {} groups",
+                whole.per_layer.len(),
+                parse(g).groups.len()
+            );
             Ok(())
         },
     );
