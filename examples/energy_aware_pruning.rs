@@ -1,72 +1,21 @@
-//! Fig 13 — energy-aware pruning case study.
+//! Fig 13 — energy-aware pruning case study, now a first-class registry
+//! experiment: this example is a thin wrapper over `thor exp fig13`.
 //!
-//! A CelebA-gender-like task under a 50 % energy budget on Xavier:
-//! random channel pruning guided by (a) THOR's GP estimates and (b) the
-//! FLOPs-ratio heuristic.  The pruned network is then actually trained
-//! through the PJRT artifact (channel masks) to show accuracy holds,
-//! while the device simulator accounts the energy.
+//! Random channel pruning on Xavier under 30/50/70 % energy budgets,
+//! guided by THOR's GP estimates vs the FLOPs-ratio heuristic (which
+//! overshoots).  Actually training a channel-masked network through the
+//! PJRT artifact is covered by `rust/tests/integration.rs`
+//! (`artifact_pruned_training_freezes_masked_channels`); plain artifact
+//! training by `examples/end_to_end_training.rs`.
 //!
-//!     make artifacts && cargo run --release --example energy_aware_pruning
+//!     cargo run --release --example energy_aware_pruning
 
-use thor::model::zoo;
-use thor::pruning::{prune_cnn5, Guidance};
-use thor::runtime::{Runtime, TrainStep};
-use thor::simdevice::{devices, Device};
-use thor::thor::{Thor, ThorConfig};
-use thor::trainer::{train, GenderLikeData};
+use thor::exp::{by_id, Experiment as _, ExpConfig};
 
 fn main() -> anyhow::Result<()> {
-    let original = [16usize, 32, 64, 128];
-    let budget = 0.5;
-    let iterations = 2000usize; // paper: ~2000 iterations, ~20 kJ original
-
-    // --- profile THOR on the device --------------------------------------
-    let mut dev = Device::new(devices::xavier(), 9);
-    let mut thor = Thor::new(ThorConfig::quick());
-    thor.profile(&mut dev, &zoo::cnn5(&original, 16, 10));
-
-    // --- search under the 50% budget with both guidances ------------------
-    let meas_iters = 200;
-    let t = prune_cnn5(&mut dev, &original, 16, 10, budget, Guidance::Thor(&thor, "xavier"), 80, meas_iters, 5);
-    let f = prune_cnn5(
-        &mut dev,
-        &original,
-        16,
-        10,
-        budget,
-        Guidance::FlopsRatio { original_actual: t.original_actual },
-        80,
-        meas_iters,
-        5,
-    );
-    println!("original energy: {:.4e} J/iter ({:.1} J per {iterations} iterations)", t.original_actual, t.original_actual * iterations as f64);
-    println!(
-        "THOR-guided : channels {:?} predicted {:.1}% actual {:.1}% of original {}",
-        t.channels,
-        100.0 * t.predicted / t.original_actual,
-        100.0 * t.actual_ratio(),
-        if t.actual_ratio() <= budget + 0.02 { "✓ within budget" } else { "✗ OVER budget" },
-    );
-    println!(
-        "FLOPs-guided: channels {:?} predicted {:.1}% actual {:.1}% of original {}",
-        f.channels,
-        100.0 * f.predicted / f.original_actual,
-        100.0 * f.actual_ratio(),
-        if f.actual_ratio() <= budget + 0.02 { "✓ within budget" } else { "✗ OVER budget" },
-    );
-
-    // --- train pruned networks for real (masks through the artifact) ------
-    let mut rt = Runtime::open(&Runtime::default_dir())?;
-    for (label, ch) in [("dense", vec![8usize, 16]), ("THOR-pruned", vec![
-        (t.channels[0] / 2).clamp(1, 8),
-        (t.channels[1] / 2).clamp(1, 16),
-    ])] {
-        let mut ts = TrainStep::with_pruned(7, ch[0], ch[1]);
-        let mut data = GenderLikeData::new(11, 0.7);
-        let r = train(&mut rt, &mut ts, &mut data, 250, 0.08, 50)?;
-        let e = r.eval.unwrap();
-        println!("{label:12} (keep {ch:?}): final loss {:.4} eval acc {:.3}", e.loss, e.acc);
-    }
-    println!("energy_aware_pruning OK");
+    let exp = by_id("fig13").expect("fig13 registered");
+    let rep = exp.run(&ExpConfig::for_experiment(2025, true, exp.id()));
+    print!("{}", rep.render());
+    println!("energy_aware_pruning OK (same output as `thor exp fig13 --quick`)");
     Ok(())
 }

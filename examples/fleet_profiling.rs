@@ -1,60 +1,20 @@
 //! Fleet profiling through the decoupled client/server architecture
-//! (paper Appendix A5.2): a fitting leader on a TCP socket, device
+//! (paper Appendix A5.2), now a first-class registry experiment: this
+//! example is a thin wrapper over `thor exp fleet1`.
+//!
+//! A fitting leader on an ephemeral loopback TCP port, three device
 //! workers streaming measurements, GPs fitted server-side — all in one
-//! process here for demonstration (the `thor serve` / `thor worker` CLI
-//! runs them as separate processes/hosts).
+//! process (the `thor serve` / `thor worker` CLI runs them as separate
+//! processes/hosts).
 //!
 //!     cargo run --release --example fleet_profiling
 
-use thor::coordinator::{DeviceWorker, FleetServer};
-use thor::exp::measured_energy;
-use thor::model::zoo;
-use thor::simdevice::{devices, Device};
-use thor::thor::estimator::estimate;
-use thor::thor::ThorConfig;
-use thor::util::stats::mape;
+use thor::exp::{by_id, Experiment as _, ExpConfig};
 
 fn main() -> anyhow::Result<()> {
-    let reference = zoo::cnn5(&[32, 64, 128, 256], 16, 10);
-    let addr = "127.0.0.1:7731";
-    let n_workers = 2;
-
-    // workers (each owns a simulated Xavier; a real deployment points
-    // these at physical devices)
-    let mut handles = Vec::new();
-    for w in 0..n_workers {
-        let reference = reference.clone();
-        let addr = addr.to_string();
-        handles.push(std::thread::spawn(move || {
-            // small delay so the leader binds first
-            std::thread::sleep(std::time::Duration::from_millis(150 + 50 * w as u64));
-            let mut worker = DeviceWorker::new(Device::new(devices::xavier(), 100 + w as u64), &reference);
-            worker.run(&addr).map_err(|e| format!("worker: {e}"))
-        }));
-    }
-
-    // leader
-    let server = FleetServer::new(ThorConfig::quick());
-    let store = server.run(addr, &reference, n_workers)?;
-    println!("leader fitted {} family GPs from the fleet", store.len());
-
-    for h in handles {
-        match h.join() {
-            Ok(Ok(jobs)) => println!("worker finished {jobs} jobs"),
-            Ok(Err(e)) => println!("worker error: {e}"),
-            Err(_) => println!("worker panicked"),
-        }
-    }
-
-    // estimate with the fleet-fitted store
-    let mut dev = Device::new(devices::xavier(), 5);
-    let (mut actual, mut est) = (vec![], vec![]);
-    for ch in [[8usize, 16, 32, 64], [3, 30, 60, 100], [16, 8, 4, 2]] {
-        let g = zoo::cnn5(&ch, 16, 10);
-        actual.push(measured_energy(&mut dev, &g, 150, 1));
-        est.push(estimate(&store, "xavier", &g)?.energy_per_iter);
-    }
-    println!("fleet-store MAPE on 3 unseen variants: {:.1}%", mape(&actual, &est));
-    println!("fleet_profiling OK");
+    let exp = by_id("fleet1").expect("fleet1 registered");
+    let rep = exp.run(&ExpConfig::for_experiment(2025, true, exp.id()));
+    print!("{}", rep.render());
+    println!("fleet_profiling OK (same output as `thor exp fleet1 --quick`)");
     Ok(())
 }

@@ -34,7 +34,7 @@ fn main() {
         std::process::exit(2);
     }
 
-    let runner = Runner::from_arg(threads, exps.len());
+    let runner = Runner::from_arg(threads);
     let n = exps.len();
     let suite = runner.run(exps, quick, seed);
 
@@ -43,7 +43,6 @@ fn main() {
         suite.threads_used
     );
     print!("{}", suite.render());
-    println!("# (Fig 13 — pruning case study — runs as examples/energy_aware_pruning)");
     eprintln!("ran {n} experiment(s) in {:.1}s", suite.wall_seconds);
     if suite.eprint_failures() > 0 {
         std::process::exit(1);

@@ -4,13 +4,17 @@
 //! back over TCP with a line-delimited JSON protocol.  `std::net` +
 //! scoped threads (no async runtime is available offline).
 //!
-//! Invariants (property-tested):
+//! Invariants (property-tested in `scheduler`, and promoted to
+//! integration level over real sockets in `rust/tests/fleet.rs`):
 //! * every issued job is eventually resolved exactly once (no
 //!   double-assignment, no loss on worker failure — jobs are re-queued);
 //! * per-family measurement order does not affect the final GP (the GP
 //!   is permutation-invariant in its training set);
 //! * the scheduler terminates once every family converges or exhausts
-//!   its budget.
+//!   its budget;
+//! * with per-job measurement seeds ([`worker::job_seed`]) the final
+//!   store is a pure function of (reference, config, base seed) —
+//!   independent of worker count, scheduling, and mid-run worker death.
 
 pub mod protocol;
 pub mod scheduler;
@@ -19,5 +23,5 @@ pub mod worker;
 
 pub use protocol::Msg;
 pub use scheduler::{JobQueue, JobState};
-pub use server::FleetServer;
-pub use worker::DeviceWorker;
+pub use server::{BoundFleetServer, FleetRun, FleetServer};
+pub use worker::{job_seed, DeviceWorker};

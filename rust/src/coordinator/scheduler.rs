@@ -22,6 +22,11 @@ pub struct Job {
     pub channels: Vec<usize>,
     pub iterations: usize,
     pub state: JobState,
+    /// Routing preference: only this worker may take the job while it
+    /// lives (deterministic per-worker job counts for the fleet
+    /// experiment).  Cleared when the worker dies, so pinned jobs never
+    /// strand.
+    pub affinity: Option<usize>,
 }
 
 /// FIFO queue with at-most-one-outstanding-job-per-worker routing.
@@ -37,17 +42,36 @@ impl JobQueue {
     }
 
     pub fn submit(&mut self, family: &str, channels: Vec<usize>, iterations: usize) -> u64 {
+        self.submit_to(family, channels, iterations, None)
+    }
+
+    /// Submit with an optional worker affinity.
+    pub fn submit_to(
+        &mut self,
+        family: &str,
+        channels: Vec<usize>,
+        iterations: usize,
+        affinity: Option<usize>,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
         self.jobs.insert(
             id,
-            Job { id, family: family.to_string(), channels, iterations, state: JobState::Queued },
+            Job {
+                id,
+                family: family.to_string(),
+                channels,
+                iterations,
+                state: JobState::Queued,
+                affinity,
+            },
         );
         id
     }
 
-    /// Assign the oldest queued job to `worker` unless it already holds
-    /// one (at-most-one-outstanding invariant).
+    /// Assign the oldest queued job routable to `worker` (no affinity, or
+    /// affinity to it) unless it already holds one
+    /// (at-most-one-outstanding invariant).
     pub fn assign(&mut self, worker: usize) -> Option<Job> {
         if self.jobs.values().any(|j| j.state == (JobState::Assigned { worker })) {
             return None;
@@ -55,7 +79,9 @@ impl JobQueue {
         let id = self
             .jobs
             .values()
-            .find(|j| j.state == JobState::Queued)
+            .find(|j| {
+                j.state == JobState::Queued && j.affinity.map_or(true, |a| a == worker)
+            })
             .map(|j| j.id)?;
         let job = self.jobs.get_mut(&id).unwrap();
         job.state = JobState::Assigned { worker };
@@ -74,13 +100,18 @@ impl JobQueue {
         }
     }
 
-    /// A worker died: re-queue its in-flight jobs.
+    /// A worker died: re-queue its in-flight jobs and strip its affinity
+    /// from every live job (pinned-but-unassigned jobs would otherwise
+    /// strand forever).  Returns the number of re-queued jobs.
     pub fn requeue_worker(&mut self, worker: usize) -> usize {
         let mut n = 0;
         for j in self.jobs.values_mut() {
             if j.state == (JobState::Assigned { worker }) {
                 j.state = JobState::Queued;
                 n += 1;
+            }
+            if j.affinity == Some(worker) {
+                j.affinity = None;
             }
         }
         n
@@ -92,6 +123,11 @@ impl JobQueue {
 
     pub fn done(&self) -> usize {
         self.jobs.values().filter(|j| j.state == JobState::Done).count()
+    }
+
+    /// Total jobs ever submitted.
+    pub fn submitted(&self) -> usize {
+        self.jobs.len()
     }
 
     pub fn get(&self, id: u64) -> Option<&Job> {
@@ -131,6 +167,33 @@ mod tests {
         assert!(!q.complete(id, 1), "result from wrong worker accepted");
         assert!(q.complete(id, 0));
         assert!(!q.complete(id, 0), "duplicate completion accepted");
+    }
+
+    #[test]
+    fn affinity_routes_to_pinned_worker_only() {
+        let mut q = JobQueue::new();
+        let pinned = q.submit_to("f", vec![1], 10, Some(1));
+        let free = q.submit("f", vec![2], 10);
+        // worker 0 must skip the pinned job and take the free one
+        assert_eq!(q.assign(0).unwrap().id, free);
+        assert_eq!(q.assign(1).unwrap().id, pinned);
+    }
+
+    #[test]
+    fn affinity_cleared_when_pinned_worker_dies() {
+        let mut q = JobQueue::new();
+        let a = q.submit_to("f", vec![1], 10, Some(1));
+        let b = q.submit_to("f", vec![2], 10, Some(1));
+        assert_eq!(q.assign(1).unwrap().id, a);
+        // worker 1 dies holding `a`, with `b` still queued-and-pinned
+        assert_eq!(q.requeue_worker(1), 1);
+        // both jobs are now routable to worker 0
+        assert_eq!(q.assign(0).unwrap().id, a);
+        assert!(q.complete(a, 0));
+        assert_eq!(q.assign(0).unwrap().id, b);
+        assert!(q.complete(b, 0));
+        assert_eq!(q.pending(), 0);
+        assert_eq!(q.submitted(), 2);
     }
 
     #[test]

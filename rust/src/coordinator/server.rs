@@ -8,24 +8,34 @@
 //! push (worker, msg) events into an mpsc channel; the leader thread
 //! owns all state (queue + fit loops) — no shared-state locking beyond
 //! the channel.
+//!
+//! Determinism: jobs are submitted with a worker affinity (fit index
+//! modulo live workers) and only issued once every expected worker has
+//! said Hello (or [`FORMATION_GRACE`] expires), so with per-job-seeded
+//! workers ([`crate::coordinator::worker::job_seed`]) the final store
+//! *and* the per-worker job counts are pure functions of (reference,
+//! config, base seed) — independent of OS scheduling.  On a worker
+//! death its jobs re-queue with affinity cleared, trading count
+//! determinism for liveness (the store stays deterministic either way).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coordinator::protocol::Msg;
 use crate::coordinator::scheduler::JobQueue;
+use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
+use crate::gp::GpModel;
 use crate::model::ModelGraph;
 use crate::thor::fit::FitConfig;
 use crate::thor::parse::{parse, Position};
 use crate::thor::pipeline::{log_channel, ThorConfig};
 use crate::thor::profiler::{fc_in_after, ranges};
 use crate::thor::store::{GpStore, StoredGp};
-use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
-use crate::gp::GpModel;
 
 enum Event {
     Connected(usize, TcpStream),
@@ -51,9 +61,43 @@ struct FamilyFit {
     stage: usize,
 }
 
+/// Outcome of one fleet profiling run (see
+/// [`BoundFleetServer::serve`]).
+pub struct FleetRun {
+    pub store: GpStore,
+    /// Jobs ever submitted by the leader.
+    pub jobs_submitted: usize,
+    /// Jobs completed (each exactly once; duplicates are dropped).
+    pub jobs_done: usize,
+    /// Completed jobs per worker index (connection order), length =
+    /// `expect_workers`.
+    pub per_worker: Vec<usize>,
+    /// In-flight jobs re-queued because their worker disconnected.
+    pub requeued: usize,
+}
+
 /// The fleet fitting server.
 pub struct FleetServer {
     pub cfg: ThorConfig,
+}
+
+/// How long the leader waits for the full fleet to say Hello before
+/// proceeding with whoever showed up.  Within the window, job issue is
+/// gated on all `expect_workers` Hellos (deterministic affinity); after
+/// it, liveness wins — a worker that never connects or dies before
+/// Hello no longer hangs `thor serve` forever.  In-process fleets
+/// (fleet1, tests) form in milliseconds, so the degraded path never
+/// fires there and wall-clock never influences their reports.
+const FORMATION_GRACE: Duration = Duration::from_secs(30);
+
+/// A fleet server bound to a local address but not yet serving — lets
+/// callers bind to an ephemeral port (`127.0.0.1:0`), read
+/// [`BoundFleetServer::local_addr`], hand it to workers, then
+/// [`BoundFleetServer::serve`].
+pub struct BoundFleetServer {
+    cfg: ThorConfig,
+    listener: TcpListener,
+    addr: SocketAddr,
 }
 
 impl FleetServer {
@@ -61,20 +105,40 @@ impl FleetServer {
         Self { cfg }
     }
 
+    /// Bind `addr` (supports port 0 for an OS-assigned port).
+    pub fn bind(&self, addr: &str) -> Result<BoundFleetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(BoundFleetServer { cfg: self.cfg, listener, addr })
+    }
+
     /// Serve on `addr` until every family of `reference` is fitted for
     /// `expect_workers` workers' devices, then shut workers down.
+    /// Convenience wrapper over [`FleetServer::bind`] +
+    /// [`BoundFleetServer::serve`] for the CLI.
+    pub fn run(&self, addr: &str, reference: &ModelGraph, expect_workers: usize) -> Result<GpStore> {
+        Ok(self.bind(addr)?.serve(reference, expect_workers)?.store)
+    }
+}
+
+impl BoundFleetServer {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Serve until every family of `reference` is fitted, then shut
+    /// workers down.
     ///
     /// Single-device fleet: all workers must expose the same device type
     /// (heterogeneous fleets run one server per device type — matching
     /// the paper, where GPs never transfer across devices).
-    pub fn run(&self, addr: &str, reference: &ModelGraph, expect_workers: usize) -> Result<GpStore> {
-        let listener = TcpListener::bind(addr)?;
-        let real_addr = listener.local_addr()?;
+    pub fn serve(self, reference: &ModelGraph, expect_workers: usize) -> Result<FleetRun> {
+        let BoundFleetServer { cfg, listener, addr: _ } = self;
         let (tx, rx) = mpsc::channel::<Event>();
 
         // accept loop
         let accept_tx = tx.clone();
-        let accept_handle = std::thread::spawn(move || {
+        std::thread::spawn(move || {
             for (i, stream) in listener.incoming().enumerate() {
                 let Ok(stream) = stream else { break };
                 let _ = accept_tx.send(Event::Connected(i, stream));
@@ -83,15 +147,14 @@ impl FleetServer {
                 }
             }
         });
-        let _ = real_addr;
 
         // leader state
         let parsed = parse(reference);
         let rg = ranges(&parsed);
         let out_tmpl = parsed.output_groups().next().unwrap().clone();
         let in_tmpl = parsed.input_groups().next().unwrap().clone();
-        let fit_cfg_1 = self.fit_cfg(1);
-        let fit_cfg_2 = self.fit_cfg(2);
+        let fit_cfg_1 = fit_cfg(&cfg, 1);
+        let fit_cfg_2 = fit_cfg(&cfg, 2);
 
         let mut fits: Vec<FamilyFit> = Vec::new();
         fits.push(FamilyFit {
@@ -143,8 +206,13 @@ impl FleetServer {
         let mut queue = JobQueue::new();
         let mut job_meta: HashMap<u64, usize> = HashMap::new(); // job -> fit index
         let mut writers: HashMap<usize, TcpStream> = HashMap::new();
+        let mut helloed: BTreeSet<usize> = BTreeSet::new();
         let mut device_name = String::new();
         let mut store = GpStore::new();
+        let mut per_worker = vec![0usize; expect_workers];
+        let mut requeued = 0usize;
+        let started = Instant::now();
+        let mut gate_open = false;
 
         // Helper: (re)fit a family GP from its points; store when done.
         let finalize = |fit: &FamilyFit, store: &mut GpStore, dev: &str, cfg: &FitConfig| {
@@ -168,19 +236,49 @@ impl FleetServer {
         };
 
         loop {
+            // Job issue is gated until the whole fleet has said Hello,
+            // so job → worker affinity is deterministic from the first
+            // job on; after FORMATION_GRACE, proceed with the partial
+            // fleet rather than hanging forever (liveness over count
+            // determinism — the store stays deterministic either way).
+            if !gate_open
+                && !device_name.is_empty()
+                && (helloed.len() >= expect_workers
+                    || (!helloed.is_empty() && started.elapsed() >= FORMATION_GRACE))
+            {
+                gate_open = true;
+                if helloed.len() < expect_workers {
+                    eprintln!(
+                        "fleet leader: only {}/{} workers joined within {FORMATION_GRACE:?}; \
+                         proceeding with the partial fleet",
+                        helloed.len(),
+                        expect_workers
+                    );
+                }
+            }
+
             // issue next probes for ready, unconverged families
             // (stage gating: out → in → hidden, per subtractivity)
-            if !device_name.is_empty() {
+            if gate_open {
+                let live: Vec<usize> = {
+                    let mut v: Vec<usize> = writers.keys().copied().collect();
+                    v.sort_unstable();
+                    v
+                };
                 for (fi, fit) in fits.iter_mut().enumerate() {
                     if fit.converged || fit.outstanding.is_some() {
                         continue;
                     }
-                    if !stage_ready_impl(&store, &device_name, fit.stage, &stage_gate_names(fit.stage, &out_tmpl, &in_tmpl)) {
+                    if !stage_ready_impl(
+                        &store,
+                        &device_name,
+                        fit.stage,
+                        &stage_gate_names(fit.stage, &out_tmpl, &in_tmpl),
+                    ) {
                         continue;
                     }
-                    let cfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
-                    let next = next_probe(fit, cfg);
-                    match next {
+                    let fcfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
+                    match next_probe(fit, fcfg) {
                         Some(p) => {
                             let channels: Vec<usize> =
                                 p.iter().zip(&fit.x_max).map(|(v, m)| log_channel(*v, *m)).collect();
@@ -195,20 +293,27 @@ impl FleetServer {
                                 &parsed,
                                 &fit.family,
                             );
-                            let id = queue.submit(&fit.family, channels, self.cfg.iterations);
+                            let affinity = if live.is_empty() {
+                                None
+                            } else {
+                                Some(live[fi % live.len()])
+                            };
+                            let id =
+                                queue.submit_to(&fit.family, channels, cfg.iterations, affinity);
                             job_meta.insert(id, fi);
                             fit.outstanding = Some((id, p, subtract));
                         }
                         None => {
                             fit.converged = true;
-                            finalize(fit, &mut store, &device_name, cfg);
+                            finalize(fit, &mut store, &device_name, fcfg);
                         }
                     }
                 }
             }
 
-            // assign queued jobs to idle workers
-            let worker_ids: Vec<usize> = writers.keys().copied().collect();
+            // assign queued jobs to idle workers (sorted for determinism)
+            let mut worker_ids: Vec<usize> = writers.keys().copied().collect();
+            worker_ids.sort_unstable();
             for w in worker_ids {
                 if let Some(job) = queue.assign(w) {
                     let msg = Msg::Job {
@@ -228,10 +333,25 @@ impl FleetServer {
                 break;
             }
 
-            // wait for events
-            match rx.recv() {
-                Err(_) => break,
-                Ok(Event::Connected(w, stream)) => {
+            // wait for events; before the gate opens, wake up at the
+            // formation deadline so a partial fleet can proceed
+            let event = if gate_open {
+                match rx.recv() {
+                    Ok(e) => e,
+                    Err(_) => break,
+                }
+            } else {
+                let wait = FORMATION_GRACE
+                    .checked_sub(started.elapsed())
+                    .unwrap_or(Duration::from_millis(50));
+                match rx.recv_timeout(wait) {
+                    Ok(e) => e,
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            match event {
+                Event::Connected(w, stream) => {
                     let reader_tx = tx.clone();
                     let read_stream = stream.try_clone()?;
                     writers.insert(w, stream);
@@ -255,14 +375,17 @@ impl FleetServer {
                         }
                     });
                 }
-                Ok(Event::Message(w, Msg::Hello { device })) => {
+                Event::Message(w, Msg::Hello { device }) => {
+                    helloed.insert(w);
                     if device_name.is_empty() {
                         device_name = device;
                     }
-                    let _ = w;
                 }
-                Ok(Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds })) => {
+                Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds }) => {
                     if queue.complete(job_id, w) {
+                        if w < per_worker.len() {
+                            per_worker[w] += 1;
+                        }
                         if let Some(&fi) = job_meta.get(&job_id) {
                             let fit = &mut fits[fi];
                             if let Some((oid, p, subtract)) = fit.outstanding.take() {
@@ -274,21 +397,16 @@ impl FleetServer {
                         }
                     }
                 }
-                Ok(Event::Message(_, _)) => {}
-                Ok(Event::Disconnected(w)) => {
-                    queue.requeue_worker(w);
-                    // drop outstanding markers pointing at requeued jobs
-                    for fit in fits.iter_mut() {
-                        if let Some((id, _, _)) = &fit.outstanding {
-                            if queue.get(*id).map(|j| j.state == crate::coordinator::scheduler::JobState::Queued).unwrap_or(false) {
-                                // leave outstanding: job will be re-assigned under same id
-                                let _ = id;
-                            }
-                        }
-                    }
+                Event::Message(_, _) => {}
+                Event::Disconnected(w) => {
+                    // Re-queue the dead worker's in-flight jobs (affinity
+                    // cleared): they keep their ids, so the outstanding
+                    // markers stay valid and completion by another worker
+                    // matches.
+                    requeued += queue.requeue_worker(w);
                     writers.remove(&w);
                     if writers.is_empty() && queue.pending() > 0 {
-                        // no workers left: abort
+                        // no workers left: abort with what we have
                         break;
                     }
                 }
@@ -298,8 +416,8 @@ impl FleetServer {
         // finalize any unconverged-but-budgeted fits
         for fit in &fits {
             if !store.contains(&device_name, &fit.family) && !fit.points.is_empty() {
-                let cfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
-                finalize(fit, &mut store, &device_name, cfg);
+                let fcfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
+                finalize(fit, &mut store, &device_name, fcfg);
             }
         }
 
@@ -307,21 +425,26 @@ impl FleetServer {
         for (_, mut s) in writers {
             let _ = s.write_all(Msg::Shutdown.encode().as_bytes());
         }
-        drop(accept_handle);
-        Ok(store)
+        Ok(FleetRun {
+            store,
+            jobs_submitted: queue.submitted(),
+            jobs_done: queue.done(),
+            per_worker,
+            requeued,
+        })
     }
+}
 
-    fn fit_cfg(&self, dim: usize) -> FitConfig {
-        FitConfig {
-            kind: self.cfg.kind,
-            max_points: if dim == 1 { self.cfg.max_points_1d } else { self.cfg.max_points_2d },
-            threshold_frac: self.cfg.threshold_frac,
-            grid_n: if dim == 1 { self.cfg.grid_n_1d } else { self.cfg.grid_n_2d },
-            time_surrogate: self.cfg.time_surrogate,
-            random_sampling: self.cfg.random_sampling,
-            log_targets: true,
-            seed: self.cfg.seed,
-        }
+fn fit_cfg(cfg: &ThorConfig, dim: usize) -> FitConfig {
+    FitConfig {
+        kind: cfg.kind,
+        max_points: if dim == 1 { cfg.max_points_1d } else { cfg.max_points_2d },
+        threshold_frac: cfg.threshold_frac,
+        grid_n: if dim == 1 { cfg.grid_n_1d } else { cfg.grid_n_2d },
+        time_surrogate: cfg.time_surrogate,
+        random_sampling: cfg.random_sampling,
+        log_targets: true,
+        seed: cfg.seed,
     }
 }
 

@@ -49,19 +49,59 @@ impl VariantBuilder {
     }
 }
 
+/// Deterministic per-job device seed: FNV-1a ([`crate::util::hash`]) over
+/// (base seed ‖ family ‖ channels ‖ iterations).  Any worker measuring
+/// the same job with the same base seed gets the same result, which
+/// makes a whole fleet run a pure function of the job stream —
+/// independent of which worker ran what, in what order (see
+/// `rust/tests/fleet.rs`).
+pub fn job_seed(base_seed: u64, family: &str, channels: &[usize], iterations: usize) -> u64 {
+    let mut h = crate::util::hash::Fnv1a::new();
+    h.write(&base_seed.to_le_bytes());
+    h.write(family.as_bytes());
+    for c in channels {
+        h.write(&(*c as u64).to_le_bytes());
+    }
+    h.write(&(iterations as u64).to_le_bytes());
+    h.finish()
+}
+
 /// A worker process bound to one simulated device.
 pub struct DeviceWorker {
     pub device: Device,
     pub builder: VariantBuilder,
+    /// When set, each job is measured on a *fresh* device seeded from
+    /// [`job_seed`] of this base — scheduling-independent results.  When
+    /// unset (default), the one stateful device carries DVFS/thermal
+    /// state across jobs, like a physical device would.
+    per_job_seed: Option<u64>,
 }
 
 impl DeviceWorker {
     pub fn new(device: Device, reference: &ModelGraph) -> Self {
-        Self { device, builder: VariantBuilder::from_reference(reference) }
+        Self { device, builder: VariantBuilder::from_reference(reference), per_job_seed: None }
+    }
+
+    /// Switch to deterministic per-job measurement seeds (fleet
+    /// experiments and tests; see [`job_seed`]).
+    pub fn with_per_job_seed(mut self, base_seed: u64) -> Self {
+        self.per_job_seed = Some(base_seed);
+        self
     }
 
     /// Connect and serve until Shutdown.  Returns jobs completed.
     pub fn run(&mut self, addr: &str) -> Result<usize> {
+        self.run_inner(addr, None)
+    }
+
+    /// Connect and serve, but drop the connection upon *receiving* the
+    /// `max_jobs + 1`-th job, leaving it unanswered — fault injection for
+    /// the re-queue path (`rust/tests/fleet.rs`).  Returns jobs completed.
+    pub fn run_limited(&mut self, addr: &str, max_jobs: usize) -> Result<usize> {
+        self.run_inner(addr, Some(max_jobs))
+    }
+
+    fn run_inner(&mut self, addr: &str, max_jobs: Option<usize>) -> Result<usize> {
         let stream = TcpStream::connect(addr)?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = stream;
@@ -74,8 +114,18 @@ impl DeviceWorker {
             }
             match Msg::decode(&line) {
                 Some(Msg::Job { job_id, family, channels, iterations }) => {
+                    if max_jobs.map_or(false, |m| done >= m) {
+                        break; // injected fault: die with the job in flight
+                    }
                     let g = self.builder.build(&family, &channels)?;
-                    let (e, dt) = profiler::measure(&mut self.device, &g, iterations);
+                    let (e, dt) = match self.per_job_seed {
+                        Some(base) => {
+                            let seed = job_seed(base, &family, &channels, iterations);
+                            let mut dev = Device::new(self.device.profile.clone(), seed);
+                            profiler::measure(&mut dev, &g, iterations)
+                        }
+                        None => profiler::measure(&mut self.device, &g, iterations),
+                    };
                     writer.write_all(
                         Msg::Result { job_id, energy_per_iter: e, device_seconds: dt }
                             .encode()
@@ -113,6 +163,16 @@ mod tests {
             assert!(!g.layers.is_empty());
         }
         assert!(b.build("nonexistent", &[1]).is_err());
+    }
+
+    #[test]
+    fn job_seed_is_stable_and_content_sensitive() {
+        let base = job_seed(42, "fam", &[4, 8], 60);
+        assert_eq!(base, job_seed(42, "fam", &[4, 8], 60));
+        assert_ne!(base, job_seed(43, "fam", &[4, 8], 60));
+        assert_ne!(base, job_seed(42, "maf", &[4, 8], 60));
+        assert_ne!(base, job_seed(42, "fam", &[8, 4], 60));
+        assert_ne!(base, job_seed(42, "fam", &[4, 8], 61));
     }
 
     #[test]

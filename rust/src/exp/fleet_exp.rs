@@ -1,0 +1,102 @@
+//! fleet1 — the decoupled fleet-profiling architecture (paper Appendix
+//! A5.2), promoted from `examples/fleet_profiling.rs` into a first-class
+//! registry experiment.
+//!
+//! An in-process loopback fleet: a [`FleetServer`] leader bound to an
+//! ephemeral `127.0.0.1` port and `N_WORKERS` [`DeviceWorker`] threads
+//! streaming measurements back over real TCP.  Workers run with
+//! deterministic per-job measurement seeds and the leader pins jobs to
+//! workers by family affinity, so the report — per-worker job counts and
+//! the MAPE of estimates from the fleet-fitted [`GpStore`] — is a pure
+//! function of the experiment config, byte-stable across runs and
+//! thread counts despite the real sockets and threads underneath.
+
+use crate::coordinator::{DeviceWorker, FleetServer};
+use crate::exp::registry::Experiment;
+use crate::exp::report::ExpReport;
+use crate::exp::{measured_energy, ExpConfig};
+use crate::model::zoo;
+use crate::simdevice::{devices, Device};
+use crate::thor::estimator::estimate;
+use crate::util::stats::mape;
+
+const N_WORKERS: usize = 3;
+
+/// Unseen cnn5 variants the fleet-fitted store is scored on.
+const TEST_VARIANTS: [[usize; 4]; 4] =
+    [[8, 16, 32, 64], [3, 30, 60, 100], [16, 8, 4, 2], [24, 48, 96, 20]];
+
+pub struct Fleet1;
+
+impl Experiment for Fleet1 {
+    fn id(&self) -> &'static str {
+        "fleet1"
+    }
+
+    fn description(&self) -> &'static str {
+        "loopback fleet profiling: leader + 3 TCP workers fit the GP store, then estimate"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "decoupled fleet profiling (loopback)", cfg, &["xavier"]);
+        let reference = zoo::cnn5(&[32, 64, 128, 256], 16, 10);
+
+        // leader on an ephemeral port; workers connect to it
+        let server = FleetServer::new(cfg.thor_cfg());
+        let bound = server.bind("127.0.0.1:0").expect("bind loopback");
+        let addr = bound.local_addr().to_string();
+
+        let mut handles = Vec::new();
+        for w in 0..N_WORKERS {
+            let reference = reference.clone();
+            let addr = addr.clone();
+            let base_seed = cfg.seed;
+            handles.push(std::thread::spawn(move || {
+                // The worker's own device seed is irrelevant under
+                // per-job seeding; keep it distinct anyway, as a real
+                // fleet would.
+                let mut worker =
+                    DeviceWorker::new(Device::new(devices::xavier(), 100 + w as u64), &reference)
+                        .with_per_job_seed(base_seed);
+                worker.run(&addr)
+            }));
+        }
+
+        let run = bound.serve(&reference, N_WORKERS).expect("fleet serve");
+        for h in handles {
+            let _ = h.join();
+        }
+
+        // estimate unseen variants with the fleet-fitted store
+        let mut dev = Device::new(devices::xavier(), cfg.seed + 9);
+        let iters = cfg.iterations();
+        let (mut actual, mut est) = (Vec::new(), Vec::new());
+        for ch in TEST_VARIANTS {
+            let g = zoo::cnn5(&ch, 16, 10);
+            actual.push(measured_energy(&mut dev, &g, iters, 1));
+            est.push(estimate(&run.store, "xavier", &g).expect("fleet store covers cnn5").energy_per_iter);
+        }
+
+        rep.push_table(
+            "fleet job distribution (family-affinity scheduling)",
+            &["worker", "jobs done"],
+            run.per_worker
+                .iter()
+                .enumerate()
+                .map(|(w, n)| vec![format!("{w}"), format!("{n}")])
+                .collect(),
+        );
+        rep.metric("families_fitted", run.store.len() as f64);
+        rep.metric("jobs_total", run.jobs_done as f64);
+        rep.metric("jobs_requeued", run.requeued as f64);
+        rep.metric("fleet_mape", mape(&actual, &est));
+        rep.note(format!(
+            "leader fitted {} family GPs from {} jobs across {} loopback workers",
+            run.store.len(),
+            run.jobs_done,
+            N_WORKERS
+        ));
+        rep
+    }
+}

@@ -1,22 +1,24 @@
 //! Experiment registry: every paper table/figure is a registered
 //! [`registry::Experiment`] producing a structured, JSON-serializable
 //! [`report::ExpReport`], executed (possibly many at a time) by the
-//! multi-threaded [`runner::Runner`].
+//! multi-threaded [`runner::Runner`] with deterministic within-experiment
+//! subtask fan-out ([`registry::Subtask`]).
 //!
 //! # Layout
 //!
-//! | module       | contents                                              |
-//! |--------------|-------------------------------------------------------|
-//! | [`report`]   | `ExpReport` (tables, series, metrics, notes) + JSON   |
-//! | [`registry`] | the `Experiment` trait and the id → experiment table  |
-//! | [`runner`]   | work-stealing thread pool + suite JSON/render         |
-//! | [`tables`]   | fig2, fig7, fig8 (+ Table 1), fig9, fig12             |
-//! | [`figures`]  | fig4, fig5, fig6, fig10, fig11                        |
-//! | [`ablation`] | a14 (point budget), a15 (kernels), a16 (iterations)   |
+//! | module          | contents                                             |
+//! |-----------------|------------------------------------------------------|
+//! | [`report`]      | `ExpReport` (tables, series, metrics, notes) + JSON  |
+//! | [`registry`]    | `Experiment` + `Subtask` traits, id → experiment map |
+//! | [`runner`]      | shared worker pool, subtask fan-out, suite JSON      |
+//! | [`tables`]      | fig2, fig7, fig8 (+ Table 1), fig9, fig12            |
+//! | [`figures`]     | fig4, fig5, fig6, fig10, fig11                       |
+//! | [`pruning_exp`] | fig13 (energy-aware pruning case study)              |
+//! | [`ablation`]    | a14 (point budget), a15 (kernels), a16 (iterations)  |
+//! | [`fleet_exp`]   | fleet1 (loopback fleet-profiling, Appendix A5.2)     |
 //!
 //! Experiment ids: `fig2 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! a14 a15 a16` (`tab1` aliases `fig8`; fig13 is the pruning case study
-//! in `examples/energy_aware_pruning.rs`).
+//! fig13 a14 a15 a16 fleet1` (`tab1` aliases `fig8`).
 //!
 //! # Entry points
 //!
@@ -24,16 +26,21 @@
 //!   [--json out.json] [--list]`
 //! * bench: `cargo bench --bench paper_experiments`
 //! * tests: `rust/tests/exp_smoke.rs` (directions), `rust/tests/
-//!   golden_runs.rs` (full-suite regression + determinism)
+//!   golden_runs.rs` (full-suite regression + determinism),
+//!   `rust/tests/properties.rs` (fan-out determinism),
+//!   `rust/tests/fleet.rs` (coordinator invariants at integration level)
 //!
 //! # Determinism & the `--json` schema
 //!
 //! Each experiment runs with a seed derived from the suite seed and its
-//! id ([`ExpConfig::for_experiment`]), so results are independent of
-//! thread scheduling: `thor exp --all --quick --json out.json` is
-//! byte-identical run-to-run for a fixed `--seed`.  Wall-clock values
-//! never enter reports (simulated device-seconds do).  Schema (version
-//! 1):
+//! id ([`ExpConfig::for_experiment`]); each subtask of a fanned-out
+//! experiment runs with a seed derived from the experiment seed and the
+//! subtask label ([`ExpConfig::for_subtask`]), and subtask outputs merge
+//! in declaration order.  Results are therefore independent of thread
+//! scheduling: `thor exp --all --quick --json out.json` is
+//! byte-identical run-to-run and across `--threads 1/2/8` for a fixed
+//! `--seed`.  Wall-clock values never enter reports (simulated
+//! device-seconds do).  Schema (version 1):
 //!
 //! ```text
 //! { "schema_version": 1, "base_seed": "<u64>", "quick": bool,
@@ -50,19 +57,24 @@
 //!
 //! `rust/tests/golden_runs.rs` runs every registered experiment in quick
 //! mode at a fixed seed and diffs each report's JSON against
-//! `rust/tests/golden/<id>.json`.  Missing goldens are written ("blessed")
-//! on first run; after an intentional change to experiment output, regen
-//! with `UPDATE_GOLDENS=1 cargo test --test golden_runs` and commit the
-//! diff.
+//! `rust/tests/golden/<id>.json`.  Blessing (writing goldens) happens
+//! only with `UPDATE_GOLDENS=1` — or, as a bootstrap convenience, when a
+//! golden is missing *and* `GOLDEN_STRICT` is unset; CI exports
+//! `GOLDEN_STRICT=1`, so missing or stale goldens fail there instead of
+//! silently self-blessing.  After an intentional change to experiment
+//! output, regen with `UPDATE_GOLDENS=1 cargo test --test golden_runs`
+//! and commit the diff.
 
 pub mod ablation;
 pub mod figures;
+pub mod fleet_exp;
+pub mod pruning_exp;
 pub mod registry;
 pub mod report;
 pub mod runner;
 pub mod tables;
 
-pub use registry::{by_id, ids, Experiment};
+pub use registry::{by_id, ids, Experiment, Subtask, SubtaskOutput};
 pub use report::ExpReport;
 pub use runner::{Runner, SuiteResult};
 
@@ -94,20 +106,22 @@ impl ExpConfig {
         Self { quick, seed: Self::derive_seed(base_seed, id) }
     }
 
-    /// FNV-1a over (base seed ‖ experiment id): stable across platforms
-    /// and releases (unlike `DefaultHasher`), so golden files and suite
+    /// The config one subtask of a fanned-out experiment runs with: same
+    /// quick flag, seed derived from the experiment seed and the subtask
+    /// label — so results depend only on (suite seed, experiment id,
+    /// label), never on scheduling.
+    pub fn for_subtask(&self, label: &str) -> Self {
+        Self { quick: self.quick, seed: Self::derive_seed(self.seed, label) }
+    }
+
+    /// FNV-1a over (base seed ‖ experiment id) — [`crate::util::hash`]:
+    /// stable across platforms and releases, so golden files and suite
     /// JSON never shift underneath a refactor.
     pub fn derive_seed(base_seed: u64, id: &str) -> u64 {
-        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const PRIME: u64 = 0x0000_0100_0000_01b3;
-        let mut h = OFFSET;
-        for b in base_seed.to_le_bytes() {
-            h = (h ^ b as u64).wrapping_mul(PRIME);
-        }
-        for b in id.as_bytes() {
-            h = (h ^ *b as u64).wrapping_mul(PRIME);
-        }
-        h
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write(&base_seed.to_le_bytes());
+        h.write(id.as_bytes());
+        h.finish()
     }
 
     pub fn n_test(&self) -> usize {
@@ -211,5 +225,16 @@ mod tests {
         let cfg = ExpConfig::for_experiment(7, true, "fig2");
         assert!(cfg.quick);
         assert_eq!(cfg.seed, ExpConfig::derive_seed(7, "fig2"));
+    }
+
+    #[test]
+    fn for_subtask_derives_from_experiment_seed_and_label() {
+        let cfg = ExpConfig::for_experiment(7, true, "fig8");
+        let a = cfg.for_subtask("xavier/cnn5");
+        let b = cfg.for_subtask("server/cnn5");
+        assert!(a.quick && b.quick);
+        assert_eq!(a.seed, ExpConfig::derive_seed(cfg.seed, "xavier/cnn5"));
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(a.seed, cfg.seed);
     }
 }

@@ -1,0 +1,147 @@
+//! Fig 13 — the energy-aware pruning case study (paper §4.3), promoted
+//! from `examples/energy_aware_pruning.rs` into a first-class registry
+//! experiment.
+//!
+//! Random channel pruning of the 5-layer CNN on Xavier under an energy
+//! budget, guided by (a) THOR's GP estimates and (b) the FLOPs-ratio
+//! heuristic.  The paper's headline is the 50 % budget: THOR-guided
+//! pruning lands within budget, FLOPs-guided pruning overshoots because
+//! the ratio heuristic ignores occupancy/padding plateaus.  The
+//! experiment sweeps one subtask per budget fraction so the arms profile
+//! and search in parallel on the suite pool.
+
+use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
+use crate::exp::report::ExpReport;
+use crate::exp::ExpConfig;
+use crate::model::zoo;
+use crate::pruning::{prune_cnn5, Guidance, PruneOutcome};
+use crate::simdevice::{devices, Device};
+use crate::thor::Thor;
+
+/// Budget fractions swept, in presentation order; 0.5 is the paper's
+/// headline budget and feeds the report's metrics.
+pub const BUDGETS: [f64; 3] = [0.3, 0.5, 0.7];
+
+/// Original ("dense") channel widths of the pruned CNN.
+const ORIGINAL: [usize; 4] = [16, 32, 64, 128];
+const IMG: usize = 16;
+const BATCH: usize = 10;
+
+/// Both guidance arms at one budget fraction.
+struct Fig13Arm {
+    budget: f64,
+    thor: PruneOutcome,
+    flops: PruneOutcome,
+}
+
+pub struct Fig13;
+
+impl Fig13 {
+    /// One budget arm: profile THOR on a fresh device, then search under
+    /// the budget with both guidances.  Pure function of the subtask
+    /// config.
+    fn arm(budget: f64, cfg: &ExpConfig) -> Fig13Arm {
+        let reference = zoo::cnn5(&ORIGINAL, IMG, BATCH);
+        let mut dev = Device::new(devices::xavier(), cfg.seed);
+        let mut thor = Thor::new(cfg.thor_cfg());
+        thor.profile(&mut dev, &reference);
+
+        let tries = if cfg.quick { 40 } else { 80 };
+        let iters = cfg.iterations();
+        let t = prune_cnn5(
+            &mut dev,
+            &ORIGINAL,
+            IMG,
+            BATCH,
+            budget,
+            Guidance::Thor(&thor, "xavier"),
+            tries,
+            iters,
+            cfg.seed + 1,
+        );
+        let f = prune_cnn5(
+            &mut dev,
+            &ORIGINAL,
+            IMG,
+            BATCH,
+            budget,
+            Guidance::FlopsRatio { original_actual: t.original_actual },
+            tries,
+            iters,
+            cfg.seed + 1,
+        );
+        Fig13Arm { budget, thor: t, flops: f }
+    }
+
+    fn row(budget: f64, guidance: &str, o: &PruneOutcome) -> Vec<String> {
+        vec![
+            format!("{:.0}%", budget * 100.0),
+            guidance.to_string(),
+            format!("{:?}", o.channels),
+            format!("{:.1}%", 100.0 * o.predicted / o.original_actual),
+            format!("{:.1}%", 100.0 * o.actual_ratio()),
+            if o.actual_ratio() <= budget + 0.02 { "within".to_string() } else { "OVER".to_string() },
+        ]
+    }
+}
+
+impl Experiment for Fig13 {
+    fn id(&self) -> &'static str {
+        "fig13"
+    }
+
+    fn description(&self) -> &'static str {
+        "energy-aware pruning under an energy budget: THOR vs FLOPs-ratio guidance (Xavier)"
+    }
+
+    fn subtasks(&self, _cfg: &ExpConfig) -> Vec<Subtask> {
+        BUDGETS
+            .iter()
+            .map(|&budget| {
+                Subtask::new(format!("budget-{:.0}pct", budget * 100.0), move |scfg: &ExpConfig| {
+                    Self::arm(budget, scfg)
+                })
+            })
+            .collect()
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "energy-aware pruning case study", cfg, &["xavier"]);
+        let mut rows = Vec::new();
+        let mut thor_within = 0usize;
+        let mut flops_within = 0usize;
+        let mut headline: Option<(f64, f64)> = None;
+        let n_arms = parts.len();
+        for part in parts {
+            let arm = *part.downcast::<Fig13Arm>().expect("fig13 arm output");
+            rows.push(Self::row(arm.budget, "THOR", &arm.thor));
+            rows.push(Self::row(arm.budget, "FLOPs-ratio", &arm.flops));
+            if arm.thor.actual_ratio() <= arm.budget + 0.02 {
+                thor_within += 1;
+            }
+            if arm.flops.actual_ratio() <= arm.budget + 0.02 {
+                flops_within += 1;
+            }
+            if (arm.budget - 0.5).abs() < 1e-9 {
+                headline = Some((arm.thor.actual_ratio(), arm.flops.actual_ratio()));
+            }
+        }
+        rep.push_table(
+            "Fig 13 — pruning under an energy budget (actual vs predicted, Xavier)",
+            &["budget", "guidance", "channels", "predicted", "actual", "verdict"],
+            rows,
+        );
+        if let Some((t50, f50)) = headline {
+            rep.metric("thor_actual_ratio_50", t50);
+            rep.metric("flops_actual_ratio_50", f50);
+        }
+        rep.metric("thor_within_budget_frac", thor_within as f64 / n_arms as f64);
+        rep.metric("flops_within_budget_frac", flops_within as f64 / n_arms as f64);
+        rep.note(
+            "FLOPs-ratio guidance underestimates pruned-model energy on occupancy/padding \
+             plateaus and overshoots the budget; THOR's absolute GP estimates land within it.",
+        );
+        rep
+    }
+}

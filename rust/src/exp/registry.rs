@@ -3,24 +3,113 @@
 //! (`thor exp --list`), the bench harness, and the golden-run tests.
 //!
 //! Adding an experiment = implement the trait in `tables.rs` /
-//! `figures.rs` / `ablation.rs` and append it to [`registry`].  Order in
-//! [`registry`] is the canonical presentation order (paper order) and is
-//! preserved by the multi-threaded runner.
+//! `figures.rs` / `ablation.rs` / `pruning_exp.rs` / `fleet_exp.rs` and
+//! append it to [`registry`].  Order in [`registry`] is the canonical
+//! presentation order (paper order) and is preserved by the
+//! multi-threaded runner.
+//!
+//! # Subtask fan-out
+//!
+//! An experiment whose work decomposes into independent cells (the
+//! device × family grid of fig8, the per-budget arms of fig13) can
+//! implement [`Experiment::subtasks`] + [`Experiment::merge`] instead of
+//! [`Experiment::run`]: the runner then fans the subtasks across the
+//! *suite-wide* worker pool and merges the outputs in declaration order,
+//! so one huge experiment no longer serializes behind a single worker.
+//!
+//! Determinism rules for fan-out authors (enforced by
+//! `tests/properties.rs` and the golden harness):
+//!
+//! * subtask labels must be unique and stable — each subtask's seed is
+//!   derived from the experiment seed and its label
+//!   ([`ExpConfig::for_subtask`]), never from scheduling;
+//! * a subtask must be a pure function of its derived [`ExpConfig`]
+//!   (own devices, own RNGs — no shared mutable state);
+//! * [`Experiment::merge`] must be a pure function of the config and the
+//!   outputs *in declaration order* (the runner guarantees that order
+//!   regardless of completion order or thread count);
+//! * a panicking subtask fails only its own experiment: the runner
+//!   reports the first failing subtask in declaration order, so even the
+//!   failure message is byte-stable across thread counts.
+
+use std::any::Any;
 
 use crate::exp::report::ExpReport;
-use crate::exp::{ablation, figures, tables, ExpConfig};
+use crate::exp::{ablation, figures, fleet_exp, pruning_exp, tables, ExpConfig};
+
+/// Type-erased output of one subtask, downcast by the experiment's
+/// [`Experiment::merge`].
+pub type SubtaskOutput = Box<dyn Any + Send>;
+
+/// One independent, seeded unit of an experiment's fan-out.
+pub struct Subtask {
+    /// Stable label, unique within the experiment; the subtask seed is
+    /// derived from it.
+    pub label: String,
+    body: Box<dyn Fn(&ExpConfig) -> SubtaskOutput + Send + Sync>,
+}
+
+impl Subtask {
+    /// Wrap a closure producing any `Any + Send` value; the runner hands
+    /// the boxed output back to [`Experiment::merge`].
+    pub fn new<F, T>(label: impl Into<String>, body: F) -> Self
+    where
+        F: Fn(&ExpConfig) -> T + Send + Sync + 'static,
+        T: Any + Send,
+    {
+        Self { label: label.into(), body: Box::new(move |cfg| Box::new(body(cfg)) as SubtaskOutput) }
+    }
+
+    /// Execute with the subtask-derived config.
+    pub fn run(&self, cfg: &ExpConfig) -> SubtaskOutput {
+        (self.body)(cfg)
+    }
+}
 
 /// One paper table/figure, runnable in isolation or by the suite runner.
 ///
 /// `run` must be a pure function of `cfg` (see the determinism contract
 /// in [`crate::exp::report`]): same config, same report, regardless of
-/// thread scheduling or wall-clock.
+/// thread scheduling or wall-clock.  Monolithic experiments implement
+/// `run`; fan-out experiments implement `subtasks` + `merge` and inherit
+/// the provided `run` (which executes the subtasks sequentially in
+/// declaration order — byte-identical to the runner's parallel path).
 pub trait Experiment: Send + Sync {
     /// Stable identifier (`fig2`, `a15`, ...) — also the golden filename.
     fn id(&self) -> &'static str;
+
     /// One-line description for `thor exp --list`.
     fn description(&self) -> &'static str;
-    fn run(&self, cfg: &ExpConfig) -> ExpReport;
+
+    /// Independent seeded subtasks, in declaration order.  Empty (the
+    /// default) means the experiment is monolithic and `run` does all
+    /// the work on one worker.
+    fn subtasks(&self, cfg: &ExpConfig) -> Vec<Subtask> {
+        let _ = cfg;
+        Vec::new()
+    }
+
+    /// Combine subtask outputs (declaration order) into the report.
+    /// Must be implemented by every experiment with non-empty
+    /// [`Experiment::subtasks`].
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let _ = (cfg, parts);
+        unreachable!("experiment '{}' fans out but does not implement merge()", self.id())
+    }
+
+    /// Produce the report.  The default executes the fan-out
+    /// sequentially; monolithic experiments override it.
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let subs = self.subtasks(cfg);
+        assert!(
+            !subs.is_empty(),
+            "experiment '{}' implements neither run() nor subtasks()",
+            self.id()
+        );
+        let parts: Vec<SubtaskOutput> =
+            subs.iter().map(|s| s.run(&cfg.for_subtask(&s.label))).collect();
+        self.merge(cfg, parts)
+    }
 }
 
 /// All registered experiments, in paper order.
@@ -36,9 +125,11 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(figures::Fig10),
         Box::new(figures::Fig11),
         Box::new(tables::Fig12),
+        Box::new(pruning_exp::Fig13),
         Box::new(ablation::A14),
         Box::new(ablation::A15),
         Box::new(ablation::A16),
+        Box::new(fleet_exp::Fleet1),
     ]
 }
 
@@ -61,7 +152,7 @@ mod tests {
     #[test]
     fn ids_are_unique_and_nonempty() {
         let ids = ids();
-        assert!(ids.len() >= 13, "registry shrank: {ids:?}");
+        assert!(ids.len() >= 15, "registry shrank: {ids:?}");
         let mut dedup = ids.clone();
         dedup.sort();
         dedup.dedup();
@@ -82,10 +173,39 @@ mod tests {
     }
 
     #[test]
+    fn fig13_and_fleet1_are_registered() {
+        assert_eq!(by_id("fig13").unwrap().id(), "fig13");
+        assert_eq!(by_id("fleet1").unwrap().id(), "fleet1");
+    }
+
+    #[test]
     fn descriptions_are_single_line() {
         for e in registry() {
             assert!(!e.description().is_empty(), "{} has no description", e.id());
             assert!(!e.description().contains('\n'));
         }
+    }
+
+    #[test]
+    fn subtask_labels_are_unique_and_stable() {
+        let cfg = ExpConfig::new(true, 3);
+        for e in registry() {
+            let labels: Vec<String> =
+                e.subtasks(&cfg).iter().map(|s| s.label.clone()).collect();
+            let mut dedup = labels.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), labels.len(), "{}: duplicate subtask labels", e.id());
+            let again: Vec<String> =
+                e.subtasks(&cfg).iter().map(|s| s.label.clone()).collect();
+            assert_eq!(labels, again, "{}: unstable subtask labels", e.id());
+        }
+    }
+
+    #[test]
+    fn subtask_closure_output_downcasts() {
+        let s = Subtask::new("t", |cfg: &ExpConfig| cfg.seed);
+        let out = s.run(&ExpConfig::new(true, 5));
+        assert_eq!(*out.downcast::<u64>().unwrap(), 5);
     }
 }

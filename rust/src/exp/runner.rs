@@ -1,22 +1,33 @@
-//! Multi-threaded experiment runner.
+//! Multi-threaded experiment runner with deterministic subtask fan-out.
 //!
-//! Fans registered experiments across `std::thread` workers pulling from
-//! a shared atomic work queue.  Determinism is by construction: each
-//! experiment runs with its own seed derived from the suite seed + the
-//! experiment id ([`ExpConfig::for_experiment`]), owns its own simulated
-//! devices/RNGs, and results are collected into registry-order slots —
-//! so the suite output is byte-identical regardless of thread count or
-//! scheduling (asserted by `rust/tests/golden_runs.rs`).
+//! The suite is flattened into a list of *units* before any worker
+//! starts: one unit per monolithic experiment, one unit per subtask of a
+//! fanned-out experiment ([`Experiment::subtasks`]).  Workers pull units
+//! from a shared atomic cursor, so an experiment that fans into many
+//! subtasks (fig8's device × family grid, fig13's budget sweep) shares
+//! the whole pool instead of serializing behind one worker.
 //!
-//! A panicking experiment is caught per-worker and recorded as a failed
-//! [`ExpReport`] instead of tearing down the suite.
+//! Determinism is by construction: each experiment runs with a seed
+//! derived from the suite seed + its id ([`ExpConfig::for_experiment`]),
+//! each subtask with a seed derived from the experiment seed + its label
+//! ([`ExpConfig::for_subtask`]); subtask outputs are merged in
+//! declaration order and experiment reports are collected into
+//! registry-order slots — so suite output is byte-identical regardless
+//! of thread count or scheduling (asserted by `rust/tests/golden_runs.rs`
+//! and `rust/tests/properties.rs`).
+//!
+//! A panicking experiment — or any of its subtasks, or its merge — is
+//! caught and recorded as a failed [`ExpReport`] instead of tearing down
+//! the suite.  A failing subtask fails only its own experiment, and the
+//! reported message is the *first* failing subtask in declaration order,
+//! keeping even failures byte-stable across thread counts.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::exp::registry::Experiment;
+use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::ExpConfig;
 use crate::util::json::Json;
@@ -38,24 +49,45 @@ pub struct SuiteResult {
     pub wall_seconds: f64,
 }
 
+/// Shared state of one fanned-out experiment while its subtasks are in
+/// flight on the pool.
+struct FanState {
+    exp_index: usize,
+    cfg: ExpConfig,
+    subs: Vec<Subtask>,
+    /// Subtask outcomes in declaration order (`Err` = panic message).
+    results: Vec<Mutex<Option<Result<SubtaskOutput, String>>>>,
+    /// Unfinished subtasks; whoever completes the last one merges.
+    remaining: AtomicUsize,
+}
+
+/// One schedulable unit of suite work.
+enum Unit {
+    /// Run a monolithic experiment end to end.
+    Whole(usize),
+    /// Run subtask `sub` of fanned-out experiment `fan`.
+    Sub { fan: usize, sub: usize },
+}
+
 impl Runner {
     pub fn new(threads: usize) -> Self {
         Self { threads: threads.max(1) }
     }
 
-    /// Thread count for `n_tasks` experiments: all available cores, at
-    /// least 2 (the suite must exercise the parallel path), at most one
-    /// per task.
-    pub fn auto(n_tasks: usize) -> Self {
+    /// Thread count sized by available cores (min 2, so the suite always
+    /// exercises the parallel path) — *not* by top-level task count: one
+    /// experiment fanning out into many subtasks must still fill the
+    /// machine.
+    pub fn auto() -> Self {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-        Self::new(cores.max(2).min(n_tasks.max(1)))
+        Self::new(cores.max(2))
     }
 
     /// Runner from a user-supplied thread count, where 0 means "auto"
     /// (shared by the CLI and the bench harness).
-    pub fn from_arg(threads: usize, n_tasks: usize) -> Self {
+    pub fn from_arg(threads: usize) -> Self {
         if threads == 0 {
-            Self::auto(n_tasks)
+            Self::auto()
         } else {
             Self::new(threads)
         }
@@ -65,22 +97,87 @@ impl Runner {
     pub fn run(&self, exps: Vec<Box<dyn Experiment>>, quick: bool, base_seed: u64) -> SuiteResult {
         let t0 = Instant::now();
         let n = exps.len();
-        let threads = self.threads.min(n.max(1));
-        let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<ExpReport>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+        // Expand every experiment into units up front (sequentially, so
+        // unit order — and therefore nothing at all — depends on thread
+        // scheduling).  subtasks() itself may panic; that fails just the
+        // one experiment.
+        let mut fans: Vec<FanState> = Vec::new();
+        let mut units: Vec<Unit> = Vec::new();
+        for (i, exp) in exps.iter().enumerate() {
+            let cfg = ExpConfig::for_experiment(base_seed, quick, exp.id());
+            let subs = match std::panic::catch_unwind(AssertUnwindSafe(|| exp.subtasks(&cfg))) {
+                Ok(s) => s,
+                Err(payload) => {
+                    let msg = format!("subtasks() panicked: {}", panic_message(payload));
+                    *slots[i].lock().unwrap() = Some(ExpReport::failed(exp.id(), &cfg, &msg));
+                    continue;
+                }
+            };
+            if subs.is_empty() {
+                units.push(Unit::Whole(i));
+                continue;
+            }
+            if let Some(dup) = first_duplicate_label(&subs) {
+                let msg = format!("duplicate subtask label '{dup}' (seeds would collide)");
+                *slots[i].lock().unwrap() = Some(ExpReport::failed(exp.id(), &cfg, &msg));
+                continue;
+            }
+            let k = subs.len();
+            fans.push(FanState {
+                exp_index: i,
+                cfg,
+                subs,
+                results: (0..k).map(|_| Mutex::new(None)).collect(),
+                remaining: AtomicUsize::new(k),
+            });
+            let f = fans.len() - 1;
+            units.extend((0..k).map(|sub| Unit::Sub { fan: f, sub }));
+        }
+
+        let threads = self.threads.min(units.len().max(1));
+        let next = AtomicUsize::new(0);
 
         std::thread::scope(|s| {
             for _ in 0..threads {
                 s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let u = next.fetch_add(1, Ordering::Relaxed);
+                    if u >= units.len() {
                         break;
                     }
-                    let exp = exps[i].as_ref();
-                    let cfg = ExpConfig::for_experiment(base_seed, quick, exp.id());
-                    let mut report = run_caught(exp, &cfg);
-                    report.meta.base_seed = base_seed;
-                    *slots[i].lock().unwrap() = Some(report);
+                    match units[u] {
+                        Unit::Whole(i) => {
+                            let exp = exps[i].as_ref();
+                            let cfg = ExpConfig::for_experiment(base_seed, quick, exp.id());
+                            let mut report = run_caught(exp, &cfg);
+                            report.meta.base_seed = base_seed;
+                            *slots[i].lock().unwrap() = Some(report);
+                        }
+                        Unit::Sub { fan, sub } => {
+                            let f = &fans[fan];
+                            let scfg = f.cfg.for_subtask(&f.subs[sub].label);
+                            let out =
+                                std::panic::catch_unwind(AssertUnwindSafe(|| f.subs[sub].run(&scfg)))
+                                    .map_err(|payload| {
+                                        format!(
+                                            "subtask '{}' panicked: {}",
+                                            f.subs[sub].label,
+                                            panic_message(payload)
+                                        )
+                                    });
+                            *f.results[sub].lock().unwrap() = Some(out);
+                            // Whoever finishes the last subtask merges —
+                            // on any worker, but from declaration-order
+                            // inputs, so the result is schedule-free.
+                            if f.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                                let exp = exps[f.exp_index].as_ref();
+                                let mut report = merge_fanout(exp, f);
+                                report.meta.base_seed = base_seed;
+                                *slots[f.exp_index].lock().unwrap() = Some(report);
+                            }
+                        }
+                    }
                 });
             }
         });
@@ -99,18 +196,59 @@ impl Runner {
     }
 }
 
+/// Collect a fan-out's results in declaration order and merge them.
+/// Any subtask failure fails the experiment with the first (declaration
+/// order) message; a panicking merge fails it too.
+fn merge_fanout(exp: &dyn Experiment, f: &FanState) -> ExpReport {
+    let mut parts = Vec::with_capacity(f.subs.len());
+    let mut first_err: Option<String> = None;
+    for slot in &f.results {
+        match slot.lock().unwrap().take().expect("fan-out slot unfilled") {
+            Ok(v) => parts.push(v),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => ExpReport::failed(exp.id(), &f.cfg, &e),
+        None => match std::panic::catch_unwind(AssertUnwindSafe(|| exp.merge(&f.cfg, parts))) {
+            Ok(r) => r,
+            Err(payload) => {
+                let msg = format!("merge() panicked: {}", panic_message(payload));
+                ExpReport::failed(exp.id(), &f.cfg, &msg)
+            }
+        },
+    }
+}
+
+fn first_duplicate_label(subs: &[Subtask]) -> Option<String> {
+    let mut seen: Vec<&str> = Vec::with_capacity(subs.len());
+    for s in subs {
+        if seen.contains(&s.label.as_str()) {
+            return Some(s.label.clone());
+        }
+        seen.push(&s.label);
+    }
+    None
+}
+
+/// Human-readable panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
 /// Run one experiment, converting a panic into a failed report.
 fn run_caught(exp: &dyn Experiment, cfg: &ExpConfig) -> ExpReport {
     match std::panic::catch_unwind(AssertUnwindSafe(|| exp.run(cfg))) {
         Ok(r) => r,
-        Err(payload) => {
-            let msg = payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "non-string panic payload".to_string());
-            ExpReport::failed(exp.id(), cfg, &msg)
-        }
+        Err(payload) => ExpReport::failed(exp.id(), cfg, &panic_message(payload)),
     }
 }
 
@@ -187,6 +325,51 @@ mod tests {
         }
     }
 
+    /// Fan-out experiment: one subtask per label, each echoing its
+    /// derived seed; merge records them as metrics in declaration order.
+    struct Fan {
+        id: &'static str,
+        labels: Vec<&'static str>,
+        panic_on: Option<&'static str>,
+    }
+
+    impl Fan {
+        fn ok(id: &'static str, labels: &[&'static str]) -> Self {
+            Self { id, labels: labels.to_vec(), panic_on: None }
+        }
+    }
+
+    impl Experiment for Fan {
+        fn id(&self) -> &'static str {
+            self.id
+        }
+        fn description(&self) -> &'static str {
+            "fan-out echo"
+        }
+        fn subtasks(&self, _cfg: &ExpConfig) -> Vec<Subtask> {
+            self.labels
+                .iter()
+                .map(|&l| {
+                    let boom = self.panic_on == Some(l);
+                    Subtask::new(l, move |scfg: &ExpConfig| {
+                        if boom {
+                            panic!("sub-boom {l}");
+                        }
+                        (l.to_string(), scfg.seed)
+                    })
+                })
+                .collect()
+        }
+        fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+            let mut r = ExpReport::new(self.id, "fan-out echo", cfg, &[]);
+            for part in parts {
+                let (label, seed) = *part.downcast::<(String, u64)>().expect("fan part");
+                r.metric(&label, (seed % 1_000_000) as f64);
+            }
+            r
+        }
+    }
+
     fn echo_suite() -> Vec<Box<dyn Experiment>> {
         vec![Box::new(Echo("e1")), Box::new(Echo("e2")), Box::new(Echo("e3")), Box::new(Echo("e4"))]
     }
@@ -213,8 +396,7 @@ mod tests {
 
     #[test]
     fn panic_becomes_failed_report() {
-        let suite =
-            Runner::new(2).run(vec![Box::new(Echo("ok")), Box::new(Boom)], true, 1);
+        let suite = Runner::new(2).run(vec![Box::new(Echo("ok")), Box::new(Boom)], true, 1);
         assert_eq!(suite.reports.len(), 2);
         assert!(suite.reports[0].error.is_none());
         let err = suite.reports[1].error.as_deref().unwrap();
@@ -223,8 +405,72 @@ mod tests {
     }
 
     #[test]
-    fn auto_uses_multiple_threads() {
-        assert!(Runner::auto(8).threads >= 2);
-        assert_eq!(Runner::auto(1).threads, 1);
+    fn fanout_merges_in_declaration_order_for_any_thread_count() {
+        let mk = || -> Vec<Box<dyn Experiment>> {
+            vec![Box::new(Fan::ok("fan1", &["a", "b", "c", "d", "e"])), Box::new(Echo("e1"))]
+        };
+        let one = Runner::new(1).run(mk(), true, 3);
+        let many = Runner::new(8).run(mk(), true, 3);
+        assert_eq!(one.to_json().to_string(), many.to_json().to_string());
+        let names: Vec<&str> =
+            one.reports[0].metrics.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c", "d", "e"], "merge order broke");
+        // parallel path == sequential default run()
+        let direct = Fan::ok("fan1", &["a", "b", "c", "d", "e"])
+            .run(&ExpConfig::for_experiment(3, true, "fan1"));
+        assert_eq!(direct.metrics, one.reports[0].metrics);
+    }
+
+    #[test]
+    fn subtask_seeds_are_distinct_and_label_derived() {
+        let rep = Fan::ok("fan2", &["x", "y", "z"]).run(&ExpConfig::for_experiment(1, true, "fan2"));
+        let vals: Vec<u64> = rep.metrics.iter().map(|(_, v)| *v as u64).collect();
+        let mut uniq = vals.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), vals.len(), "subtask seeds collide: {vals:?}");
+    }
+
+    #[test]
+    fn panicking_subtask_fails_only_its_experiment_deterministically() {
+        let mk = || -> Vec<Box<dyn Experiment>> {
+            vec![
+                Box::new(Fan { id: "sick", labels: vec!["a", "bad", "c"], panic_on: Some("bad") }),
+                Box::new(Fan::ok("healthy", &["p", "q"])),
+                Box::new(Echo("e1")),
+            ]
+        };
+        let one = Runner::new(1).run(mk(), true, 2);
+        let many = Runner::new(8).run(mk(), true, 2);
+        assert_eq!(one.to_json().to_string(), many.to_json().to_string());
+        let err = one.reports[0].error.as_deref().unwrap();
+        assert!(err.contains("subtask 'bad'") && err.contains("sub-boom"), "{err}");
+        assert!(one.reports[1].error.is_none());
+        assert!(one.reports[2].error.is_none());
+        assert_eq!(one.failures().len(), 1);
+    }
+
+    #[test]
+    fn duplicate_subtask_labels_fail_the_experiment() {
+        let suite = Runner::new(2).run(
+            vec![
+                Box::new(Fan::ok("dup", &["a", "a"])) as Box<dyn Experiment>,
+                Box::new(Echo("e1")),
+            ],
+            true,
+            1,
+        );
+        let err = suite.reports[0].error.as_deref().unwrap();
+        assert!(err.contains("duplicate subtask label 'a'"), "{err}");
+        assert!(suite.reports[1].error.is_none());
+    }
+
+    #[test]
+    fn auto_sizes_by_cores_not_task_count() {
+        // The pool must not starve when one experiment fans out into many
+        // subtasks: auto() ignores top-level task count entirely.
+        assert!(Runner::auto().threads >= 2);
+        assert_eq!(Runner::from_arg(3).threads, 3);
+        assert!(Runner::from_arg(0).threads >= 2);
     }
 }

@@ -3,7 +3,7 @@
 //! (Transformer), fig12 (estimation − observation).
 
 use crate::baselines::neuralpower;
-use crate::exp::registry::Experiment;
+use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::{fit_flops_lr, mape_pair, measured_energy, reference_model, ExpConfig};
 use crate::model::sampler::{sample, sample_n, Family};
@@ -99,7 +99,19 @@ impl Experiment for Fig7 {
 /// End-to-end MAPE: devices × families, THOR vs FLOPs-LR, with std error
 /// over repeats.  Also produces Table 1 (profiling cost); `tab1` aliases
 /// this experiment in the registry.
+///
+/// Fans out one subtask per device × family cell — the grid dominates
+/// suite wall-clock, and every cell is independent (own device, own
+/// seed), so the whole pool chews on it at once.
 pub struct Fig8;
+
+/// Output of one device × family cell subtask.
+struct Fig8Cell {
+    mape_row: Vec<String>,
+    tab1_row: Vec<String>,
+    thor_mape: f64,
+    lr_mape: f64,
+}
 
 impl Fig8 {
     pub fn devices_for(cfg: &ExpConfig) -> Vec<&'static str> {
@@ -107,6 +119,39 @@ impl Fig8 {
             vec!["xavier", "server"]
         } else {
             vec!["oppo", "iphone", "xavier", "tx2", "server"]
+        }
+    }
+
+    /// One grid cell, a pure function of the subtask config.
+    fn cell(dev_name: &'static str, fam: Family, cfg: &ExpConfig) -> Fig8Cell {
+        let reps = cfg.repeats();
+        let mut thor_m = Vec::new();
+        let mut lr_m = Vec::new();
+        let mut dev_secs = 0.0;
+        for rep_i in 0..reps {
+            let cfg_r = ExpConfig { seed: cfg.seed + rep_i as u64 * 1000, ..*cfg };
+            let (t, f, report) = mape_pair(dev_name, fam, &cfg_r);
+            thor_m.push(t);
+            lr_m.push(f);
+            // Simulated profiling cost only: GP-fit wall-clock is
+            // machine-dependent and would break the byte-identical
+            // JSON contract (see exp::report).
+            dev_secs += report.device_seconds() / reps as f64;
+        }
+        Fig8Cell {
+            mape_row: vec![
+                dev_name.to_string(),
+                fam.name().to_string(),
+                format!("{:.1} ± {:.1}", mean(&thor_m), std_err(&thor_m)),
+                format!("{:.1} ± {:.1}", mean(&lr_m), std_err(&lr_m)),
+            ],
+            tab1_row: vec![
+                dev_name.to_string(),
+                fam.name().to_string(),
+                format!("{dev_secs:.0}"),
+            ],
+            thor_mape: mean(&thor_m),
+            lr_mape: mean(&lr_m),
         }
     }
 }
@@ -120,45 +165,36 @@ impl Experiment for Fig8 {
         "end-to-end MAPE across devices and families + Table 1 profiling cost"
     }
 
-    fn run(&self, cfg: &ExpConfig) -> ExpReport {
-        let devices_list = Self::devices_for(cfg);
-        let mut rep =
-            ExpReport::new(self.id(), "end-to-end MAPE across devices", cfg, &devices_list);
-        let fams = Family::fig8_families();
+    fn subtasks(&self, cfg: &ExpConfig) -> Vec<Subtask> {
+        let mut subs = Vec::new();
+        for dev_name in Self::devices_for(cfg) {
+            for fam in Family::fig8_families() {
+                subs.push(Subtask::new(
+                    format!("{dev_name}/{}", fam.name()),
+                    move |scfg: &ExpConfig| Self::cell(dev_name, fam, scfg),
+                ));
+            }
+        }
+        subs
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let mut rep = ExpReport::new(
+            self.id(),
+            "end-to-end MAPE across devices",
+            cfg,
+            &Self::devices_for(cfg),
+        );
         let mut rows = Vec::new();
         let mut tab1_rows = Vec::new();
         let mut thor_all = Vec::new();
         let mut lr_all = Vec::new();
-        for dev_name in &devices_list {
-            for fam in &fams {
-                let reps = cfg.repeats();
-                let mut thor_m = Vec::new();
-                let mut lr_m = Vec::new();
-                let mut dev_secs = 0.0;
-                for rep_i in 0..reps {
-                    let cfg_r = ExpConfig { seed: cfg.seed + rep_i as u64 * 1000, ..*cfg };
-                    let (t, f, report) = mape_pair(dev_name, *fam, &cfg_r);
-                    thor_m.push(t);
-                    lr_m.push(f);
-                    // Simulated profiling cost only: GP-fit wall-clock is
-                    // machine-dependent and would break the byte-identical
-                    // JSON contract (see exp::report).
-                    dev_secs += report.device_seconds() / reps as f64;
-                }
-                thor_all.push(mean(&thor_m));
-                lr_all.push(mean(&lr_m));
-                rows.push(vec![
-                    dev_name.to_string(),
-                    fam.name().to_string(),
-                    format!("{:.1} ± {:.1}", mean(&thor_m), std_err(&thor_m)),
-                    format!("{:.1} ± {:.1}", mean(&lr_m), std_err(&lr_m)),
-                ]);
-                tab1_rows.push(vec![
-                    dev_name.to_string(),
-                    fam.name().to_string(),
-                    format!("{dev_secs:.0}"),
-                ]);
-            }
+        for part in parts {
+            let cell = *part.downcast::<Fig8Cell>().expect("fig8 cell output");
+            rows.push(cell.mape_row);
+            tab1_rows.push(cell.tab1_row);
+            thor_all.push(cell.thor_mape);
+            lr_all.push(cell.lr_mape);
         }
         rep.push_table(
             "Fig 8 — MAPE by device × family",

@@ -112,7 +112,7 @@ fn main() -> Result<()> {
                 for e in exp::registry::registry() {
                     println!("{:6}  {}", e.id(), e.description());
                 }
-                println!("tab1    (alias for fig8; fig13 lives in examples/energy_aware_pruning)");
+                println!("tab1    (alias for fig8)");
                 return Ok(());
             }
             let which = args.positional().get(1).map(|s| s.as_str());
@@ -121,13 +121,10 @@ fn main() -> Result<()> {
             } else {
                 let id = which.unwrap_or("fig8");
                 vec![exp::by_id(id).ok_or_else(|| {
-                    anyhow!(
-                        "unknown experiment '{id}' — `thor exp --list` shows the registry \
-                         (fig13 lives in examples/energy_aware_pruning)"
-                    )
+                    anyhow!("unknown experiment '{id}' — `thor exp --list` shows the registry")
                 })?]
             };
-            let runner = exp::Runner::from_arg(args.get_usize("threads", 0)?, exps.len());
+            let runner = exp::Runner::from_arg(args.get_usize("threads", 0)?);
             let n_exps = exps.len();
             let quick = args.has("quick");
             let suite = runner.run(exps, quick, seed);

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod linalg;
 pub mod proptest;

@@ -59,6 +59,38 @@ fn a16_spread_shrinks_with_iterations() {
 }
 
 #[test]
+fn fig13_thor_tracks_budget_better_than_flops() {
+    let rep = run("fig13");
+    // 3 budgets × 2 guidance arms
+    assert_eq!(rep.tables[0].rows.len(), 6, "{:?}", rep.tables[0].rows);
+    let t50 = rep.get_metric("thor_actual_ratio_50").expect("thor_actual_ratio_50");
+    let f50 = rep.get_metric("flops_actual_ratio_50").expect("flops_actual_ratio_50");
+    assert!(t50.is_finite() && f50.is_finite());
+    // The Fig 13 direction: FLOPs-ratio guidance overshoots the budget
+    // by more than THOR's absolute estimates do.
+    assert!(t50 < f50, "thor {t50} should beat flops {f50}");
+    assert!(t50 < 0.75, "thor landed far over the 50% budget: {t50}");
+    let tw = rep.get_metric("thor_within_budget_frac").unwrap();
+    let fw = rep.get_metric("flops_within_budget_frac").unwrap();
+    assert!(tw >= fw, "thor within-budget {tw} < flops {fw}");
+}
+
+#[test]
+fn fleet1_fits_all_families_over_loopback() {
+    let rep = run("fleet1");
+    assert!(rep.error.is_none(), "{:?}", rep.error);
+    assert_eq!(rep.get_metric("families_fitted").unwrap(), 5.0);
+    assert!(rep.get_metric("jobs_total").unwrap() > 0.0);
+    assert_eq!(rep.get_metric("jobs_requeued").unwrap(), 0.0);
+    let mape = rep.get_metric("fleet_mape").unwrap();
+    assert!(mape.is_finite() && mape >= 0.0, "fleet MAPE {mape}");
+    // one row per worker, every worker contributed
+    let jobs = rep.tables[0].column("jobs done").expect("jobs column");
+    assert_eq!(jobs.len(), 3);
+    assert!(jobs.iter().all(|j| j.parse::<usize>().unwrap() > 0), "{jobs:?}");
+}
+
+#[test]
 fn mape_pair_runs_on_every_device() {
     for dev in ["xavier", "tx2"] {
         let (thor_m, flops_m, report) =

@@ -1,0 +1,124 @@
+//! Integration tests for the decoupled fleet architecture over real
+//! loopback sockets: the scheduler invariants (exactly-once resolution,
+//! re-queue on worker death) promoted from `coordinator::scheduler`'s
+//! unit/property level to a full leader + N `DeviceWorker` run, and the
+//! scheduling-independence of the fitted store that `exp::fleet_exp`
+//! (the `fleet1` experiment) relies on for byte-stable reports.
+//!
+//! All runs use deterministic per-job measurement seeds
+//! (`DeviceWorker::with_per_job_seed` + `coordinator::job_seed`), which
+//! makes the final `GpStore` a pure function of (reference, config, base
+//! seed) — so a 3-worker fleet, a 3-worker fleet with a mid-stream
+//! death, and a single worker must all produce byte-identical stores.
+//!
+//! CI runs this file under a 60-second timeout guard: any dead/live-lock
+//! in the leader loop fails fast instead of hanging the suite.
+
+use thor::coordinator::{DeviceWorker, FleetRun, FleetServer};
+use thor::model::{zoo, ModelGraph};
+use thor::simdevice::{devices, Device};
+use thor::thor::ThorConfig;
+
+const BASE_SEED: u64 = 42;
+
+fn reference() -> ModelGraph {
+    // Small cnn5: 5 families (out, in, 3 hidden), each needing at least
+    // its 3–5 start-point jobs, so every worker sees several jobs.
+    zoo::cnn5(&[8, 16, 32, 64], 16, 10)
+}
+
+/// Run a loopback fleet with `n_workers`.  `die_after` = `Some((w, k))`
+/// makes client `w` drop its connection upon receiving job `k + 1`,
+/// leaving that job in flight.
+fn run_fleet(n_workers: usize, die_after: Option<(usize, usize)>) -> FleetRun {
+    let server = FleetServer::new(ThorConfig::quick());
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let addr = addr.clone();
+        let reference = reference();
+        let limit = die_after.and_then(|(dw, k)| (dw == w).then_some(k));
+        handles.push(std::thread::spawn(move || {
+            let mut worker =
+                DeviceWorker::new(Device::new(devices::xavier(), 100 + w as u64), &reference)
+                    .with_per_job_seed(BASE_SEED);
+            match limit {
+                Some(k) => worker.run_limited(&addr, k),
+                None => worker.run(&addr),
+            }
+        }));
+    }
+
+    let run = bound.serve(&reference(), n_workers).expect("fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    run
+}
+
+#[test]
+fn worker_death_requeues_jobs_and_every_job_resolves_exactly_once() {
+    let faulty = run_fleet(3, Some((2, 2)));
+
+    // The dying worker received a job it never answered: that job must
+    // have been re-queued...
+    assert!(faulty.requeued >= 1, "no job was re-queued on worker death");
+    // ...and every submitted job still resolved exactly once (the queue
+    // drops duplicate/stale completions, so done == submitted means
+    // exactly-once, not at-least-once).
+    assert_eq!(
+        faulty.jobs_done, faulty.jobs_submitted,
+        "job(s) lost or double-counted after worker death"
+    );
+    assert_eq!(
+        faulty.per_worker.iter().sum::<usize>(),
+        faulty.jobs_done,
+        "per-worker counts do not add up to the total"
+    );
+    assert_eq!(faulty.store.len(), 5, "store missing families after worker death");
+
+    // The fitted store must be byte-identical to a run that never saw a
+    // death (per-job seeds make measurements scheduling-independent, and
+    // a re-measured re-queued job reproduces the lost measurement).
+    let baseline = run_fleet(1, None);
+    assert_eq!(
+        faulty.store.to_json().to_string(),
+        baseline.store.to_json().to_string(),
+        "worker death changed the fitted store"
+    );
+}
+
+#[test]
+fn store_is_independent_of_worker_count_and_all_workers_contribute() {
+    let one = run_fleet(1, None);
+    let three = run_fleet(3, None);
+
+    assert_eq!(
+        one.store.to_json().to_string(),
+        three.store.to_json().to_string(),
+        "worker count changed the fitted store"
+    );
+    assert_eq!(one.jobs_submitted, three.jobs_submitted, "probe sequence diverged");
+    assert_eq!(three.requeued, 0);
+    // Family-affinity scheduling spreads the 5 families over 3 workers,
+    // so every worker must have completed at least one job.
+    assert_eq!(three.per_worker.len(), 3);
+    assert!(
+        three.per_worker.iter().all(|&n| n > 0),
+        "idle worker in a healthy fleet: {:?}",
+        three.per_worker
+    );
+}
+
+#[test]
+fn healthy_fleet_per_worker_counts_are_deterministic() {
+    // Affinity scheduling + hello gating make the per-worker job counts
+    // (not just the store) a pure function of the config — this is what
+    // lets the fleet1 experiment put them in a golden-checked report.
+    let a = run_fleet(2, None);
+    let b = run_fleet(2, None);
+    assert_eq!(a.per_worker, b.per_worker, "per-worker counts not deterministic");
+    assert_eq!(a.jobs_done, b.jobs_done);
+}

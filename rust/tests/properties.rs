@@ -3,6 +3,7 @@
 //! estimator together over randomized inputs (seeded in-repo harness —
 //! `util::proptest`; the proptest crate is unavailable offline).
 
+use thor::exp::{by_id, ExpConfig, ExpReport, Experiment, Runner, Subtask, SubtaskOutput};
 use thor::model::sampler::{sample, Family};
 use thor::model::{zoo, LayerKind};
 use thor::prop_assert;
@@ -293,6 +294,70 @@ fn prop_devices_produce_distinct_energy_profiles() {
             prop_assert!(max / min > 1.3, "fleet energy spread too small: {energies:?}");
             Ok(())
         },
+    );
+}
+
+/// A fan-out experiment with one deliberately panicking subtask, for
+/// injecting failure into a real suite run.
+struct SickFan;
+
+impl Experiment for SickFan {
+    fn id(&self) -> &'static str {
+        "sickfan"
+    }
+    fn description(&self) -> &'static str {
+        "fan-out with one panicking subtask"
+    }
+    fn subtasks(&self, _cfg: &ExpConfig) -> Vec<Subtask> {
+        ["ok-a", "boom", "ok-b"]
+            .into_iter()
+            .map(|l| {
+                Subtask::new(l, move |scfg: &ExpConfig| {
+                    if l == "boom" {
+                        panic!("injected subtask panic");
+                    }
+                    scfg.seed
+                })
+            })
+            .collect()
+    }
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let mut r = ExpReport::new(self.id(), "sick fan", cfg, &[]);
+        r.metric("parts", parts.len() as f64);
+        r
+    }
+}
+
+#[test]
+fn prop_subtask_fanout_reports_byte_identical_across_thread_counts() {
+    // The tentpole determinism contract: for a fixed suite seed, the
+    // fanned-out experiments (fig8's device × family grid, fig13's
+    // budget sweep) serialize byte-identically at 1, 2 and 8 threads —
+    // including with an injected subtask panic in the same suite, which
+    // must fail only its own experiment, with a byte-stable message.
+    let mk = || -> Vec<Box<dyn Experiment>> {
+        vec![by_id("fig8").unwrap(), by_id("fig13").unwrap(), Box::new(SickFan)]
+    };
+    let suites: Vec<_> = [1usize, 2, 8].iter().map(|&t| Runner::new(t).run(mk(), true, 11)).collect();
+
+    let jsons: Vec<Vec<String>> = suites
+        .iter()
+        .map(|s| s.reports.iter().map(|r| r.to_json().to_string()).collect())
+        .collect();
+    for (i, run) in jsons.iter().enumerate().skip(1) {
+        assert_eq!(jsons[0].len(), run.len());
+        for (a, b) in jsons[0].iter().zip(run) {
+            assert_eq!(a, b, "suite JSON diverged between 1 thread and run #{i}");
+        }
+    }
+
+    let one = &suites[0];
+    assert!(one.reports[0].error.is_none(), "fig8 failed: {:?}", one.reports[0].error);
+    assert!(one.reports[1].error.is_none(), "fig13 failed: {:?}", one.reports[1].error);
+    let err = one.reports[2].error.as_deref().expect("sickfan must fail");
+    assert!(
+        err.contains("subtask 'boom'") && err.contains("injected subtask panic"),
+        "unexpected failure message: {err}"
     );
 }
 
