@@ -1,9 +1,14 @@
-//! `cargo bench --bench hotpath` — §Perf microbenchmarks for the three
+//! `cargo bench --bench hotpath` — §Perf microbenchmarks for the
 //! optimization targets (EXPERIMENTS.md §Perf records before/after):
 //!
-//!   L3  GP predict (native) / estimate() / simulator trace execution
+//!   L3  GP fit engine: `GpModel::fit`, `fit_family`, batched predict
+//!   L3  estimate() (cnn5 + resnet56 batched-family path) / simulator
+//!       trace execution
 //!   L2+L1  artifact-backed batched GP posterior through PJRT
 //!          (skipped with a notice if artifacts/ are missing)
+//!
+//! `-- --json BENCH_<pr>.json` writes the structured results for the
+//! perf trajectory (schema: {"schema_version":1,"benches":[...]}).
 
 use std::time::Duration;
 
@@ -11,28 +16,70 @@ use thor::gp::{GpModel, KernelKind};
 use thor::model::zoo;
 use thor::runtime::{GpExecutor, Runtime};
 use thor::simdevice::{devices, Device};
+use thor::thor::fit::{fit_family, FitConfig};
 use thor::thor::{Thor, ThorConfig};
-use thor::util::bench::{bench, black_box};
+use thor::util::bench::{bench, black_box, BenchResult};
+use thor::util::cli::{parse, Spec};
+use thor::util::json::Json;
 use thor::util::table;
-use thor::workload::{fusion::fuse, lower::lower};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let specs = [
+        Spec { name: "json", takes_value: true, help: "write structured results to this path" },
+        // `cargo bench` appends --bench to harness=false binaries; accept
+        // and ignore it so the strict parser doesn't reject every run.
+        Spec { name: "bench", takes_value: false, help: "(ignored; passed by cargo bench)" },
+        Spec { name: "help", takes_value: false, help: "print usage" },
+    ];
+    let args = parse(&argv, &specs).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    if args.has("help") {
+        println!("{}", thor::util::cli::usage("cargo bench --bench hotpath --", &specs));
+        return;
+    }
     let budget = Duration::from_millis(
         std::env::var("THOR_BENCH_MS").ok().and_then(|v| v.parse().ok()).unwrap_or(800),
     );
-    let mut rows = Vec::new();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // --- L3: GP hyper-parameter fit (the fit-engine tentpole) ---------------
+    // Shape matches a 2-D hidden-family fit at full budget: the multi-start
+    // NLML search dominates, so this is where the DistGram + workspace
+    // engine must show its ≥5× (EXPERIMENTS.md §Perf).
+    let fit_xs: Vec<Vec<f64>> = (0..24)
+        .map(|i| vec![((i * 7) % 24) as f64 / 23.0, ((i * 5) % 24) as f64 / 23.0])
+        .collect();
+    let fit_ys: Vec<f64> =
+        fit_xs.iter().map(|x| (1.0 + 2.0 * x[0] + x[1] * x[1]).ln()).collect();
+    results.push(bench("L3 GpModel::fit(n=24, 2d)", budget, || {
+        black_box(GpModel::fit(
+            KernelKind::Matern52,
+            black_box(fit_xs.clone()),
+            black_box(&fit_ys),
+        ));
+    }));
+
+    // --- L3: full acquisition loop (warm refits after one full fit) ---------
+    let fcfg = FitConfig { max_points: 16, grid_n: 33, threshold_frac: 0.0, ..Default::default() };
+    results.push(bench("L3 fit_family(1d, 16 pts)", budget, || {
+        black_box(fit_family(
+            |p| (100.0 + 60.0 * p[0] + 10.0 * (6.0 * p[0]).sin(), 0.1),
+            1,
+            black_box(&fcfg),
+        ));
+    }));
 
     // --- L3: native GP predict (the per-layer estimation primitive) -------
     let xs: Vec<Vec<f64>> = (0..48).map(|i| vec![(i % 8) as f64 / 7.0, (i / 8) as f64 / 5.0]).collect();
     let ys: Vec<f64> = xs.iter().map(|x| (1.0 + x[0] + x[1]).ln()).collect();
     let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
     let queries: Vec<Vec<f64>> = (0..256).map(|i| vec![(i % 16) as f64 / 15.0, (i / 16) as f64 / 15.0]).collect();
-    rows.push(
-        bench("L3 gp.predict_batch(256q, n=48)", budget, || {
-            black_box(gp.predict_batch(black_box(&queries)));
-        })
-        .row(),
-    );
+    results.push(bench("L3 gp.predict_batch(256q, n=48)", budget, || {
+        black_box(gp.predict_batch(black_box(&queries)));
+    }));
 
     // --- L3: full-model estimate() -----------------------------------------
     let mut dev = Device::new(devices::xavier(), 1);
@@ -40,29 +87,32 @@ fn main() {
     let reference = zoo::cnn5(&[32, 64, 128, 256], 16, 10);
     thor.profile(&mut dev, &reference);
     let target = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
-    rows.push(
-        bench("L3 thor.estimate(cnn5)", budget, || {
-            black_box(thor.estimate("xavier", black_box(&target)).unwrap());
-        })
-        .row(),
-    );
+    results.push(bench("L3 thor.estimate(cnn5)", budget, || {
+        black_box(thor.estimate("xavier", black_box(&target)).unwrap());
+    }));
+
+    // --- L3: estimate() on a deep model (batched-family hot path) -----------
+    // ResNet-56: 55 conv groups collapsing to a handful of families — the
+    // per-family predict_batch grouping is the whole point here.
+    let resnet_ref = zoo::resnet(56, 16, 10);
+    let mut rdev = Device::new(devices::xavier(), 2);
+    let mut rthor = Thor::new(ThorConfig::quick());
+    rthor.profile(&mut rdev, &resnet_ref);
+    results.push(bench("L3 thor.estimate(resnet56)", budget, || {
+        black_box(rthor.estimate("xavier", black_box(&resnet_ref)).unwrap());
+    }));
 
     // --- L3: simulator trace execution (profiling inner loop) --------------
+    use thor::workload::{fusion::fuse, lower::lower};
     let trace = fuse(&lower(&target));
-    rows.push(
-        bench("L3 device.run(trace, 10 iters)", budget, || {
-            black_box(dev.run(black_box(&trace), 10));
-        })
-        .row(),
-    );
+    results.push(bench("L3 device.run(trace, 10 iters)", budget, || {
+        black_box(dev.run(black_box(&trace), 10));
+    }));
 
     // --- L3: lowering + fusion ----------------------------------------------
-    rows.push(
-        bench("L3 lower+fuse(cnn5)", budget, || {
-            black_box(fuse(&lower(black_box(&target))));
-        })
-        .row(),
-    );
+    results.push(bench("L3 lower+fuse(cnn5)", budget, || {
+        black_box(fuse(&lower(black_box(&target))));
+    }));
 
     // --- L1+L2: artifact GP posterior through PJRT --------------------------
     match Runtime::open(&Runtime::default_dir()) {
@@ -70,18 +120,25 @@ fn main() {
             let export = gp.export();
             // warm the executable cache before timing
             let _ = GpExecutor::posterior(&mut rt, &export, &queries);
-            rows.push(
-                bench("L1+L2 artifact gp_posterior (256q)", budget, || {
-                    black_box(GpExecutor::posterior(&mut rt, &export, black_box(&queries)).unwrap());
-                })
-                .row(),
-            );
+            results.push(bench("L1+L2 artifact gp_posterior (256q)", budget, || {
+                black_box(GpExecutor::posterior(&mut rt, &export, black_box(&queries)).unwrap());
+            }));
         }
         Err(e) => println!("(skipping artifact benches: {e})"),
     }
 
+    let rows: Vec<Vec<String>> = results.iter().map(|r| r.row()).collect();
     println!(
         "{}",
         table::render(&["benchmark", "iters", "mean", "p50", "p95", "min"], &rows)
     );
+
+    if let Some(path) = args.get("json") {
+        let j = Json::obj(vec![
+            ("schema_version", Json::Num(1.0)),
+            ("benches", Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+        ]);
+        std::fs::write(path, j.to_string()).expect("write bench json");
+        eprintln!("wrote {} benchmark(s) to {path}", results.len());
+    }
 }

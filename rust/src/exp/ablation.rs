@@ -1,8 +1,23 @@
 //! Ablations: a14 (profiling-point budget vs MAPE, energy vs time
 //! acquisition), a15 (GP kernel / sampling ablation), a16 (measurement
 //! stability vs profiling-iteration count).
+//!
+//! All three are grid-shaped, so they fan out into one subtask per cell
+//! (`Experiment::subtasks` + `merge`) and the runner's suite-wide pool
+//! chews on the whole grid at once.  Merge reassembles the tables in
+//! declaration order, so suite JSON stays byte-identical at any
+//! `--threads`.
+//!
+//! Seeding: these are *controlled comparisons* — every arm of a sweep
+//! must see the same held-out test set and the same device noise stream,
+//! or row-to-row MAPE differences mix the treatment effect with
+//! sampling noise.  The subtask closures therefore capture the parent
+//! experiment config and ignore their label-derived seed: each cell is
+//! still a pure, schedule-independent function (the parent config is
+//! fixed at `subtasks()` time), it just reproduces exactly what the old
+//! sequential loop computed.
 
-use crate::exp::registry::Experiment;
+use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::{measured_energy, reference_model, ExpConfig};
 use crate::gp::KernelKind;
@@ -16,6 +31,37 @@ use crate::workload::{fusion::fuse, lower::lower};
 /// #profiled points vs MAPE (energy acquisition vs time surrogate).
 pub struct A14;
 
+const A14_DEVICES: [&str; 2] = ["oppo", "xavier"];
+const A14_BUDGETS: [usize; 4] = [6, 10, 16, 24];
+
+impl A14 {
+    /// One (device, budget, acquisition) cell → its table row.
+    fn cell(dev_name: &'static str, budget: usize, surrogate: bool, cfg: &ExpConfig) -> Vec<String> {
+        let profile = devices::by_name(dev_name).unwrap();
+        let mut dev = Device::new(profile, cfg.seed);
+        let tcfg = ThorConfig {
+            max_points_1d: budget,
+            max_points_2d: budget * 2,
+            threshold_frac: 0.0, // force budget use
+            time_surrogate: surrogate,
+            ..cfg.thor_cfg()
+        };
+        let mut thor = Thor::new(tcfg);
+        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        let test = sample_n(Family::Cnn5, cfg.n_test().min(20), cfg.seed + 1, 10);
+        let (mut actual, mut est) = (vec![], vec![]);
+        for g in &test {
+            actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
+            est.push(thor.estimate(dev_name, g).unwrap().energy_per_iter);
+        }
+        vec![
+            format!("{budget}"),
+            if surrogate { "time" } else { "energy" }.into(),
+            format!("{:.1}", mape(&actual, &est)),
+        ]
+    }
+}
+
 impl Experiment for A14 {
     fn id(&self) -> &'static str {
         "a14"
@@ -25,37 +71,33 @@ impl Experiment for A14 {
         "profiled-point budget vs MAPE, energy vs time acquisition (OPPO + Xavier)"
     }
 
-    fn run(&self, cfg: &ExpConfig) -> ExpReport {
-        let mut rep =
-            ExpReport::new(self.id(), "profiled points vs MAPE", cfg, &["oppo", "xavier"]);
-        for dev_name in ["oppo", "xavier"] {
-            let mut rows = Vec::new();
-            for budget in [6usize, 10, 16, 24] {
+    fn subtasks(&self, cfg: &ExpConfig) -> Vec<Subtask> {
+        let parent = *cfg; // shared across arms: controlled comparison
+        let mut subs = Vec::new();
+        for dev_name in A14_DEVICES {
+            for budget in A14_BUDGETS {
                 for surrogate in [false, true] {
-                    let profile = devices::by_name(dev_name).unwrap();
-                    let mut dev = Device::new(profile, cfg.seed);
-                    let tcfg = ThorConfig {
-                        max_points_1d: budget,
-                        max_points_2d: budget * 2,
-                        threshold_frac: 0.0, // force budget use
-                        time_surrogate: surrogate,
-                        ..cfg.thor_cfg()
-                    };
-                    let mut thor = Thor::new(tcfg);
-                    thor.profile(&mut dev, &reference_model(Family::Cnn5));
-                    let test = sample_n(Family::Cnn5, cfg.n_test().min(20), cfg.seed + 1, 10);
-                    let (mut actual, mut est) = (vec![], vec![]);
-                    for g in &test {
-                        actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
-                        est.push(thor.estimate(dev_name, g).unwrap().energy_per_iter);
-                    }
-                    rows.push(vec![
-                        format!("{budget}"),
-                        if surrogate { "time" } else { "energy" }.into(),
-                        format!("{:.1}", mape(&actual, &est)),
-                    ]);
+                    let acq = if surrogate { "time" } else { "energy" };
+                    subs.push(Subtask::new(
+                        format!("{dev_name}/b{budget}/{acq}"),
+                        move |_scfg: &ExpConfig| Self::cell(dev_name, budget, surrogate, &parent),
+                    ));
                 }
             }
+        }
+        subs
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "profiled points vs MAPE", cfg, &A14_DEVICES);
+        let rows_per_device = A14_BUDGETS.len() * 2;
+        let mut parts = parts.into_iter();
+        for dev_name in A14_DEVICES {
+            let rows: Vec<Vec<String>> = (&mut parts)
+                .take(rows_per_device)
+                .map(|p| *p.downcast::<Vec<String>>().expect("a14 row"))
+                .collect();
             rep.push_table(
                 &format!("points-budget sweep ({dev_name})"),
                 &["1D budget", "acquisition", "MAPE %"],
@@ -69,6 +111,30 @@ impl Experiment for A14 {
 /// GP kernel ablation: Matérn vs RBF vs DotProduct vs random-Matérn.
 pub struct A15;
 
+const A15_ARMS: [(&str, &str, KernelKind, bool); 4] = [
+    ("matern52-guided", "Matern52 (guided)", KernelKind::Matern52, false),
+    ("rbf-guided", "RBF (guided)", KernelKind::Rbf, false),
+    ("dot-guided", "DotProduct (guided)", KernelKind::DotProduct, false),
+    ("matern52-random", "Matern52 (random)", KernelKind::Matern52, true),
+];
+
+impl A15 {
+    fn arm(label: &'static str, kind: KernelKind, random: bool, cfg: &ExpConfig) -> Vec<String> {
+        let profile = devices::by_name("xavier").unwrap();
+        let mut dev = Device::new(profile, cfg.seed);
+        let tcfg = ThorConfig { kind, random_sampling: random, ..cfg.thor_cfg() };
+        let mut thor = Thor::new(tcfg);
+        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        let test = sample_n(Family::Cnn5, cfg.n_test().min(25), cfg.seed + 1, 10);
+        let (mut actual, mut est) = (vec![], vec![]);
+        for g in &test {
+            actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
+            est.push(thor.estimate("xavier", g).unwrap().energy_per_iter);
+        }
+        vec![label.to_string(), format!("{:.1}", mape(&actual, &est))]
+    }
+}
+
 impl Experiment for A15 {
     fn id(&self) -> &'static str {
         "a15"
@@ -78,28 +144,20 @@ impl Experiment for A15 {
         "GP kernel / sampling ablation on Xavier (Matern, RBF, DotProduct, random)"
     }
 
-    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+    fn subtasks(&self, cfg: &ExpConfig) -> Vec<Subtask> {
+        let parent = *cfg; // shared across arms: controlled comparison
+        A15_ARMS
+            .iter()
+            .map(|&(slug, label, kind, random)| {
+                Subtask::new(slug, move |_scfg: &ExpConfig| Self::arm(label, kind, random, &parent))
+            })
+            .collect()
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
         let mut rep = ExpReport::new(self.id(), "GP kernel ablation", cfg, &["xavier"]);
-        let mut rows = Vec::new();
-        for (label, kind, random) in [
-            ("Matern52 (guided)", KernelKind::Matern52, false),
-            ("RBF (guided)", KernelKind::Rbf, false),
-            ("DotProduct (guided)", KernelKind::DotProduct, false),
-            ("Matern52 (random)", KernelKind::Matern52, true),
-        ] {
-            let profile = devices::by_name("xavier").unwrap();
-            let mut dev = Device::new(profile, cfg.seed);
-            let tcfg = ThorConfig { kind, random_sampling: random, ..cfg.thor_cfg() };
-            let mut thor = Thor::new(tcfg);
-            thor.profile(&mut dev, &reference_model(Family::Cnn5));
-            let test = sample_n(Family::Cnn5, cfg.n_test().min(25), cfg.seed + 1, 10);
-            let (mut actual, mut est) = (vec![], vec![]);
-            for g in &test {
-                actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
-                est.push(thor.estimate("xavier", g).unwrap().energy_per_iter);
-            }
-            rows.push(vec![label.to_string(), format!("{:.1}", mape(&actual, &est))]);
-        }
+        let rows: Vec<Vec<String>> =
+            parts.into_iter().map(|p| *p.downcast::<Vec<String>>().expect("a15 row")).collect();
         rep.push_table("", &["kernel / sampling", "MAPE %"], rows);
         rep
     }
@@ -108,6 +166,24 @@ impl Experiment for A15 {
 /// Energy normalized to 1000 iterations vs profiling-iteration count
 /// (few samples ⇒ unstable).
 pub struct A16;
+
+const A16_ITERS: [usize; 6] = [10, 50, 100, 200, 500, 1000];
+
+impl A16 {
+    fn cell(iters: usize, cfg: &ExpConfig) -> Vec<String> {
+        let mut dev = Device::new(devices::xavier(), cfg.seed);
+        let g = zoo::lenet5(&[6, 16, 120, 84], 10);
+        let tr = fuse(&lower(&g));
+        let reps = if cfg.quick { 5 } else { 15 };
+        let vals: Vec<f64> =
+            (0..reps).map(|_| dev.run(&tr, iters).energy_per_iter() * 1000.0).collect();
+        vec![
+            format!("{iters}"),
+            format!("{:.3}", mean(&vals)),
+            format!("{:.1}%", 100.0 * std_dev(&vals) / mean(&vals)),
+        ]
+    }
+}
 
 impl Experiment for A16 {
     fn id(&self) -> &'static str {
@@ -118,24 +194,26 @@ impl Experiment for A16 {
         "measurement spread vs profiling-iteration count (Xavier)"
     }
 
-    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+    fn subtasks(&self, cfg: &ExpConfig) -> Vec<Subtask> {
+        // Each row gets a fresh device at the *same* parent seed, so the
+        // spread-vs-iterations rows start from identical device state
+        // (the old sequential loop carried one RNG stream across rows).
+        let parent = *cfg;
+        A16_ITERS
+            .iter()
+            .map(|&iters| {
+                Subtask::new(format!("iters{iters}"), move |_scfg: &ExpConfig| {
+                    Self::cell(iters, &parent)
+                })
+            })
+            .collect()
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
         let mut rep =
             ExpReport::new(self.id(), "energy vs profiling iterations", cfg, &["xavier"]);
-        let mut dev = Device::new(devices::xavier(), cfg.seed);
-        let g = zoo::lenet5(&[6, 16, 120, 84], 10);
-        let tr = fuse(&lower(&g));
-        let reps = if cfg.quick { 5 } else { 15 };
-        let mut rows = Vec::new();
-        for iters in [10usize, 50, 100, 200, 500, 1000] {
-            let vals: Vec<f64> = (0..reps)
-                .map(|_| dev.run(&tr, iters).energy_per_iter() * 1000.0)
-                .collect();
-            rows.push(vec![
-                format!("{iters}"),
-                format!("{:.3}", mean(&vals)),
-                format!("{:.1}%", 100.0 * std_dev(&vals) / mean(&vals)),
-            ]);
-        }
+        let rows: Vec<Vec<String>> =
+            parts.into_iter().map(|p| *p.downcast::<Vec<String>>().expect("a16 row")).collect();
         rep.push_table(
             "",
             &["profiling iterations", "energy per 1000 iters (J)", "spread (CV)"],

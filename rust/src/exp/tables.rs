@@ -238,7 +238,37 @@ impl Experiment for Fig9 {
 }
 
 /// Held-out error of the hidden-conv GP surface (est − obs).
+///
+/// Fans out one subtask per device: each device's profile + held-out
+/// sweep is independent (own device, own seed via the subtask label),
+/// and the runner merges the per-device tables in declaration order.
 pub struct Fig12;
+
+const FIG12_DEVICES: [&str; 2] = ["xavier", "server"];
+
+impl Fig12 {
+    /// One device's held-out table — a pure function of the subtask
+    /// config.
+    fn device_rows(dev_name: &'static str, cfg: &ExpConfig) -> Vec<Vec<String>> {
+        let profile = devices::by_name(dev_name).unwrap();
+        let mut dev = Device::new(profile, cfg.seed);
+        let mut thor = Thor::new(cfg.thor_cfg());
+        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        let mut rng = Pcg64::new(cfg.seed + 3);
+        let mut rows = Vec::new();
+        for _ in 0..if cfg.quick { 6 } else { 20 } {
+            let g = sample(Family::Cnn5, &mut rng, 10);
+            let act = measured_energy(&mut dev, &g, cfg.iterations(), 1);
+            let est = thor.estimate(dev_name, &g).unwrap().energy_per_iter;
+            rows.push(vec![
+                format!("{act:.4e}"),
+                format!("{est:.4e}"),
+                format!("{:+.1}%", 100.0 * (est - act) / act),
+            ]);
+        }
+        rows
+    }
+}
 
 impl Experiment for Fig12 {
     fn id(&self) -> &'static str {
@@ -249,26 +279,20 @@ impl Experiment for Fig12 {
         "estimation minus observation on held-out CNNs (Xavier + server)"
     }
 
-    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+    fn subtasks(&self, _cfg: &ExpConfig) -> Vec<Subtask> {
+        FIG12_DEVICES
+            .iter()
+            .map(|&dev_name| {
+                Subtask::new(dev_name, move |scfg: &ExpConfig| Self::device_rows(dev_name, scfg))
+            })
+            .collect()
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
         let mut rep =
-            ExpReport::new(self.id(), "estimation vs observation", cfg, &["xavier", "server"]);
-        for dev_name in ["xavier", "server"] {
-            let profile = devices::by_name(dev_name).unwrap();
-            let mut dev = Device::new(profile, cfg.seed);
-            let mut thor = Thor::new(cfg.thor_cfg());
-            thor.profile(&mut dev, &reference_model(Family::Cnn5));
-            let mut rng = Pcg64::new(cfg.seed + 3);
-            let mut rows = Vec::new();
-            for _ in 0..if cfg.quick { 6 } else { 20 } {
-                let g = sample(Family::Cnn5, &mut rng, 10);
-                let act = measured_energy(&mut dev, &g, cfg.iterations(), 1);
-                let est = thor.estimate(dev_name, &g).unwrap().energy_per_iter;
-                rows.push(vec![
-                    format!("{act:.4e}"),
-                    format!("{est:.4e}"),
-                    format!("{:+.1}%", 100.0 * (est - act) / act),
-                ]);
-            }
+            ExpReport::new(self.id(), "estimation vs observation", cfg, &FIG12_DEVICES);
+        for (dev_name, part) in FIG12_DEVICES.iter().zip(parts) {
+            let rows = *part.downcast::<Vec<Vec<String>>>().expect("fig12 rows");
             rep.push_table(
                 &format!("estimation vs observation ({dev_name})"),
                 &["observed", "estimated", "diff"],

@@ -63,6 +63,133 @@ impl Kernel {
     }
 }
 
+/// Precomputed pairwise statistics of a point set, packed lower-
+/// triangular (row `i` holds entries for `j ≤ i`).
+///
+/// During hyper-parameter search the points never move: only the scalar
+/// kernel profile (ℓ, σ², noise) changes between the ~100 NLML
+/// evaluations of a fit.  `DistGram` computes the distances / dot
+/// products once per point set and [`DistGram::apply_into`] maps them
+/// through the kernel into a reusable gram buffer — bit-identical to
+/// building the gram from [`Kernel::eval`] on the original vectors,
+/// because the stored `r`/`d²`/`x·z` feed the exact same expressions.
+/// Appending a point ([`DistGram::push`]) appends one packed row; noise-
+/// only candidate moves touch just the diagonal
+/// ([`DistGram::apply_diag`]).
+#[derive(Clone, Debug, Default)]
+pub struct DistGram {
+    n: usize,
+    /// Pairwise Euclidean distances (Matérn path).
+    r: Vec<f64>,
+    /// Squared distances (RBF path).
+    d2: Vec<f64>,
+    /// Dot products (DotProduct path).
+    dot: Vec<f64>,
+}
+
+impl DistGram {
+    pub fn new(xs: &[Vec<f64>]) -> Self {
+        let mut g = Self::default();
+        for i in 1..=xs.len() {
+            g.push(&xs[..i]);
+        }
+        g
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.n = 0;
+        self.r.clear();
+        self.d2.clear();
+        self.dot.clear();
+    }
+
+    /// Append the pairwise row of the *last* point of `xs`
+    /// (`xs.len()` must be exactly one more than the covered count).
+    pub fn push(&mut self, xs: &[Vec<f64>]) {
+        assert_eq!(xs.len(), self.n + 1, "push expects exactly one new point");
+        let x = &xs[self.n];
+        for z in xs {
+            let d2 = sq_dist(x, z);
+            self.d2.push(d2);
+            self.r.push(d2.sqrt());
+            self.dot.push(x.iter().zip(z).map(|(a, b)| a * b).sum());
+        }
+        self.n += 1;
+    }
+
+    #[inline]
+    fn idx(i: usize, j: usize) -> usize {
+        debug_assert!(j <= i);
+        i * (i + 1) / 2 + j
+    }
+
+    /// Apply the scalar kernel profile into `k` (resized to n×n), adding
+    /// `diag_add` (noise + jitter) on the diagonal.  The kernel kind is
+    /// matched once outside the loops — no per-element dispatch, no
+    /// per-element sqrt.
+    pub fn apply_into(&self, kern: &Kernel, diag_add: f64, k: &mut crate::util::linalg::Mat) {
+        let n = self.n;
+        k.resize(n, n);
+        match kern.kind {
+            KernelKind::Matern52 => {
+                for i in 0..n {
+                    for j in 0..=i {
+                        let s = SQRT5 * self.r[Self::idx(i, j)] / kern.lengthscale;
+                        let v = kern.variance * (1.0 + s + s * s / 3.0) * (-s).exp();
+                        k[(i, j)] = v;
+                        k[(j, i)] = v;
+                    }
+                }
+            }
+            KernelKind::Rbf => {
+                for i in 0..n {
+                    for j in 0..=i {
+                        let d2 = self.d2[Self::idx(i, j)];
+                        let v = kern.variance
+                            * (-0.5 * d2 / (kern.lengthscale * kern.lengthscale)).exp();
+                        k[(i, j)] = v;
+                        k[(j, i)] = v;
+                    }
+                }
+            }
+            KernelKind::DotProduct => {
+                for i in 0..n {
+                    for j in 0..=i {
+                        let v = kern.variance * (self.dot[Self::idx(i, j)] + 1.0);
+                        k[(i, j)] = v;
+                        k[(j, i)] = v;
+                    }
+                }
+            }
+        }
+        self.apply_diag(kern, diag_add, k);
+    }
+
+    /// Rewrite only the diagonal of an already-applied gram: correct when
+    /// nothing but the additive `diag_add` (noise) changed since the last
+    /// [`DistGram::apply_into`] with the same (kind, ℓ, σ²) profile.
+    pub fn apply_diag(&self, kern: &Kernel, diag_add: f64, k: &mut crate::util::linalg::Mat) {
+        debug_assert_eq!(k.rows, self.n);
+        for i in 0..self.n {
+            let v = match kern.kind {
+                // r = 0 on the diagonal: (1 + 0 + 0)·exp(-0) = 1 exactly,
+                // so this matches eval(x, x) bit-for-bit.
+                KernelKind::Matern52 | KernelKind::Rbf => kern.variance,
+                KernelKind::DotProduct => kern.variance * (self.dot[Self::idx(i, i)] + 1.0),
+            };
+            k[(i, i)] = v + diag_add;
+        }
+    }
+}
+
 pub fn sq_dist(x: &[f64], z: &[f64]) -> f64 {
     x.iter().zip(z).map(|(a, b)| (a - b) * (a - b)).sum()
 }
@@ -141,6 +268,76 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_distgram_matches_naive_gram_bitwise() {
+        use crate::util::linalg::Mat;
+        check(
+            "distgram == naive gram",
+            Config { cases: 48, seed: 31 },
+            |r| {
+                let n = r.range_usize(1, 20);
+                let dim = r.range_usize(1, 2);
+                let xs: Vec<Vec<f64>> =
+                    (0..n).map(|_| (0..dim).map(|_| r.f64()).collect()).collect();
+                (xs, r.range_f64(0.05, 2.0), r.range_f64(0.1, 3.0), r.range_f64(1e-6, 0.5))
+            },
+            |(xs, ls, var, noise)| {
+                for kind in [KernelKind::Matern52, KernelKind::Rbf, KernelKind::DotProduct] {
+                    let kern = Kernel { kind, lengthscale: *ls, variance: *var };
+                    let mut want = kern.gram(xs);
+                    for i in 0..xs.len() {
+                        want[(i, i)] += noise + 1e-10;
+                    }
+                    let dg = DistGram::new(xs);
+                    let mut got = Mat::zeros(1, 1);
+                    dg.apply_into(&kern, noise + 1e-10, &mut got);
+                    crate::prop_assert!(
+                        got.data == want.data,
+                        "{kind:?} gram diverged at ls={ls} var={var}"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn distgram_push_equals_fresh_build() {
+        use crate::util::linalg::Mat;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(12);
+        let xs: Vec<Vec<f64>> = (0..10).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let fresh = DistGram::new(&xs);
+        let mut inc = DistGram::default();
+        for i in 1..=xs.len() {
+            inc.push(&xs[..i]);
+        }
+        let kern = Kernel { kind: KernelKind::Matern52, lengthscale: 0.4, variance: 1.3 };
+        let (mut a, mut b) = (Mat::zeros(1, 1), Mat::zeros(1, 1));
+        fresh.apply_into(&kern, 1e-3, &mut a);
+        inc.apply_into(&kern, 1e-3, &mut b);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn apply_diag_equals_full_reapply_on_noise_move() {
+        use crate::util::linalg::Mat;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(13);
+        for kind in [KernelKind::Matern52, KernelKind::Rbf, KernelKind::DotProduct] {
+            let xs: Vec<Vec<f64>> = (0..8).map(|_| vec![rng.f64()]).collect();
+            let dg = DistGram::new(&xs);
+            let kern = Kernel { kind, lengthscale: 0.7, variance: 2.0 };
+            let mut k = Mat::zeros(1, 1);
+            dg.apply_into(&kern, 1e-3, &mut k);
+            // noise-only move: diag rewrite must equal a full re-apply
+            dg.apply_diag(&kern, 5e-2, &mut k);
+            let mut full = Mat::zeros(1, 1);
+            dg.apply_into(&kern, 5e-2, &mut full);
+            assert_eq!(k.data, full.data, "{kind:?} diag-only move diverged");
+        }
     }
 
     #[test]

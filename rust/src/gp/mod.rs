@@ -18,8 +18,8 @@ pub mod acquisition;
 pub mod kernel;
 pub mod model;
 
-pub use kernel::{Kernel, KernelKind};
-pub use model::{GpHyper, GpModel};
+pub use kernel::{DistGram, Kernel, KernelKind};
+pub use model::{FitWorkspace, GpHyper, GpModel};
 
 /// Cap on profiled points per layer family (end condition 1, §3.3).
 pub const MAX_POINTS: usize = 64;

@@ -11,6 +11,7 @@
 
 use crate::model::{flops::model_train_flops, zoo, ModelGraph};
 use crate::simdevice::Device;
+use crate::thor::estimator::EstimateCache;
 use crate::thor::Thor;
 use crate::util::rng::Pcg64;
 use crate::workload::{fusion::fuse, lower::lower};
@@ -58,11 +59,16 @@ pub fn prune_cnn5(
     let orig_graph = zoo::cnn5(original, img, batch);
     let orig_actual = dev.run(&fuse(&lower(&orig_graph)), iterations).energy_per_iter();
 
-    let estimate = |g: &ModelGraph| -> f64 {
+    // §Perf: one memo cache across the whole candidate sweep — the few
+    // cnn5 families are re-queried at overlapping widths on every try,
+    // and cached values are bit-identical to fresh predictions.
+    let mut cache = EstimateCache::new();
+    let mut estimate = |g: &ModelGraph| -> f64 {
         match &guidance {
-            Guidance::Thor(thor, device) => {
-                thor.estimate(device, g).map(|e| e.energy_per_iter).unwrap_or(f64::INFINITY)
-            }
+            Guidance::Thor(thor, device) => thor
+                .estimate_cached(device, g, &mut cache)
+                .map(|e| e.energy_per_iter)
+                .unwrap_or(f64::INFINITY),
             Guidance::FlopsRatio { original_actual } => {
                 original_actual * model_train_flops(g) / model_train_flops(&orig_graph)
             }

@@ -3,10 +3,21 @@
 //! and sum:
 //!
 //! Ê_model = Ê_input(C₁) + Σ Ê_hidden(C_{i−1}, C_i) + Ê_output(C_{n−1})
+//!
+//! §Perf: queries are grouped **by family** and answered with one
+//! `predict_batch` per family (ResNet-56's 55 groups collapse to a
+//! handful of batched GP calls), with an optional [`EstimateCache`]
+//! memoizing `(family, features) → (mean, var)` across calls — the
+//! pruning candidate sweep re-queries the same few families at
+//! overlapping widths thousands of times.  Both paths are bit-identical
+//! to the scalar per-group loop (asserted by tests): predictions are
+//! scattered back and summed in group order, so even the float
+//! accumulation order is unchanged.
+
+use std::collections::HashMap;
 
 use crate::model::ModelGraph;
 use crate::thor::parse::{parse, Position};
-use crate::thor::profiler::fc_in_after;
 use crate::thor::store::GpStore;
 
 #[derive(Debug, thiserror::Error)]
@@ -45,25 +56,135 @@ fn features(g: &crate::thor::parse::Group) -> Vec<f64> {
     }
 }
 
+/// Memoized per-family predictions keyed by (device, family id) and
+/// feature bits — device is part of the key, so one cache can safely
+/// span a sweep that touches several devices.  Thread one cache through
+/// a candidate sweep (`pruning`) so repeated queries of the same family
+/// at the same widths skip the GP entirely; cached values are exactly
+/// what `predict_raw` would return, so results are unchanged.
+///
+/// **Precondition:** the cache is a memo of one fixed [`GpStore`]
+/// snapshot.  It has no invalidation hook, so if a family is
+/// (re)profiled after entries were cached, drop the cache and start a
+/// fresh one — stale hits would silently mix old-GP and new-GP values.
+#[derive(Default)]
+pub struct EstimateCache {
+    /// `"{device}|{family}"` (the [`GpStore`] key convention) → memo.
+    map: HashMap<String, HashMap<Vec<u64>, (f64, f64)>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl EstimateCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.values().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.values().all(|m| m.is_empty())
+    }
+}
+
+/// f64 features as exact hash keys (bit patterns; the features are
+/// channel counts, so NaN never appears).
+fn feat_key(feats: &[f64]) -> Vec<u64> {
+    feats.iter().map(|f| f.to_bits()).collect()
+}
+
 /// Estimate a model's per-iteration training energy on `device`.
 pub fn estimate(store: &GpStore, device: &str, model: &ModelGraph) -> Result<Estimate, EstimateError> {
+    estimate_cached(store, device, model, &mut EstimateCache::new())
+}
+
+/// [`estimate`] with a caller-owned memo cache.  Queries are batched per
+/// family: misses of one family go through a single `predict_batch`
+/// call, hits skip the GP.  Per-layer results are scattered back and
+/// folded in group order, so the output is bit-identical to the scalar
+/// per-group loop regardless of cache state.
+pub fn estimate_cached(
+    store: &GpStore,
+    device: &str,
+    model: &ModelGraph,
+    cache: &mut EstimateCache,
+) -> Result<Estimate, EstimateError> {
     let parsed = parse(model);
+    let n = parsed.groups.len();
+    let feats: Vec<Vec<f64>> = parsed.groups.iter().map(features).collect();
+    let fam_ids: Vec<String> = parsed.families.iter().map(|f| f.id()).collect();
+
+    // group indices per family (first-appearance order = group order of
+    // each family's first member, so the "first missing family" error is
+    // the same one the scalar loop would report)
+    let mut by_fam: Vec<Vec<usize>> = vec![Vec::new(); fam_ids.len()];
+    for (gi, &fi) in parsed.assignment.iter().enumerate() {
+        by_fam[fi].push(gi);
+    }
+
+    let mut per_layer_mv: Vec<(f64, f64)> = vec![(0.0, 0.0); n];
+    for (fi, gidx) in by_fam.iter().enumerate() {
+        if gidx.is_empty() {
+            continue;
+        }
+        let fam = &fam_ids[fi];
+        let stored = store
+            .get(device, fam)
+            .ok_or_else(|| EstimateError::MissingFamily(fam.clone(), device.to_string()))?;
+        let fam_cache = cache.map.entry(format!("{device}|{fam}")).or_default();
+        // one feat_key per missed group, reused for dedup + insertion
+        let mut misses: Vec<(usize, Vec<u64>)> = Vec::new();
+        for &gi in gidx {
+            let key = feat_key(&feats[gi]);
+            match fam_cache.get(&key) {
+                Some(&mv) => {
+                    per_layer_mv[gi] = mv;
+                    cache.hits += 1;
+                }
+                None => {
+                    misses.push((gi, key));
+                    cache.misses += 1;
+                }
+            }
+        }
+        if !misses.is_empty() {
+            // dedup identical features within the call: ResNet repeats
+            // the same (family, width) dozens of times, and each unique
+            // query costs an O(n²) posterior
+            let mut uniq: Vec<Vec<f64>> = Vec::new();
+            let mut slot_of: HashMap<&[u64], usize> = HashMap::new();
+            let slots: Vec<usize> = misses
+                .iter()
+                .map(|(gi, key)| {
+                    *slot_of.entry(key.as_slice()).or_insert_with(|| {
+                        uniq.push(feats[*gi].clone());
+                        uniq.len() - 1
+                    })
+                })
+                .collect();
+            let mv = stored.predict_raw_batch(&uniq);
+            drop(slot_of);
+            for ((gi, key), &slot) in misses.into_iter().zip(&slots) {
+                per_layer_mv[gi] = mv[slot];
+                fam_cache.insert(key, mv[slot]);
+            }
+        }
+    }
+
+    // fold in group order: same float accumulation order as the scalar
+    // per-group loop
     let mut energy = 0.0;
     let mut variance = 0.0;
-    let mut per_layer = Vec::with_capacity(parsed.groups.len());
-    for g in &parsed.groups {
-        let fam = g.key.id();
-        let stored = store
-            .get(device, &fam)
-            .ok_or_else(|| EstimateError::MissingFamily(fam.clone(), device.to_string()))?;
-        let feats = features(g);
-        let (m, v) = stored.predict_raw(&feats);
+    let mut per_layer = Vec::with_capacity(n);
+    for (gi, feat) in feats.into_iter().enumerate() {
+        let (m, v) = per_layer_mv[gi];
         let m = m.max(0.0); // energies are physical
         energy += m;
         variance += v;
-        per_layer.push((fam, feats, m));
+        per_layer.push((fam_ids[parsed.assignment[gi]].clone(), feat, m));
     }
-    let _ = fc_in_after; // (re-exported for variant symmetry; silence lint)
     Ok(Estimate { energy_per_iter: energy, variance, per_layer })
 }
 
@@ -77,8 +198,13 @@ mod tests {
     /// A store whose GPs encode a known linear function of features so
     /// the additive sum is checkable in closed form.
     fn synthetic_store(model: &ModelGraph, device: &str, coef: f64) -> GpStore {
-        let parsed = parse(model);
         let mut store = GpStore::new();
+        add_synthetic(&mut store, model, device, coef);
+        store
+    }
+
+    fn add_synthetic(store: &mut GpStore, model: &ModelGraph, device: &str, coef: f64) {
+        let parsed = parse(model);
         for fam in &parsed.families {
             let tmpl = parsed.template(fam).unwrap();
             let dim = match fam.position {
@@ -110,7 +236,6 @@ mod tests {
                 StoredGp { gp, x_max, log_x: false, log_y: false, device_seconds: 1.0, fit_seconds: 0.1, converged: true },
             );
         }
-        store
     }
 
     #[test]
@@ -144,6 +269,78 @@ mod tests {
         let parsed = parse(&g);
         assert_eq!(est.per_layer.len(), parsed.groups.len());
         assert!(parsed.families.len() < parsed.groups.len());
+    }
+
+    #[test]
+    fn batched_estimate_matches_scalar_loop_exactly() {
+        // The per-family batched path must reproduce the naive per-group
+        // scalar loop bit-for-bit (ResNet has many groups per family, so
+        // this exercises real batching).
+        let g = zoo::resnet(20, 8, 10);
+        let store = synthetic_store(&g, "xavier", 7.0);
+        let est = estimate(&store, "xavier", &g).unwrap();
+
+        let parsed = parse(&g);
+        let mut energy = 0.0;
+        let mut variance = 0.0;
+        for (i, grp) in parsed.groups.iter().enumerate() {
+            let fam = grp.key.id();
+            let stored = store.get("xavier", &fam).unwrap();
+            let feats = features(grp);
+            let (m, v) = stored.predict_raw(&feats);
+            let m = m.max(0.0);
+            energy += m;
+            variance += v;
+            let (got_fam, got_feats, got_m) = &est.per_layer[i];
+            assert_eq!(*got_fam, fam);
+            assert_eq!(*got_feats, feats);
+            assert_eq!(got_m.to_bits(), m.to_bits(), "group {i} mean diverged");
+        }
+        assert_eq!(est.energy_per_iter.to_bits(), energy.to_bits());
+        assert_eq!(est.variance.to_bits(), variance.to_bits());
+    }
+
+    #[test]
+    fn cached_estimate_hits_and_matches() {
+        let g = zoo::resnet(20, 8, 10);
+        let store = synthetic_store(&g, "server", 3.0);
+        let mut cache = EstimateCache::new();
+        let a = estimate_cached(&store, "server", &g, &mut cache).unwrap();
+        assert!(cache.misses > 0 && cache.len() > 0);
+        // ResNet repeats families at identical widths: the dedup keeps
+        // unique entries below the group count, and a second pass over
+        // the same model is all hits.
+        assert!(cache.len() < parse(&g).groups.len(), "dedup should collapse repeats");
+        let misses_after_first = cache.misses;
+        let b = estimate_cached(&store, "server", &g, &mut cache).unwrap();
+        assert_eq!(cache.misses, misses_after_first, "second pass should not miss");
+        assert!(cache.hits as usize >= parse(&g).groups.len());
+        assert_eq!(a.energy_per_iter.to_bits(), b.energy_per_iter.to_bits());
+        assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+        // and the cached result equals the uncached one
+        let c = estimate(&store, "server", &g).unwrap();
+        assert_eq!(a.energy_per_iter.to_bits(), c.energy_per_iter.to_bits());
+    }
+
+    #[test]
+    fn cache_keys_by_device() {
+        // One cache across two devices must not cross-contaminate: the
+        // same family ids exist on both, with different fitted surfaces.
+        let g = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let mut store = synthetic_store(&g, "xavier", 10.0);
+        add_synthetic(&mut store, &g, "server", 3.0);
+        let mut cache = EstimateCache::new();
+        let a = estimate_cached(&store, "xavier", &g, &mut cache).unwrap();
+        let b = estimate_cached(&store, "server", &g, &mut cache).unwrap();
+        assert_eq!(
+            a.energy_per_iter.to_bits(),
+            estimate(&store, "xavier", &g).unwrap().energy_per_iter.to_bits()
+        );
+        assert_eq!(
+            b.energy_per_iter.to_bits(),
+            estimate(&store, "server", &g).unwrap().energy_per_iter.to_bits()
+        );
+        assert!((a.energy_per_iter - b.energy_per_iter).abs() > 1e-6, "devices must differ");
     }
 
     #[test]

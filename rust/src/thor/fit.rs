@@ -9,7 +9,7 @@
 //! path — the energy GP is still the estimation output.
 
 use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
-use crate::gp::{GpModel, KernelKind};
+use crate::gp::{FitWorkspace, GpHyper, GpModel, KernelKind};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FitConfig {
@@ -99,6 +99,12 @@ pub fn fit_family(
 
     let mut rng = crate::util::rng::Pcg64::new(cfg.seed);
     let mut converged = false;
+    // §Perf: one workspace carries the pairwise-distance cache and the
+    // gram/Cholesky buffers across every refit of this loop; after the
+    // first full multi-start fit, each round does a warm single-start
+    // refit seeded from the previous round's hypers.
+    let mut ws = FitWorkspace::new();
+    let mut prev_hyper: Option<GpHyper> = None;
     loop {
         if pts.len() >= cfg.max_points {
             break;
@@ -110,9 +116,14 @@ pub fn fit_family(
 
         // Acquisition target: energy GP, or the time GP surrogate.
         let acq_ys = if cfg.time_surrogate { &ts } else { &es };
-        let Some(acq_gp) = GpModel::fit(cfg.kind, xs.clone(), acq_ys) else {
+        let fitted = match prev_hyper {
+            Some(h) => GpModel::fit_warm(&mut ws, cfg.kind, xs.clone(), acq_ys, h),
+            None => GpModel::fit_with(&mut ws, cfg.kind, xs.clone(), acq_ys),
+        };
+        let Some(acq_gp) = fitted else {
             break;
         };
+        prev_hyper = Some(acq_gp.hyper);
         // With log targets, a posterior std of s is a relative error of
         // ~s, so the 5 % criterion compares the std against 1.0.
         let y_abs = if cfg.log_targets {
@@ -151,7 +162,14 @@ pub fn fit_family(
     let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
     let tf = |v: f64| if cfg.log_targets { v.max(1e-15).ln() } else { v };
     let es: Vec<f64> = pts.iter().map(|p| tf(p.1)).collect();
-    let gp = GpModel::fit(cfg.kind, xs, &es).expect("final GP fit failed");
+    // Final energy GP: warm from the loop's last energy-GP hypers.  In
+    // surrogate mode the loop fitted the *time* GP, so the energy
+    // surface gets a full multi-start search instead.
+    let gp = match prev_hyper {
+        Some(h) if !cfg.time_surrogate => GpModel::fit_warm(&mut ws, cfg.kind, xs, &es, h),
+        _ => GpModel::fit_with(&mut ws, cfg.kind, xs, &es),
+    }
+    .expect("final GP fit failed");
     FitOutcome {
         gp,
         points: pts,
@@ -236,6 +254,32 @@ mod tests {
         let out = fit_family(|p| (f(p), 0.2), 2, &FitConfig { max_points: 30, grid_n: 9, ..Default::default() });
         let (m, _) = out.gp.predict(&[0.5, 0.5]);
         assert!((m.exp() - f(&[0.5, 0.5])).abs() < 1.0, "{}", m.exp());
+    }
+
+    #[test]
+    fn fit_family_is_deterministic() {
+        // Warm-start refits are pure functions of the observed points:
+        // two identical runs must agree bit-for-bit (the suite-JSON
+        // byte-identity contract leans on this).
+        let run = || {
+            fit_family(
+                |p| (surface_1d(p[0]), 0.5),
+                1,
+                &FitConfig { max_points: 12, grid_n: 17, ..Default::default() },
+            )
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.0, pb.0);
+            assert_eq!(pa.1.to_bits(), pb.1.to_bits());
+        }
+        for i in 0..=10 {
+            let q = [i as f64 / 10.0];
+            let (m1, v1) = a.gp.predict(&q);
+            let (m2, v2) = b.gp.predict(&q);
+            assert_eq!((m1.to_bits(), v1.to_bits()), (m2.to_bits(), v2.to_bits()));
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use crate::gp::KernelKind;
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
-use crate::thor::estimator::{estimate, Estimate, EstimateError};
+use crate::thor::estimator::{estimate, estimate_cached, Estimate, EstimateCache, EstimateError};
 use crate::thor::fit::{fit_family, FitConfig};
 use crate::thor::parse::{parse, Position};
 use crate::thor::profiler::{self, ranges};
@@ -260,6 +260,20 @@ impl Thor {
     /// Estimate a model's per-iteration energy from the fitted store.
     pub fn estimate(&self, device: &str, model: &ModelGraph) -> Result<Estimate, EstimateError> {
         estimate(&self.store, device, model)
+    }
+
+    /// [`Thor::estimate`] with a caller-owned memo cache — thread one
+    /// cache through a candidate sweep (e.g. the pruning search) so
+    /// repeated family×width queries skip the GP.  Results are
+    /// bit-identical to [`Thor::estimate`].  The cache memoizes this
+    /// store's *current* GPs: drop it if [`Thor::profile`] runs again.
+    pub fn estimate_cached(
+        &self,
+        device: &str,
+        model: &ModelGraph,
+        cache: &mut EstimateCache,
+    ) -> Result<Estimate, EstimateError> {
+        estimate_cached(&self.store, device, model, cache)
     }
 }
 

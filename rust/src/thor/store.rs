@@ -26,12 +26,9 @@ pub struct StoredGp {
 }
 
 impl StoredGp {
-    /// Predict at raw channel features, in linear joules regardless of
-    /// the internal transforms.  The returned variance is mapped back to
-    /// linear units via the delta method when `log_y`.
-    pub fn predict_raw(&self, raw: &[f64]) -> (f64, f64) {
-        let q: Vec<f64> = raw
-            .iter()
+    /// Raw channel features → the GP's normalized input space.
+    fn normalize(&self, raw: &[f64]) -> Vec<f64> {
+        raw.iter()
             .zip(&self.x_max)
             .map(|(v, m)| {
                 if self.log_x {
@@ -40,14 +37,36 @@ impl StoredGp {
                     v / m
                 }
             })
-            .collect();
-        let (m, v) = self.gp.predict(&q);
+            .collect()
+    }
+
+    /// Map a normalized-space (mean, var) back to linear joules (delta
+    /// method on the variance when `log_y`).
+    fn to_linear(&self, m: f64, v: f64) -> (f64, f64) {
         if self.log_y {
             let mean = m.exp();
             (mean, v * mean * mean)
         } else {
             (m, v)
         }
+    }
+
+    /// Predict at raw channel features, in linear joules regardless of
+    /// the internal transforms.  The returned variance is mapped back to
+    /// linear units via the delta method when `log_y`.
+    pub fn predict_raw(&self, raw: &[f64]) -> (f64, f64) {
+        let q = self.normalize(raw);
+        let (m, v) = self.gp.predict(&q);
+        self.to_linear(m, v)
+    }
+
+    /// Batched [`StoredGp::predict_raw`]: one `GpModel::predict_batch`
+    /// call for the whole query set (bit-identical to the scalar path —
+    /// the estimator's per-family batching relies on that).
+    pub fn predict_raw_batch(&self, raws: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let qs: Vec<Vec<f64>> = raws.iter().map(|r| self.normalize(r)).collect();
+        let (ms, vs) = self.gp.predict_batch(&qs);
+        ms.into_iter().zip(vs).map(|(m, v)| self.to_linear(m, v)).collect()
     }
 
     pub fn to_json(&self) -> Json {
@@ -166,6 +185,21 @@ mod tests {
         let (m_raw, _) = s.predict_raw(&[64.0]);
         let (m_norm, _) = s.gp.predict(&[0.5]);
         assert_eq!(m_raw, m_norm);
+    }
+
+    #[test]
+    fn predict_raw_batch_matches_scalar_bitwise() {
+        let mut s = toy_stored();
+        for (log_x, log_y) in [(false, false), (true, false), (false, true), (true, true)] {
+            s.log_x = log_x;
+            s.log_y = log_y;
+            let raws: Vec<Vec<f64>> = (0..9).map(|i| vec![1.0 + 15.0 * i as f64]).collect();
+            let batch = s.predict_raw_batch(&raws);
+            for (raw, (bm, bv)) in raws.iter().zip(&batch) {
+                let (m, v) = s.predict_raw(raw);
+                assert_eq!((m.to_bits(), v.to_bits()), (bm.to_bits(), bv.to_bits()));
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,20 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Structured form for the perf-trajectory emitters (`cargo bench
+    /// --bench hotpath -- --json BENCH_<pr>.json`, EXPERIMENTS.md §Perf).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+        ])
+    }
+
     pub fn row(&self) -> Vec<String> {
         vec![
             self.name.clone(),
@@ -112,6 +126,19 @@ mod tests {
     fn bench_measures_sleep_scale() {
         let r = bench_n("sleep", 5, || std::thread::sleep(Duration::from_millis(2)));
         assert!(r.mean_ns > 1.5e6, "{}", r.mean_ns);
+    }
+
+    #[test]
+    fn to_json_carries_all_fields() {
+        let r = bench_n("probe", 10, || {
+            black_box(2 * 2);
+        });
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "probe");
+        assert_eq!(j.get("iters").unwrap().as_usize().unwrap(), 10);
+        for k in ["mean_ns", "p50_ns", "p95_ns", "min_ns"] {
+            assert!(j.get(k).unwrap().as_f64().unwrap() >= 0.0);
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! through the AOT Pallas artifact instead.
 
 /// Row-major dense matrix.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -15,6 +15,40 @@ pub struct Mat {
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Re-dimension in place, keeping the backing allocation when it is
+    /// already large enough (the workspace buffers of the GP fit engine).
+    /// Contents are unspecified afterwards — every caller overwrites.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Grow a square matrix by one zero row and one zero column, in
+    /// place, preserving the existing entries (the bordered-Cholesky
+    /// update appends into the new row).
+    pub fn grow_square(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let m = n + 1;
+        self.data.resize(m * m, 0.0);
+        // Re-stride from n to n+1 back to front so rows never overlap.
+        for i in (0..n).rev() {
+            for j in (0..n).rev() {
+                self.data[i * m + j] = self.data[i * n + j];
+            }
+        }
+        // Zero the new column of every old row and the new last row.
+        for i in 0..n {
+            self.data[i * m + n] = 0.0;
+        }
+        for j in 0..m {
+            self.data[n * m + j] = 0.0;
+        }
+        self.rows = m;
+        self.cols = m;
     }
 
     pub fn eye(n: usize) -> Self {
@@ -113,6 +147,67 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
     Some(l)
 }
 
+/// In-place [`cholesky`]: factor `a` into the caller's `l` buffer
+/// (resized to match), writing the same values as the allocating
+/// version.  Returns `false` when `a` is not (numerically) positive
+/// definite — `l` then holds a partial factor and must not be used.
+pub fn cholesky_into(a: &Mat, l: &mut Mat) -> bool {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    l.resize(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return false;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+        // keep the strict upper triangle zeroed (the buffer is reused)
+        for j in i + 1..n {
+            l[(i, j)] = 0.0;
+        }
+    }
+    true
+}
+
+/// Bordered Cholesky update: given the factor `l` of the leading n×n
+/// block A, grow it in place to the factor of the (n+1)×(n+1) matrix
+/// whose appended row/column is `row` (`row[j] = A'[n][j]` for j ≤ n).
+/// This performs exactly the arithmetic [`cholesky`] would perform on
+/// the last row of the bordered matrix, so the result is bit-identical
+/// to a from-scratch factorization.  Returns `false` (leaving `l`
+/// grown but with an unusable last row) when the bordered matrix is
+/// not positive definite.
+pub fn cholesky_append_row(l: &mut Mat, row: &[f64]) -> bool {
+    let n = l.rows;
+    assert_eq!(row.len(), n + 1);
+    l.grow_square();
+    for j in 0..n {
+        let mut s = row[j];
+        for k in 0..j {
+            s -= l[(n, k)] * l[(j, k)];
+        }
+        l[(n, j)] = s / l[(j, j)];
+    }
+    let mut s = row[n];
+    for k in 0..n {
+        s -= l[(n, k)] * l[(n, k)];
+    }
+    if s <= 0.0 {
+        return false;
+    }
+    l[(n, n)] = s.sqrt();
+    true
+}
+
 /// Solve L x = b (forward substitution), L lower-triangular.
 pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
     let n = l.rows;
@@ -144,6 +239,37 @@ pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
 /// Solve A x = b given the Cholesky factor of A.
 pub fn chol_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
     solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// [`solve_lower`] into a caller-provided buffer (no allocation).
+pub fn solve_lower_into(l: &Mat, b: &[f64], x: &mut [f64]) {
+    let n = l.rows;
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+}
+
+/// [`solve_lower_t`] into a caller-provided buffer (no allocation).
+pub fn solve_lower_t_into(l: &Mat, b: &[f64], x: &mut [f64]) {
+    let n = l.rows;
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+}
+
+/// [`chol_solve`] through two caller-provided buffers (no allocation):
+/// `tmp` receives the forward-solve, `x` the final solution.
+pub fn chol_solve_into(l: &Mat, b: &[f64], tmp: &mut [f64], x: &mut [f64]) {
+    solve_lower_into(l, b, tmp);
+    solve_lower_t_into(l, tmp, x);
 }
 
 /// A⁻¹ for SPD A via its Cholesky factor (column-by-column solves).
@@ -240,6 +366,97 @@ mod tests {
         }
         let l = cholesky(&a).unwrap();
         assert!((chol_logdet(&l) - 5.0 * 2.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_into_matches_allocating_bitwise() {
+        let a = random_spd(14, 7);
+        let l_alloc = cholesky(&a).unwrap();
+        let mut l = Mat::zeros(1, 1); // wrong size on purpose: resize path
+        assert!(cholesky_into(&a, &mut l));
+        assert_eq!(l.rows, 14);
+        assert_eq!(l.data, l_alloc.data, "in-place factor diverged");
+        // reuse of a dirty buffer must still match (upper re-zeroed)
+        let b = random_spd(9, 8);
+        let lb = cholesky(&b).unwrap();
+        assert!(cholesky_into(&b, &mut l));
+        assert_eq!(l.data, lb.data);
+    }
+
+    #[test]
+    fn cholesky_into_rejects_indefinite() {
+        let mut a = Mat::eye(4);
+        a[(3, 3)] = -2.0;
+        let mut l = Mat::zeros(4, 4);
+        assert!(!cholesky_into(&a, &mut l));
+    }
+
+    #[test]
+    fn grow_square_preserves_entries() {
+        let mut m = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                m[(i, j)] = (10 * i + j) as f64;
+            }
+        }
+        m.grow_square();
+        assert_eq!((m.rows, m.cols), (4, 4));
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(m[(i, j)], (10 * i + j) as f64);
+            }
+            assert_eq!(m[(i, 3)], 0.0);
+        }
+        for j in 0..4 {
+            assert_eq!(m[(3, j)], 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_cholesky_append_row_matches_scratch() {
+        use crate::util::proptest::{check, Config};
+        check(
+            "bordered cholesky == from-scratch",
+            Config { cases: 60, seed: 21 },
+            |r| (r.range_usize(2, 16), r.next_u64()),
+            |&(n, seed)| {
+                let a = random_spd(n, seed);
+                // factor the leading (n-1)×(n-1) block, then border with
+                // the last row/column of the full matrix
+                let mut lead = Mat::zeros(n - 1, n - 1);
+                for i in 0..n - 1 {
+                    for j in 0..n - 1 {
+                        lead[(i, j)] = a[(i, j)];
+                    }
+                }
+                let mut l = cholesky(&lead).expect("leading block PD");
+                let row: Vec<f64> = (0..n).map(|j| a[(n - 1, j)]).collect();
+                crate::prop_assert!(cholesky_append_row(&mut l, &row), "bordered not PD");
+                let full = cholesky(&a).expect("full PD");
+                for i in 0..n {
+                    for j in 0..n {
+                        let (got, want) = (l[(i, j)], full[(i, j)]);
+                        crate::prop_assert!(
+                            (got - want).abs() < 1e-10 * want.abs().max(1.0),
+                            "L[{i}][{j}] = {got} vs {want}"
+                        );
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn solve_into_matches_allocating() {
+        let a = random_spd(11, 9);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..11).map(|i| (i as f64) - 3.0).collect();
+        let want = chol_solve(&l, &b);
+        let mut tmp = vec![0.0; 11];
+        let mut x = vec![0.0; 11];
+        chol_solve_into(&l, &b, &mut tmp, &mut x);
+        assert_eq!(x, want, "buffered solve diverged");
     }
 
     #[test]
