@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     //    paper-scale budgets; ThorConfig::quick() exists for smoke tests
     let mut thor = Thor::new(ThorConfig { iterations: 200, ..ThorConfig::default() });
     let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
-    let report = thor.profile(&mut dev, &reference);
+    let report = thor.profile_local(&mut dev, &reference);
     println!(
         "profiled {} layer families with {} measurements ({:.0} simulated device-seconds)",
         report.families.len(),

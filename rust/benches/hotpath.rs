@@ -85,7 +85,7 @@ fn main() {
     let mut dev = Device::new(devices::xavier(), 1);
     let mut thor = Thor::new(ThorConfig::quick());
     let reference = zoo::cnn5(&[32, 64, 128, 256], 16, 10);
-    thor.profile(&mut dev, &reference);
+    thor.profile_local(&mut dev, &reference);
     let target = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
     results.push(bench("L3 thor.estimate(cnn5)", budget, || {
         black_box(thor.estimate("xavier", black_box(&target)).unwrap());
@@ -97,7 +97,7 @@ fn main() {
     let resnet_ref = zoo::resnet(56, 16, 10);
     let mut rdev = Device::new(devices::xavier(), 2);
     let mut rthor = Thor::new(ThorConfig::quick());
-    rthor.profile(&mut rdev, &resnet_ref);
+    rthor.profile_local(&mut rdev, &resnet_ref);
     results.push(bench("L3 thor.estimate(resnet56)", budget, || {
         black_box(rthor.estimate("xavier", black_box(&resnet_ref)).unwrap());
     }));

@@ -4,17 +4,26 @@
 //! back over TCP with a line-delimited JSON protocol.  `std::net` +
 //! scoped threads (no async runtime is available offline).
 //!
+//! The fleet is just one [`crate::thor::measure::Measurer`] backend:
+//! [`server::FleetMeasurer`] turns each batched acquisition round of
+//! the shared pipeline ([`crate::thor::pipeline::Thor::profile`]) into
+//! a batch of jobs fanned across the workers — the leader runs the
+//! exact acquisition code a local run does, so the fleet-profiled store
+//! is byte-identical to a local per-job-seeded run at any worker count.
+//!
 //! Invariants (property-tested in `scheduler`, and promoted to
-//! integration level over real sockets in `rust/tests/fleet.rs`):
+//! integration level over real sockets in `rust/tests/fleet.rs` and
+//! `rust/tests/backend_equiv.rs`):
 //! * every issued job is eventually resolved exactly once (no
 //!   double-assignment, no loss on worker failure — jobs are re-queued);
 //! * per-family measurement order does not affect the final GP (the GP
 //!   is permutation-invariant in its training set);
-//! * the scheduler terminates once every family converges or exhausts
+//! * the leader terminates once every family converges or exhausts
 //!   its budget;
 //! * with per-job measurement seeds ([`worker::job_seed`]) the final
 //!   store is a pure function of (reference, config, base seed) —
-//!   independent of worker count, scheduling, and mid-run worker death.
+//!   independent of worker count, scheduling, mid-run worker death, and
+//!   of whether the measurements ran locally or over the fleet.
 
 pub mod protocol;
 pub mod scheduler;
@@ -23,5 +32,5 @@ pub mod worker;
 
 pub use protocol::Msg;
 pub use scheduler::{JobQueue, JobState};
-pub use server::{BoundFleetServer, FleetRun, FleetServer};
+pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer};
 pub use worker::{job_seed, DeviceWorker};

@@ -1,4 +1,11 @@
 //! Wire protocol: one JSON object per line.
+//!
+//! Numbers travel through [`crate::util::json`], whose f64 formatting
+//! is shortest-roundtrip — a `Result`'s energy reaches the leader with
+//! the exact bit pattern the worker measured, which the cross-backend
+//! store byte-equality (`rust/tests/backend_equiv.rs`) depends on.
+//! Batched acquisition needs no protocol change: a batch is just
+//! several in-flight `Job`s at once.
 
 use crate::util::json::Json;
 

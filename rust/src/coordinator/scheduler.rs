@@ -197,6 +197,49 @@ mod tests {
     }
 
     #[test]
+    fn requeue_counts_only_inflight_jobs() {
+        // Queued-but-unassigned jobs are not "re-queued": the count is
+        // exactly the in-flight jobs of the dead worker (what FleetRun
+        // reports as `requeued`).
+        let mut q = JobQueue::new();
+        q.submit("f", vec![1], 10);
+        q.submit("f", vec![2], 10);
+        q.submit("f", vec![3], 10);
+        q.assign(0).unwrap();
+        assert_eq!(q.requeue_worker(0), 1, "only the held job counts");
+        assert_eq!(q.requeue_worker(0), 0, "repeat requeue finds nothing in flight");
+        assert_eq!(q.requeue_worker(5), 0, "idle/unknown worker requeues nothing");
+        assert_eq!(q.pending(), 3);
+    }
+
+    #[test]
+    fn complete_from_dead_worker_after_requeue_is_stale() {
+        // Exactly-once across death: the old worker's late result for a
+        // re-queued job must be dropped, and the re-measurement by the
+        // new worker is the one that lands.
+        let mut q = JobQueue::new();
+        let id = q.submit("f", vec![1], 10);
+        q.assign(0).unwrap();
+        q.requeue_worker(0);
+        assert!(!q.complete(id, 0), "late result from dead worker accepted");
+        assert_eq!(q.assign(1).unwrap().id, id);
+        assert!(q.complete(id, 1));
+        assert!(!q.complete(id, 1), "duplicate completion accepted");
+        assert_eq!(q.done(), 1);
+    }
+
+    #[test]
+    fn affinity_cleared_even_for_unassigned_pinned_jobs() {
+        // A job pinned to a worker that dies before ever taking it must
+        // become routable to the survivors (no stranding).
+        let mut q = JobQueue::new();
+        let id = q.submit_to("f", vec![1], 10, Some(2));
+        assert!(q.assign(0).is_none(), "pinned job leaked to the wrong worker");
+        assert_eq!(q.requeue_worker(2), 0, "nothing was in flight");
+        assert_eq!(q.assign(0).unwrap().id, id, "affinity not cleared on death");
+    }
+
+    #[test]
     fn requeue_on_worker_death() {
         let mut q = JobQueue::new();
         let id = q.submit("f", vec![1], 10);

@@ -1,22 +1,29 @@
-//! Fitting leader: accepts device workers over TCP, drives each
-//! family's active-learning loop by issuing measurement jobs, fits the
-//! GPs server-side (the paper's client/server split: the device only
-//! trains, the server only fits), and returns a populated
-//! [`crate::thor::store::GpStore`].
+//! Fitting leader: accepts device workers over TCP and exposes them to
+//! the profiling pipeline as one [`FleetMeasurer`] backend.  The leader
+//! runs the *same* acquisition code as a local run
+//! ([`crate::thor::pipeline::Thor::profile`]) — the paper's
+//! client/server split (the device only trains, the server only fits)
+//! with none of the fit logic duplicated server-side.  Each batched
+//! acquisition round fans its requests across the fleet as jobs; the
+//! [`crate::coordinator::scheduler::JobQueue`] provides affinity
+//! routing, exactly-once completion and requeue-on-death.
 //!
 //! Concurrency model: one accept loop; per-connection reader threads
 //! push (worker, msg) events into an mpsc channel; the leader thread
-//! owns all state (queue + fit loops) — no shared-state locking beyond
+//! owns all state (queue + pipeline) — no shared-state locking beyond
 //! the channel.
 //!
-//! Determinism: jobs are submitted with a worker affinity (fit index
-//! modulo live workers) and only issued once every expected worker has
-//! said Hello (or [`FORMATION_GRACE`] expires), so with per-job-seeded
-//! workers ([`crate::coordinator::worker::job_seed`]) the final store
-//! *and* the per-worker job counts are pure functions of (reference,
-//! config, base seed) — independent of OS scheduling.  On a worker
-//! death its jobs re-queue with affinity cleared, trading count
-//! determinism for liveness (the store stays deterministic either way).
+//! Determinism: batch requests are submitted with a worker affinity
+//! (request index modulo live workers, sorted ids) and only issued once
+//! every expected worker has said Hello (or [`FORMATION_GRACE`]
+//! expires), so with per-job-seeded workers
+//! ([`crate::coordinator::worker::job_seed`]) the final store *and* the
+//! per-worker job counts are pure functions of (reference, config, base
+//! seed) — independent of OS scheduling, and byte-identical to a
+//! [`crate::thor::measure::LocalMeasurer::per_job`] run at any worker
+//! count (`rust/tests/backend_equiv.rs`).  On a worker death its jobs
+//! re-queue with affinity cleared, trading count determinism for
+//! liveness (the store stays deterministic either way).
 
 use std::collections::{BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Write};
@@ -24,41 +31,20 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::protocol::Msg;
 use crate::coordinator::scheduler::JobQueue;
-use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
-use crate::gp::GpModel;
 use crate::model::ModelGraph;
-use crate::thor::fit::FitConfig;
-use crate::thor::parse::{parse, Position};
-use crate::thor::pipeline::{log_channel, ThorConfig};
-use crate::thor::profiler::{fc_in_after, ranges};
-use crate::thor::store::{GpStore, StoredGp};
+use crate::thor::measure::{MeasureError, MeasureRequest, Measurement, Measurer};
+use crate::thor::pipeline::ThorConfig;
+use crate::thor::store::GpStore;
+use crate::thor::Thor;
 
 enum Event {
     Connected(usize, TcpStream),
     Message(usize, Msg),
     Disconnected(usize),
-}
-
-/// Per-family sequential fit state driven by remote measurements.
-struct FamilyFit {
-    family: String,
-    dim: usize,
-    x_max: Vec<f64>,
-    /// Pending start points not yet issued.
-    start_queue: Vec<Vec<f64>>,
-    /// (normalized point, energy, device seconds).
-    points: Vec<(Vec<f64>, f64, f64)>,
-    /// Outstanding job (job id, normalized point, subtraction terms).
-    outstanding: Option<(u64, Vec<f64>, f64)>,
-    converged: bool,
-    device_seconds: f64,
-    /// Families whose GPs must exist before this one can run
-    /// (subtractivity ordering: out → in → hidden).
-    stage: usize,
 }
 
 /// Outcome of one fleet profiling run (see
@@ -86,8 +72,8 @@ pub struct FleetServer {
 /// gated on all `expect_workers` Hellos (deterministic affinity); after
 /// it, liveness wins — a worker that never connects or dies before
 /// Hello no longer hangs `thor serve` forever.  In-process fleets
-/// (fleet1, tests) form in milliseconds, so the degraded path never
-/// fires there and wall-clock never influences their reports.
+/// (fleet1/fleetN, tests) form in milliseconds, so the degraded path
+/// never fires there and wall-clock never influences their reports.
 const FORMATION_GRACE: Duration = Duration::from_secs(30);
 
 /// A fleet server bound to a local address but not yet serving — lets
@@ -131,12 +117,56 @@ impl BoundFleetServer {
     ///
     /// Single-device fleet: all workers must expose the same device type
     /// (heterogeneous fleets run one server per device type — matching
-    /// the paper, where GPs never transfer across devices).
+    /// the paper, where GPs never transfer across devices; the `fleetN`
+    /// experiment does exactly that).
+    ///
+    /// Errors when the whole fleet disconnects with jobs outstanding —
+    /// there is no partial-store fallback anymore: a store must be a
+    /// complete pure function of the config or nothing.
     pub fn serve(self, reference: &ModelGraph, expect_workers: usize) -> Result<FleetRun> {
         let BoundFleetServer { cfg, listener, addr: _ } = self;
-        let (tx, rx) = mpsc::channel::<Event>();
+        let mut fleet = FleetMeasurer::accept(listener, expect_workers, cfg.iterations);
+        fleet.form(FORMATION_GRACE);
+        let mut thor = Thor::new(cfg);
+        thor.profile(&mut fleet, reference).map_err(|e| anyhow!("fleet profiling failed: {e}"))?;
+        fleet.shutdown();
+        Ok(FleetRun {
+            store: thor.store,
+            jobs_submitted: fleet.queue.submitted(),
+            jobs_done: fleet.queue.done(),
+            per_worker: fleet.per_worker,
+            requeued: fleet.requeued,
+        })
+    }
+}
 
-        // accept loop
+/// The fleet as a measurement backend: a batch of requests becomes a
+/// batch of jobs fanned across the live workers; `measure_batch`
+/// returns when every job of the batch has resolved (requeue-on-death
+/// included), in request order.
+pub struct FleetMeasurer {
+    rx: mpsc::Receiver<Event>,
+    /// Keeps the channel open even after the accept/reader threads end.
+    _tx: mpsc::Sender<Event>,
+    writers: HashMap<usize, TcpStream>,
+    helloed: BTreeSet<usize>,
+    queue: JobQueue,
+    /// Completed measurements awaiting pickup, by job id.
+    done: HashMap<u64, Measurement>,
+    per_worker: Vec<usize>,
+    requeued: usize,
+    device_name: String,
+    expect_workers: usize,
+    started: Instant,
+    /// Jobs carry this iteration count (the leader's ThorConfig) — kept
+    /// here so the measurer can sanity-check request batches.
+    iterations: usize,
+}
+
+impl FleetMeasurer {
+    /// Start accepting up to `expect_workers` connections on `listener`.
+    fn accept(listener: TcpListener, expect_workers: usize, iterations: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Event>();
         let accept_tx = tx.clone();
         std::thread::spawn(move || {
             for (i, stream) in listener.incoming().enumerate() {
@@ -147,384 +177,187 @@ impl BoundFleetServer {
                 }
             }
         });
-
-        // leader state
-        let parsed = parse(reference);
-        let rg = ranges(&parsed);
-        let out_tmpl = parsed.output_groups().next().unwrap().clone();
-        let in_tmpl = parsed.input_groups().next().unwrap().clone();
-        let fit_cfg_1 = fit_cfg(&cfg, 1);
-        let fit_cfg_2 = fit_cfg(&cfg, 2);
-
-        let mut fits: Vec<FamilyFit> = Vec::new();
-        fits.push(FamilyFit {
-            family: out_tmpl.key.id(),
-            dim: 1,
-            x_max: vec![rg.out_max as f64],
-            start_queue: vec![vec![0.0], vec![1.0], vec![0.5]],
-            points: Vec::new(),
-            outstanding: None,
-            converged: false,
-            device_seconds: 0.0,
-            stage: 0,
-        });
-        fits.push(FamilyFit {
-            family: in_tmpl.key.id(),
-            dim: 1,
-            x_max: vec![rg.in_max as f64],
-            start_queue: vec![vec![0.0], vec![1.0], vec![0.5]],
-            points: Vec::new(),
-            outstanding: None,
-            converged: false,
-            device_seconds: 0.0,
-            stage: 1,
-        });
-        for (fi, fam) in parsed.families.iter().enumerate() {
-            if fam.position != Position::Hidden {
-                continue;
-            }
-            let (a, b) = rg.hidden_max[fi];
-            fits.push(FamilyFit {
-                family: fam.id(),
-                dim: 2,
-                x_max: vec![a.max(2) as f64, b.max(2) as f64],
-                start_queue: vec![
-                    vec![0.0, 0.0],
-                    vec![0.0, 1.0],
-                    vec![1.0, 0.0],
-                    vec![1.0, 1.0],
-                    vec![0.5, 0.5],
-                ],
-                points: Vec::new(),
-                outstanding: None,
-                converged: false,
-                device_seconds: 0.0,
-                stage: 2,
-            });
+        Self {
+            rx,
+            _tx: tx,
+            writers: HashMap::new(),
+            helloed: BTreeSet::new(),
+            queue: JobQueue::new(),
+            done: HashMap::new(),
+            per_worker: vec![0; expect_workers],
+            requeued: 0,
+            device_name: String::new(),
+            expect_workers,
+            started: Instant::now(),
+            iterations,
         }
+    }
 
-        let mut queue = JobQueue::new();
-        let mut job_meta: HashMap<u64, usize> = HashMap::new(); // job -> fit index
-        let mut writers: HashMap<usize, TcpStream> = HashMap::new();
-        let mut helloed: BTreeSet<usize> = BTreeSet::new();
-        let mut device_name = String::new();
-        let mut store = GpStore::new();
-        let mut per_worker = vec![0usize; expect_workers];
-        let mut requeued = 0usize;
-        let started = Instant::now();
-        let mut gate_open = false;
-
-        // Helper: (re)fit a family GP from its points; store when done.
-        let finalize = |fit: &FamilyFit, store: &mut GpStore, dev: &str, cfg: &FitConfig| {
-            let xs: Vec<Vec<f64>> = fit.points.iter().map(|p| p.0.clone()).collect();
-            let ys: Vec<f64> = fit.points.iter().map(|p| p.1.max(1e-15).ln()).collect();
-            if let Some(gp) = GpModel::fit(cfg.kind, xs, &ys) {
-                store.insert(
-                    dev,
-                    &fit.family,
-                    StoredGp {
-                        gp,
-                        x_max: fit.x_max.clone(),
-                        log_x: true,
-                        log_y: true,
-                        device_seconds: fit.device_seconds,
-                        fit_seconds: 0.0,
-                        converged: fit.converged,
-                    },
-                );
-            }
-        };
-
+    /// Wait for the fleet to form: all `expect_workers` Hellos, or at
+    /// least one Hello once `grace` has expired (partial fleet proceeds
+    /// instead of hanging — liveness over count determinism).
+    fn form(&mut self, grace: Duration) {
         loop {
-            // Job issue is gated until the whole fleet has said Hello,
-            // so job → worker affinity is deterministic from the first
-            // job on; after FORMATION_GRACE, proceed with the partial
-            // fleet rather than hanging forever (liveness over count
-            // determinism — the store stays deterministic either way).
-            if !gate_open
-                && !device_name.is_empty()
-                && (helloed.len() >= expect_workers
-                    || (!helloed.is_empty() && started.elapsed() >= FORMATION_GRACE))
-            {
-                gate_open = true;
-                if helloed.len() < expect_workers {
-                    eprintln!(
-                        "fleet leader: only {}/{} workers joined within {FORMATION_GRACE:?}; \
-                         proceeding with the partial fleet",
-                        helloed.len(),
-                        expect_workers
-                    );
-                }
+            if self.helloed.len() >= self.expect_workers {
+                return;
             }
+            let elapsed = self.started.elapsed();
+            if !self.helloed.is_empty() && elapsed >= grace {
+                eprintln!(
+                    "fleet leader: only {}/{} workers joined within {grace:?}; \
+                     proceeding with the partial fleet",
+                    self.helloed.len(),
+                    self.expect_workers
+                );
+                return;
+            }
+            let wait = grace.checked_sub(elapsed).unwrap_or(Duration::from_millis(50));
+            match self.rx.recv_timeout(wait) {
+                Ok(ev) => self.on_event(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
 
-            // issue next probes for ready, unconverged families
-            // (stage gating: out → in → hidden, per subtractivity)
-            if gate_open {
-                let live: Vec<usize> = {
-                    let mut v: Vec<usize> = writers.keys().copied().collect();
-                    v.sort_unstable();
-                    v
+    /// Process one event (connection, hello, result, disconnect).
+    fn on_event(&mut self, ev: Event) {
+        match ev {
+            Event::Connected(w, stream) => {
+                let reader_tx = self._tx.clone();
+                let read_stream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // Never registered as a writer, so accounting
+                        // treats it like a worker that never connected;
+                        // say so instead of stalling silently.
+                        eprintln!("fleet leader: dropping worker {w}: stream clone failed: {e}");
+                        return;
+                    }
                 };
-                for (fi, fit) in fits.iter_mut().enumerate() {
-                    if fit.converged || fit.outstanding.is_some() {
-                        continue;
-                    }
-                    if !stage_ready_impl(
-                        &store,
-                        &device_name,
-                        fit.stage,
-                        &stage_gate_names(fit.stage, &out_tmpl, &in_tmpl),
-                    ) {
-                        continue;
-                    }
-                    let fcfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
-                    match next_probe(fit, fcfg) {
-                        Some(p) => {
-                            let channels: Vec<usize> =
-                                p.iter().zip(&fit.x_max).map(|(v, m)| log_channel(*v, *m)).collect();
-                            // subtraction terms computed server-side from stored GPs
-                            let subtract = subtraction_for(
-                                &store,
-                                &device_name,
-                                fit.stage,
-                                &channels,
-                                &out_tmpl,
-                                &in_tmpl,
-                                &parsed,
-                                &fit.family,
-                            );
-                            let affinity = if live.is_empty() {
-                                None
-                            } else {
-                                Some(live[fi % live.len()])
-                            };
-                            let id =
-                                queue.submit_to(&fit.family, channels, cfg.iterations, affinity);
-                            job_meta.insert(id, fi);
-                            fit.outstanding = Some((id, p, subtract));
-                        }
-                        None => {
-                            fit.converged = true;
-                            finalize(fit, &mut store, &device_name, fcfg);
-                        }
-                    }
-                }
-            }
-
-            // assign queued jobs to idle workers (sorted for determinism)
-            let mut worker_ids: Vec<usize> = writers.keys().copied().collect();
-            worker_ids.sort_unstable();
-            for w in worker_ids {
-                if let Some(job) = queue.assign(w) {
-                    let msg = Msg::Job {
-                        job_id: job.id,
-                        family: job.family.clone(),
-                        channels: job.channels.clone(),
-                        iterations: job.iterations,
-                    };
-                    if let Some(stream) = writers.get_mut(&w) {
-                        let _ = stream.write_all(msg.encode().as_bytes());
-                    }
-                }
-            }
-
-            // done?
-            if !device_name.is_empty() && fits.iter().all(|f| f.converged) {
-                break;
-            }
-
-            // wait for events; before the gate opens, wake up at the
-            // formation deadline so a partial fleet can proceed
-            let event = if gate_open {
-                match rx.recv() {
-                    Ok(e) => e,
-                    Err(_) => break,
-                }
-            } else {
-                let wait = FORMATION_GRACE
-                    .checked_sub(started.elapsed())
-                    .unwrap_or(Duration::from_millis(50));
-                match rx.recv_timeout(wait) {
-                    Ok(e) => e,
-                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-            };
-            match event {
-                Event::Connected(w, stream) => {
-                    let reader_tx = tx.clone();
-                    let read_stream = stream.try_clone()?;
-                    writers.insert(w, stream);
-                    std::thread::spawn(move || {
-                        let mut reader = BufReader::new(read_stream);
-                        loop {
-                            let mut line = String::new();
-                            match reader.read_line(&mut line) {
-                                Ok(0) | Err(_) => {
-                                    let _ = reader_tx.send(Event::Disconnected(w));
-                                    break;
-                                }
-                                Ok(_) => {
-                                    if let Some(m) = Msg::decode(&line) {
-                                        if reader_tx.send(Event::Message(w, m)).is_err() {
-                                            break;
-                                        }
+                self.writers.insert(w, stream);
+                std::thread::spawn(move || {
+                    let mut reader = BufReader::new(read_stream);
+                    loop {
+                        let mut line = String::new();
+                        match reader.read_line(&mut line) {
+                            Ok(0) | Err(_) => {
+                                let _ = reader_tx.send(Event::Disconnected(w));
+                                break;
+                            }
+                            Ok(_) => {
+                                if let Some(m) = Msg::decode(&line) {
+                                    if reader_tx.send(Event::Message(w, m)).is_err() {
+                                        break;
                                     }
                                 }
                             }
                         }
-                    });
-                }
-                Event::Message(w, Msg::Hello { device }) => {
-                    helloed.insert(w);
-                    if device_name.is_empty() {
-                        device_name = device;
                     }
+                });
+            }
+            Event::Message(w, Msg::Hello { device }) => {
+                self.helloed.insert(w);
+                if self.device_name.is_empty() {
+                    self.device_name = device;
                 }
-                Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds }) => {
-                    if queue.complete(job_id, w) {
-                        if w < per_worker.len() {
-                            per_worker[w] += 1;
-                        }
-                        if let Some(&fi) = job_meta.get(&job_id) {
-                            let fit = &mut fits[fi];
-                            if let Some((oid, p, subtract)) = fit.outstanding.take() {
-                                debug_assert_eq!(oid, job_id);
-                                let e = (energy_per_iter - subtract).max(1e-12);
-                                fit.points.push((p, e, device_seconds));
-                                fit.device_seconds += device_seconds;
-                            }
-                        }
+            }
+            Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds }) => {
+                // exactly-once: stale/duplicate completions are dropped
+                if self.queue.complete(job_id, w) {
+                    if w < self.per_worker.len() {
+                        self.per_worker[w] += 1;
                     }
+                    self.done.insert(job_id, Measurement { energy_per_iter, device_seconds });
                 }
-                Event::Message(_, _) => {}
-                Event::Disconnected(w) => {
-                    // Re-queue the dead worker's in-flight jobs (affinity
-                    // cleared): they keep their ids, so the outstanding
-                    // markers stay valid and completion by another worker
-                    // matches.
-                    requeued += queue.requeue_worker(w);
-                    writers.remove(&w);
-                    if writers.is_empty() && queue.pending() > 0 {
-                        // no workers left: abort with what we have
-                        break;
-                    }
+            }
+            Event::Message(_, _) => {}
+            Event::Disconnected(w) => {
+                // Re-queue the dead worker's in-flight jobs (affinity
+                // cleared): they keep their ids, so completion by another
+                // worker still resolves the original request.
+                self.requeued += self.queue.requeue_worker(w);
+                self.writers.remove(&w);
+            }
+        }
+    }
+
+    /// Send queued jobs to idle workers (sorted ids for determinism).
+    fn pump_assign(&mut self) {
+        let mut worker_ids: Vec<usize> = self.writers.keys().copied().collect();
+        worker_ids.sort_unstable();
+        for w in worker_ids {
+            if let Some(job) = self.queue.assign(w) {
+                let msg = Msg::Job {
+                    job_id: job.id,
+                    family: job.family.clone(),
+                    channels: job.channels.clone(),
+                    iterations: job.iterations,
+                };
+                if let Some(stream) = self.writers.get_mut(&w) {
+                    // A failed write surfaces as a reader-side
+                    // Disconnected event, which requeues the job.
+                    let _ = stream.write_all(msg.encode().as_bytes());
                 }
             }
         }
+    }
 
-        // finalize any unconverged-but-budgeted fits
-        for fit in &fits {
-            if !store.contains(&device_name, &fit.family) && !fit.points.is_empty() {
-                let fcfg = if fit.dim == 1 { &fit_cfg_1 } else { &fit_cfg_2 };
-                finalize(fit, &mut store, &device_name, fcfg);
-            }
-        }
-
-        // shut down workers
-        for (_, mut s) in writers {
+    /// Tell every remaining worker to exit.
+    pub fn shutdown(&mut self) {
+        for (_, s) in self.writers.iter_mut() {
             let _ = s.write_all(Msg::Shutdown.encode().as_bytes());
         }
-        Ok(FleetRun {
-            store,
-            jobs_submitted: queue.submitted(),
-            jobs_done: queue.done(),
-            per_worker,
-            requeued,
-        })
+        self.writers.clear();
     }
 }
 
-fn fit_cfg(cfg: &ThorConfig, dim: usize) -> FitConfig {
-    FitConfig {
-        kind: cfg.kind,
-        max_points: if dim == 1 { cfg.max_points_1d } else { cfg.max_points_2d },
-        threshold_frac: cfg.threshold_frac,
-        grid_n: if dim == 1 { cfg.grid_n_1d } else { cfg.grid_n_2d },
-        time_surrogate: cfg.time_surrogate,
-        random_sampling: cfg.random_sampling,
-        log_targets: true,
-        seed: cfg.seed,
+impl Measurer for FleetMeasurer {
+    fn device(&self) -> &str {
+        &self.device_name
     }
-}
 
-fn stage_gate_names(
-    stage: usize,
-    out_tmpl: &crate::thor::parse::Group,
-    in_tmpl: &crate::thor::parse::Group,
-) -> Vec<String> {
-    match stage {
-        0 => vec![],
-        1 => vec![out_tmpl.key.id()],
-        _ => vec![out_tmpl.key.id(), in_tmpl.key.id()],
-    }
-}
-
-fn stage_ready_impl(store: &GpStore, dev: &str, _stage: usize, gates: &[String]) -> bool {
-    gates.iter().all(|g| store.contains(dev, g))
-}
-
-/// Server-side subtraction terms (eqs. 1–2) for a probe.
-#[allow(clippy::too_many_arguments)]
-fn subtraction_for(
-    store: &GpStore,
-    dev: &str,
-    stage: usize,
-    channels: &[usize],
-    out_tmpl: &crate::thor::parse::Group,
-    in_tmpl: &crate::thor::parse::Group,
-    parsed: &crate::thor::parse::ParsedModel,
-    family: &str,
-) -> f64 {
-    match stage {
-        0 => 0.0,
-        1 => {
-            let gi = in_tmpl.with_channels(in_tmpl.anchor.c_in, channels[0].max(1));
-            let fc_in = fc_in_after(&gi).max(1);
-            store
-                .get(dev, &out_tmpl.key.id())
-                .map(|g| g.predict_raw(&[fc_in as f64]).0.max(0.0))
-                .unwrap_or(0.0)
+    fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
+        // Deterministic fan-out: request i of the batch is pinned to the
+        // i-th live worker (sorted ids, round-robin).  With hello-gated
+        // formation the live set is the full fleet from the first batch
+        // on, so per-worker job counts are a pure function of the
+        // config in a healthy run.
+        let live: Vec<usize> = {
+            let mut v: Vec<usize> = self.writers.keys().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        debug_assert!(
+            reqs.iter().all(|r| r.iterations == self.iterations),
+            "request iterations diverge from the leader config"
+        );
+        let ids: Vec<u64> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let affinity = if live.is_empty() { None } else { Some(live[i % live.len()]) };
+                self.queue.submit_to(&r.family, r.channels.clone(), r.iterations, affinity)
+            })
+            .collect();
+        loop {
+            self.pump_assign();
+            if ids.iter().all(|id| self.done.contains_key(id)) {
+                break;
+            }
+            if self.writers.is_empty() {
+                return Err(MeasureError(format!(
+                    "all fleet workers disconnected with {} job(s) outstanding",
+                    ids.iter().filter(|id| !self.done.contains_key(id)).count()
+                )));
+            }
+            match self.rx.recv() {
+                Ok(ev) => self.on_event(ev),
+                Err(_) => {
+                    return Err(MeasureError("fleet event channel closed".into()));
+                }
+            }
         }
-        _ => {
-            let tmpl = parsed
-                .groups
-                .iter()
-                .find(|g| g.key.id() == family)
-                .expect("family template");
-            let gh = tmpl.with_channels(channels[0].max(1), channels[1].max(1));
-            let fc_in = fc_in_after(&gh).max(1);
-            let e_in = store
-                .get(dev, &in_tmpl.key.id())
-                .map(|g| g.predict_raw(&[1.0]).0.max(0.0))
-                .unwrap_or(0.0);
-            let e_out = store
-                .get(dev, &out_tmpl.key.id())
-                .map(|g| g.predict_raw(&[fc_in as f64]).0.max(0.0))
-                .unwrap_or(0.0);
-            e_in + e_out
-        }
-    }
-}
-
-/// Next probe for a family fit (start points, then max-variance).
-fn next_probe(fit: &mut FamilyFit, cfg: &FitConfig) -> Option<Vec<f64>> {
-    if let Some(p) = fit.start_queue.pop() {
-        return Some(p);
-    }
-    if fit.points.len() >= cfg.max_points {
-        return None;
-    }
-    let xs: Vec<Vec<f64>> = fit.points.iter().map(|p| p.0.clone()).collect();
-    let ys: Vec<f64> = fit.points.iter().map(|p| p.1.max(1e-15).ln()).collect();
-    let gp = GpModel::fit(cfg.kind, xs, &ys)?;
-    let grid = if fit.dim == 1 {
-        CandidateGrid::dim1(0.0, 1.0, cfg.grid_n)
-    } else {
-        CandidateGrid::dim2(0.0, 1.0, cfg.grid_n)
-    };
-    match max_variance(&gp, &grid, cfg.threshold_frac, 1.0) {
-        Acquire::Next(p, _) => Some(p),
-        Acquire::Converged(_) => None,
+        Ok(ids.iter().map(|id| self.done.remove(id).expect("checked above")).collect())
     }
 }

@@ -1,5 +1,11 @@
 //! Device worker: connects to the fitting server, receives variant jobs,
 //! runs them on its (simulated) device, streams results back.
+//!
+//! Variant reconstruction ([`VariantBuilder`]) and the per-job seed
+//! derivation ([`job_seed`]) live in [`crate::thor::profiler`] — they
+//! are shared with the in-process [`crate::thor::measure::LocalMeasurer`]
+//! so a fleet worker and a local per-job run execute the *same* code on
+//! the same request, which is what makes the backends byte-equivalent.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -9,62 +15,9 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::protocol::Msg;
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
-use crate::thor::parse::Group;
 use crate::thor::profiler;
 
-/// Rebuilds variant graphs from (family, channels) using the templates
-/// of a reference model — the worker and server share the reference
-/// architecture, so only channels travel on the wire.
-pub struct VariantBuilder {
-    input: Group,
-    output: Group,
-    hidden: Vec<Group>,
-}
-
-impl VariantBuilder {
-    pub fn from_reference(reference: &ModelGraph) -> Self {
-        let parsed = crate::thor::parse::parse(reference);
-        let input = parsed.input_groups().next().expect("input group").clone();
-        let output = parsed.output_groups().next().expect("output group").clone();
-        let hidden: Vec<Group> = parsed.hidden_groups().cloned().collect();
-        Self { input, output, hidden }
-    }
-
-    /// Build the variant graph for a family id + raw channels.
-    pub fn build(&self, family: &str, channels: &[usize]) -> Result<ModelGraph> {
-        if family == self.output.key.id() {
-            return Ok(profiler::output_variant(&self.output, channels[0]));
-        }
-        if family == self.input.key.id() {
-            return Ok(profiler::input_variant(&self.input, &self.output, channels[0]).0);
-        }
-        for h in &self.hidden {
-            if family == h.key.id() {
-                let (g, _, _) =
-                    profiler::hidden_variant(&self.input, h, &self.output, channels[0], channels[1]);
-                return Ok(g);
-            }
-        }
-        Err(anyhow!("unknown family '{family}'"))
-    }
-}
-
-/// Deterministic per-job device seed: FNV-1a ([`crate::util::hash`]) over
-/// (base seed ‖ family ‖ channels ‖ iterations).  Any worker measuring
-/// the same job with the same base seed gets the same result, which
-/// makes a whole fleet run a pure function of the job stream —
-/// independent of which worker ran what, in what order (see
-/// `rust/tests/fleet.rs`).
-pub fn job_seed(base_seed: u64, family: &str, channels: &[usize], iterations: usize) -> u64 {
-    let mut h = crate::util::hash::Fnv1a::new();
-    h.write(&base_seed.to_le_bytes());
-    h.write(family.as_bytes());
-    for c in channels {
-        h.write(&(*c as u64).to_le_bytes());
-    }
-    h.write(&(iterations as u64).to_le_bytes());
-    h.finish()
-}
+pub use crate::thor::profiler::{job_seed, VariantBuilder};
 
 /// A worker process bound to one simulated device.
 pub struct DeviceWorker {
@@ -142,48 +95,5 @@ impl DeviceWorker {
             }
         }
         Ok(done)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::model::zoo;
-    use crate::simdevice::devices;
-
-    #[test]
-    fn builder_covers_all_families() {
-        let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
-        let parsed = crate::thor::parse::parse(&reference);
-        let b = VariantBuilder::from_reference(&reference);
-        for fam in &parsed.families {
-            let dim = if fam.position == crate::thor::Position::Hidden { 2 } else { 1 };
-            let chans = vec![4; dim];
-            let g = b.build(&fam.id(), &chans).unwrap();
-            assert!(!g.layers.is_empty());
-        }
-        assert!(b.build("nonexistent", &[1]).is_err());
-    }
-
-    #[test]
-    fn job_seed_is_stable_and_content_sensitive() {
-        let base = job_seed(42, "fam", &[4, 8], 60);
-        assert_eq!(base, job_seed(42, "fam", &[4, 8], 60));
-        assert_ne!(base, job_seed(43, "fam", &[4, 8], 60));
-        assert_ne!(base, job_seed(42, "maf", &[4, 8], 60));
-        assert_ne!(base, job_seed(42, "fam", &[8, 4], 60));
-        assert_ne!(base, job_seed(42, "fam", &[4, 8], 61));
-    }
-
-    #[test]
-    fn built_variant_measurable() {
-        let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
-        let b = VariantBuilder::from_reference(&reference);
-        let parsed = crate::thor::parse::parse(&reference);
-        let fam = parsed.families[1].id();
-        let g = b.build(&fam, &[4, 8]).unwrap();
-        let mut dev = Device::new(devices::tx2(), 5);
-        let (e, t) = profiler::measure(&mut dev, &g, 30);
-        assert!(e > 0.0 && t > 0.0);
     }
 }

@@ -47,7 +47,7 @@ impl A14 {
             ..cfg.thor_cfg()
         };
         let mut thor = Thor::new(tcfg);
-        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        thor.profile_local(&mut dev, &reference_model(Family::Cnn5));
         let test = sample_n(Family::Cnn5, cfg.n_test().min(20), cfg.seed + 1, 10);
         let (mut actual, mut est) = (vec![], vec![]);
         for g in &test {
@@ -124,7 +124,7 @@ impl A15 {
         let mut dev = Device::new(profile, cfg.seed);
         let tcfg = ThorConfig { kind, random_sampling: random, ..cfg.thor_cfg() };
         let mut thor = Thor::new(tcfg);
-        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        thor.profile_local(&mut dev, &reference_model(Family::Cnn5));
         let test = sample_n(Family::Cnn5, cfg.n_test().min(25), cfg.seed + 1, 10);
         let (mut actual, mut est) = (vec![], vec![]);
         for g in &test {

@@ -198,7 +198,7 @@ impl Experiment for Fig10 {
             let mut errs_thor = Vec::new();
             let mut errs_lr = Vec::new();
             for fam in &fams {
-                thor.profile(&mut dev, &reference_model(*fam));
+                thor.profile_local(&mut dev, &reference_model(*fam));
                 for g in sample_n(*fam, cfg.n_test() / 3 + 2, cfg.seed + 2, 10) {
                     let act = measured_energy(&mut dev, &g, cfg.iterations(), 1);
                     let e_t = thor.estimate(dev_name, &g).unwrap().energy_per_iter;

@@ -1,30 +1,102 @@
-//! fleet1 — the decoupled fleet-profiling architecture (paper Appendix
-//! A5.2), promoted from `examples/fleet_profiling.rs` into a first-class
-//! registry experiment.
+//! Fleet-profiling experiments (paper Appendix A5.2).
 //!
-//! An in-process loopback fleet: a [`FleetServer`] leader bound to an
-//! ephemeral `127.0.0.1` port and `N_WORKERS` [`DeviceWorker`] threads
-//! streaming measurements back over real TCP.  Workers run with
-//! deterministic per-job measurement seeds and the leader pins jobs to
-//! workers by family affinity, so the report — per-worker job counts and
-//! the MAPE of estimates from the fleet-fitted [`GpStore`] — is a pure
-//! function of the experiment config, byte-stable across runs and
-//! thread counts despite the real sockets and threads underneath.
+//! * `fleet1` — one leader + 3 TCP workers of one device type (Xavier),
+//!   promoted from `examples/fleet_profiling.rs` in PR 2 and rebuilt in
+//!   PR 4 on the [`crate::coordinator::FleetMeasurer`] backend: the
+//!   leader now runs the *same* batched acquisition pipeline a local
+//!   run does (batch = worker count, so every worker stays busy).
+//! * `fleetN` — the multi-device fleet: one leader per device type
+//!   (Xavier / TX2 / server), each with its own homogeneous worker
+//!   group, fitting **concurrently** over the experiment runner's
+//!   shared worker pool via subtask fan-out.  Reported with per-device
+//!   MAPE and per-worker job counts.
+//!
+//! Workers run with deterministic per-job measurement seeds and the
+//! leader pins jobs to workers by batch-index affinity, so every report
+//! — per-worker job counts included — is a pure function of the
+//! experiment config, byte-stable across runs and `--threads` counts
+//! despite the real sockets and threads underneath.
 
-use crate::coordinator::{DeviceWorker, FleetServer};
-use crate::exp::registry::Experiment;
+use crate::coordinator::{DeviceWorker, FleetRun, FleetServer};
+use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::{measured_energy, ExpConfig};
 use crate::model::zoo;
+use crate::model::ModelGraph;
 use crate::simdevice::{devices, Device};
 use crate::thor::estimator::estimate;
+use crate::thor::ThorConfig;
 use crate::util::stats::mape;
 
 const N_WORKERS: usize = 3;
 
-/// Unseen cnn5 variants the fleet-fitted store is scored on.
+/// Worker group size per device type in `fleetN`.
+const FLEETN_WORKERS: usize = 2;
+
+/// Device types of the `fleetN` fleet — one leader each (GPs never
+/// transfer across devices, so heterogeneous fleets shard by type).
+const FLEETN_DEVICES: [&str; 3] = ["xavier", "tx2", "server"];
+
+/// Unseen cnn5 variants the fleet-fitted stores are scored on.
 const TEST_VARIANTS: [[usize; 4]; 4] =
     [[8, 16, 32, 64], [3, 30, 60, 100], [16, 8, 4, 2], [24, 48, 96, 20]];
+
+fn fleet_reference() -> ModelGraph {
+    zoo::cnn5(&[32, 64, 128, 256], 16, 10)
+}
+
+/// Run one loopback fleet: a leader bound to an ephemeral `127.0.0.1`
+/// port and `n_workers` [`DeviceWorker`] threads of one device type,
+/// all with per-job seeds derived from `base_seed`.  Batched
+/// acquisition at `batch = n_workers` keeps the whole group busy.
+fn run_loopback_fleet(
+    dev_name: &str,
+    n_workers: usize,
+    base_seed: u64,
+    cfg: &ExpConfig,
+) -> FleetRun {
+    let reference = fleet_reference();
+    let thor_cfg = ThorConfig { batch: n_workers, ..cfg.thor_cfg() };
+    let server = FleetServer::new(thor_cfg);
+    let bound = server.bind("127.0.0.1:0").expect("bind loopback");
+    let addr = bound.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let reference = reference.clone();
+        let addr = addr.clone();
+        let profile = devices::by_name(dev_name).expect("device");
+        handles.push(std::thread::spawn(move || {
+            // The worker's own device seed is irrelevant under per-job
+            // seeding; keep it distinct anyway, as a real fleet would.
+            let mut worker = DeviceWorker::new(Device::new(profile, 100 + w as u64), &reference)
+                .with_per_job_seed(base_seed);
+            worker.run(&addr)
+        }));
+    }
+
+    let run = bound.serve(&reference, n_workers).expect("fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    run
+}
+
+/// Score a fleet-fitted store on the held-out variants.
+fn fleet_mape(run: &FleetRun, dev_name: &str, cfg: &ExpConfig) -> f64 {
+    let profile = devices::by_name(dev_name).expect("device");
+    let mut dev = Device::new(profile, cfg.seed + 9);
+    let iters = cfg.iterations();
+    let (mut actual, mut est) = (Vec::new(), Vec::new());
+    for ch in TEST_VARIANTS {
+        let g = zoo::cnn5(&ch, 16, 10);
+        actual.push(measured_energy(&mut dev, &g, iters, 1));
+        est.push(
+            estimate(&run.store, dev_name, &g).expect("fleet store covers cnn5").energy_per_iter,
+        );
+    }
+    mape(&actual, &est)
+}
 
 pub struct Fleet1;
 
@@ -34,52 +106,17 @@ impl Experiment for Fleet1 {
     }
 
     fn description(&self) -> &'static str {
-        "loopback fleet profiling: leader + 3 TCP workers fit the GP store, then estimate"
+        "loopback fleet profiling: leader + 3 TCP workers run the batched acquisition pipeline"
     }
 
     fn run(&self, cfg: &ExpConfig) -> ExpReport {
         let mut rep =
             ExpReport::new(self.id(), "decoupled fleet profiling (loopback)", cfg, &["xavier"]);
-        let reference = zoo::cnn5(&[32, 64, 128, 256], 16, 10);
-
-        // leader on an ephemeral port; workers connect to it
-        let server = FleetServer::new(cfg.thor_cfg());
-        let bound = server.bind("127.0.0.1:0").expect("bind loopback");
-        let addr = bound.local_addr().to_string();
-
-        let mut handles = Vec::new();
-        for w in 0..N_WORKERS {
-            let reference = reference.clone();
-            let addr = addr.clone();
-            let base_seed = cfg.seed;
-            handles.push(std::thread::spawn(move || {
-                // The worker's own device seed is irrelevant under
-                // per-job seeding; keep it distinct anyway, as a real
-                // fleet would.
-                let mut worker =
-                    DeviceWorker::new(Device::new(devices::xavier(), 100 + w as u64), &reference)
-                        .with_per_job_seed(base_seed);
-                worker.run(&addr)
-            }));
-        }
-
-        let run = bound.serve(&reference, N_WORKERS).expect("fleet serve");
-        for h in handles {
-            let _ = h.join();
-        }
-
-        // estimate unseen variants with the fleet-fitted store
-        let mut dev = Device::new(devices::xavier(), cfg.seed + 9);
-        let iters = cfg.iterations();
-        let (mut actual, mut est) = (Vec::new(), Vec::new());
-        for ch in TEST_VARIANTS {
-            let g = zoo::cnn5(&ch, 16, 10);
-            actual.push(measured_energy(&mut dev, &g, iters, 1));
-            est.push(estimate(&run.store, "xavier", &g).expect("fleet store covers cnn5").energy_per_iter);
-        }
+        let run = run_loopback_fleet("xavier", N_WORKERS, cfg.seed, cfg);
+        let m = fleet_mape(&run, "xavier", cfg);
 
         rep.push_table(
-            "fleet job distribution (family-affinity scheduling)",
+            "fleet job distribution (batch-index affinity scheduling)",
             &["worker", "jobs done"],
             run.per_worker
                 .iter()
@@ -90,12 +127,99 @@ impl Experiment for Fleet1 {
         rep.metric("families_fitted", run.store.len() as f64);
         rep.metric("jobs_total", run.jobs_done as f64);
         rep.metric("jobs_requeued", run.requeued as f64);
-        rep.metric("fleet_mape", mape(&actual, &est));
+        rep.metric("fleet_mape", m);
         rep.note(format!(
             "leader fitted {} family GPs from {} jobs across {} loopback workers",
             run.store.len(),
             run.jobs_done,
             N_WORKERS
+        ));
+        rep
+    }
+}
+
+/// One device type's fleet result, shipped from subtask to merge.
+struct FleetNPart {
+    device: &'static str,
+    families: usize,
+    jobs_done: usize,
+    requeued: usize,
+    per_worker: Vec<usize>,
+    mape: f64,
+}
+
+pub struct FleetN;
+
+impl Experiment for FleetN {
+    fn id(&self) -> &'static str {
+        "fleetN"
+    }
+
+    fn description(&self) -> &'static str {
+        "multi-device fleet: one leader per device type (xavier/tx2/server), fitted concurrently"
+    }
+
+    fn subtasks(&self, _cfg: &ExpConfig) -> Vec<Subtask> {
+        FLEETN_DEVICES
+            .iter()
+            .map(|&dev_name| {
+                Subtask::new(dev_name, move |sub_cfg: &ExpConfig| {
+                    let run =
+                        run_loopback_fleet(dev_name, FLEETN_WORKERS, sub_cfg.seed, sub_cfg);
+                    FleetNPart {
+                        device: dev_name,
+                        families: run.store.len(),
+                        jobs_done: run.jobs_done,
+                        requeued: run.requeued,
+                        per_worker: run.per_worker.clone(),
+                        mape: fleet_mape(&run, dev_name, sub_cfg),
+                    }
+                })
+            })
+            .collect()
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let parts: Vec<FleetNPart> =
+            parts.into_iter().map(|p| *p.downcast::<FleetNPart>().expect("FleetNPart")).collect();
+        let mut rep = ExpReport::new(
+            self.id(),
+            "multi-device fleet profiling (one leader per device type)",
+            cfg,
+            &FLEETN_DEVICES,
+        );
+        rep.push_table(
+            "per-device fleet runs (2 workers each)",
+            &["device", "families", "jobs done", "requeued", "per-worker jobs", "MAPE %"],
+            parts
+                .iter()
+                .map(|p| {
+                    vec![
+                        p.device.to_string(),
+                        format!("{}", p.families),
+                        format!("{}", p.jobs_done),
+                        format!("{}", p.requeued),
+                        p.per_worker
+                            .iter()
+                            .map(|n| n.to_string())
+                            .collect::<Vec<_>>()
+                            .join("/"),
+                        format!("{:.1}", p.mape),
+                    ]
+                })
+                .collect(),
+        );
+        for p in &parts {
+            rep.metric(&format!("mape_{}", p.device), p.mape);
+            rep.metric(&format!("jobs_{}", p.device), p.jobs_done as f64);
+        }
+        rep.metric("jobs_total", parts.iter().map(|p| p.jobs_done).sum::<usize>() as f64);
+        rep.metric("devices", parts.len() as f64);
+        rep.note(format!(
+            "{} leaders × {} workers fitted {} family GPs in total",
+            parts.len(),
+            FLEETN_WORKERS,
+            parts.iter().map(|p| p.families).sum::<usize>()
         ));
         rep
     }

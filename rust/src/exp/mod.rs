@@ -15,10 +15,10 @@
 //! | [`figures`]     | fig4, fig5, fig6, fig10, fig11                       |
 //! | [`pruning_exp`] | fig13 (energy-aware pruning case study)              |
 //! | [`ablation`]    | a14 (point budget), a15 (kernels), a16 (iterations)  |
-//! | [`fleet_exp`]   | fleet1 (loopback fleet-profiling, Appendix A5.2)     |
+//! | [`fleet_exp`]   | fleet1 + fleetN (fleet profiling, Appendix A5.2)     |
 //!
 //! Experiment ids: `fig2 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! fig13 a14 a15 a16 fleet1` (`tab1` aliases `fig8`).
+//! fig13 a14 a15 a16 fleet1 fleetN` (`tab1` aliases `fig8`).
 //!
 //! # Entry points
 //!
@@ -196,7 +196,7 @@ pub fn mape_pair(
     let lr = fit_flops_lr(&mut dev, cfg);
 
     let mut thor = Thor::new(cfg.thor_cfg());
-    let report = thor.profile(&mut dev, &reference_model(fam));
+    let report = thor.profile_local(&mut dev, &reference_model(fam));
 
     let test = sample_n(fam, cfg.n_test(), cfg.seed + 1, 10);
     let (mut actual, mut p_lr, mut p_th) = (vec![], vec![], vec![]);

@@ -44,7 +44,7 @@ impl Fig13 {
         let reference = zoo::cnn5(&ORIGINAL, IMG, BATCH);
         let mut dev = Device::new(devices::xavier(), cfg.seed);
         let mut thor = Thor::new(cfg.thor_cfg());
-        thor.profile(&mut dev, &reference);
+        thor.profile_local(&mut dev, &reference);
 
         let tries = if cfg.quick { 40 } else { 80 };
         let iters = cfg.iterations();

@@ -130,6 +130,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(ablation::A15),
         Box::new(ablation::A16),
         Box::new(fleet_exp::Fleet1),
+        Box::new(fleet_exp::FleetN),
     ]
 }
 
@@ -173,9 +174,10 @@ mod tests {
     }
 
     #[test]
-    fn fig13_and_fleet1_are_registered() {
+    fn fig13_and_fleet_experiments_are_registered() {
         assert_eq!(by_id("fig13").unwrap().id(), "fig13");
         assert_eq!(by_id("fleet1").unwrap().id(), "fleet1");
+        assert_eq!(by_id("fleetN").unwrap().id(), "fleetN");
     }
 
     #[test]

@@ -80,7 +80,7 @@ impl Experiment for Fig7 {
         let mut dev = Device::new(devices::xavier(), cfg.seed);
         let lr = fit_flops_lr(&mut dev, cfg);
         let mut thor = Thor::new(cfg.thor_cfg());
-        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        thor.profile_local(&mut dev, &reference_model(Family::Cnn5));
         let test = sample_n(Family::Cnn5, cfg.n_test(), cfg.seed + 1, 10);
         let mut rows = Vec::new();
         for g in &test {
@@ -253,7 +253,7 @@ impl Fig12 {
         let profile = devices::by_name(dev_name).unwrap();
         let mut dev = Device::new(profile, cfg.seed);
         let mut thor = Thor::new(cfg.thor_cfg());
-        thor.profile(&mut dev, &reference_model(Family::Cnn5));
+        thor.profile_local(&mut dev, &reference_model(Family::Cnn5));
         let mut rng = Pcg64::new(cfg.seed + 3);
         let mut rows = Vec::new();
         for _ in 0..if cfg.quick { 6 } else { 20 } {

@@ -46,34 +46,99 @@ pub enum Acquire {
     Converged(f64),
 }
 
+/// Result of one *batched* acquisition decision.
+#[derive(Clone, Debug)]
+pub enum AcquireBatch {
+    /// Profile these points next, in descending posterior-std order
+    /// (each paired with its std).  The fold-back order of their
+    /// measurements is this declaration order — the batched-acquisition
+    /// determinism rule.
+    Next(Vec<(Vec<f64>, f64)>),
+    /// Converged: the max posterior std is below the threshold.
+    Converged(f64),
+}
+
 /// Pick the unprofiled candidate with the largest posterior variance.
 ///
 /// `threshold_frac`: the paper's 5 % — converged when max posterior std
 /// < threshold_frac × mean(|y|) of the profiled data (in raw target
 /// units).
 pub fn max_variance(gp: &GpModel, grid: &CandidateGrid, threshold_frac: f64, y_abs_mean: f64) -> Acquire {
-    let mut best: Option<(usize, f64)> = None;
+    match top_k_variance(gp, grid, threshold_frac, y_abs_mean, 1) {
+        AcquireBatch::Converged(s) => Acquire::Converged(s),
+        AcquireBatch::Next(mut ps) => {
+            let (p, std) = ps.swap_remove(0);
+            Acquire::Next(p, std)
+        }
+    }
+}
+
+/// Pick the `k` unprofiled candidates with the largest posterior
+/// variances (ties broken by grid index, so the selection is a pure
+/// function of the posterior).  Convergence is judged on the *maximum*
+/// posterior std exactly as in [`max_variance`] — at `k = 1` this is
+/// bit-identical to the scalar decision, which is what keeps batch-size-1
+/// runs byte-equal to the sequential acquisition loop.
+pub fn top_k_variance(
+    gp: &GpModel,
+    grid: &CandidateGrid,
+    threshold_frac: f64,
+    y_abs_mean: f64,
+    k: usize,
+) -> AcquireBatch {
+    if k <= 1 {
+        // Hot path (every sequential acquisition round): the original
+        // allocation-free single-pass scan, first maximum wins.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, q) in grid.points.iter().enumerate() {
+            // skip (numerically) already-profiled candidates
+            if gp.xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9) {
+                continue;
+            }
+            let (_, var) = gp.predict(q);
+            if best.map_or(true, |(_, b)| var > b) {
+                best = Some((i, var));
+            }
+        }
+        return match best {
+            None => AcquireBatch::Converged(0.0),
+            Some((i, var)) => {
+                let std = var.sqrt();
+                if std < threshold_frac * y_abs_mean {
+                    AcquireBatch::Converged(std)
+                } else {
+                    AcquireBatch::Next(vec![(grid.points[i].clone(), std)])
+                }
+            }
+        };
+    }
+    let mut cands: Vec<(usize, f64)> = Vec::new();
     for (i, q) in grid.points.iter().enumerate() {
         // skip (numerically) already-profiled candidates
         if gp.xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9) {
             continue;
         }
         let (_, var) = gp.predict(q);
-        if best.map_or(true, |(_, b)| var > b) {
-            best = Some((i, var));
-        }
+        cands.push((i, var));
     }
-    match best {
-        None => Acquire::Converged(0.0),
-        Some((i, var)) => {
-            let std = var.sqrt();
-            if std < threshold_frac * y_abs_mean {
-                Acquire::Converged(std)
-            } else {
-                Acquire::Next(grid.points[i].clone(), std)
-            }
-        }
+    if cands.is_empty() {
+        return AcquireBatch::Converged(0.0);
     }
+    // Deterministic top-k: variance descending, grid index ascending on
+    // ties (matches the k = 1 scan's first-maximum-wins rule, asserted
+    // by `top_k_first_point_matches_scalar_max_variance`).
+    cands.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    let best_std = cands[0].1.sqrt();
+    if best_std < threshold_frac * y_abs_mean {
+        return AcquireBatch::Converged(best_std);
+    }
+    AcquireBatch::Next(
+        cands
+            .into_iter()
+            .take(k)
+            .map(|(i, var)| (grid.points[i].clone(), var.sqrt()))
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -133,5 +198,45 @@ mod tests {
         let g = CandidateGrid::dim2(0.0, 1.0, 7);
         assert_eq!(g.points.len(), 49);
         assert!(g.points.iter().all(|p| p.len() == 2));
+    }
+
+    #[test]
+    fn top_k_first_point_matches_scalar_max_variance() {
+        let gp = fit_on(&[0.0, 0.1, 0.6, 1.0]);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 21);
+        let scalar = max_variance(&gp, &grid, 0.0, 100.0);
+        match (scalar, top_k_variance(&gp, &grid, 0.0, 100.0, 3)) {
+            (Acquire::Next(p, s), AcquireBatch::Next(ps)) => {
+                assert!(ps.len() == 3);
+                assert_eq!(ps[0].0, p);
+                assert_eq!(ps[0].1.to_bits(), s.to_bits());
+                // descending-std order, all distinct grid points
+                assert!(ps[0].1 >= ps[1].1 && ps[1].1 >= ps[2].1, "{ps:?}");
+                assert_ne!(ps[0].0, ps[1].0);
+                assert_ne!(ps[1].0, ps[2].0);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn top_k_converges_exactly_like_scalar() {
+        let pts: Vec<f64> = (0..21).map(|i| i as f64 / 20.0).collect();
+        let gp = fit_on(&pts);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 21);
+        match top_k_variance(&gp, &grid, 0.05, 100.0, 4) {
+            AcquireBatch::Converged(_) => {}
+            AcquireBatch::Next(ps) => panic!("expected convergence, got {ps:?}"),
+        }
+    }
+
+    #[test]
+    fn top_k_caps_at_available_candidates() {
+        let gp = fit_on(&[0.0, 1.0]);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 5);
+        match top_k_variance(&gp, &grid, 0.0, 100.0, 10) {
+            AcquireBatch::Next(ps) => assert_eq!(ps.len(), 3, "{ps:?}"), // 5 grid − 2 profiled
+            other => panic!("unexpected: {other:?}"),
+        }
     }
 }

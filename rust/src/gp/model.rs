@@ -14,8 +14,8 @@
 
 use crate::gp::kernel::{DistGram, Kernel, KernelKind};
 use crate::util::linalg::{
-    chol_inverse, chol_logdet, chol_solve, chol_solve_into, cholesky, cholesky_append_row,
-    cholesky_into, Mat,
+    chol_inverse, chol_inverse_into, chol_logdet, chol_solve, chol_solve_into, cholesky,
+    cholesky_append_row, cholesky_into, Mat,
 };
 
 /// Hyper-parameters under optimization (log-space internally).
@@ -70,7 +70,11 @@ impl GpModel {
 
     /// Fit with fixed hyper-parameters through a reusable [`FitWorkspace`]
     /// — bit-identical to [`GpModel::fit_fixed`] (asserted by a property
-    /// test), but allocation-free on the gram/factorization path.
+    /// test), but allocation-free on the gram/factorization path, and
+    /// scratch-free on the posterior (α, K⁻¹) construction: the only
+    /// allocations left are the model-owned α/K⁻¹ buffers themselves
+    /// (`chol_inverse_into` replaces the 2n-vector scratch churn of
+    /// [`chol_inverse`]).
     pub fn fit_fixed_with(
         ws: &mut FitWorkspace,
         kind: KernelKind,
@@ -80,13 +84,17 @@ impl GpModel {
     ) -> Option<Self> {
         assert_eq!(xs.len(), ys_raw.len());
         assert!(!xs.is_empty());
+        let n = xs.len();
         let (ys, y_mean, y_scale) = standardized(ys_raw);
         ws.sync(&xs);
         if !ws.factor(kind, hyper) {
             return None;
         }
-        let alpha = chol_solve(&ws.l, &ys);
-        let kinv = chol_inverse(&ws.l);
+        let mut alpha = vec![0.0; n];
+        ws.tmp.resize(n, 0.0);
+        chol_solve_into(&ws.l, &ys, &mut ws.tmp, &mut alpha);
+        let mut kinv = Mat::zeros(n, n);
+        chol_inverse_into(&ws.l, &mut kinv, &mut ws.tmp);
         Some(Self { kind, hyper, xs, ys, y_mean, y_scale, alpha, kinv })
     }
 

@@ -27,6 +27,7 @@ fn specs() -> Vec<Spec> {
         Spec { name: "seed", takes_value: true, help: "rng seed (default 2025)" },
         Spec { name: "quick", takes_value: false, help: "reduced sample counts" },
         Spec { name: "iterations", takes_value: true, help: "profiling iterations per measurement (default 500)" },
+        Spec { name: "batch", takes_value: true, help: "acquisition batch size per GP round (default 1; serve wants >= worker count)" },
         Spec { name: "addr", takes_value: true, help: "leader address (default 127.0.0.1:7707)" },
         Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1)" },
         Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
@@ -78,13 +79,14 @@ fn main() -> Result<()> {
             let mut dev = Device::new(profile, seed);
             let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
             cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
+            cfg.batch = args.get_usize("batch", cfg.batch)?.max(1);
             let mut thor = Thor::new(cfg);
             if store_path.exists() {
                 if let Ok(Some(s)) = thor::thor::store::GpStore::load(&store_path) {
                     thor.store = s;
                 }
             }
-            let report = thor.profile(&mut dev, &exp::reference_model(fam));
+            let report = thor.profile_local(&mut dev, &exp::reference_model(fam));
             for f in &report.families {
                 println!(
                     "fitted {:45} points={:3} device={:8.1}s fit={:6.2}s converged={}",
@@ -148,6 +150,9 @@ fn main() -> Result<()> {
             let workers = args.get_usize("workers", 1)?;
             let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
             cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
+            // default the acquisition batch to the fleet size so every
+            // worker has a job each GP round
+            cfg.batch = args.get_usize("batch", workers.max(1))?.max(1);
             let server = FleetServer::new(cfg);
             println!("fitting leader on {addr} (model {} , expecting {workers} workers)", fam.name());
             let store = server.run(addr, &exp::reference_model(fam), workers)?;

@@ -110,7 +110,7 @@ mod tests {
         let original = [16usize, 32, 64, 128];
         let mut dev = Device::new(devices::xavier(), 9);
         let mut thor = Thor::new(ThorConfig::quick());
-        thor.profile(&mut dev, &zoo::cnn5(&original, 16, 10));
+        thor.profile_local(&mut dev, &zoo::cnn5(&original, 16, 10));
 
         let iters = 120;
         let t = prune_cnn5(

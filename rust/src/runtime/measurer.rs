@@ -1,0 +1,78 @@
+//! [`PjrtMeasurer`] — the PJRT runtime as a measurement backend stub.
+//!
+//! The third [`Measurer`] backend: where [`crate::thor::measure::
+//! LocalMeasurer`] measures on the device simulator and
+//! [`crate::coordinator::FleetMeasurer`] on a TCP fleet, this one is
+//! the integration point for measuring variant trainings through real
+//! compiled artifacts ([`crate::runtime::TrainStep`], the
+//! `cnn_train_step` HLO with the L1 Pallas matmul inside).
+//!
+//! It is a deliberate **stub** at both feature levels:
+//!
+//! * without the `pjrt` cargo feature, [`PjrtMeasurer::open`] errors
+//!   exactly like [`Runtime::open`] does (the `xla` crate is not
+//!   vendored everywhere) — callers compile either way;
+//! * with the feature, `open` builds the PJRT client and resolves the
+//!   artifact manifest, but [`Measurer::measure_batch`] still returns a
+//!   descriptive error: the current artifacts fix the architecture at
+//!   AOT time (batch 16, widths 8/16 — see `runtime::trainstep`), so
+//!   they cannot train the arbitrary variant widths the acquisition
+//!   loop proposes.  Wiring that up needs per-variant artifact
+//!   generation in `python/compile/aot.py` plus host-side energy
+//!   metering — tracked in ROADMAP.md.
+//!
+//! The value today is the seam: `thor profile` / `thor serve` code is
+//! written against `&mut dyn Measurer`, so when variant artifacts
+//! exist, PJRT-backed profiling drops in without touching the pipeline.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::thor::measure::{MeasureError, MeasureRequest, Measurement, Measurer};
+
+/// PJRT-backed measurement stub (see module docs).
+pub struct PjrtMeasurer {
+    /// Held for its PJRT client lifetime; unread until variant-shaped
+    /// artifacts exist (see module docs).
+    #[allow(dead_code)]
+    runtime: Runtime,
+    device: String,
+}
+
+impl PjrtMeasurer {
+    /// Open the artifact directory for device `device_name`.  Without
+    /// the `pjrt` feature this always errors (like [`Runtime::open`]).
+    pub fn open(dir: &Path, device_name: &str) -> Result<Self> {
+        Ok(Self { runtime: Runtime::open(dir)?, device: device_name.to_string() })
+    }
+}
+
+impl Measurer for PjrtMeasurer {
+    fn device(&self) -> &str {
+        &self.device
+    }
+
+    fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
+        Err(MeasureError(format!(
+            "PJRT measurement is not implemented yet: {} request(s) for variant widths the \
+             fixed-shape artifacts cannot train (per-variant artifact generation is tracked in \
+             ROADMAP.md)",
+            reqs.len()
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_without_artifacts_errors_descriptively() {
+        // Both feature levels reach an error here: without `pjrt` the
+        // stub Runtime::open fails, with it the missing manifest does.
+        let err = PjrtMeasurer::open(Path::new("/nonexistent/artifacts"), "xavier");
+        assert!(err.is_err());
+    }
+}

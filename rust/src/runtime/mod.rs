@@ -21,6 +21,7 @@
 //! gracefully instead of failing.
 
 pub mod gp_exec;
+pub mod measurer;
 pub mod trainstep;
 
 #[cfg(feature = "pjrt")]
@@ -34,6 +35,7 @@ use anyhow::Context;
 use crate::util::json::Json;
 
 pub use gp_exec::GpExecutor;
+pub use measurer::PjrtMeasurer;
 pub use trainstep::{CnnParams, TrainStep};
 
 /// Artifact manifest entry (from artifacts/manifest.json).

@@ -1,5 +1,5 @@
 //! Active-learning fitting loop (paper §3.3): start from the channel
-//! bounds, then repeatedly profile the candidate with the largest GP
+//! bounds, then repeatedly profile the candidates with the largest GP
 //! posterior variance, until the paper's end conditions fire: point
 //! budget exhausted, or max posterior std < 5 % of the data scale.
 //!
@@ -7,9 +7,21 @@
 //! uncertainty as the acquisition surrogate (justified by the Fig-6
 //! time↔energy correlation); `FitConfig::time_surrogate` enables that
 //! path — the energy GP is still the estimation output.
+//!
+//! # Batched acquisition
+//!
+//! Each GP round proposes the top-`FitConfig::batch` candidates by
+//! acquisition value (posterior std, descending) instead of one, so a
+//! parallel backend (the fleet) runs `batch` measurement jobs
+//! concurrently.  Results fold back into the point set in proposal
+//! (declaration) order, so the fitted GP is a pure function of the
+//! config — and at `batch = 1` the whole loop is **bit-identical** to
+//! the sequential pre-refactor loop (asserted by a reference
+//! implementation in this module's tests).
 
-use crate::gp::acquisition::{max_variance, Acquire, CandidateGrid};
+use crate::gp::acquisition::{top_k_variance, AcquireBatch, CandidateGrid};
 use crate::gp::{FitWorkspace, GpHyper, GpModel, KernelKind};
+use crate::thor::measure::MeasureError;
 
 #[derive(Clone, Copy, Debug)]
 pub struct FitConfig {
@@ -33,6 +45,10 @@ pub struct FitConfig {
     /// Convergence then reads `threshold_frac` as an absolute log-std,
     /// i.e. directly as the paper's 5 % relative criterion.
     pub log_targets: bool,
+    /// Measurement requests proposed per GP round (top-k acquisition).
+    /// 1 reproduces the sequential loop bit-for-bit; fleet runs want
+    /// ≥ the worker count so every worker stays busy.
+    pub batch: usize,
     pub seed: u64,
 }
 
@@ -46,6 +62,7 @@ impl Default for FitConfig {
             time_surrogate: false,
             random_sampling: false,
             log_targets: true,
+            batch: 1,
             seed: 17,
         }
     }
@@ -66,13 +83,34 @@ pub struct FitOutcome {
     pub converged: bool,
 }
 
-/// Fit one family.  `measure(normalized_point) -> (energy_per_iter J,
-/// device_seconds)`; `dim` is 1 or 2.
+/// Fit one family over a *scalar* measurement closure:
+/// `measure(normalized_point) -> (energy_per_iter J, device_seconds)`;
+/// `dim` is 1 or 2.  Thin wrapper over [`fit_family_with`] — batched
+/// proposals are measured by calling the closure once per point in
+/// proposal order, so a stateful closure sees the exact request stream
+/// the sequential loop produced at `batch = 1`.
 pub fn fit_family(
     mut measure: impl FnMut(&[f64]) -> (f64, f64),
     dim: usize,
     cfg: &FitConfig,
 ) -> FitOutcome {
+    fit_family_with(
+        |ps: &[Vec<f64>]| Ok(ps.iter().map(|p| measure(p)).collect()),
+        dim,
+        cfg,
+    )
+    .expect("scalar measurement closures are infallible")
+}
+
+/// Fit one family over a *batch* measurement function:
+/// `measure_batch(normalized_points) -> one (energy J/iter,
+/// device_seconds) per point, in request order`.  This is the engine the
+/// [`crate::thor::measure::Measurer`]-driven pipeline runs for every
+/// backend; it errors only when the backend does.
+pub fn fit_family_with<F>(mut measure_batch: F, dim: usize, cfg: &FitConfig) -> Result<FitOutcome, MeasureError>
+where
+    F: FnMut(&[Vec<f64>]) -> Result<Vec<(f64, f64)>, MeasureError>,
+{
     let t0 = std::time::Instant::now();
     let grid = match dim {
         1 => CandidateGrid::dim1(0.0, 1.0, cfg.grid_n),
@@ -91,8 +129,11 @@ pub fn fit_family(
 
     let mut pts: Vec<(Vec<f64>, f64, f64)> = Vec::new();
     let mut device_seconds = 0.0;
-    for p in starts {
-        let (e, dt) = measure(&p);
+    // The starts are one natural batch (they need no GP round between
+    // them); results fold back in declaration order.
+    let start_results = measure_batch(&starts)?;
+    assert_eq!(start_results.len(), starts.len(), "backend returned wrong batch size");
+    for (p, (e, dt)) in starts.into_iter().zip(start_results) {
         device_seconds += dt;
         pts.push((p, e, dt));
     }
@@ -132,31 +173,48 @@ pub fn fit_family(
             crate::util::stats::mean(&acq_ys.iter().map(|y| y.abs()).collect::<Vec<_>>())
         };
 
-        let next = if cfg.random_sampling {
-            // A15 ablation arm: uniform-random unprofiled grid point.
-            let free: Vec<&Vec<f64>> = grid
+        // Up to `batch` proposals this round, clamped to the remaining
+        // point budget.
+        let k = cfg.batch.max(1).min(cfg.max_points - pts.len());
+        let next: Vec<Vec<f64>> = if cfg.random_sampling {
+            // A15 ablation arm: uniform-random unprofiled grid points
+            // (indices only; clone just the drawn points).
+            let mut free: Vec<usize> = grid
                 .points
                 .iter()
-                .filter(|q| !xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9))
+                .enumerate()
+                .filter(|(_, q)| !xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9))
+                .map(|(i, _)| i)
                 .collect();
             if free.is_empty() {
                 converged = true;
                 break;
             }
-            Some(free[rng.range_usize(0, free.len() - 1)].clone())
+            let draws = k.min(free.len());
+            (0..draws)
+                .map(|_| {
+                    let i = free.swap_remove(rng.range_usize(0, free.len() - 1));
+                    grid.points[i].clone()
+                })
+                .collect()
         } else {
-            match max_variance(&acq_gp, &grid, cfg.threshold_frac, y_abs) {
-                Acquire::Next(p, _) => Some(p),
-                Acquire::Converged(_) => {
+            match top_k_variance(&acq_gp, &grid, cfg.threshold_frac, y_abs, k) {
+                AcquireBatch::Next(ps) => ps.into_iter().map(|(p, _)| p).collect(),
+                AcquireBatch::Converged(_) => {
                     converged = true;
                     break;
                 }
             }
         };
-        let Some(p) = next else { break };
-        let (e, dt) = measure(&p);
-        device_seconds += dt;
-        pts.push((p, e, dt));
+        if next.is_empty() {
+            break;
+        }
+        let results = measure_batch(&next)?;
+        assert_eq!(results.len(), next.len(), "backend returned wrong batch size");
+        for (p, (e, dt)) in next.into_iter().zip(results) {
+            device_seconds += dt;
+            pts.push((p, e, dt));
+        }
     }
 
     let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
@@ -170,13 +228,13 @@ pub fn fit_family(
         _ => GpModel::fit_with(&mut ws, cfg.kind, xs, &es),
     }
     .expect("final GP fit failed");
-    FitOutcome {
+    Ok(FitOutcome {
         gp,
         points: pts,
         device_seconds,
         fit_seconds: t0.elapsed().as_secs_f64(),
         converged,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -286,6 +344,174 @@ mod tests {
     fn device_seconds_accumulate() {
         let out = fit_family(|_| (100.0, 2.5), 1, &FitConfig { max_points: 6, threshold_frac: 0.0, ..Default::default() });
         assert!((out.device_seconds - 2.5 * out.points.len() as f64).abs() < 1e-9);
+    }
+
+    /// Verbatim copy of the *pre-refactor* sequential acquisition loop
+    /// (one max-variance proposal per round, scalar measure calls) — the
+    /// oracle proving `fit_family` at `batch = 1` is bit-identical to
+    /// the code it replaced.
+    fn scalar_reference_fit(
+        mut measure: impl FnMut(&[f64]) -> (f64, f64),
+        dim: usize,
+        cfg: &FitConfig,
+    ) -> FitOutcome {
+        use crate::gp::acquisition::{max_variance, Acquire};
+        let grid = match dim {
+            1 => CandidateGrid::dim1(0.0, 1.0, cfg.grid_n),
+            2 => CandidateGrid::dim2(0.0, 1.0, cfg.grid_n),
+            d => panic!("unsupported family dim {d}"),
+        };
+        let mut starts: Vec<Vec<f64>> = match dim {
+            1 => vec![vec![0.0], vec![1.0]],
+            _ => vec![vec![0.0, 0.0], vec![0.0, 1.0], vec![1.0, 0.0], vec![1.0, 1.0]],
+        };
+        starts.push(vec![0.5; dim]);
+        let mut pts: Vec<(Vec<f64>, f64, f64)> = Vec::new();
+        let mut device_seconds = 0.0;
+        for p in starts {
+            let (e, dt) = measure(&p);
+            device_seconds += dt;
+            pts.push((p, e, dt));
+        }
+        let mut rng = crate::util::rng::Pcg64::new(cfg.seed);
+        let mut converged = false;
+        let mut ws = FitWorkspace::new();
+        let mut prev_hyper: Option<GpHyper> = None;
+        loop {
+            if pts.len() >= cfg.max_points {
+                break;
+            }
+            let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
+            let tf = |v: f64| if cfg.log_targets { v.max(1e-15).ln() } else { v };
+            let es: Vec<f64> = pts.iter().map(|p| tf(p.1)).collect();
+            let ts: Vec<f64> = pts.iter().map(|p| tf(p.2)).collect();
+            let acq_ys = if cfg.time_surrogate { &ts } else { &es };
+            let fitted = match prev_hyper {
+                Some(h) => GpModel::fit_warm(&mut ws, cfg.kind, xs.clone(), acq_ys, h),
+                None => GpModel::fit_with(&mut ws, cfg.kind, xs.clone(), acq_ys),
+            };
+            let Some(acq_gp) = fitted else { break };
+            prev_hyper = Some(acq_gp.hyper);
+            let y_abs = if cfg.log_targets {
+                1.0
+            } else {
+                crate::util::stats::mean(&acq_ys.iter().map(|y| y.abs()).collect::<Vec<_>>())
+            };
+            let next = if cfg.random_sampling {
+                let free: Vec<&Vec<f64>> = grid
+                    .points
+                    .iter()
+                    .filter(|q| !xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9))
+                    .collect();
+                if free.is_empty() {
+                    converged = true;
+                    break;
+                }
+                Some(free[rng.range_usize(0, free.len() - 1)].clone())
+            } else {
+                match max_variance(&acq_gp, &grid, cfg.threshold_frac, y_abs) {
+                    Acquire::Next(p, _) => Some(p),
+                    Acquire::Converged(_) => {
+                        converged = true;
+                        break;
+                    }
+                }
+            };
+            let Some(p) = next else { break };
+            let (e, dt) = measure(&p);
+            device_seconds += dt;
+            pts.push((p, e, dt));
+        }
+        let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
+        let tf = |v: f64| if cfg.log_targets { v.max(1e-15).ln() } else { v };
+        let es: Vec<f64> = pts.iter().map(|p| tf(p.1)).collect();
+        let gp = match prev_hyper {
+            Some(h) if !cfg.time_surrogate => GpModel::fit_warm(&mut ws, cfg.kind, xs, &es, h),
+            _ => GpModel::fit_with(&mut ws, cfg.kind, xs, &es),
+        }
+        .expect("final GP fit failed");
+        FitOutcome { gp, points: pts, device_seconds, fit_seconds: 0.0, converged }
+    }
+
+    fn assert_outcomes_bit_equal(a: &FitOutcome, b: &FitOutcome, dim: usize) {
+        assert_eq!(a.points.len(), b.points.len());
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.device_seconds.to_bits(), b.device_seconds.to_bits());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.0, pb.0);
+            assert_eq!(pa.1.to_bits(), pb.1.to_bits());
+            assert_eq!(pa.2.to_bits(), pb.2.to_bits());
+        }
+        for i in 0..=10 {
+            let q = vec![i as f64 / 10.0; dim];
+            let (m1, v1) = a.gp.predict(&q);
+            let (m2, v2) = b.gp.predict(&q);
+            assert_eq!((m1.to_bits(), v1.to_bits()), (m2.to_bits(), v2.to_bits()), "q {q:?}");
+        }
+    }
+
+    #[test]
+    fn batch_size_1_is_bit_identical_to_prerefactor_scalar_loop() {
+        // Guided, random, and time-surrogate arms, 1-D and 2-D — every
+        // path must reproduce the sequential loop exactly at batch = 1.
+        let surface = |p: &[f64]| {
+            100.0 + 60.0 * (p[0] * 3.0).min(1.2) + 25.0 * (4.0 * p[0]).sin().max(0.0)
+                + p.get(1).map_or(0.0, |y| 12.0 * y * y)
+        };
+        let configs = [
+            (1usize, FitConfig { max_points: 12, grid_n: 17, ..Default::default() }),
+            (1, FitConfig { max_points: 10, grid_n: 17, random_sampling: true, threshold_frac: 0.0, ..Default::default() }),
+            (1, FitConfig { max_points: 12, grid_n: 17, time_surrogate: true, ..Default::default() }),
+            (2, FitConfig { max_points: 14, grid_n: 7, ..Default::default() }),
+        ];
+        for (dim, cfg) in configs {
+            assert_eq!(cfg.batch, 1);
+            let batched = fit_family(|p| (surface(p), surface(p) / 3.0), dim, &cfg);
+            let reference = scalar_reference_fit(|p| (surface(p), surface(p) / 3.0), dim, &cfg);
+            assert_outcomes_bit_equal(&batched, &reference, dim);
+        }
+    }
+
+    #[test]
+    fn batched_rounds_respect_budget_and_fold_in_proposal_order() {
+        // batch = 3 with threshold 0: rounds of 3 until the budget.
+        let mut calls: Vec<usize> = Vec::new();
+        let out = fit_family_with(
+            |ps| {
+                calls.push(ps.len());
+                Ok(ps.iter().map(|p| (surface_1d(p[0]), 0.5)).collect())
+            },
+            1,
+            &FitConfig { max_points: 11, threshold_frac: 0.0, batch: 3, grid_n: 33, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.points.len(), 11);
+        // 3 starts, then 3+3, then a final round clamped to 2
+        assert_eq!(calls, vec![3, 3, 3, 2]);
+        assert!((out.device_seconds - 0.5 * 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_fit_is_deterministic() {
+        let run = || {
+            fit_family(
+                |p| (surface_1d(p[0]), 0.5),
+                1,
+                &FitConfig { max_points: 12, grid_n: 17, batch: 4, ..Default::default() },
+            )
+        };
+        let (a, b) = (run(), run());
+        assert_outcomes_bit_equal(&a, &b, 1);
+    }
+
+    #[test]
+    fn backend_error_propagates() {
+        let r = fit_family_with(
+            |_ps: &[Vec<f64>]| Err(crate::thor::measure::MeasureError("boom".into())),
+            1,
+            &FitConfig::default(),
+        );
+        assert!(r.is_err());
     }
 
     #[test]

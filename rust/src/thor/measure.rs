@@ -1,0 +1,220 @@
+//! Measurement-backend abstraction: every profiling backend — the
+//! in-process simulator, the TCP fleet, the (stubbed) PJRT runtime —
+//! exposes the same surface: submit a *batch* of variant-measurement
+//! requests, get one [`Measurement`] per request back.  The whole
+//! pipeline ([`crate::thor::pipeline::Thor::profile`],
+//! [`crate::thor::fit`]) is written against [`Measurer`], so the
+//! active-learning loop itself — not just a replayed job list — runs
+//! over whichever backend is plugged in.
+//!
+//! # Determinism contract
+//!
+//! A deterministic backend must make each [`Measurement`] a **pure
+//! function of its request alone** (per-request seeding, see
+//! [`crate::thor::profiler::job_seed`]) — independent of batch
+//! composition, submission order, concurrency, worker count, and which
+//! backend ran it.  Under that contract the profiled
+//! [`crate::thor::store::GpStore`] is a pure function of (reference,
+//! config, base seed): a [`LocalMeasurer::per_job`] run and a
+//! [`crate::coordinator::FleetMeasurer`] run at *any* worker count are
+//! byte-identical (asserted by `rust/tests/backend_equiv.rs`).
+//!
+//! [`LocalMeasurer::sequential`] deliberately breaks the contract the
+//! way a physical device does: one stateful device carries DVFS /
+//! thermal / meter state across requests.  It is still deterministic
+//! run-to-run at batch size 1 (requests arrive in declaration order),
+//! and is the bit-compatible continuation of the pre-refactor
+//! `&mut Device` pipeline.
+
+use crate::model::ModelGraph;
+use crate::simdevice::{Device, DeviceProfile};
+use crate::thor::profiler::{self, job_seed, VariantBuilder};
+
+/// One variant-network measurement request: the family id plus the raw
+/// channel widths identify the variant (the backend rebuilds the graph
+/// from the shared reference architecture, so only channels travel).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MeasureRequest {
+    pub family: String,
+    pub channels: Vec<usize>,
+    /// Training iterations for this measurement (paper: 500).
+    pub iterations: usize,
+}
+
+/// What a backend returns per request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// Net energy per training iteration, joules.
+    pub energy_per_iter: f64,
+    /// Simulated device-seconds the measurement cost (Table 1).
+    pub device_seconds: f64,
+}
+
+/// A measurement backend failed in a way the acquisition loop cannot
+/// recover from (e.g. every fleet worker disconnected mid-batch).
+#[derive(Debug, thiserror::Error)]
+#[error("measurement backend failed: {0}")]
+pub struct MeasureError(pub String);
+
+/// A profiling backend.  Object-safe on purpose: the pipeline takes
+/// `&mut dyn Measurer` so local, fleet and PJRT runs share one code
+/// path.
+pub trait Measurer {
+    /// Device name the measurements come from — the
+    /// [`crate::thor::store::GpStore`] key.
+    fn device(&self) -> &str;
+
+    /// Measure a batch; `result[i]` answers `reqs[i]`.  Backends may run
+    /// the requests concurrently (the fleet does), but must return them
+    /// in request order.  See the module docs for the determinism
+    /// contract.
+    fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError>;
+}
+
+enum LocalMode<'d> {
+    /// One stateful device shared across requests, measured in request
+    /// order — bit-compatible with the pre-refactor `&mut Device`
+    /// pipeline at batch size 1.
+    Sequential(&'d mut Device),
+    /// Fresh per-request-seeded device per request ([`job_seed`]) — the
+    /// mode whose stores are byte-equal to a fleet run at any worker
+    /// count (the fleet worker's `with_per_job_seed` path runs this
+    /// exact code).
+    PerJob { profile: DeviceProfile, base_seed: u64 },
+}
+
+/// In-process backend over the device simulator.
+pub struct LocalMeasurer<'d> {
+    mode: LocalMode<'d>,
+    builder: VariantBuilder,
+    name: String,
+}
+
+impl<'d> LocalMeasurer<'d> {
+    /// Wrap an existing stateful device (DVFS/thermal/meter state carries
+    /// across requests, like a physical device).
+    pub fn sequential(dev: &'d mut Device, reference: &ModelGraph) -> Self {
+        let name = dev.profile.name.to_string();
+        Self { mode: LocalMode::Sequential(dev), builder: VariantBuilder::from_reference(reference), name }
+    }
+}
+
+impl LocalMeasurer<'static> {
+    /// Fresh per-request-seeded device per request: fleet-equivalent
+    /// measurements (see the module docs).
+    pub fn per_job(profile: DeviceProfile, base_seed: u64, reference: &ModelGraph) -> Self {
+        let name = profile.name.to_string();
+        Self {
+            mode: LocalMode::PerJob { profile, base_seed },
+            builder: VariantBuilder::from_reference(reference),
+            name,
+        }
+    }
+}
+
+impl Measurer for LocalMeasurer<'_> {
+    fn device(&self) -> &str {
+        &self.name
+    }
+
+    fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let g = self
+                .builder
+                .build(&r.family, &r.channels)
+                .map_err(|e| MeasureError(e.to_string()))?;
+            let (e, dt) = match &mut self.mode {
+                LocalMode::Sequential(dev) => profiler::measure(dev, &g, r.iterations),
+                LocalMode::PerJob { profile, base_seed } => {
+                    let seed = job_seed(*base_seed, &r.family, &r.channels, r.iterations);
+                    let mut dev = Device::new(profile.clone(), seed);
+                    profiler::measure(&mut dev, &g, r.iterations)
+                }
+            };
+            out.push(Measurement { energy_per_iter: e, device_seconds: dt });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::simdevice::devices;
+
+    fn reference() -> ModelGraph {
+        zoo::cnn5(&[8, 16, 32, 64], 16, 10)
+    }
+
+    fn out_family() -> String {
+        crate::thor::parse::parse(&reference()).output_groups().next().unwrap().key.id()
+    }
+
+    #[test]
+    fn per_job_is_pure_per_request() {
+        // Same request in different batch shapes → bit-identical result.
+        let fam = out_family();
+        let req = MeasureRequest { family: fam.clone(), channels: vec![32], iterations: 40 };
+        let other = MeasureRequest { family: fam, channels: vec![8], iterations: 40 };
+        let mut m = LocalMeasurer::per_job(devices::xavier(), 42, &reference());
+        let alone = m.measure_batch(std::slice::from_ref(&req)).unwrap()[0];
+        let batched = m.measure_batch(&[other, req]).unwrap()[1];
+        assert_eq!(alone.energy_per_iter.to_bits(), batched.energy_per_iter.to_bits());
+        assert_eq!(alone.device_seconds.to_bits(), batched.device_seconds.to_bits());
+    }
+
+    #[test]
+    fn per_job_matches_manual_seeded_device() {
+        // The measurer must run the exact per-job path the fleet worker
+        // runs: job_seed → fresh device → profiler::measure.
+        let fam = out_family();
+        let req = MeasureRequest { family: fam.clone(), channels: vec![16], iterations: 30 };
+        let mut m = LocalMeasurer::per_job(devices::tx2(), 7, &reference());
+        let got = m.measure_batch(std::slice::from_ref(&req)).unwrap()[0];
+        let builder = VariantBuilder::from_reference(&reference());
+        let g = builder.build(&fam, &[16]).unwrap();
+        let seed = job_seed(7, &fam, &[16], 30);
+        let mut dev = Device::new(devices::tx2(), seed);
+        let (e, dt) = profiler::measure(&mut dev, &g, 30);
+        assert_eq!(got.energy_per_iter.to_bits(), e.to_bits());
+        assert_eq!(got.device_seconds.to_bits(), dt.to_bits());
+    }
+
+    #[test]
+    fn sequential_matches_direct_device_stream() {
+        // Sequential mode must consume the wrapped device's RNG stream
+        // exactly like direct profiler::measure calls in the same order.
+        let fam = out_family();
+        let reqs: Vec<MeasureRequest> = [8usize, 32, 64]
+            .iter()
+            .map(|&c| MeasureRequest { family: fam.clone(), channels: vec![c], iterations: 25 })
+            .collect();
+        let mut dev_a = Device::new(devices::server(), 5);
+        let mut m = LocalMeasurer::sequential(&mut dev_a, &reference());
+        let got = m.measure_batch(&reqs).unwrap();
+
+        let builder = VariantBuilder::from_reference(&reference());
+        let mut dev_b = Device::new(devices::server(), 5);
+        for (r, g_m) in reqs.iter().zip(&got) {
+            let g = builder.build(&r.family, &r.channels).unwrap();
+            let (e, dt) = profiler::measure(&mut dev_b, &g, r.iterations);
+            assert_eq!(g_m.energy_per_iter.to_bits(), e.to_bits());
+            assert_eq!(g_m.device_seconds.to_bits(), dt.to_bits());
+        }
+    }
+
+    #[test]
+    fn unknown_family_errors() {
+        let mut m = LocalMeasurer::per_job(devices::xavier(), 1, &reference());
+        let req = MeasureRequest { family: "nope".into(), channels: vec![1], iterations: 10 };
+        assert!(m.measure_batch(&[req]).is_err());
+    }
+
+    #[test]
+    fn device_name_comes_from_profile() {
+        let m = LocalMeasurer::per_job(devices::xavier(), 1, &reference());
+        assert_eq!(m.device(), "xavier");
+    }
+}

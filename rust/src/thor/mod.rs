@@ -20,11 +20,13 @@
 
 pub mod estimator;
 pub mod fit;
+pub mod measure;
 pub mod parse;
 pub mod pipeline;
 pub mod profiler;
 pub mod store;
 
 pub use estimator::Estimate;
+pub use measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurement, Measurer};
 pub use parse::{FamilyKey, ParsedModel, Position};
 pub use pipeline::{Thor, ThorConfig};

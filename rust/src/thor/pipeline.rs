@@ -3,12 +3,21 @@
 //! between stages exactly as eqs. 1–2 prescribe: output first, then
 //! input, then each hidden family), store the fitted GPs, and estimate
 //! arbitrary models from the store.
+//!
+//! The pipeline is backend-agnostic: [`Thor::profile`] drives any
+//! [`Measurer`] — the in-process simulator
+//! ([`crate::thor::measure::LocalMeasurer`]), the TCP fleet
+//! ([`crate::coordinator::FleetMeasurer`]), or the PJRT runtime stub
+//! ([`crate::runtime::PjrtMeasurer`]) — through the same acquisition
+//! code, so a fleet-profiled store and a local per-job-seeded store are
+//! byte-identical (see `rust/tests/backend_equiv.rs`).
 
 use crate::gp::KernelKind;
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
 use crate::thor::estimator::{estimate, estimate_cached, Estimate, EstimateCache, EstimateError};
-use crate::thor::fit::{fit_family, FitConfig};
+use crate::thor::fit::{fit_family_with, FitConfig, FitOutcome};
+use crate::thor::measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurer};
 use crate::thor::parse::{parse, Position};
 use crate::thor::profiler::{self, ranges};
 use crate::thor::store::{GpStore, StoredGp};
@@ -25,6 +34,10 @@ pub struct ThorConfig {
     pub grid_n_2d: usize,
     pub time_surrogate: bool,
     pub random_sampling: bool,
+    /// Measurement requests proposed per GP round (top-k batched
+    /// acquisition; see [`crate::thor::fit`]).  1 reproduces the
+    /// sequential loop bit-for-bit; fleet runs want ≥ the worker count.
+    pub batch: usize,
     pub seed: u64,
 }
 
@@ -40,6 +53,7 @@ impl Default for ThorConfig {
             grid_n_2d: 13,
             time_surrogate: false,
             random_sampling: false,
+            batch: 1,
             seed: 20_25,
         }
     }
@@ -67,6 +81,7 @@ impl ThorConfig {
             time_surrogate: self.time_surrogate,
             random_sampling: self.random_sampling,
             log_targets: true,
+            batch: self.batch,
             seed: self.seed,
         }
     }
@@ -120,13 +135,59 @@ impl Thor {
         Self { store: GpStore::new(), cfg }
     }
 
-    /// Profile every family of `reference` on `dev` (idempotent per
-    /// family: already-profiled families are skipped, the paper's
-    /// "one-time endeavor" reuse property).
-    pub fn profile(&mut self, dev: &mut Device, reference: &ModelGraph) -> ProfileReport {
+    /// Record one fitted family into the report and the store.  The
+    /// store is a byte-stable artifact compared across backends and
+    /// runs (`rust/tests/backend_equiv.rs`, `rust/tests/fleet.rs`), so
+    /// wall-clock never enters it — fitting wall-clock stays in the
+    /// [`ProfileReport`] (display only).
+    fn record(
+        &mut self,
+        report: &mut ProfileReport,
+        dev_name: &str,
+        family: &str,
+        x_max: Vec<f64>,
+        outcome: FitOutcome,
+    ) {
+        report.families.push(FamilyReport {
+            family: family.to_string(),
+            points: outcome.points.len(),
+            device_seconds: outcome.device_seconds,
+            fit_seconds: outcome.fit_seconds,
+            converged: outcome.converged,
+        });
+        self.store.insert(
+            dev_name,
+            family,
+            StoredGp {
+                gp: outcome.gp,
+                x_max,
+                log_x: true,
+                log_y: true,
+                device_seconds: outcome.device_seconds,
+                fit_seconds: 0.0,
+                converged: outcome.converged,
+            },
+        );
+    }
+
+    /// Profile every family of `reference` through a measurement backend
+    /// (idempotent per family: already-profiled families are skipped,
+    /// the paper's "one-time endeavor" reuse property).
+    ///
+    /// The backend only measures; acquisition, subtractivity (eqs. 1–2)
+    /// and GP fitting all run here, leader-side — which is what makes a
+    /// local run and a fleet run of the same config produce the same
+    /// store.  Errors only when the backend does (e.g. the whole fleet
+    /// disconnected); the in-process [`LocalMeasurer`] is infallible on
+    /// families of its own reference model.
+    pub fn profile(
+        &mut self,
+        m: &mut dyn Measurer,
+        reference: &ModelGraph,
+    ) -> Result<ProfileReport, MeasureError> {
         let parsed = parse(reference);
         let rg = ranges(&parsed);
-        let dev_name = dev.profile.name.to_string();
+        let dev_name = m.device().to_string();
         let iterations = self.cfg.iterations;
         let mut report = ProfileReport::default();
 
@@ -138,72 +199,62 @@ impl Thor {
         // --- stage 1: output family, measured directly -------------------
         if !self.store.contains(&dev_name, &out_fam) {
             let out_max = rg.out_max as f64;
-            let outcome = fit_family(
-                |p| {
-                    let c = log_channel(p[0], out_max);
-                    let g = profiler::output_variant(&out_tmpl, c);
-                    profiler::measure(dev, &g, iterations)
+            let outcome = fit_family_with(
+                |ps: &[Vec<f64>]| {
+                    let reqs: Vec<MeasureRequest> = ps
+                        .iter()
+                        .map(|p| MeasureRequest {
+                            family: out_fam.clone(),
+                            channels: vec![log_channel(p[0], out_max)],
+                            iterations,
+                        })
+                        .collect();
+                    let ms = m.measure_batch(&reqs)?;
+                    Ok(ms.iter().map(|r| (r.energy_per_iter, r.device_seconds)).collect())
                 },
                 1,
                 &self.cfg.fit_cfg(1),
-            );
-            report.families.push(FamilyReport {
-                family: out_fam.clone(),
-                points: outcome.points.len(),
-                device_seconds: outcome.device_seconds,
-                fit_seconds: outcome.fit_seconds,
-                converged: outcome.converged,
-            });
-            self.store.insert(
-                &dev_name,
-                &out_fam,
-                StoredGp {
-                    gp: outcome.gp,
-                    x_max: vec![out_max],
-                    log_x: true,
-                    log_y: true,
-                    device_seconds: outcome.device_seconds,
-                    fit_seconds: outcome.fit_seconds,
-                    converged: outcome.converged,
-                },
-            );
+            )?;
+            self.record(&mut report, &dev_name, &out_fam, vec![out_max], outcome);
         }
 
         // --- stage 2: input family via eq. (1) ----------------------------
         if !self.store.contains(&dev_name, &in_fam) {
             let in_max = rg.in_max as f64;
             let out_gp = self.store.get(&dev_name, &out_fam).expect("stage order").clone();
-            let outcome = fit_family(
-                |p| {
-                    let c = log_channel(p[0], in_max);
-                    let (g, fc_in) = profiler::input_variant(&in_tmpl, &out_tmpl, c);
-                    let (e_total, dt) = profiler::measure(dev, &g, iterations);
-                    let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
-                    ((e_total - e_out.max(0.0)).max(1e-12), dt)
+            let outcome = fit_family_with(
+                |ps: &[Vec<f64>]| {
+                    let reqs: Vec<MeasureRequest> = ps
+                        .iter()
+                        .map(|p| MeasureRequest {
+                            family: in_fam.clone(),
+                            channels: vec![log_channel(p[0], in_max)],
+                            iterations,
+                        })
+                        .collect();
+                    let ms = m.measure_batch(&reqs)?;
+                    Ok(reqs
+                        .iter()
+                        .zip(&ms)
+                        .map(|(req, r)| {
+                            // Rebuild the variant the backend measured to
+                            // read off the FC width the output group saw —
+                            // the subtraction coordinates stay in lock-step
+                            // with VariantBuilder by construction.
+                            let (_, fc_in) =
+                                profiler::input_variant(&in_tmpl, &out_tmpl, req.channels[0]);
+                            let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
+                            (
+                                (r.energy_per_iter - e_out.max(0.0)).max(1e-12),
+                                r.device_seconds,
+                            )
+                        })
+                        .collect())
                 },
                 1,
                 &self.cfg.fit_cfg(1),
-            );
-            report.families.push(FamilyReport {
-                family: in_fam.clone(),
-                points: outcome.points.len(),
-                device_seconds: outcome.device_seconds,
-                fit_seconds: outcome.fit_seconds,
-                converged: outcome.converged,
-            });
-            self.store.insert(
-                &dev_name,
-                &in_fam,
-                StoredGp {
-                    gp: outcome.gp,
-                    x_max: vec![in_max],
-                    log_x: true,
-                    log_y: true,
-                    device_seconds: outcome.device_seconds,
-                    fit_seconds: outcome.fit_seconds,
-                    converged: outcome.converged,
-                },
-            );
+            )?;
+            self.record(&mut report, &dev_name, &in_fam, vec![in_max], outcome);
         }
 
         // --- stage 3: each hidden family via eq. (2) ----------------------
@@ -220,41 +271,58 @@ impl Thor {
             let (a_max, b_max) = (a_max.max(2) as f64, b_max.max(2) as f64);
             let in_gp = self.store.get(&dev_name, &in_fam).expect("stage order").clone();
             let out_gp = self.store.get(&dev_name, &out_fam).expect("stage order").clone();
-            let outcome = fit_family(
-                |p| {
-                    let a = log_channel(p[0], a_max);
-                    let b = log_channel(p[1], b_max);
-                    let (g, thin, fc_in) = profiler::hidden_variant(&in_tmpl, &tmpl, &out_tmpl, a, b);
-                    let (e_total, dt) = profiler::measure(dev, &g, iterations);
-                    let (e_in, _) = in_gp.predict_raw(&[thin as f64]);
-                    let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
-                    ((e_total - e_in.max(0.0) - e_out.max(0.0)).max(1e-12), dt)
+            let outcome = fit_family_with(
+                |ps: &[Vec<f64>]| {
+                    let reqs: Vec<MeasureRequest> = ps
+                        .iter()
+                        .map(|p| MeasureRequest {
+                            family: fam_id.clone(),
+                            channels: vec![
+                                log_channel(p[0], a_max),
+                                log_channel(p[1], b_max),
+                            ],
+                            iterations,
+                        })
+                        .collect();
+                    let ms = m.measure_batch(&reqs)?;
+                    Ok(reqs
+                        .iter()
+                        .zip(&ms)
+                        .map(|(req, r)| {
+                            // Rebuild the measured variant to read off the
+                            // thin input width and FC width — subtraction
+                            // coordinates stay in lock-step with
+                            // VariantBuilder by construction.
+                            let (_, thin, fc_in) = profiler::hidden_variant(
+                                &in_tmpl,
+                                &tmpl,
+                                &out_tmpl,
+                                req.channels[0],
+                                req.channels[1],
+                            );
+                            let (e_in, _) = in_gp.predict_raw(&[thin as f64]);
+                            let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
+                            (
+                                (r.energy_per_iter - e_in.max(0.0) - e_out.max(0.0)).max(1e-12),
+                                r.device_seconds,
+                            )
+                        })
+                        .collect())
                 },
                 2,
                 &self.cfg.fit_cfg(2),
-            );
-            report.families.push(FamilyReport {
-                family: fam_id.clone(),
-                points: outcome.points.len(),
-                device_seconds: outcome.device_seconds,
-                fit_seconds: outcome.fit_seconds,
-                converged: outcome.converged,
-            });
-            self.store.insert(
-                &dev_name,
-                &fam_id,
-                StoredGp {
-                    gp: outcome.gp,
-                    x_max: vec![a_max, b_max],
-                    log_x: true,
-                    log_y: true,
-                    device_seconds: outcome.device_seconds,
-                    fit_seconds: outcome.fit_seconds,
-                    converged: outcome.converged,
-                },
-            );
+            )?;
+            self.record(&mut report, &dev_name, &fam_id, vec![a_max, b_max], outcome);
         }
-        report
+        Ok(report)
+    }
+
+    /// [`Thor::profile`] over one in-process stateful device — the
+    /// bit-compatible continuation of the original `&mut Device`
+    /// pipeline (same request order, same device RNG stream).
+    pub fn profile_local(&mut self, dev: &mut Device, reference: &ModelGraph) -> ProfileReport {
+        let mut m = LocalMeasurer::sequential(dev, reference);
+        self.profile(&mut m, reference).expect("local measurement is infallible")
     }
 
     /// Estimate a model's per-iteration energy from the fitted store.
@@ -296,7 +364,7 @@ mod tests {
         let reference = zoo::cnn5(&[16, 32, 64, 128], 28, 10);
         let mut dev = Device::new(devices::xavier(), 42);
         let mut thor = Thor::new(ThorConfig { iterations: 200, ..ThorConfig::default() });
-        let report = thor.profile(&mut dev, &reference);
+        let report = thor.profile_local(&mut dev, &reference);
         assert!(report.total_points() > 10);
         assert_eq!(report.families.len(), 5); // out, in, 3 hidden conv sizes
 
@@ -328,10 +396,34 @@ mod tests {
         let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
         let mut dev = Device::new(devices::tx2(), 1);
         let mut thor = Thor::new(ThorConfig::quick());
-        let r1 = thor.profile(&mut dev, &reference);
-        let r2 = thor.profile(&mut dev, &reference);
+        let r1 = thor.profile_local(&mut dev, &reference);
+        let r2 = thor.profile_local(&mut dev, &reference);
         assert!(!r1.families.is_empty());
         assert!(r2.families.is_empty(), "second profile should be a no-op");
+    }
+
+    #[test]
+    fn measurer_driven_profile_with_per_job_backend_and_batch() {
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let mut thor = Thor::new(ThorConfig { batch: 3, ..ThorConfig::quick() });
+        let mut m = LocalMeasurer::per_job(devices::xavier(), 42, &reference);
+        let report = thor.profile(&mut m, &reference).unwrap();
+        assert_eq!(report.families.len(), 5);
+        assert!(thor.estimate("xavier", &zoo::cnn5(&[4, 8, 16, 32], 16, 10)).is_ok());
+    }
+
+    #[test]
+    fn per_job_profile_is_run_to_run_byte_identical() {
+        // The store is a byte-stable artifact: no wall-clock inside, and
+        // per-request seeding makes it a pure function of the config.
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let run = || {
+            let mut thor = Thor::new(ThorConfig { batch: 2, ..ThorConfig::quick() });
+            let mut m = LocalMeasurer::per_job(devices::tx2(), 7, &reference);
+            thor.profile(&mut m, &reference).unwrap();
+            thor.store.to_json().to_string()
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]
@@ -340,7 +432,7 @@ mod tests {
         let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
         let mut dev = Device::new(devices::server(), 5);
         let mut thor = Thor::new(ThorConfig::quick());
-        thor.profile(&mut dev, &reference);
+        thor.profile_local(&mut dev, &reference);
         let narrow = zoo::cnn5(&[2, 5, 9, 30], 16, 10);
         assert!(thor.estimate("server", &narrow).is_ok());
     }

@@ -79,6 +79,61 @@ pub fn measure(dev: &mut Device, g: &ModelGraph, iterations: usize) -> (f64, f64
     (m.energy_per_iter(), m.time_s)
 }
 
+/// Rebuilds variant graphs from (family, channels) using the templates
+/// of a reference model — every measurement backend (local, fleet
+/// worker, PJRT) shares the reference architecture, so only channels
+/// travel between the acquisition loop and the backend.
+pub struct VariantBuilder {
+    input: Group,
+    output: Group,
+    hidden: Vec<Group>,
+}
+
+impl VariantBuilder {
+    pub fn from_reference(reference: &ModelGraph) -> Self {
+        let parsed = crate::thor::parse::parse(reference);
+        let input = parsed.input_groups().next().expect("input group").clone();
+        let output = parsed.output_groups().next().expect("output group").clone();
+        let hidden: Vec<Group> = parsed.hidden_groups().cloned().collect();
+        Self { input, output, hidden }
+    }
+
+    /// Build the variant graph for a family id + raw channels.
+    pub fn build(&self, family: &str, channels: &[usize]) -> anyhow::Result<ModelGraph> {
+        if family == self.output.key.id() {
+            return Ok(output_variant(&self.output, channels[0]));
+        }
+        if family == self.input.key.id() {
+            return Ok(input_variant(&self.input, &self.output, channels[0]).0);
+        }
+        for h in &self.hidden {
+            if family == h.key.id() {
+                let (g, _, _) =
+                    hidden_variant(&self.input, h, &self.output, channels[0], channels[1]);
+                return Ok(g);
+            }
+        }
+        Err(anyhow::anyhow!("unknown family '{family}'"))
+    }
+}
+
+/// Deterministic per-job device seed: FNV-1a ([`crate::util::hash`]) over
+/// (base seed ‖ family ‖ channels ‖ iterations).  Any backend measuring
+/// the same request with the same base seed gets the same result, which
+/// makes a whole profiling run a pure function of the request stream —
+/// independent of which worker ran what, in what order (see
+/// `rust/tests/fleet.rs` and `rust/tests/backend_equiv.rs`).
+pub fn job_seed(base_seed: u64, family: &str, channels: &[usize], iterations: usize) -> u64 {
+    let mut h = crate::util::hash::Fnv1a::new();
+    h.write(&base_seed.to_le_bytes());
+    h.write(family.as_bytes());
+    for c in channels {
+        h.write(&(*c as u64).to_le_bytes());
+    }
+    h.write(&(iterations as u64).to_le_bytes());
+    h.finish()
+}
+
 /// Channel ranges a family must be profiled over so that every later
 /// query (estimation or subtraction) stays inside the fitted region.
 pub struct Ranges {
@@ -232,5 +287,41 @@ mod tests {
         let p = parse(&zoo::lstm(64, &[128, 128], 2000, 32, 10));
         let last_lstm = p.hidden_groups().last().unwrap();
         assert_eq!(fc_in_after(last_lstm), 128);
+    }
+
+    #[test]
+    fn builder_covers_all_families() {
+        let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
+        let parsed = parse(&reference);
+        let b = VariantBuilder::from_reference(&reference);
+        for fam in &parsed.families {
+            let dim = if fam.position == crate::thor::Position::Hidden { 2 } else { 1 };
+            let chans = vec![4; dim];
+            let g = b.build(&fam.id(), &chans).unwrap();
+            assert!(!g.layers.is_empty());
+        }
+        assert!(b.build("nonexistent", &[1]).is_err());
+    }
+
+    #[test]
+    fn job_seed_is_stable_and_content_sensitive() {
+        let base = job_seed(42, "fam", &[4, 8], 60);
+        assert_eq!(base, job_seed(42, "fam", &[4, 8], 60));
+        assert_ne!(base, job_seed(43, "fam", &[4, 8], 60));
+        assert_ne!(base, job_seed(42, "maf", &[4, 8], 60));
+        assert_ne!(base, job_seed(42, "fam", &[8, 4], 60));
+        assert_ne!(base, job_seed(42, "fam", &[4, 8], 61));
+    }
+
+    #[test]
+    fn built_variant_measurable() {
+        let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
+        let b = VariantBuilder::from_reference(&reference);
+        let parsed = parse(&reference);
+        let fam = parsed.families[1].id();
+        let g = b.build(&fam, &[4, 8]).unwrap();
+        let mut dev = Device::new(devices::tx2(), 5);
+        let (e, t) = measure(&mut dev, &g, 30);
+        assert!(e > 0.0 && t > 0.0);
     }
 }

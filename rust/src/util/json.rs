@@ -360,6 +360,25 @@ mod tests {
     }
 
     #[test]
+    fn float_roundtrip_is_bit_exact() {
+        // The coordinator wire protocol and the GP store lean on this:
+        // Rust's f64 Display is shortest-roundtrip, so Num → text → Num
+        // preserves the exact bit pattern (this is what lets a fleet-
+        // profiled store be byte-identical to a local one).
+        let mut rng = crate::util::rng::Pcg64::new(99);
+        for _ in 0..500 {
+            let x = match rng.range_usize(0, 3) {
+                0 => rng.normal() * 1e-9,
+                1 => rng.normal(),
+                2 => rng.normal() * 1e12,
+                _ => (rng.range_usize(0, 1 << 20)) as f64,
+            };
+            let back = Json::parse(&Json::Num(x).to_string()).unwrap().as_f64().unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x} reparsed as {back}");
+        }
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());

@@ -288,6 +288,37 @@ pub fn chol_inverse(l: &Mat) -> Mat {
     inv
 }
 
+/// [`chol_inverse`] into a caller-provided matrix through one scratch
+/// buffer — no allocation at steady state, bit-identical columns (the
+/// in-place forward/back substitutions perform exactly the arithmetic
+/// [`solve_lower`] / [`solve_lower_t`] perform, in the same order).
+pub fn chol_inverse_into(l: &Mat, inv: &mut Mat, tmp: &mut Vec<f64>) {
+    let n = l.rows;
+    inv.resize(n, n);
+    tmp.resize(n, 0.0);
+    for j in 0..n {
+        // forward solve L y = e_j, in place in tmp
+        for i in 0..n {
+            let mut s = if i == j { 1.0 } else { 0.0 };
+            for k in 0..i {
+                s -= l[(i, k)] * tmp[k];
+            }
+            tmp[i] = s / l[(i, i)];
+        }
+        // back solve Lᵀ x = y, in place in tmp
+        for i in (0..n).rev() {
+            let mut s = tmp[i];
+            for k in i + 1..n {
+                s -= l[(k, i)] * tmp[k];
+            }
+            tmp[i] = s / l[(i, i)];
+        }
+        for i in 0..n {
+            inv[(i, j)] = tmp[i];
+        }
+    }
+}
+
 /// log det A = 2 Σ log L_ii.
 pub fn chol_logdet(l: &Mat) -> f64 {
     (0..l.rows).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
@@ -445,6 +476,23 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn chol_inverse_into_matches_allocating_bitwise() {
+        let a = random_spd(13, 6);
+        let l = cholesky(&a).unwrap();
+        let want = chol_inverse(&l);
+        let mut inv = Mat::zeros(1, 1); // wrong size on purpose: resize path
+        let mut tmp = Vec::new();
+        chol_inverse_into(&l, &mut inv, &mut tmp);
+        assert_eq!(inv.data, want.data, "in-place inverse diverged");
+        // dirty-buffer reuse must still match
+        let b = random_spd(7, 12);
+        let lb = cholesky(&b).unwrap();
+        let want_b = chol_inverse(&lb);
+        chol_inverse_into(&lb, &mut inv, &mut tmp);
+        assert_eq!(inv.data, want_b.data);
     }
 
     #[test]

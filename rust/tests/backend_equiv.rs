@@ -1,0 +1,83 @@
+//! Backend-equivalence property: the measurement backend must be
+//! invisible in the fitted artifact.  One pipeline
+//! (`thor::pipeline::Thor::profile`) drives every backend, and the
+//! determinism contract (per-request measurement seeds, leader-side
+//! acquisition + fitting, no wall-clock in the store) makes the
+//! resulting `GpStore` a pure function of (reference, config, base
+//! seed).  Here that is asserted end to end over real loopback TCP:
+//!
+//! * `LocalMeasurer::per_job` vs a 1-worker fleet vs a 3-worker fleet —
+//!   byte-identical store JSON (extends PR 2's fleet-only determinism
+//!   test to the full active-learning loop across backends);
+//! * the batch-size-1 ≡ pre-refactor-scalar-loop equivalence lives next
+//!   to the loop itself (`thor::fit` test
+//!   `batch_size_1_is_bit_identical_to_prerefactor_scalar_loop`).
+//!
+//! CI runs this file under a 120-second timeout guard next to the fleet
+//! tests.
+
+use thor::coordinator::{DeviceWorker, FleetServer};
+use thor::model::{zoo, ModelGraph};
+use thor::simdevice::{devices, Device};
+use thor::thor::{LocalMeasurer, Thor, ThorConfig};
+
+const BASE_SEED: u64 = 42;
+const BATCH: usize = 3;
+
+fn reference() -> ModelGraph {
+    // Small cnn5: 5 families (out, in, 3 hidden).
+    zoo::cnn5(&[8, 16, 32, 64], 16, 10)
+}
+
+fn cfg() -> ThorConfig {
+    ThorConfig { batch: BATCH, ..ThorConfig::quick() }
+}
+
+/// Store JSON from the in-process per-job-seeded backend.
+fn local_store_json() -> String {
+    let mut thor = Thor::new(cfg());
+    let mut m = LocalMeasurer::per_job(devices::xavier(), BASE_SEED, &reference());
+    thor.profile(&mut m, &reference()).expect("local profile");
+    thor.store.to_json().to_string()
+}
+
+/// Store JSON from a loopback fleet with `n_workers` TCP workers.
+fn fleet_store_json(n_workers: usize) -> String {
+    let server = FleetServer::new(cfg());
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let addr = addr.clone();
+        let reference = reference();
+        handles.push(std::thread::spawn(move || {
+            let mut worker =
+                DeviceWorker::new(Device::new(devices::xavier(), 100 + w as u64), &reference)
+                    .with_per_job_seed(BASE_SEED);
+            worker.run(&addr)
+        }));
+    }
+
+    let run = bound.serve(&reference(), n_workers).expect("fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    run.store.to_json().to_string()
+}
+
+#[test]
+fn local_and_fleet_stores_are_byte_identical_at_1_and_3_workers() {
+    let local = local_store_json();
+    assert!(!local.is_empty() && local.contains("xavier"), "local store looks empty");
+    let fleet1 = fleet_store_json(1);
+    assert_eq!(
+        local, fleet1,
+        "1-worker fleet store diverged from the local per-job backend"
+    );
+    let fleet3 = fleet_store_json(3);
+    assert_eq!(
+        local, fleet3,
+        "3-worker fleet store diverged from the local per-job backend"
+    );
+}

@@ -91,6 +91,23 @@ fn fleet1_fits_all_families_over_loopback() {
 }
 
 #[test]
+fn fleetn_fits_every_device_type_concurrently() {
+    let rep = run("fleetN");
+    assert!(rep.error.is_none(), "{:?}", rep.error);
+    assert_eq!(rep.get_metric("devices").unwrap(), 3.0);
+    assert!(rep.get_metric("jobs_total").unwrap() > 0.0);
+    for dev in ["xavier", "tx2", "server"] {
+        let m = rep.get_metric(&format!("mape_{dev}")).unwrap_or(f64::NAN);
+        assert!(m.is_finite() && m >= 0.0, "{dev} MAPE {m}");
+        assert!(rep.get_metric(&format!("jobs_{dev}")).unwrap() > 0.0, "{dev} ran no jobs");
+    }
+    // one table row per device type, per-worker counts present
+    assert_eq!(rep.tables[0].rows.len(), 3, "{:?}", rep.tables[0].rows);
+    let per_worker = rep.tables[0].column("per-worker jobs").expect("per-worker column");
+    assert!(per_worker.iter().all(|c| c.contains('/')), "{per_worker:?}");
+}
+
+#[test]
 fn mape_pair_runs_on_every_device() {
     for dev in ["xavier", "tx2"] {
         let (thor_m, flops_m, report) =

@@ -30,8 +30,13 @@ fn reference() -> ModelGraph {
 /// Run a loopback fleet with `n_workers`.  `die_after` = `Some((w, k))`
 /// makes client `w` drop its connection upon receiving job `k + 1`,
 /// leaving that job in flight.
+///
+/// The acquisition batch is fixed at 3 for every worker count: the
+/// probe sequence depends on the batch size (3 top-variance proposals
+/// per GP round), never on the worker count, so stores stay comparable
+/// across 1-, 2- and 3-worker runs.
 fn run_fleet(n_workers: usize, die_after: Option<(usize, usize)>) -> FleetRun {
-    let server = FleetServer::new(ThorConfig::quick());
+    let server = FleetServer::new(ThorConfig { batch: 3, ..ThorConfig::quick() });
     let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
     let addr = bound.local_addr().to_string();
 

@@ -22,7 +22,7 @@ fn thor_full_pipeline_beats_flops_on_fixed_clock_device() {
     let mut dev = Device::new(devices::xavier(), 42);
     let reference = zoo::cnn5(&[32, 64, 128, 256], 28, 10);
     let mut thor = Thor::new(ThorConfig { iterations: 200, ..ThorConfig::default() });
-    thor.profile(&mut dev, &reference);
+    thor.profile_local(&mut dev, &reference);
 
     let train_models = sampler::sample_n(sampler::Family::Cnn5, 12, 7, 10);
     let lr = thor::baselines::flops_lr::FlopsLr::fit_on_device(&mut dev, &train_models, 100);
@@ -45,7 +45,7 @@ fn store_roundtrip_preserves_estimates() {
     let mut dev = Device::new(devices::tx2(), 11);
     let reference = zoo::cnn5(&[16, 32, 64, 128], 16, 10);
     let mut thor = Thor::new(ThorConfig::quick());
-    thor.profile(&mut dev, &reference);
+    thor.profile_local(&mut dev, &reference);
     let path = std::env::temp_dir().join("thor_integration_store.json");
     thor.store.save(&path).unwrap();
     let loaded = thor::thor::store::GpStore::load(&path).unwrap().unwrap();

@@ -199,7 +199,7 @@ fn prop_layerwise_estimates_sum_to_pipeline_estimate() {
             let name = p.name.to_string();
             let mut dev = Device::new(p, 11);
             let mut t = Thor::new(ThorConfig::quick());
-            t.profile(&mut dev, &reference);
+            t.profile_local(&mut dev, &reference);
             (name, t)
         })
         .collect();
