@@ -11,6 +11,15 @@
 //! exact acquisition code a local run does, so the fleet-profiled store
 //! is byte-identical to a local per-job-seeded run at any worker count.
 //!
+//! A single leader can serve a **heterogeneous** fleet
+//! ([`server::FleetSpec::mixed`]): jobs are tagged with the device
+//! class they must run on, [`scheduler::JobQueue::assign`] routes
+//! same-class only (requeue-on-death included), the pipeline
+//! interleaves class acquisition rounds so every class stays saturated,
+//! and one `serve` emits one multi-device store.  Per-class worker
+//! counts feed occupancy-adaptive batching
+//! ([`crate::thor::fit::Batch::Auto`]).
+//!
 //! Invariants (property-tested in `scheduler`, and promoted to
 //! integration level over real sockets in `rust/tests/fleet.rs` and
 //! `rust/tests/backend_equiv.rs`):
@@ -32,5 +41,5 @@ pub mod worker;
 
 pub use protocol::Msg;
 pub use scheduler::{JobQueue, JobState};
-pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer};
-pub use worker::{job_seed, DeviceWorker};
+pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer, FleetSpec};
+pub use worker::{class_seed, job_seed, DeviceWorker};

@@ -5,14 +5,19 @@
 //! the exact bit pattern the worker measured, which the cross-backend
 //! store byte-equality (`rust/tests/backend_equiv.rs`) depends on.
 //! Batched acquisition needs no protocol change: a batch is just
-//! several in-flight `Job`s at once.
+//! several in-flight `Job`s at once.  Heterogeneous fleets need none
+//! either: `Hello::device` **is** the worker's device class — the
+//! leader's routing key ([`crate::coordinator::scheduler::JobQueue`]
+//! assigns same-class only), so a `Job` never names a device (the
+//! receiving worker is, by routing, of the right class).
 
 use crate::util::json::Json;
 
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
-    /// worker → server: registration.
+    /// worker → server: registration; `device` is the worker's device
+    /// class — the leader's class-scoped routing key.
     Hello { device: String },
     /// server → worker: measure a variant (channels on the *raw* scale).
     Job { job_id: u64, family: String, channels: Vec<usize>, iterations: usize },

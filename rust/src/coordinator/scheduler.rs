@@ -4,6 +4,12 @@
 //! time — max-variance acquisition is sequential by nature) but keeps
 //! every *worker* busy by interleaving jobs from different families and
 //! devices.  Workers can die at any time: their in-flight jobs re-queue.
+//!
+//! Every job is tagged with the **device class** it must run on and
+//! [`JobQueue::assign`] filters by the asking worker's class, so a
+//! heterogeneous fleet never measures a job on the wrong silicon: a
+//! dead worker's jobs re-queue, but only same-class peers can pick them
+//! up (class-scoped requeue falls out of class-scoped assignment).
 
 use std::collections::BTreeMap;
 
@@ -18,6 +24,9 @@ pub enum JobState {
 #[derive(Clone, Debug)]
 pub struct Job {
     pub id: u64,
+    /// Device class this job must be measured on ([`JobQueue::assign`]
+    /// only hands it to a worker of the same class).
+    pub device: String,
     pub family: String,
     pub channels: Vec<usize>,
     pub iterations: usize,
@@ -25,11 +34,12 @@ pub struct Job {
     /// Routing preference: only this worker may take the job while it
     /// lives (deterministic per-worker job counts for the fleet
     /// experiment).  Cleared when the worker dies, so pinned jobs never
-    /// strand.
+    /// strand — they fall back to any same-class peer.
     pub affinity: Option<usize>,
 }
 
-/// FIFO queue with at-most-one-outstanding-job-per-worker routing.
+/// FIFO queue with class-scoped, at-most-one-outstanding-job-per-worker
+/// routing.
 #[derive(Default)]
 pub struct JobQueue {
     jobs: BTreeMap<u64, Job>,
@@ -41,13 +51,21 @@ impl JobQueue {
         Self::default()
     }
 
-    pub fn submit(&mut self, family: &str, channels: Vec<usize>, iterations: usize) -> u64 {
-        self.submit_to(family, channels, iterations, None)
+    pub fn submit(
+        &mut self,
+        device: &str,
+        family: &str,
+        channels: Vec<usize>,
+        iterations: usize,
+    ) -> u64 {
+        self.submit_to(device, family, channels, iterations, None)
     }
 
-    /// Submit with an optional worker affinity.
+    /// Submit with an optional worker affinity (the pinned worker must
+    /// be of the job's class — the caller routes same-class only).
     pub fn submit_to(
         &mut self,
+        device: &str,
         family: &str,
         channels: Vec<usize>,
         iterations: usize,
@@ -59,6 +77,7 @@ impl JobQueue {
             id,
             Job {
                 id,
+                device: device.to_string(),
                 family: family.to_string(),
                 channels,
                 iterations,
@@ -69,10 +88,11 @@ impl JobQueue {
         id
     }
 
-    /// Assign the oldest queued job routable to `worker` (no affinity, or
-    /// affinity to it) unless it already holds one
-    /// (at-most-one-outstanding invariant).
-    pub fn assign(&mut self, worker: usize) -> Option<Job> {
+    /// Assign the oldest queued job of `class` routable to `worker` (no
+    /// affinity, or affinity to it) unless it already holds one
+    /// (at-most-one-outstanding invariant).  A worker never receives a
+    /// job of another device class.
+    pub fn assign(&mut self, worker: usize, class: &str) -> Option<Job> {
         if self.jobs.values().any(|j| j.state == (JobState::Assigned { worker })) {
             return None;
         }
@@ -80,7 +100,9 @@ impl JobQueue {
             .jobs
             .values()
             .find(|j| {
-                j.state == JobState::Queued && j.affinity.map_or(true, |a| a == worker)
+                j.state == JobState::Queued
+                    && j.device == class
+                    && j.affinity.map_or(true, |a| a == worker)
             })
             .map(|j| j.id)?;
         let job = self.jobs.get_mut(&id).unwrap();
@@ -102,7 +124,9 @@ impl JobQueue {
 
     /// A worker died: re-queue its in-flight jobs and strip its affinity
     /// from every live job (pinned-but-unassigned jobs would otherwise
-    /// strand forever).  Returns the number of re-queued jobs.
+    /// strand forever).  Re-queued jobs keep their device class, so only
+    /// same-class survivors can take them.  Returns the number of
+    /// re-queued jobs.
     pub fn requeue_worker(&mut self, worker: usize) -> usize {
         let mut n = 0;
         for j in self.jobs.values_mut() {
@@ -130,6 +154,39 @@ impl JobQueue {
         self.jobs.len()
     }
 
+    /// Jobs completed for one device class.
+    pub fn done_for(&self, class: &str) -> usize {
+        self.jobs.values().filter(|j| j.state == JobState::Done && j.device == class).count()
+    }
+
+    /// Jobs ever submitted for one device class.
+    pub fn submitted_for(&self, class: &str) -> usize {
+        self.jobs.values().filter(|j| j.device == class).count()
+    }
+
+    /// Sorted, deduplicated device classes any job was ever submitted
+    /// for.
+    pub fn classes_submitted(&self) -> Vec<String> {
+        let set: std::collections::BTreeSet<&str> =
+            self.jobs.values().map(|j| j.device.as_str()).collect();
+        set.into_iter().map(str::to_string).collect()
+    }
+
+    /// Sorted device classes with unresolved (non-Done) jobs — the
+    /// leader checks these against the live fleet to turn
+    /// "all workers of a scheduled class died" into a hard error.
+    pub fn classes_outstanding(&self) -> Vec<String> {
+        let mut cs: Vec<String> = self
+            .jobs
+            .values()
+            .filter(|j| j.state != JobState::Done)
+            .map(|j| j.device.clone())
+            .collect();
+        cs.sort_unstable();
+        cs.dedup();
+        cs
+    }
+
     pub fn get(&self, id: u64) -> Option<&Job> {
         self.jobs.get(&id)
     }
@@ -140,29 +197,38 @@ mod tests {
     use super::*;
     use crate::util::proptest::{check, Config};
 
+    /// Single-class convenience used by the legacy-shaped tests.
+    fn submit1(q: &mut JobQueue, channels: Vec<usize>) -> u64 {
+        q.submit("xavier", "f", channels, 10)
+    }
+
+    fn assign1(q: &mut JobQueue, worker: usize) -> Option<Job> {
+        q.assign(worker, "xavier")
+    }
+
     #[test]
     fn fifo_assignment() {
         let mut q = JobQueue::new();
-        let a = q.submit("f", vec![1], 10);
-        let b = q.submit("f", vec![2], 10);
-        assert_eq!(q.assign(0).unwrap().id, a);
-        assert_eq!(q.assign(1).unwrap().id, b);
+        let a = submit1(&mut q, vec![1]);
+        let b = submit1(&mut q, vec![2]);
+        assert_eq!(assign1(&mut q, 0).unwrap().id, a);
+        assert_eq!(assign1(&mut q, 1).unwrap().id, b);
     }
 
     #[test]
     fn at_most_one_outstanding_per_worker() {
         let mut q = JobQueue::new();
-        q.submit("f", vec![1], 10);
-        q.submit("f", vec![2], 10);
-        assert!(q.assign(0).is_some());
-        assert!(q.assign(0).is_none(), "worker 0 double-assigned");
+        submit1(&mut q, vec![1]);
+        submit1(&mut q, vec![2]);
+        assert!(assign1(&mut q, 0).is_some());
+        assert!(assign1(&mut q, 0).is_none(), "worker 0 double-assigned");
     }
 
     #[test]
     fn stale_results_dropped() {
         let mut q = JobQueue::new();
-        let id = q.submit("f", vec![1], 10);
-        let j = q.assign(0).unwrap();
+        let id = submit1(&mut q, vec![1]);
+        let j = assign1(&mut q, 0).unwrap();
         assert_eq!(j.id, id);
         assert!(!q.complete(id, 1), "result from wrong worker accepted");
         assert!(q.complete(id, 0));
@@ -172,25 +238,25 @@ mod tests {
     #[test]
     fn affinity_routes_to_pinned_worker_only() {
         let mut q = JobQueue::new();
-        let pinned = q.submit_to("f", vec![1], 10, Some(1));
-        let free = q.submit("f", vec![2], 10);
+        let pinned = q.submit_to("xavier", "f", vec![1], 10, Some(1));
+        let free = submit1(&mut q, vec![2]);
         // worker 0 must skip the pinned job and take the free one
-        assert_eq!(q.assign(0).unwrap().id, free);
-        assert_eq!(q.assign(1).unwrap().id, pinned);
+        assert_eq!(assign1(&mut q, 0).unwrap().id, free);
+        assert_eq!(assign1(&mut q, 1).unwrap().id, pinned);
     }
 
     #[test]
     fn affinity_cleared_when_pinned_worker_dies() {
         let mut q = JobQueue::new();
-        let a = q.submit_to("f", vec![1], 10, Some(1));
-        let b = q.submit_to("f", vec![2], 10, Some(1));
-        assert_eq!(q.assign(1).unwrap().id, a);
+        let a = q.submit_to("xavier", "f", vec![1], 10, Some(1));
+        let b = q.submit_to("xavier", "f", vec![2], 10, Some(1));
+        assert_eq!(assign1(&mut q, 1).unwrap().id, a);
         // worker 1 dies holding `a`, with `b` still queued-and-pinned
         assert_eq!(q.requeue_worker(1), 1);
         // both jobs are now routable to worker 0
-        assert_eq!(q.assign(0).unwrap().id, a);
+        assert_eq!(assign1(&mut q, 0).unwrap().id, a);
         assert!(q.complete(a, 0));
-        assert_eq!(q.assign(0).unwrap().id, b);
+        assert_eq!(assign1(&mut q, 0).unwrap().id, b);
         assert!(q.complete(b, 0));
         assert_eq!(q.pending(), 0);
         assert_eq!(q.submitted(), 2);
@@ -202,10 +268,10 @@ mod tests {
         // exactly the in-flight jobs of the dead worker (what FleetRun
         // reports as `requeued`).
         let mut q = JobQueue::new();
-        q.submit("f", vec![1], 10);
-        q.submit("f", vec![2], 10);
-        q.submit("f", vec![3], 10);
-        q.assign(0).unwrap();
+        submit1(&mut q, vec![1]);
+        submit1(&mut q, vec![2]);
+        submit1(&mut q, vec![3]);
+        assign1(&mut q, 0).unwrap();
         assert_eq!(q.requeue_worker(0), 1, "only the held job counts");
         assert_eq!(q.requeue_worker(0), 0, "repeat requeue finds nothing in flight");
         assert_eq!(q.requeue_worker(5), 0, "idle/unknown worker requeues nothing");
@@ -218,11 +284,11 @@ mod tests {
         // re-queued job must be dropped, and the re-measurement by the
         // new worker is the one that lands.
         let mut q = JobQueue::new();
-        let id = q.submit("f", vec![1], 10);
-        q.assign(0).unwrap();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
         q.requeue_worker(0);
         assert!(!q.complete(id, 0), "late result from dead worker accepted");
-        assert_eq!(q.assign(1).unwrap().id, id);
+        assert_eq!(assign1(&mut q, 1).unwrap().id, id);
         assert!(q.complete(id, 1));
         assert!(!q.complete(id, 1), "duplicate completion accepted");
         assert_eq!(q.done(), 1);
@@ -233,28 +299,113 @@ mod tests {
         // A job pinned to a worker that dies before ever taking it must
         // become routable to the survivors (no stranding).
         let mut q = JobQueue::new();
-        let id = q.submit_to("f", vec![1], 10, Some(2));
-        assert!(q.assign(0).is_none(), "pinned job leaked to the wrong worker");
+        let id = q.submit_to("xavier", "f", vec![1], 10, Some(2));
+        assert!(assign1(&mut q, 0).is_none(), "pinned job leaked to the wrong worker");
         assert_eq!(q.requeue_worker(2), 0, "nothing was in flight");
-        assert_eq!(q.assign(0).unwrap().id, id, "affinity not cleared on death");
+        assert_eq!(assign1(&mut q, 0).unwrap().id, id, "affinity not cleared on death");
     }
 
     #[test]
     fn requeue_on_worker_death() {
         let mut q = JobQueue::new();
-        let id = q.submit("f", vec![1], 10);
-        q.assign(0).unwrap();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
         assert_eq!(q.requeue_worker(0), 1);
         // the job can be assigned to another worker now
-        assert_eq!(q.assign(1).unwrap().id, id);
+        assert_eq!(assign1(&mut q, 1).unwrap().id, id);
         assert!(q.complete(id, 1));
         assert_eq!(q.pending(), 0);
     }
 
     #[test]
+    fn mixed_class_queue_never_assigns_across_classes() {
+        // A tx2 worker asking first must NOT receive the older xavier
+        // job; each class drains only its own jobs.
+        let mut q = JobQueue::new();
+        let jx = q.submit("xavier", "f", vec![1], 10);
+        let jt = q.submit("tx2", "f", vec![2], 10);
+        let js = q.submit("server", "f", vec![3], 10);
+        let got_t = q.assign(0, "tx2").unwrap();
+        assert_eq!((got_t.id, got_t.device.as_str()), (jt, "tx2"));
+        let got_x = q.assign(1, "xavier").unwrap();
+        assert_eq!((got_x.id, got_x.device.as_str()), (jx, "xavier"));
+        assert!(q.assign(2, "oppo").is_none(), "unscheduled class got a job");
+        let got_s = q.assign(3, "server").unwrap();
+        assert_eq!(got_s.id, js);
+        // nothing queued is left for any class
+        for c in ["xavier", "tx2", "server"] {
+            assert!(q.assign(9, c).is_none(), "{c} job assigned twice");
+        }
+    }
+
+    #[test]
+    fn dead_tx2_worker_requeues_onto_surviving_tx2_only() {
+        // Mid-stream death of one tx2 worker: its in-flight job must go
+        // to the surviving tx2 worker and never to the (idle!) xavier.
+        let mut q = JobQueue::new();
+        let jt = q.submit_to("tx2", "f", vec![1], 10, Some(1));
+        assert_eq!(q.assign(1, "tx2").unwrap().id, jt);
+        assert_eq!(q.requeue_worker(1), 1);
+        assert!(q.assign(0, "xavier").is_none(), "tx2 job leaked to a xavier worker");
+        assert_eq!(q.assign(2, "tx2").unwrap().id, jt, "surviving tx2 peer skipped");
+        assert!(q.complete(jt, 2));
+        assert_eq!(q.done_for("tx2"), 1);
+    }
+
+    #[test]
+    fn per_class_done_equals_submitted_exactly_once() {
+        // Drain a mixed-class queue with one worker per class and check
+        // the per-class ledgers: done == submitted for every class, and
+        // duplicate completions never inflate them.
+        let mut q = JobQueue::new();
+        let classes = ["xavier", "tx2", "server"];
+        for (ci, c) in classes.iter().enumerate() {
+            for k in 0..=ci {
+                q.submit(c, "f", vec![k], 10);
+            }
+        }
+        assert!(!q.classes_outstanding().is_empty());
+        for (w, c) in classes.iter().enumerate() {
+            while let Some(j) = q.assign(w, c) {
+                assert_eq!(&j.device, c);
+                assert!(q.complete(j.id, w));
+                assert!(!q.complete(j.id, w), "duplicate completion accepted");
+            }
+        }
+        for (ci, c) in classes.iter().enumerate() {
+            assert_eq!(q.submitted_for(c), ci + 1);
+            assert_eq!(q.done_for(c), ci + 1, "{c}: done != submitted");
+        }
+        assert_eq!(q.done(), q.submitted());
+        assert!(q.classes_outstanding().is_empty());
+        assert_eq!(
+            q.classes_submitted(),
+            vec!["server".to_string(), "tx2".to_string(), "xavier".to_string()],
+            "classes_submitted must be sorted and deduplicated"
+        );
+    }
+
+    #[test]
+    fn classes_outstanding_tracks_unresolved_jobs() {
+        let mut q = JobQueue::new();
+        let jx = q.submit("xavier", "f", vec![1], 10);
+        q.submit("tx2", "f", vec![2], 10);
+        assert_eq!(q.classes_outstanding(), vec!["tx2".to_string(), "xavier".to_string()]);
+        q.assign(0, "xavier").unwrap();
+        assert_eq!(
+            q.classes_outstanding(),
+            vec!["tx2".to_string(), "xavier".to_string()],
+            "in-flight jobs are still outstanding"
+        );
+        q.complete(jx, 0);
+        assert_eq!(q.classes_outstanding(), vec!["tx2".to_string()]);
+    }
+
+    #[test]
     fn prop_every_job_resolves_exactly_once() {
-        // Random interleaving of submit/assign/complete/death; at the end
-        // drain everything and verify each job completed exactly once.
+        // Random interleaving of submit/assign/complete/death across two
+        // device classes; at the end drain everything and verify each
+        // job completed exactly once, each on its own class's workers.
         check(
             "jobs resolve exactly once",
             Config { cases: 64, seed: 77 },
@@ -263,6 +414,9 @@ mod tests {
                 (ops, r.range_usize(1, 4))
             },
             |(ops, n_workers)| {
+                // worker w serves class CLASSES[w % 2]
+                const CLASSES: [&str; 2] = ["xavier", "tx2"];
+                let class_of = |w: usize| CLASSES[w % 2];
                 let mut q = JobQueue::new();
                 let mut completions: BTreeMap<u64, usize> = BTreeMap::new();
                 let mut inflight: Vec<(u64, usize)> = Vec::new();
@@ -270,12 +424,13 @@ mod tests {
                 for (i, op) in ops.iter().enumerate() {
                     match op {
                         0 => {
-                            q.submit("f", vec![i], 10);
+                            q.submit(CLASSES[i % 2], "f", vec![i], 10);
                             submitted += 1;
                         }
                         1 => {
                             let w = i % n_workers;
-                            if let Some(j) = q.assign(w) {
+                            if let Some(j) = q.assign(w, class_of(w)) {
+                                crate::prop_assert!(j.device == class_of(w), "cross-class assignment");
                                 inflight.push((j.id, w));
                             }
                         }
@@ -303,8 +458,11 @@ mod tests {
                 while q.pending() > 0 {
                     guard += 1;
                     crate::prop_assert!(guard < 100_000, "drain did not terminate");
-                    for w in 0..*n_workers {
-                        if let Some(j) = q.assign(w) {
+                    // two drain workers, one per class, beyond the random
+                    // phase's ids so both classes always have a taker
+                    for (w, c) in [(1000usize, CLASSES[0]), (1001, CLASSES[1])] {
+                        if let Some(j) = q.assign(w, c) {
+                            crate::prop_assert!(j.device == c, "cross-class assignment in drain");
                             crate::prop_assert!(q.complete(j.id, w), "drain completion rejected");
                             *completions.entry(j.id).or_insert(0) += 1;
                         }
@@ -312,6 +470,10 @@ mod tests {
                 }
                 crate::prop_assert!(completions.len() as u64 == submitted, "{} != {submitted}", completions.len());
                 crate::prop_assert!(completions.values().all(|&c| c == 1), "double completion: {completions:?}");
+                crate::prop_assert!(
+                    q.done_for(CLASSES[0]) + q.done_for(CLASSES[1]) == q.done(),
+                    "per-class ledgers do not add up"
+                );
                 Ok(())
             },
         );

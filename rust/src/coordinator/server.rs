@@ -5,27 +5,46 @@
 //! client/server split (the device only trains, the server only fits)
 //! with none of the fit logic duplicated server-side.  Each batched
 //! acquisition round fans its requests across the fleet as jobs; the
-//! [`crate::coordinator::scheduler::JobQueue`] provides affinity
-//! routing, exactly-once completion and requeue-on-death.
+//! [`crate::coordinator::scheduler::JobQueue`] provides class-scoped
+//! affinity routing, exactly-once completion and requeue-on-death.
+//!
+//! # Heterogeneous fleets
+//!
+//! One leader can serve a **mixed** fleet ([`FleetSpec`]): workers
+//! declare their device class in `Hello`, jobs are tagged with the
+//! class they must run on, and [`JobQueue::assign`] routes same-class
+//! only.  The pipeline interleaves the classes' acquisition rounds, so
+//! a single `serve` emits one multi-device store with every class
+//! measured on its own silicon.  [`Measurer::occupancy`] reports live
+//! per-class worker counts for `Batch::Auto` sizing.
 //!
 //! Concurrency model: one accept loop; per-connection reader threads
 //! push (worker, msg) events into an mpsc channel; the leader thread
 //! owns all state (queue + pipeline) — no shared-state locking beyond
 //! the channel.
 //!
-//! Determinism: batch requests are submitted with a worker affinity
-//! (request index modulo live workers, sorted ids) and only issued once
-//! every expected worker has said Hello (or [`FORMATION_GRACE`]
-//! expires), so with per-job-seeded workers
-//! ([`crate::coordinator::worker::job_seed`]) the final store *and* the
-//! per-worker job counts are pure functions of (reference, config, base
-//! seed) — independent of OS scheduling, and byte-identical to a
-//! [`crate::thor::measure::LocalMeasurer::per_job`] run at any worker
+//! Determinism: batch requests are submitted with a same-class worker
+//! affinity (per-class request index modulo live class peers, sorted
+//! ids) and only issued once every expected worker has said Hello (or
+//! [`FORMATION_GRACE`] expires), so with per-job-seeded workers
+//! ([`crate::coordinator::worker::job_seed`], class-derived via
+//! [`crate::thor::profiler::class_seed`] in mixed fleets) the final
+//! store is a pure function of (reference, config, base seed) —
+//! independent of OS scheduling, and byte-identical to
+//! [`crate::thor::measure::LocalMeasurer`] per-job runs at *any* worker
 //! count (`rust/tests/backend_equiv.rs`).  On a worker death its jobs
-//! re-queue with affinity cleared, trading count determinism for
-//! liveness (the store stays deterministic either way).
+//! re-queue with affinity cleared onto same-class peers, trading count
+//! determinism for liveness.  Under a `Fixed` batch the store stays
+//! byte-identical across deaths (per-request seeding makes the
+//! re-measurement reproduce the lost one); under `Batch::Auto` a death
+//! shrinks the class's occupancy and therefore its *proposal* stream,
+//! so the store is a pure function of (reference, config, base seed,
+//! death pattern) — healthy runs remain byte-reproducible, degraded
+//! ones legitimately diverge from healthy ones.  If an entire
+//! scheduled class dies, `serve` errors instead of emitting a
+//! class-less store.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc;
@@ -47,6 +66,40 @@ enum Event {
     Disconnected(usize),
 }
 
+/// What a leader expects of its fleet before issuing jobs.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    /// Expected (device class, worker count) pairs.  Empty = untyped
+    /// legacy mode: a single-class fleet whose class is learned from
+    /// the first `Hello` (PR-4 behavior, bit-compatible).
+    pub classes: Vec<(String, usize)>,
+    /// Total workers to accept (= sum of class counts when typed).
+    pub total: usize,
+    /// Formation window (see [`FORMATION_GRACE`]); tests shrink it.
+    pub grace: Duration,
+}
+
+impl FleetSpec {
+    /// Untyped single-class fleet of `total` workers (legacy mode).
+    pub fn untyped(total: usize) -> Self {
+        Self { classes: Vec::new(), total, grace: FORMATION_GRACE }
+    }
+
+    /// Typed mixed fleet: `count` workers expected per named class.
+    pub fn mixed(classes: &[(&str, usize)]) -> Self {
+        let classes: Vec<(String, usize)> =
+            classes.iter().map(|(c, n)| (c.to_string(), *n)).collect();
+        let total = classes.iter().map(|(_, n)| n).sum();
+        Self { classes, total, grace: FORMATION_GRACE }
+    }
+
+    /// Override the formation window (tests).
+    pub fn with_grace(mut self, grace: Duration) -> Self {
+        self.grace = grace;
+        self
+    }
+}
+
 /// Outcome of one fleet profiling run (see
 /// [`BoundFleetServer::serve`]).
 pub struct FleetRun {
@@ -56,8 +109,13 @@ pub struct FleetRun {
     /// Jobs completed (each exactly once; duplicates are dropped).
     pub jobs_done: usize,
     /// Completed jobs per worker index (connection order), length =
-    /// `expect_workers`.
+    /// the spec's total.  Deterministic for homogeneous fleets; for
+    /// mixed fleets the id ↔ class mapping follows connection order,
+    /// so reports should aggregate [`FleetRun::per_class`] instead.
     pub per_worker: Vec<usize>,
+    /// Completed jobs per device class, sorted by class name — a pure
+    /// function of the config even for mixed fleets.
+    pub per_class: Vec<(String, usize)>,
     /// In-flight jobs re-queued because their worker disconnected.
     pub requeued: usize,
 }
@@ -69,11 +127,14 @@ pub struct FleetServer {
 
 /// How long the leader waits for the full fleet to say Hello before
 /// proceeding with whoever showed up.  Within the window, job issue is
-/// gated on all `expect_workers` Hellos (deterministic affinity); after
-/// it, liveness wins — a worker that never connects or dies before
-/// Hello no longer hangs `thor serve` forever.  In-process fleets
-/// (fleet1/fleetN, tests) form in milliseconds, so the degraded path
-/// never fires there and wall-clock never influences their reports.
+/// gated on all expected Hellos (deterministic affinity); after it,
+/// liveness wins — a worker that never connects or dies before Hello no
+/// longer hangs `thor serve` forever.  Exception: a typed
+/// ([`FleetSpec::mixed`]) class with **zero** Hellos is a hard error,
+/// not a degraded fleet — proceeding would silently emit a store with
+/// that class missing.  In-process fleets (fleet1/fleetN/fleetH, tests)
+/// form in milliseconds, so the degraded path never fires there and
+/// wall-clock never influences their reports.
 const FORMATION_GRACE: Duration = Duration::from_secs(30);
 
 /// A fleet server bound to a local address but not yet serving — lets
@@ -99,11 +160,17 @@ impl FleetServer {
     }
 
     /// Serve on `addr` until every family of `reference` is fitted for
-    /// `expect_workers` workers' devices, then shut workers down.
+    /// `expect_workers` single-class workers, then shut workers down.
     /// Convenience wrapper over [`FleetServer::bind`] +
     /// [`BoundFleetServer::serve`] for the CLI.
     pub fn run(&self, addr: &str, reference: &ModelGraph, expect_workers: usize) -> Result<GpStore> {
         Ok(self.bind(addr)?.serve(reference, expect_workers)?.store)
+    }
+
+    /// [`FleetServer::run`] for an explicit (possibly mixed) fleet
+    /// spec: one leader, one serve, one multi-device store.
+    pub fn run_spec(&self, addr: &str, reference: &ModelGraph, spec: FleetSpec) -> Result<GpStore> {
+        Ok(self.bind(addr)?.serve_spec(reference, spec)?.store)
     }
 }
 
@@ -112,51 +179,69 @@ impl BoundFleetServer {
         self.addr
     }
 
-    /// Serve until every family of `reference` is fitted, then shut
-    /// workers down.
-    ///
-    /// Single-device fleet: all workers must expose the same device type
-    /// (heterogeneous fleets run one server per device type — matching
-    /// the paper, where GPs never transfer across devices; the `fleetN`
-    /// experiment does exactly that).
-    ///
-    /// Errors when the whole fleet disconnects with jobs outstanding —
-    /// there is no partial-store fallback anymore: a store must be a
-    /// complete pure function of the config or nothing.
+    /// Serve an untyped single-class fleet (legacy mode, PR-4
+    /// bit-compatible): all workers must expose the same device type.
+    /// Heterogeneous fleets use [`BoundFleetServer::serve_spec`].
     pub fn serve(self, reference: &ModelGraph, expect_workers: usize) -> Result<FleetRun> {
+        self.serve_spec(reference, FleetSpec::untyped(expect_workers))
+    }
+
+    /// Serve until every family of `reference` is fitted for every
+    /// device class of `spec`, then shut workers down.
+    ///
+    /// Errors when a typed class never forms (no Hello within the
+    /// grace window) or when every worker of a class with outstanding
+    /// jobs disconnects — there is no partial-store fallback: a store
+    /// must be a complete pure function of the config or nothing.
+    pub fn serve_spec(self, reference: &ModelGraph, spec: FleetSpec) -> Result<FleetRun> {
         let BoundFleetServer { cfg, listener, addr: _ } = self;
-        let mut fleet = FleetMeasurer::accept(listener, expect_workers, cfg.iterations);
-        fleet.form(FORMATION_GRACE);
+        let grace = spec.grace;
+        let mut fleet = FleetMeasurer::accept(listener, spec, cfg.iterations);
+        fleet.form(grace).map_err(|e| anyhow!("fleet formation failed: {e}"))?;
         let mut thor = Thor::new(cfg);
         thor.profile(&mut fleet, reference).map_err(|e| anyhow!("fleet profiling failed: {e}"))?;
         fleet.shutdown();
+        let per_class: Vec<(String, usize)> = fleet
+            .queue
+            .classes_submitted()
+            .into_iter()
+            .map(|c| {
+                let n = fleet.queue.done_for(&c);
+                (c, n)
+            })
+            .collect();
         Ok(FleetRun {
             store: thor.store,
             jobs_submitted: fleet.queue.submitted(),
             jobs_done: fleet.queue.done(),
             per_worker: fleet.per_worker,
+            per_class,
             requeued: fleet.requeued,
         })
     }
 }
 
-/// The fleet as a measurement backend: a batch of requests becomes a
-/// batch of jobs fanned across the live workers; `measure_batch`
-/// returns when every job of the batch has resolved (requeue-on-death
-/// included), in request order.
+/// The fleet as a measurement backend: a batch of requests (possibly
+/// spanning device classes) becomes a batch of class-routed jobs fanned
+/// across the live workers; `measure_batch` returns when every job of
+/// the batch has resolved (requeue-on-death included), in request
+/// order.
 pub struct FleetMeasurer {
     rx: mpsc::Receiver<Event>,
     /// Keeps the channel open even after the accept/reader threads end.
     _tx: mpsc::Sender<Event>,
     writers: HashMap<usize, TcpStream>,
     helloed: BTreeSet<usize>,
+    /// Worker id → device class, learned from `Hello`.
+    class_of: BTreeMap<usize, String>,
     queue: JobQueue,
     /// Completed measurements awaiting pickup, by job id.
     done: HashMap<u64, Measurement>,
     per_worker: Vec<usize>,
     requeued: usize,
+    /// First Hello's class — the untyped mode's single class.
     device_name: String,
-    expect_workers: usize,
+    spec: FleetSpec,
     started: Instant,
     /// Jobs carry this iteration count (the leader's ThorConfig) — kept
     /// here so the measurer can sanity-check request batches.
@@ -164,10 +249,11 @@ pub struct FleetMeasurer {
 }
 
 impl FleetMeasurer {
-    /// Start accepting up to `expect_workers` connections on `listener`.
-    fn accept(listener: TcpListener, expect_workers: usize, iterations: usize) -> Self {
+    /// Start accepting up to `spec.total` connections on `listener`.
+    fn accept(listener: TcpListener, spec: FleetSpec, iterations: usize) -> Self {
         let (tx, rx) = mpsc::channel::<Event>();
         let accept_tx = tx.clone();
+        let expect_workers = spec.total;
         std::thread::spawn(move || {
             for (i, stream) in listener.incoming().enumerate() {
                 let Ok(stream) = stream else { break };
@@ -182,40 +268,88 @@ impl FleetMeasurer {
             _tx: tx,
             writers: HashMap::new(),
             helloed: BTreeSet::new(),
+            class_of: BTreeMap::new(),
             queue: JobQueue::new(),
             done: HashMap::new(),
             per_worker: vec![0; expect_workers],
             requeued: 0,
             device_name: String::new(),
-            expect_workers,
+            spec,
             started: Instant::now(),
             iterations,
         }
     }
 
-    /// Wait for the fleet to form: all `expect_workers` Hellos, or at
-    /// least one Hello once `grace` has expired (partial fleet proceeds
-    /// instead of hanging — liveness over count determinism).
-    fn form(&mut self, grace: Duration) {
+    /// Helloed-and-alive workers of one class, sorted by id.
+    fn live_of(&self, class: &str) -> Vec<usize> {
+        self.class_of
+            .iter()
+            .filter(|(w, c)| c.as_str() == class && self.writers.contains_key(w) && self.helloed.contains(w))
+            .map(|(w, _)| *w)
+            .collect()
+    }
+
+    /// Typed classes with an unmet quota (count of helloed workers of
+    /// that class, dead or alive — formation is about who showed up).
+    fn unformed_classes(&self) -> Vec<(String, usize, usize)> {
+        self.spec
+            .classes
+            .iter()
+            .map(|(c, n)| {
+                let have = self.class_of.values().filter(|cc| cc.as_str() == c.as_str()).count();
+                (c.clone(), have, *n)
+            })
+            .filter(|(_, have, want)| have < want)
+            .collect()
+    }
+
+    /// Wait for the fleet to form: every expected Hello (all
+    /// `spec.total` in untyped mode, every class quota in typed mode),
+    /// or — once `grace` has expired — proceed with a partial fleet
+    /// (liveness over count determinism).  Exception, the hard error:
+    /// a typed class with **zero** Hellos after the grace window (a
+    /// heterogeneous serve must never silently emit a class-less
+    /// store).
+    fn form(&mut self, grace: Duration) -> Result<(), MeasureError> {
         loop {
-            if self.helloed.len() >= self.expect_workers {
-                return;
+            let formed = if self.spec.classes.is_empty() {
+                self.helloed.len() >= self.spec.total
+            } else {
+                self.unformed_classes().is_empty()
+            };
+            if formed {
+                return Ok(());
             }
             let elapsed = self.started.elapsed();
-            if !self.helloed.is_empty() && elapsed >= grace {
+            // Untyped mode keeps PR-4 semantics: with zero Hellos it
+            // waits indefinitely (an operator watching `thor serve`).
+            // Typed mode must resolve at the grace boundary either way —
+            // a missing class is an error even if nobody joined.
+            if elapsed >= grace && (!self.helloed.is_empty() || !self.spec.classes.is_empty()) {
+                let missing = self.unformed_classes();
+                if let Some((c, _, want)) =
+                    missing.iter().find(|(_, have, _)| *have == 0).cloned()
+                {
+                    return Err(MeasureError(format!(
+                        "device class '{c}' ({want} worker(s) requested) never said Hello \
+                         within {grace:?}; refusing to serve a store missing a requested class"
+                    )));
+                }
                 eprintln!(
                     "fleet leader: only {}/{} workers joined within {grace:?}; \
                      proceeding with the partial fleet",
                     self.helloed.len(),
-                    self.expect_workers
+                    self.spec.total
                 );
-                return;
+                return Ok(());
             }
             let wait = grace.checked_sub(elapsed).unwrap_or(Duration::from_millis(50));
             match self.rx.recv_timeout(wait) {
                 Ok(ev) => self.on_event(ev),
                 Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(MeasureError("fleet event channel closed during formation".into()))
+                }
             }
         }
     }
@@ -259,8 +393,9 @@ impl FleetMeasurer {
             Event::Message(w, Msg::Hello { device }) => {
                 self.helloed.insert(w);
                 if self.device_name.is_empty() {
-                    self.device_name = device;
+                    self.device_name = device.clone();
                 }
+                self.class_of.entry(w).or_insert(device);
             }
             Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds }) => {
                 // exactly-once: stale/duplicate completions are dropped
@@ -274,7 +409,8 @@ impl FleetMeasurer {
             Event::Message(_, _) => {}
             Event::Disconnected(w) => {
                 // Re-queue the dead worker's in-flight jobs (affinity
-                // cleared): they keep their ids, so completion by another
+                // cleared, class kept — only same-class peers can take
+                // them): they keep their ids, so completion by another
                 // worker still resolves the original request.
                 self.requeued += self.queue.requeue_worker(w);
                 self.writers.remove(&w);
@@ -282,12 +418,31 @@ impl FleetMeasurer {
         }
     }
 
-    /// Send queued jobs to idle workers (sorted ids for determinism).
+    /// Send queued jobs to idle workers (sorted ids for determinism);
+    /// each worker only receives jobs of its own class.
     fn pump_assign(&mut self) {
+        let untyped = self.spec.classes.is_empty();
         let mut worker_ids: Vec<usize> = self.writers.keys().copied().collect();
         worker_ids.sort_unstable();
         for w in worker_ids {
-            if let Some(job) = self.queue.assign(w) {
+            // Untyped legacy mode treats every connection as the single
+            // fleet class (jobs are tagged with it too) — exactly the
+            // PR-4 routing, so a mis-declared or not-yet-helloed worker
+            // can still serve the fleet instead of stranding a job
+            // pinned to it.  Typed mode routes strictly by Hello class;
+            // a class-less connection gets nothing.
+            let class = if untyped {
+                if self.device_name.is_empty() {
+                    continue; // no Hello yet anywhere: nothing to route
+                }
+                self.device_name.clone()
+            } else {
+                match self.class_of.get(&w) {
+                    Some(c) => c.clone(),
+                    None => continue,
+                }
+            };
+            if let Some(job) = self.queue.assign(w, &class) {
                 let msg = Msg::Job {
                     job_id: job.id,
                     family: job.family.clone(),
@@ -303,6 +458,13 @@ impl FleetMeasurer {
         }
     }
 
+    /// A scheduled class whose last live worker is gone, if any —
+    /// checked against the classes with unresolved jobs so `serve`
+    /// errors instead of spinning forever.
+    fn dead_class_with_work(&self) -> Option<String> {
+        self.queue.classes_outstanding().into_iter().find(|c| self.live_of(c).is_empty())
+    }
+
     /// Tell every remaining worker to exit.
     pub fn shutdown(&mut self) {
         for (_, s) in self.writers.iter_mut() {
@@ -313,31 +475,63 @@ impl FleetMeasurer {
 }
 
 impl Measurer for FleetMeasurer {
-    fn device(&self) -> &str {
-        &self.device_name
+    fn devices(&self) -> Vec<String> {
+        if self.spec.classes.is_empty() {
+            // Untyped legacy mode: the single class learned from the
+            // first Hello (formation guarantees it exists).
+            vec![self.device_name.clone()]
+        } else {
+            let mut cs: Vec<String> = self.spec.classes.iter().map(|(c, _)| c.clone()).collect();
+            cs.sort_unstable();
+            cs.dedup();
+            cs
+        }
+    }
+
+    fn occupancy(&self, device: &str) -> usize {
+        // Untyped mode: every worker is the single class regardless of
+        // its Hello string (PR-4 treated the fleet as one class).
+        if self.spec.classes.is_empty() {
+            self.writers.len()
+        } else {
+            self.live_of(device).len()
+        }
     }
 
     fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
-        // Deterministic fan-out: request i of the batch is pinned to the
-        // i-th live worker (sorted ids, round-robin).  With hello-gated
-        // formation the live set is the full fleet from the first batch
-        // on, so per-worker job counts are a pure function of the
-        // config in a healthy run.
-        let live: Vec<usize> = {
-            let mut v: Vec<usize> = self.writers.keys().copied().collect();
-            v.sort_unstable();
-            v
-        };
         debug_assert!(
             reqs.iter().all(|r| r.iterations == self.iterations),
             "request iterations diverge from the leader config"
         );
+        // Deterministic class-scoped fan-out: the i-th request *of a
+        // class* is pinned to that class's i-th live worker (sorted
+        // ids, round-robin).  With hello-gated formation the live set
+        // is the full fleet from the first batch on, so per-worker job
+        // counts are a pure function of the config in a healthy
+        // homogeneous run (mixed fleets aggregate per class instead:
+        // the id ↔ class mapping follows connection order).
+        let untyped = self.spec.classes.is_empty();
+        let mut live_by_class: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut seen_by_class: BTreeMap<String, usize> = BTreeMap::new();
         let ids: Vec<u64> = reqs
             .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let affinity = if live.is_empty() { None } else { Some(live[i % live.len()]) };
-                self.queue.submit_to(&r.family, r.channels.clone(), r.iterations, affinity)
+            .map(|r| {
+                let live = live_by_class.entry(r.device.clone()).or_insert_with(|| {
+                    if untyped {
+                        let mut v: Vec<usize> = self.writers.keys().copied().collect();
+                        v.sort_unstable();
+                        v
+                    } else {
+                        self.live_of(&r.device)
+                    }
+                });
+                let i = seen_by_class.entry(r.device.clone()).or_insert(0);
+                let affinity = if live.is_empty() { None } else { Some(live[*i % live.len()]) };
+                *i += 1;
+                // Untyped jobs are tagged with the single fleet class so
+                // class-scoped assignment stays a no-op filter there.
+                let class = if untyped { self.device_name.clone() } else { r.device.clone() };
+                self.queue.submit_to(&class, &r.family, r.channels.clone(), r.iterations, affinity)
             })
             .collect();
         loop {
@@ -350,6 +544,14 @@ impl Measurer for FleetMeasurer {
                     "all fleet workers disconnected with {} job(s) outstanding",
                     ids.iter().filter(|id| !self.done.contains_key(id)).count()
                 )));
+            }
+            if !untyped {
+                if let Some(c) = self.dead_class_with_work() {
+                    return Err(MeasureError(format!(
+                        "all workers of device class '{c}' disconnected with jobs outstanding; \
+                         a heterogeneous store cannot be completed without that class"
+                    )));
+                }
             }
             match self.rx.recv() {
                 Ok(ev) => self.on_event(ev),

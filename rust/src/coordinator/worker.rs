@@ -17,7 +17,7 @@ use crate::model::ModelGraph;
 use crate::simdevice::Device;
 use crate::thor::profiler;
 
-pub use crate::thor::profiler::{job_seed, VariantBuilder};
+pub use crate::thor::profiler::{class_seed, job_seed, VariantBuilder};
 
 /// A worker process bound to one simulated device.
 pub struct DeviceWorker {
@@ -40,6 +40,17 @@ impl DeviceWorker {
     pub fn with_per_job_seed(mut self, base_seed: u64) -> Self {
         self.per_job_seed = Some(base_seed);
         self
+    }
+
+    /// [`DeviceWorker::with_per_job_seed`] for heterogeneous fleets:
+    /// the per-job base is [`class_seed`]`(base_seed, <own class>)`, so
+    /// workers of different classes sharing one fleet base seed never
+    /// share a measurement seed — and each class's measurements match a
+    /// [`crate::thor::measure::LocalMeasurer::per_job_fleet`] run of
+    /// the same base bit-for-bit (`rust/tests/backend_equiv.rs`).
+    pub fn with_class_seed(self, base_seed: u64) -> Self {
+        let class = self.device.profile.name.to_string();
+        self.with_per_job_seed(class_seed(base_seed, &class))
     }
 
     /// Connect and serve until Shutdown.  Returns jobs completed.

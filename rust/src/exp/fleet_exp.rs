@@ -5,19 +5,28 @@
 //!   PR 4 on the [`crate::coordinator::FleetMeasurer`] backend: the
 //!   leader now runs the *same* batched acquisition pipeline a local
 //!   run does (batch = worker count, so every worker stays busy).
-//! * `fleetN` — the multi-device fleet: one leader per device type
-//!   (Xavier / TX2 / server), each with its own homogeneous worker
+//! * `fleetN` — the multi-device fleet, sharded: one leader per device
+//!   type (Xavier / TX2 / server), each with its own homogeneous worker
 //!   group, fitting **concurrently** over the experiment runner's
 //!   shared worker pool via subtask fan-out.  Reported with per-device
 //!   MAPE and per-worker job counts.
+//! * `fleetH` — the heterogeneous single-leader fleet: **one** leader,
+//!   6 mixed TCP workers (2 per class), class-scoped scheduling and
+//!   occupancy-adaptive (`Batch::Auto`) acquisition, one serve emitting
+//!   one multi-device store.  Reported with per-device MAPE and
+//!   per-class job counts.
 //!
-//! Workers run with deterministic per-job measurement seeds and the
-//! leader pins jobs to workers by batch-index affinity, so every report
-//! — per-worker job counts included — is a pure function of the
-//! experiment config, byte-stable across runs and `--threads` counts
-//! despite the real sockets and threads underneath.
+//! Workers run with deterministic per-job measurement seeds (per-class
+//! derived via [`crate::coordinator::class_seed`] in `fleetH`) and the
+//! leader pins jobs to same-class workers by per-class batch-index
+//! affinity, so every report is a pure function of the experiment
+//! config, byte-stable across runs and `--threads` counts despite the
+//! real sockets and threads underneath.  (`fleetH` reports per-*class*
+//! rather than per-*worker* job counts: with mixed workers racing to
+//! one accept loop, the worker-id ↔ class mapping follows connection
+//! order, but the per-class totals are scheduling-independent.)
 
-use crate::coordinator::{DeviceWorker, FleetRun, FleetServer};
+use crate::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec};
 use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::{measured_energy, ExpConfig};
@@ -25,16 +34,18 @@ use crate::model::zoo;
 use crate::model::ModelGraph;
 use crate::simdevice::{devices, Device};
 use crate::thor::estimator::estimate;
-use crate::thor::ThorConfig;
+use crate::thor::store::GpStore;
+use crate::thor::{Batch, ThorConfig};
 use crate::util::stats::mape;
 
 const N_WORKERS: usize = 3;
 
-/// Worker group size per device type in `fleetN`.
+/// Worker group size per device type in `fleetN` and `fleetH`.
 const FLEETN_WORKERS: usize = 2;
 
-/// Device types of the `fleetN` fleet — one leader each (GPs never
-/// transfer across devices, so heterogeneous fleets shard by type).
+/// Device types of the multi-device fleets (`fleetN`: one leader each;
+/// `fleetH`: one leader for all — GPs never transfer across devices,
+/// but with class-scoped scheduling they can share a leader).
 const FLEETN_DEVICES: [&str; 3] = ["xavier", "tx2", "server"];
 
 /// Unseen cnn5 variants the fleet-fitted stores are scored on.
@@ -56,7 +67,7 @@ fn run_loopback_fleet(
     cfg: &ExpConfig,
 ) -> FleetRun {
     let reference = fleet_reference();
-    let thor_cfg = ThorConfig { batch: n_workers, ..cfg.thor_cfg() };
+    let thor_cfg = ThorConfig { batch: Batch::Fixed(n_workers), ..cfg.thor_cfg() };
     let server = FleetServer::new(thor_cfg);
     let bound = server.bind("127.0.0.1:0").expect("bind loopback");
     let addr = bound.local_addr().to_string();
@@ -82,8 +93,44 @@ fn run_loopback_fleet(
     run
 }
 
-/// Score a fleet-fitted store on the held-out variants.
-fn fleet_mape(run: &FleetRun, dev_name: &str, cfg: &ExpConfig) -> f64 {
+/// Run the heterogeneous loopback fleet: **one** leader serving
+/// [`FLEETN_WORKERS`] workers of *each* device type through one
+/// [`FleetSpec::mixed`] serve, occupancy-adaptive acquisition
+/// (`Batch::Auto` — each class's rounds are sized by its own live
+/// worker count), per-class measurement seeds.
+fn run_loopback_hetero_fleet(base_seed: u64, cfg: &ExpConfig) -> FleetRun {
+    let reference = fleet_reference();
+    let thor_cfg = ThorConfig { batch: Batch::Auto, ..cfg.thor_cfg() };
+    let server = FleetServer::new(thor_cfg);
+    let bound = server.bind("127.0.0.1:0").expect("bind loopback");
+    let addr = bound.local_addr().to_string();
+    let spec =
+        FleetSpec::mixed(&FLEETN_DEVICES.map(|d| (d, FLEETN_WORKERS)));
+
+    let mut handles = Vec::new();
+    for (di, dev_name) in FLEETN_DEVICES.iter().enumerate() {
+        for w in 0..FLEETN_WORKERS {
+            let reference = reference.clone();
+            let addr = addr.clone();
+            let profile = devices::by_name(dev_name).expect("device");
+            let dev_seed = 100 + (di * FLEETN_WORKERS + w) as u64;
+            handles.push(std::thread::spawn(move || {
+                let mut worker = DeviceWorker::new(Device::new(profile, dev_seed), &reference)
+                    .with_class_seed(base_seed);
+                worker.run(&addr)
+            }));
+        }
+    }
+
+    let run = bound.serve_spec(&reference, spec).expect("heterogeneous fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    run
+}
+
+/// Score a fleet-fitted store on the held-out variants for one device.
+fn fleet_mape(store: &GpStore, dev_name: &str, cfg: &ExpConfig) -> f64 {
     let profile = devices::by_name(dev_name).expect("device");
     let mut dev = Device::new(profile, cfg.seed + 9);
     let iters = cfg.iterations();
@@ -92,7 +139,7 @@ fn fleet_mape(run: &FleetRun, dev_name: &str, cfg: &ExpConfig) -> f64 {
         let g = zoo::cnn5(&ch, 16, 10);
         actual.push(measured_energy(&mut dev, &g, iters, 1));
         est.push(
-            estimate(&run.store, dev_name, &g).expect("fleet store covers cnn5").energy_per_iter,
+            estimate(store, dev_name, &g).expect("fleet store covers cnn5").energy_per_iter,
         );
     }
     mape(&actual, &est)
@@ -113,7 +160,7 @@ impl Experiment for Fleet1 {
         let mut rep =
             ExpReport::new(self.id(), "decoupled fleet profiling (loopback)", cfg, &["xavier"]);
         let run = run_loopback_fleet("xavier", N_WORKERS, cfg.seed, cfg);
-        let m = fleet_mape(&run, "xavier", cfg);
+        let m = fleet_mape(&run.store, "xavier", cfg);
 
         rep.push_table(
             "fleet job distribution (batch-index affinity scheduling)",
@@ -172,7 +219,7 @@ impl Experiment for FleetN {
                         jobs_done: run.jobs_done,
                         requeued: run.requeued,
                         per_worker: run.per_worker.clone(),
-                        mape: fleet_mape(&run, dev_name, sub_cfg),
+                        mape: fleet_mape(&run.store, dev_name, sub_cfg),
                     }
                 })
             })
@@ -220,6 +267,69 @@ impl Experiment for FleetN {
             parts.len(),
             FLEETN_WORKERS,
             parts.iter().map(|p| p.families).sum::<usize>()
+        ));
+        rep
+    }
+}
+
+pub struct FleetH;
+
+impl Experiment for FleetH {
+    fn id(&self) -> &'static str {
+        "fleetH"
+    }
+
+    fn description(&self) -> &'static str {
+        "heterogeneous single-leader fleet: 6 mixed workers (xavier/tx2/server x2), one serve, one multi-device store"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(
+            self.id(),
+            "heterogeneous fleet profiling (one leader, class-scoped scheduling, auto batching)",
+            cfg,
+            &FLEETN_DEVICES,
+        );
+        let run = run_loopback_hetero_fleet(cfg.seed, cfg);
+        let jobs_of = |c: &str| {
+            run.per_class.iter().find(|(cc, _)| cc == c).map_or(0, |(_, n)| *n)
+        };
+        let mapes: Vec<(&str, f64)> = FLEETN_DEVICES
+            .iter()
+            .map(|&d| (d, fleet_mape(&run.store, d, cfg)))
+            .collect();
+
+        rep.push_table(
+            "per-device results of the single-leader mixed fleet (2 workers per class)",
+            &["device", "families", "jobs done", "MAPE %"],
+            mapes
+                .iter()
+                .map(|(d, m)| {
+                    vec![
+                        d.to_string(),
+                        format!("{}", run.store.len_for(d)),
+                        format!("{}", jobs_of(d)),
+                        format!("{m:.1}"),
+                    ]
+                })
+                .collect(),
+        );
+        for (d, m) in &mapes {
+            rep.metric(&format!("mape_{d}"), *m);
+            rep.metric(&format!("jobs_{d}"), jobs_of(d) as f64);
+            rep.metric(&format!("families_{d}"), run.store.len_for(d) as f64);
+        }
+        rep.metric("jobs_total", run.jobs_done as f64);
+        rep.metric("jobs_requeued", run.requeued as f64);
+        rep.metric("families_fitted", run.store.len() as f64);
+        rep.metric("devices", FLEETN_DEVICES.len() as f64);
+        rep.note(format!(
+            "one leader fitted {} family GPs for {} device classes from {} class-routed jobs \
+             across {} mixed loopback workers (batch=auto)",
+            run.store.len(),
+            FLEETN_DEVICES.len(),
+            run.jobs_done,
+            FLEETN_DEVICES.len() * FLEETN_WORKERS
         ));
         rep
     }

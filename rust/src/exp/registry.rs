@@ -131,6 +131,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(ablation::A16),
         Box::new(fleet_exp::Fleet1),
         Box::new(fleet_exp::FleetN),
+        Box::new(fleet_exp::FleetH),
     ]
 }
 
@@ -178,6 +179,7 @@ mod tests {
         assert_eq!(by_id("fig13").unwrap().id(), "fig13");
         assert_eq!(by_id("fleet1").unwrap().id(), "fleet1");
         assert_eq!(by_id("fleetN").unwrap().id(), "fleetN");
+        assert_eq!(by_id("fleetH").unwrap().id(), "fleetH");
     }
 
     #[test]

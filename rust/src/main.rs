@@ -12,11 +12,11 @@
 
 use anyhow::{anyhow, Result};
 
-use thor::coordinator::{DeviceWorker, FleetServer};
+use thor::coordinator::{DeviceWorker, FleetServer, FleetSpec};
 use thor::exp::{self, Experiment};
 use thor::model::sampler::Family;
 use thor::simdevice::{devices, Device};
-use thor::thor::{Thor, ThorConfig};
+use thor::thor::{Batch, Thor, ThorConfig};
 use thor::util::cli::{parse, Spec};
 
 fn specs() -> Vec<Spec> {
@@ -27,9 +27,10 @@ fn specs() -> Vec<Spec> {
         Spec { name: "seed", takes_value: true, help: "rng seed (default 2025)" },
         Spec { name: "quick", takes_value: false, help: "reduced sample counts" },
         Spec { name: "iterations", takes_value: true, help: "profiling iterations per measurement (default 500)" },
-        Spec { name: "batch", takes_value: true, help: "acquisition batch size per GP round (default 1; serve wants >= worker count)" },
+        Spec { name: "batch", takes_value: true, help: "acquisition batch per GP round: integer or 'auto' (live same-class worker count; profile default 1, serve default auto)" },
         Spec { name: "addr", takes_value: true, help: "leader address (default 127.0.0.1:7707)" },
-        Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1)" },
+        Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1; per class with --devices)" },
+        Spec { name: "devices", takes_value: true, help: "serve: comma-separated device classes of a heterogeneous fleet (e.g. xavier,tx2,server)" },
         Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
         Spec { name: "list", takes_value: false, help: "exp: list registered experiment ids" },
         Spec { name: "json", takes_value: true, help: "exp: write structured suite report to this path" },
@@ -79,7 +80,7 @@ fn main() -> Result<()> {
             let mut dev = Device::new(profile, seed);
             let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
             cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
-            cfg.batch = args.get_usize("batch", cfg.batch)?.max(1);
+            cfg.batch = Batch::parse(args.get_str("batch", "1")).map_err(|e| anyhow!(e))?;
             let mut thor = Thor::new(cfg);
             if store_path.exists() {
                 if let Ok(Some(s)) = thor::thor::store::GpStore::load(&store_path) {
@@ -147,15 +148,48 @@ fn main() -> Result<()> {
         "serve" => {
             let addr = args.get_str("addr", "127.0.0.1:7707");
             let fam = family_by_name(args.get_str("model", "cnn5"))?;
-            let workers = args.get_usize("workers", 1)?;
+            let workers = args.get_usize("workers", 1)?.max(1);
             let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
             cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
-            // default the acquisition batch to the fleet size so every
-            // worker has a job each GP round
-            cfg.batch = args.get_usize("batch", workers.max(1))?.max(1);
+            // default the acquisition batch to the live same-class
+            // worker count so every worker has a job each GP round
+            cfg.batch = Batch::parse(args.get_str("batch", "auto")).map_err(|e| anyhow!(e))?;
             let server = FleetServer::new(cfg);
-            println!("fitting leader on {addr} (model {} , expecting {workers} workers)", fam.name());
-            let store = server.run(addr, &exp::reference_model(fam), workers)?;
+            let reference = exp::reference_model(fam);
+            let store = match args.get("devices") {
+                Some(list) => {
+                    // Heterogeneous single-leader fleet: one serve, one
+                    // multi-device store, `workers` workers per class.
+                    let classes: Vec<(&str, usize)> = list
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|c| !c.is_empty())
+                        .map(|c| {
+                            devices::by_name(c)
+                                .map(|_| (c, workers))
+                                .ok_or_else(|| anyhow!("unknown device class '{c}'"))
+                        })
+                        .collect::<Result<_>>()?;
+                    if classes.is_empty() {
+                        return Err(anyhow!("--devices given but no class named"));
+                    }
+                    let spec = FleetSpec::mixed(&classes);
+                    println!(
+                        "fitting leader on {addr} (model {}, heterogeneous fleet: {} workers per class over {})",
+                        fam.name(),
+                        workers,
+                        classes.iter().map(|(c, _)| *c).collect::<Vec<_>>().join(",")
+                    );
+                    server.run_spec(addr, &reference, spec)?
+                }
+                None => {
+                    println!(
+                        "fitting leader on {addr} (model {} , expecting {workers} workers)",
+                        fam.name()
+                    );
+                    server.run(addr, &reference, workers)?
+                }
+            };
             store.save(&store_path)?;
             println!("saved {} family GPs to {store_path:?}", store.len());
         }

@@ -50,8 +50,8 @@ impl PjrtMeasurer {
 }
 
 impl Measurer for PjrtMeasurer {
-    fn device(&self) -> &str {
-        &self.device
+    fn devices(&self) -> Vec<String> {
+        vec![self.device.clone()]
     }
 
     fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {

@@ -15,13 +15,69 @@
 //! parallel backend (the fleet) runs `batch` measurement jobs
 //! concurrently.  Results fold back into the point set in proposal
 //! (declaration) order, so the fitted GP is a pure function of the
-//! config — and at `batch = 1` the whole loop is **bit-identical** to
-//! the sequential pre-refactor loop (asserted by a reference
-//! implementation in this module's tests).
+//! config — and at `batch = Fixed(1)` the whole loop is
+//! **bit-identical** to the sequential pre-refactor loop (asserted by a
+//! reference implementation in this module's tests).
+//!
+//! [`Batch::Auto`] sizes each round from the backend's live same-class
+//! worker count instead of a fixed k (occupancy-adaptive batching): a
+//! heterogeneous fleet keeps every class saturated without the caller
+//! pre-computing per-class batch sizes.  While occupancy holds constant
+//! at k, `Auto` is bit-identical to `Fixed(k)` (asserted below).
+//!
+//! # Resumable engine
+//!
+//! The loop is implemented as the [`FamilyFit`] state machine
+//! (`propose` → `absorb` → … → `finish`) so a multi-device driver
+//! ([`crate::thor::pipeline::Thor::profile`]) can interleave the
+//! acquisition rounds of *several* (device, family) fits into joint
+//! measurement batches — one class need not finish before another
+//! starts.  [`fit_family_with`] is the single-fit driver over the same
+//! machine and is bit-identical to the pre-machine loop.
 
 use crate::gp::acquisition::{top_k_variance, AcquireBatch, CandidateGrid};
 use crate::gp::{FitWorkspace, GpHyper, GpModel, KernelKind};
 use crate::thor::measure::MeasureError;
+
+/// Acquisition batch sizing policy (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Batch {
+    /// Exactly this many proposals per GP round (min 1).
+    Fixed(usize),
+    /// Size each round from the measuring backend's live same-class
+    /// worker count ([`crate::thor::measure::Measurer::occupancy`]).
+    /// Backends without a worker notion (scalar closures, the local
+    /// simulator) resolve to 1.
+    Auto,
+}
+
+impl Batch {
+    /// Proposals for one round at the given occupancy (both floored
+    /// at 1 — a live fleet never has occupancy 0 for a scheduled
+    /// class, and a zero batch would stall the loop).
+    pub fn size(self, occupancy: usize) -> usize {
+        match self {
+            Batch::Fixed(k) => k.max(1),
+            Batch::Auto => occupancy.max(1),
+        }
+    }
+
+    /// Parse a CLI value: `auto` or a positive integer.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(Batch::Auto);
+        }
+        s.parse::<usize>()
+            .map(|k| Batch::Fixed(k.max(1)))
+            .map_err(|_| format!("invalid batch '{s}' (expected a positive integer or 'auto')"))
+    }
+}
+
+impl Default for Batch {
+    fn default() -> Self {
+        Batch::Fixed(1)
+    }
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct FitConfig {
@@ -46,9 +102,9 @@ pub struct FitConfig {
     /// i.e. directly as the paper's 5 % relative criterion.
     pub log_targets: bool,
     /// Measurement requests proposed per GP round (top-k acquisition).
-    /// 1 reproduces the sequential loop bit-for-bit; fleet runs want
-    /// ≥ the worker count so every worker stays busy.
-    pub batch: usize,
+    /// `Fixed(1)` reproduces the sequential loop bit-for-bit; fleet runs
+    /// want `Fixed(worker count)` or `Auto` so every worker stays busy.
+    pub batch: Batch,
     pub seed: u64,
 }
 
@@ -62,7 +118,7 @@ impl Default for FitConfig {
             time_surrogate: false,
             random_sampling: false,
             log_targets: true,
-            batch: 1,
+            batch: Batch::Fixed(1),
             seed: 17,
         }
     }
@@ -104,67 +160,146 @@ pub fn fit_family(
 
 /// Fit one family over a *batch* measurement function:
 /// `measure_batch(normalized_points) -> one (energy J/iter,
-/// device_seconds) per point, in request order`.  This is the engine the
-/// [`crate::thor::measure::Measurer`]-driven pipeline runs for every
-/// backend; it errors only when the backend does.
+/// device_seconds) per point, in request order`.  Single-fit driver
+/// over the [`FamilyFit`] state machine — the engine single-backend
+/// callers run; it errors only when the backend does.  Occupancy is
+/// pinned at 1 (a closure has no worker notion), so `Batch::Auto`
+/// behaves like `Fixed(1)` here; multi-device drivers feed live
+/// occupancy per round instead.
 pub fn fit_family_with<F>(mut measure_batch: F, dim: usize, cfg: &FitConfig) -> Result<FitOutcome, MeasureError>
 where
     F: FnMut(&[Vec<f64>]) -> Result<Vec<(f64, f64)>, MeasureError>,
 {
-    let t0 = std::time::Instant::now();
-    let grid = match dim {
-        1 => CandidateGrid::dim1(0.0, 1.0, cfg.grid_n),
-        2 => CandidateGrid::dim2(0.0, 1.0, cfg.grid_n),
-        d => panic!("unsupported family dim {d}"),
-    };
-
-    // Starting points: the bounds (paper: "we use the upper and lower
-    // bounds as the starting points").
-    let mut starts: Vec<Vec<f64>> = match dim {
-        1 => vec![vec![0.0], vec![1.0]],
-        _ => vec![vec![0.0, 0.0], vec![0.0, 1.0], vec![1.0, 0.0], vec![1.0, 1.0]],
-    };
-    // plus one center point so the first GP fit has curvature signal
-    starts.push(vec![0.5; dim]);
-
-    let mut pts: Vec<(Vec<f64>, f64, f64)> = Vec::new();
-    let mut device_seconds = 0.0;
-    // The starts are one natural batch (they need no GP round between
-    // them); results fold back in declaration order.
-    let start_results = measure_batch(&starts)?;
-    assert_eq!(start_results.len(), starts.len(), "backend returned wrong batch size");
-    for (p, (e, dt)) in starts.into_iter().zip(start_results) {
-        device_seconds += dt;
-        pts.push((p, e, dt));
+    let mut fit = FamilyFit::new(dim, cfg);
+    while let Some(ps) = fit.propose(1) {
+        let results = measure_batch(&ps)?;
+        assert_eq!(results.len(), ps.len(), "backend returned wrong batch size");
+        fit.absorb(&results);
     }
+    Ok(fit.finish())
+}
 
-    let mut rng = crate::util::rng::Pcg64::new(cfg.seed);
-    let mut converged = false;
+/// Resumable acquisition state machine for one (device, family) fit.
+///
+/// Protocol: alternate [`FamilyFit::propose`] (get the next batch of
+/// normalized points to measure — the starts first, then one GP round
+/// per call) with [`FamilyFit::absorb`] (fold the measurements back, in
+/// proposal order).  When `propose` returns `None` the fit has hit an
+/// end condition; [`FamilyFit::finish`] then fits the final energy GP.
+///
+/// The machine performs *exactly* the operation sequence of the
+/// pre-refactor closed loop — same RNG draws, same workspace reuse,
+/// same warm-start keys — so driving it with `occupancy = 1` and a
+/// `Fixed` batch is bit-identical to the code it replaced (asserted
+/// against a verbatim reference copy in this module's tests).  Several
+/// machines for *different* devices can be advanced in lock-step and
+/// their proposals measured in one joint batch: each machine's stream
+/// depends only on its own absorbed results, so interleaving classes
+/// never perturbs a class's fit
+/// ([`crate::thor::pipeline::Thor::profile`] relies on this for
+/// heterogeneous fleets).
+pub struct FamilyFit {
+    cfg: FitConfig,
+    grid: CandidateGrid,
+    pts: Vec<(Vec<f64>, f64, f64)>,
+    device_seconds: f64,
+    rng: crate::util::rng::Pcg64,
     // §Perf: one workspace carries the pairwise-distance cache and the
-    // gram/Cholesky buffers across every refit of this loop; after the
+    // gram/Cholesky buffers across every refit of this fit; after the
     // first full multi-start fit, each round does a warm single-start
     // refit seeded from the previous round's hypers.
-    let mut ws = FitWorkspace::new();
-    let mut prev_hyper: Option<GpHyper> = None;
-    loop {
-        if pts.len() >= cfg.max_points {
-            break;
+    ws: FitWorkspace,
+    prev_hyper: Option<GpHyper>,
+    converged: bool,
+    /// Proposals handed out by the last `propose`, awaiting `absorb`.
+    pending: Option<Vec<Vec<f64>>>,
+    started: bool,
+    ended: bool,
+    t0: std::time::Instant,
+}
+
+impl FamilyFit {
+    /// `dim` is 1 or 2.
+    pub fn new(dim: usize, cfg: &FitConfig) -> Self {
+        let grid = match dim {
+            1 => CandidateGrid::dim1(0.0, 1.0, cfg.grid_n),
+            2 => CandidateGrid::dim2(0.0, 1.0, cfg.grid_n),
+            d => panic!("unsupported family dim {d}"),
+        };
+        Self {
+            cfg: *cfg,
+            grid,
+            pts: Vec::new(),
+            device_seconds: 0.0,
+            rng: crate::util::rng::Pcg64::new(cfg.seed),
+            ws: FitWorkspace::new(),
+            prev_hyper: None,
+            converged: false,
+            pending: None,
+            started: false,
+            ended: false,
+            t0: std::time::Instant::now(),
         }
-        let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
-        let tf = |v: f64| if cfg.log_targets { v.max(1e-15).ln() } else { v };
-        let es: Vec<f64> = pts.iter().map(|p| tf(p.1)).collect();
-        let ts: Vec<f64> = pts.iter().map(|p| tf(p.2)).collect();
+    }
+
+    fn dim(&self) -> usize {
+        self.grid.points.first().map_or(1, |p| p.len())
+    }
+
+    fn tf(&self, v: f64) -> f64 {
+        if self.cfg.log_targets {
+            v.max(1e-15).ln()
+        } else {
+            v
+        }
+    }
+
+    /// Normalized points to measure next, or `None` once an end
+    /// condition fired (budget, convergence, degenerate GP).  The first
+    /// call returns the starting points (the channel bounds + center —
+    /// one natural batch needing no GP round between them); later calls
+    /// run one GP round and propose up to `batch.size(occupancy)`
+    /// top-variance candidates, clamped to the remaining point budget.
+    /// Must not be called with an un-`absorb`ed batch outstanding.
+    pub fn propose(&mut self, occupancy: usize) -> Option<Vec<Vec<f64>>> {
+        assert!(self.pending.is_none(), "propose() with measurements outstanding");
+        if self.ended {
+            return None;
+        }
+        if !self.started {
+            self.started = true;
+            // Starting points: the bounds (paper: "we use the upper and
+            // lower bounds as the starting points") plus one center
+            // point so the first GP fit has curvature signal.
+            let dim = self.dim();
+            let mut starts: Vec<Vec<f64>> = match dim {
+                1 => vec![vec![0.0], vec![1.0]],
+                _ => vec![vec![0.0, 0.0], vec![0.0, 1.0], vec![1.0, 0.0], vec![1.0, 1.0]],
+            };
+            starts.push(vec![0.5; dim]);
+            self.pending = Some(starts.clone());
+            return Some(starts);
+        }
+        let cfg = self.cfg;
+        if self.pts.len() >= cfg.max_points {
+            self.ended = true;
+            return None;
+        }
+        let xs: Vec<Vec<f64>> = self.pts.iter().map(|p| p.0.clone()).collect();
+        let es: Vec<f64> = self.pts.iter().map(|p| self.tf(p.1)).collect();
+        let ts: Vec<f64> = self.pts.iter().map(|p| self.tf(p.2)).collect();
 
         // Acquisition target: energy GP, or the time GP surrogate.
         let acq_ys = if cfg.time_surrogate { &ts } else { &es };
-        let fitted = match prev_hyper {
-            Some(h) => GpModel::fit_warm(&mut ws, cfg.kind, xs.clone(), acq_ys, h),
-            None => GpModel::fit_with(&mut ws, cfg.kind, xs.clone(), acq_ys),
+        let fitted = match self.prev_hyper {
+            Some(h) => GpModel::fit_warm(&mut self.ws, cfg.kind, xs.clone(), acq_ys, h),
+            None => GpModel::fit_with(&mut self.ws, cfg.kind, xs.clone(), acq_ys),
         };
         let Some(acq_gp) = fitted else {
-            break;
+            self.ended = true;
+            return None;
         };
-        prev_hyper = Some(acq_gp.hyper);
+        self.prev_hyper = Some(acq_gp.hyper);
         // With log targets, a posterior std of s is a relative error of
         // ~s, so the 5 % criterion compares the std against 1.0.
         let y_abs = if cfg.log_targets {
@@ -173,13 +308,14 @@ where
             crate::util::stats::mean(&acq_ys.iter().map(|y| y.abs()).collect::<Vec<_>>())
         };
 
-        // Up to `batch` proposals this round, clamped to the remaining
-        // point budget.
-        let k = cfg.batch.max(1).min(cfg.max_points - pts.len());
+        // Up to one batch of proposals this round, clamped to the
+        // remaining point budget.
+        let k = cfg.batch.size(occupancy).min(cfg.max_points - self.pts.len());
         let next: Vec<Vec<f64>> = if cfg.random_sampling {
             // A15 ablation arm: uniform-random unprofiled grid points
             // (indices only; clone just the drawn points).
-            let mut free: Vec<usize> = grid
+            let mut free: Vec<usize> = self
+                .grid
                 .points
                 .iter()
                 .enumerate()
@@ -187,54 +323,70 @@ where
                 .map(|(i, _)| i)
                 .collect();
             if free.is_empty() {
-                converged = true;
-                break;
+                self.converged = true;
+                self.ended = true;
+                return None;
             }
             let draws = k.min(free.len());
             (0..draws)
                 .map(|_| {
-                    let i = free.swap_remove(rng.range_usize(0, free.len() - 1));
-                    grid.points[i].clone()
+                    let i = free.swap_remove(self.rng.range_usize(0, free.len() - 1));
+                    self.grid.points[i].clone()
                 })
                 .collect()
         } else {
-            match top_k_variance(&acq_gp, &grid, cfg.threshold_frac, y_abs, k) {
+            match top_k_variance(&acq_gp, &self.grid, cfg.threshold_frac, y_abs, k) {
                 AcquireBatch::Next(ps) => ps.into_iter().map(|(p, _)| p).collect(),
                 AcquireBatch::Converged(_) => {
-                    converged = true;
-                    break;
+                    self.converged = true;
+                    self.ended = true;
+                    return None;
                 }
             }
         };
         if next.is_empty() {
-            break;
+            self.ended = true;
+            return None;
         }
-        let results = measure_batch(&next)?;
-        assert_eq!(results.len(), next.len(), "backend returned wrong batch size");
-        for (p, (e, dt)) in next.into_iter().zip(results) {
-            device_seconds += dt;
-            pts.push((p, e, dt));
+        self.pending = Some(next.clone());
+        Some(next)
+    }
+
+    /// Fold one batch of measurements — `results[i]` answers point `i`
+    /// of the last [`FamilyFit::propose`] — in proposal order.
+    pub fn absorb(&mut self, results: &[(f64, f64)]) {
+        let ps = self.pending.take().expect("absorb() without a proposed batch");
+        assert_eq!(results.len(), ps.len(), "backend returned wrong batch size");
+        for (p, &(e, dt)) in ps.into_iter().zip(results) {
+            self.device_seconds += dt;
+            self.pts.push((p, e, dt));
         }
     }
 
-    let xs: Vec<Vec<f64>> = pts.iter().map(|p| p.0.clone()).collect();
-    let tf = |v: f64| if cfg.log_targets { v.max(1e-15).ln() } else { v };
-    let es: Vec<f64> = pts.iter().map(|p| tf(p.1)).collect();
-    // Final energy GP: warm from the loop's last energy-GP hypers.  In
-    // surrogate mode the loop fitted the *time* GP, so the energy
-    // surface gets a full multi-start search instead.
-    let gp = match prev_hyper {
-        Some(h) if !cfg.time_surrogate => GpModel::fit_warm(&mut ws, cfg.kind, xs, &es, h),
-        _ => GpModel::fit_with(&mut ws, cfg.kind, xs, &es),
+    /// Fit the final energy GP over everything absorbed.
+    pub fn finish(mut self) -> FitOutcome {
+        assert!(self.pending.is_none(), "finish() with measurements outstanding");
+        let cfg = self.cfg;
+        let xs: Vec<Vec<f64>> = self.pts.iter().map(|p| p.0.clone()).collect();
+        let es: Vec<f64> = self.pts.iter().map(|p| self.tf(p.1)).collect();
+        // Final energy GP: warm from the loop's last energy-GP hypers.
+        // In surrogate mode the loop fitted the *time* GP, so the energy
+        // surface gets a full multi-start search instead.
+        let gp = match self.prev_hyper {
+            Some(h) if !cfg.time_surrogate => {
+                GpModel::fit_warm(&mut self.ws, cfg.kind, xs, &es, h)
+            }
+            _ => GpModel::fit_with(&mut self.ws, cfg.kind, xs, &es),
+        }
+        .expect("final GP fit failed");
+        FitOutcome {
+            gp,
+            points: self.pts,
+            device_seconds: self.device_seconds,
+            fit_seconds: self.t0.elapsed().as_secs_f64(),
+            converged: self.converged,
+        }
     }
-    .expect("final GP fit failed");
-    Ok(FitOutcome {
-        gp,
-        points: pts,
-        device_seconds,
-        fit_seconds: t0.elapsed().as_secs_f64(),
-        converged,
-    })
 }
 
 #[cfg(test)]
@@ -465,7 +617,7 @@ mod tests {
             (2, FitConfig { max_points: 14, grid_n: 7, ..Default::default() }),
         ];
         for (dim, cfg) in configs {
-            assert_eq!(cfg.batch, 1);
+            assert_eq!(cfg.batch, Batch::Fixed(1));
             let batched = fit_family(|p| (surface(p), surface(p) / 3.0), dim, &cfg);
             let reference = scalar_reference_fit(|p| (surface(p), surface(p) / 3.0), dim, &cfg);
             assert_outcomes_bit_equal(&batched, &reference, dim);
@@ -482,7 +634,7 @@ mod tests {
                 Ok(ps.iter().map(|p| (surface_1d(p[0]), 0.5)).collect())
             },
             1,
-            &FitConfig { max_points: 11, threshold_frac: 0.0, batch: 3, grid_n: 33, ..Default::default() },
+            &FitConfig { max_points: 11, threshold_frac: 0.0, batch: Batch::Fixed(3), grid_n: 33, ..Default::default() },
         )
         .unwrap();
         assert_eq!(out.points.len(), 11);
@@ -497,11 +649,71 @@ mod tests {
             fit_family(
                 |p| (surface_1d(p[0]), 0.5),
                 1,
-                &FitConfig { max_points: 12, grid_n: 17, batch: 4, ..Default::default() },
+                &FitConfig { max_points: 12, grid_n: 17, batch: Batch::Fixed(4), ..Default::default() },
             )
         };
         let (a, b) = (run(), run());
         assert_outcomes_bit_equal(&a, &b, 1);
+    }
+
+    /// Drive a [`FamilyFit`] to completion with a constant occupancy
+    /// (what the multi-device pipeline does for a healthy class).
+    fn drive_machine(
+        cfg: &FitConfig,
+        occupancy: usize,
+        mut measure: impl FnMut(&[f64]) -> (f64, f64),
+    ) -> FitOutcome {
+        let mut fit = FamilyFit::new(1, cfg);
+        while let Some(ps) = fit.propose(occupancy) {
+            let results: Vec<(f64, f64)> = ps.iter().map(|p| measure(p)).collect();
+            fit.absorb(&results);
+        }
+        fit.finish()
+    }
+
+    #[test]
+    fn auto_batch_is_bit_identical_to_fixed_k_at_constant_occupancy() {
+        // The occupancy-adaptive contract: while k same-class workers
+        // stay alive the whole run, `Auto` must equal `Fixed(k)`
+        // bit-for-bit — every proposal, measurement and the final GP.
+        for k in [1usize, 2, 3] {
+            let base = FitConfig { max_points: 13, threshold_frac: 0.0, grid_n: 33, ..Default::default() };
+            let auto = drive_machine(
+                &FitConfig { batch: Batch::Auto, ..base },
+                k,
+                |p| (surface_1d(p[0]), 0.5),
+            );
+            // Fixed(k) ignores occupancy by definition; feed a wrong one
+            // to prove it.
+            let fixed = drive_machine(
+                &FitConfig { batch: Batch::Fixed(k), ..base },
+                7,
+                |p| (surface_1d(p[0]), 0.5),
+            );
+            assert_outcomes_bit_equal(&auto, &fixed, 1);
+        }
+    }
+
+    #[test]
+    fn machine_driver_matches_closure_driver() {
+        // fit_family_with is a thin driver over FamilyFit; the two entry
+        // points must agree bit-for-bit.
+        let cfg = FitConfig { max_points: 12, grid_n: 17, batch: Batch::Fixed(2), ..Default::default() };
+        let a = fit_family(|p| (surface_1d(p[0]), 0.5), 1, &cfg);
+        let b = drive_machine(&cfg, 1, |p| (surface_1d(p[0]), 0.5));
+        assert_outcomes_bit_equal(&a, &b, 1);
+    }
+
+    #[test]
+    fn batch_parse_accepts_auto_and_integers() {
+        assert_eq!(Batch::parse("auto").unwrap(), Batch::Auto);
+        assert_eq!(Batch::parse("AUTO").unwrap(), Batch::Auto);
+        assert_eq!(Batch::parse("3").unwrap(), Batch::Fixed(3));
+        assert_eq!(Batch::parse("0").unwrap(), Batch::Fixed(1), "batch floors at 1");
+        assert!(Batch::parse("three").is_err());
+        assert_eq!(Batch::Auto.size(4), 4);
+        assert_eq!(Batch::Auto.size(0), 1, "occupancy floors at 1");
+        assert_eq!(Batch::Fixed(2).size(9), 2);
     }
 
     #[test]

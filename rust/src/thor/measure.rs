@@ -7,17 +7,33 @@
 //! active-learning loop itself — not just a replayed job list — runs
 //! over whichever backend is plugged in.
 //!
+//! # Device classes
+//!
+//! A backend serves one or more *device classes* ([`Measurer::devices`])
+//! and every [`MeasureRequest`] names the class it must run on — one
+//! heterogeneous backend (a mixed xavier/tx2/server fleet behind a
+//! single leader, or a [`LocalMeasurer`] holding a map of per-class
+//! seeded devices) profiles all of its classes in one pipeline run.
+//! [`Measurer::occupancy`] reports the live worker count of a class so
+//! the acquisition loop can size its batches adaptively
+//! ([`crate::thor::fit::Batch::Auto`]).
+//!
 //! # Determinism contract
 //!
 //! A deterministic backend must make each [`Measurement`] a **pure
 //! function of its request alone** (per-request seeding, see
 //! [`crate::thor::profiler::job_seed`]) — independent of batch
 //! composition, submission order, concurrency, worker count, and which
-//! backend ran it.  Under that contract the profiled
+//! backend ran it.  In multi-class runs the per-job seed base of class
+//! `c` is [`crate::thor::profiler::class_seed`]`(base, c)`, so requests
+//! of different classes never share a seed while single-class runs keep
+//! their legacy bit patterns.  Under that contract the profiled
 //! [`crate::thor::store::GpStore`] is a pure function of (reference,
 //! config, base seed): a [`LocalMeasurer::per_job`] run and a
 //! [`crate::coordinator::FleetMeasurer`] run at *any* worker count are
-//! byte-identical (asserted by `rust/tests/backend_equiv.rs`).
+//! byte-identical, and a heterogeneous fleet store is the byte-exact
+//! merge of per-class local stores (both asserted by
+//! `rust/tests/backend_equiv.rs`).
 //!
 //! [`LocalMeasurer::sequential`] deliberately breaks the contract the
 //! way a physical device does: one stateful device carries DVFS /
@@ -26,15 +42,22 @@
 //! and is the bit-compatible continuation of the pre-refactor
 //! `&mut Device` pipeline.
 
+use std::collections::BTreeMap;
+
 use crate::model::ModelGraph;
 use crate::simdevice::{Device, DeviceProfile};
-use crate::thor::profiler::{self, job_seed, VariantBuilder};
+use crate::thor::profiler::{self, class_seed, job_seed, VariantBuilder};
 
-/// One variant-network measurement request: the family id plus the raw
-/// channel widths identify the variant (the backend rebuilds the graph
-/// from the shared reference architecture, so only channels travel).
+/// One variant-network measurement request: the device class it must
+/// run on, plus the family id and the raw channel widths identifying
+/// the variant (the backend rebuilds the graph from the shared
+/// reference architecture, so only channels travel).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct MeasureRequest {
+    /// Device class this measurement must run on (a
+    /// [`Measurer::devices`] entry — also the
+    /// [`crate::thor::store::GpStore`] key).
+    pub device: String,
     pub family: String,
     pub channels: Vec<usize>,
     /// Training iterations for this measurement (paper: 500).
@@ -51,7 +74,8 @@ pub struct Measurement {
 }
 
 /// A measurement backend failed in a way the acquisition loop cannot
-/// recover from (e.g. every fleet worker disconnected mid-batch).
+/// recover from (e.g. every fleet worker of a scheduled device class
+/// disconnected mid-batch).
 #[derive(Debug, thiserror::Error)]
 #[error("measurement backend failed: {0}")]
 pub struct MeasureError(pub String);
@@ -60,27 +84,40 @@ pub struct MeasureError(pub String);
 /// `&mut dyn Measurer` so local, fleet and PJRT runs share one code
 /// path.
 pub trait Measurer {
-    /// Device name the measurements come from — the
-    /// [`crate::thor::store::GpStore`] key.
-    fn device(&self) -> &str;
+    /// Device classes this backend measures on, sorted and deduplicated
+    /// — the pipeline profiles every class, and each
+    /// [`MeasureRequest::device`] must name one of them.  These are the
+    /// [`crate::thor::store::GpStore`] keys.
+    fn devices(&self) -> Vec<String>;
 
-    /// Measure a batch; `result[i]` answers `reqs[i]`.  Backends may run
-    /// the requests concurrently (the fleet does), but must return them
-    /// in request order.  See the module docs for the determinism
-    /// contract.
+    /// Measure a batch; `result[i]` answers `reqs[i]`.  A batch may mix
+    /// device classes; backends may run the requests concurrently (the
+    /// fleet does), but must return them in request order.  See the
+    /// module docs for the determinism contract.
     fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError>;
+
+    /// Live measurement parallelism for one device class (fleet: live
+    /// same-class worker count).  Sizes `Batch::Auto` acquisition
+    /// rounds; backends without a worker notion report 1.
+    fn occupancy(&self, device: &str) -> usize {
+        let _ = device;
+        1
+    }
 }
 
 enum LocalMode<'d> {
     /// One stateful device shared across requests, measured in request
     /// order — bit-compatible with the pre-refactor `&mut Device`
-    /// pipeline at batch size 1.
+    /// pipeline at batch size 1.  Single-class by nature.
     Sequential(&'d mut Device),
     /// Fresh per-request-seeded device per request ([`job_seed`]) — the
     /// mode whose stores are byte-equal to a fleet run at any worker
     /// count (the fleet worker's `with_per_job_seed` path runs this
-    /// exact code).
-    PerJob { profile: DeviceProfile, base_seed: u64 },
+    /// exact code).  Class → (profile, per-job seed base): single-class
+    /// via [`LocalMeasurer::per_job`] (base used verbatim, the legacy
+    /// bit pattern) or multi-class via [`LocalMeasurer::per_job_fleet`]
+    /// (per-class bases derived with [`class_seed`]).
+    PerJob { seeds: BTreeMap<String, (DeviceProfile, u64)> },
 }
 
 /// In-process backend over the device simulator.
@@ -101,11 +138,40 @@ impl<'d> LocalMeasurer<'d> {
 
 impl LocalMeasurer<'static> {
     /// Fresh per-request-seeded device per request: fleet-equivalent
-    /// measurements (see the module docs).
+    /// measurements (see the module docs).  Single class; `base_seed`
+    /// feeds [`job_seed`] directly, bit-compatible with PR-4 stores.
     pub fn per_job(profile: DeviceProfile, base_seed: u64, reference: &ModelGraph) -> Self {
         let name = profile.name.to_string();
+        let mut seeds = BTreeMap::new();
+        seeds.insert(name.clone(), (profile, base_seed));
         Self {
-            mode: LocalMode::PerJob { profile, base_seed },
+            mode: LocalMode::PerJob { seeds },
+            builder: VariantBuilder::from_reference(reference),
+            name,
+        }
+    }
+
+    /// Multi-class per-job backend: one seeded simulator class per
+    /// profile, the in-process twin of a heterogeneous single-leader
+    /// fleet.  Class `c` measures with per-job base
+    /// [`class_seed`]`(base_seed, c)` — exactly what a fleet worker of
+    /// class `c` started via
+    /// [`crate::coordinator::DeviceWorker::with_class_seed`] uses, so
+    /// the two backends produce byte-identical stores.
+    pub fn per_job_fleet(
+        profiles: Vec<DeviceProfile>,
+        base_seed: u64,
+        reference: &ModelGraph,
+    ) -> Self {
+        let mut seeds = BTreeMap::new();
+        for p in profiles {
+            let name = p.name.to_string();
+            let seed = class_seed(base_seed, &name);
+            seeds.insert(name, (p, seed));
+        }
+        let name = seeds.keys().next().cloned().unwrap_or_default();
+        Self {
+            mode: LocalMode::PerJob { seeds },
             builder: VariantBuilder::from_reference(reference),
             name,
         }
@@ -113,8 +179,11 @@ impl LocalMeasurer<'static> {
 }
 
 impl Measurer for LocalMeasurer<'_> {
-    fn device(&self) -> &str {
-        &self.name
+    fn devices(&self) -> Vec<String> {
+        match &self.mode {
+            LocalMode::Sequential(_) => vec![self.name.clone()],
+            LocalMode::PerJob { seeds } => seeds.keys().cloned().collect(),
+        }
     }
 
     fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
@@ -125,9 +194,25 @@ impl Measurer for LocalMeasurer<'_> {
                 .build(&r.family, &r.channels)
                 .map_err(|e| MeasureError(e.to_string()))?;
             let (e, dt) = match &mut self.mode {
-                LocalMode::Sequential(dev) => profiler::measure(dev, &g, r.iterations),
-                LocalMode::PerJob { profile, base_seed } => {
-                    let seed = job_seed(*base_seed, &r.family, &r.channels, r.iterations);
+                LocalMode::Sequential(dev) => {
+                    if r.device != self.name {
+                        return Err(MeasureError(format!(
+                            "request targets device class '{}' but this sequential backend \
+                             wraps '{}'",
+                            r.device, self.name
+                        )));
+                    }
+                    profiler::measure(dev, &g, r.iterations)
+                }
+                LocalMode::PerJob { seeds } => {
+                    let (profile, base) = seeds.get(&r.device).ok_or_else(|| {
+                        MeasureError(format!(
+                            "request targets unknown device class '{}' (serving: {})",
+                            r.device,
+                            seeds.keys().cloned().collect::<Vec<_>>().join(", ")
+                        ))
+                    })?;
+                    let seed = job_seed(*base, &r.family, &r.channels, r.iterations);
                     let mut dev = Device::new(profile.clone(), seed);
                     profiler::measure(&mut dev, &g, r.iterations)
                 }
@@ -152,15 +237,19 @@ mod tests {
         crate::thor::parse::parse(&reference()).output_groups().next().unwrap().key.id()
     }
 
+    fn req(device: &str, family: &str, channels: Vec<usize>, iterations: usize) -> MeasureRequest {
+        MeasureRequest { device: device.into(), family: family.into(), channels, iterations }
+    }
+
     #[test]
     fn per_job_is_pure_per_request() {
         // Same request in different batch shapes → bit-identical result.
         let fam = out_family();
-        let req = MeasureRequest { family: fam.clone(), channels: vec![32], iterations: 40 };
-        let other = MeasureRequest { family: fam, channels: vec![8], iterations: 40 };
+        let r = req("xavier", &fam, vec![32], 40);
+        let other = req("xavier", &fam, vec![8], 40);
         let mut m = LocalMeasurer::per_job(devices::xavier(), 42, &reference());
-        let alone = m.measure_batch(std::slice::from_ref(&req)).unwrap()[0];
-        let batched = m.measure_batch(&[other, req]).unwrap()[1];
+        let alone = m.measure_batch(std::slice::from_ref(&r)).unwrap()[0];
+        let batched = m.measure_batch(&[other, r]).unwrap()[1];
         assert_eq!(alone.energy_per_iter.to_bits(), batched.energy_per_iter.to_bits());
         assert_eq!(alone.device_seconds.to_bits(), batched.device_seconds.to_bits());
     }
@@ -170,9 +259,9 @@ mod tests {
         // The measurer must run the exact per-job path the fleet worker
         // runs: job_seed → fresh device → profiler::measure.
         let fam = out_family();
-        let req = MeasureRequest { family: fam.clone(), channels: vec![16], iterations: 30 };
+        let r = req("tx2", &fam, vec![16], 30);
         let mut m = LocalMeasurer::per_job(devices::tx2(), 7, &reference());
-        let got = m.measure_batch(std::slice::from_ref(&req)).unwrap()[0];
+        let got = m.measure_batch(std::slice::from_ref(&r)).unwrap()[0];
         let builder = VariantBuilder::from_reference(&reference());
         let g = builder.build(&fam, &[16]).unwrap();
         let seed = job_seed(7, &fam, &[16], 30);
@@ -187,10 +276,8 @@ mod tests {
         // Sequential mode must consume the wrapped device's RNG stream
         // exactly like direct profiler::measure calls in the same order.
         let fam = out_family();
-        let reqs: Vec<MeasureRequest> = [8usize, 32, 64]
-            .iter()
-            .map(|&c| MeasureRequest { family: fam.clone(), channels: vec![c], iterations: 25 })
-            .collect();
+        let reqs: Vec<MeasureRequest> =
+            [8usize, 32, 64].iter().map(|&c| req("server", &fam, vec![c], 25)).collect();
         let mut dev_a = Device::new(devices::server(), 5);
         let mut m = LocalMeasurer::sequential(&mut dev_a, &reference());
         let got = m.measure_batch(&reqs).unwrap();
@@ -206,15 +293,57 @@ mod tests {
     }
 
     #[test]
-    fn unknown_family_errors() {
-        let mut m = LocalMeasurer::per_job(devices::xavier(), 1, &reference());
-        let req = MeasureRequest { family: "nope".into(), channels: vec![1], iterations: 10 };
-        assert!(m.measure_batch(&[req]).is_err());
+    fn per_job_fleet_routes_by_class_with_class_derived_seeds() {
+        // A mixed batch routes each request to its class; each class's
+        // result is bit-identical to a single-class per_job measurer
+        // seeded with class_seed(base, class) — the merge contract the
+        // heterogeneous backend-equivalence test scales up.
+        let fam = out_family();
+        let mut m = LocalMeasurer::per_job_fleet(
+            vec![devices::xavier(), devices::tx2()],
+            42,
+            &reference(),
+        );
+        assert_eq!(m.devices(), vec!["tx2".to_string(), "xavier".to_string()]);
+        let rx = req("xavier", &fam, vec![16], 30);
+        let rt = req("tx2", &fam, vec![16], 30);
+        let got = m.measure_batch(&[rx.clone(), rt.clone()]).unwrap();
+        assert_ne!(
+            got[0].energy_per_iter.to_bits(),
+            got[1].energy_per_iter.to_bits(),
+            "classes measured identically"
+        );
+        for (r, g) in [(rx, got[0]), (rt, got[1])] {
+            let profile = devices::by_name(&r.device).unwrap();
+            let mut solo =
+                LocalMeasurer::per_job(profile, class_seed(42, &r.device), &reference());
+            let alone = solo.measure_batch(std::slice::from_ref(&r)).unwrap()[0];
+            assert_eq!(g.energy_per_iter.to_bits(), alone.energy_per_iter.to_bits());
+            assert_eq!(g.device_seconds.to_bits(), alone.device_seconds.to_bits());
+        }
     }
 
     #[test]
-    fn device_name_comes_from_profile() {
+    fn unknown_family_or_class_errors() {
+        let mut m = LocalMeasurer::per_job(devices::xavier(), 1, &reference());
+        assert!(m.measure_batch(&[req("xavier", "nope", vec![1], 10)]).is_err());
+        let fam = out_family();
+        assert!(
+            m.measure_batch(&[req("tx2", &fam, vec![1], 10)]).is_err(),
+            "request for an unserved class must error"
+        );
+        let mut dev = Device::new(devices::server(), 1);
+        let mut seq = LocalMeasurer::sequential(&mut dev, &reference());
+        assert!(
+            seq.measure_batch(&[req("xavier", &fam, vec![1], 10)]).is_err(),
+            "sequential backend must reject a foreign class"
+        );
+    }
+
+    #[test]
+    fn device_classes_come_from_profiles() {
         let m = LocalMeasurer::per_job(devices::xavier(), 1, &reference());
-        assert_eq!(m.device(), "xavier");
+        assert_eq!(m.devices(), vec!["xavier".to_string()]);
+        assert_eq!(m.occupancy("xavier"), 1);
     }
 }

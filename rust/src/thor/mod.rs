@@ -27,6 +27,7 @@ pub mod profiler;
 pub mod store;
 
 pub use estimator::Estimate;
+pub use fit::Batch;
 pub use measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurement, Measurer};
 pub use parse::{FamilyKey, ParsedModel, Position};
 pub use pipeline::{Thor, ThorConfig};

@@ -11,14 +11,34 @@
 //! ([`crate::runtime::PjrtMeasurer`]) — through the same acquisition
 //! code, so a fleet-profiled store and a local per-job-seeded store are
 //! byte-identical (see `rust/tests/backend_equiv.rs`).
+//!
+//! # Heterogeneous (multi-class) profiling
+//!
+//! A backend may serve several device classes at once
+//! ([`Measurer::devices`]); the driver then runs one
+//! [`crate::thor::fit::FamilyFit`] machine per device — stage order
+//! (out → in → hidden, the eq. 1–2 dependency chain) preserved *within*
+//! each device — and **interleaves the classes**: every round it
+//! gathers each device's proposals into one joint `measure_batch`, so a
+//! mixed fleet has jobs of every class in flight simultaneously instead
+//! of profiling classes back to back.  Each class's request stream
+//! depends only on its own absorbed results, so the per-class
+//! subsequences — and therefore the per-class store entries — are
+//! byte-identical to a solo single-class run at the same effective
+//! batch size.  For a single-class backend the driver degenerates to
+//! exactly the sequential per-family loop (bit-compatible with the
+//! pre-refactor pipeline, including the stateful
+//! [`LocalMeasurer::sequential`] device stream).
+
+use std::collections::VecDeque;
 
 use crate::gp::KernelKind;
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
 use crate::thor::estimator::{estimate, estimate_cached, Estimate, EstimateCache, EstimateError};
-use crate::thor::fit::{fit_family_with, FitConfig, FitOutcome};
+use crate::thor::fit::{Batch, FamilyFit, FitConfig, FitOutcome};
 use crate::thor::measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurer};
-use crate::thor::parse::{parse, Position};
+use crate::thor::parse::{parse, Group, Position};
 use crate::thor::profiler::{self, ranges};
 use crate::thor::store::{GpStore, StoredGp};
 
@@ -34,10 +54,12 @@ pub struct ThorConfig {
     pub grid_n_2d: usize,
     pub time_surrogate: bool,
     pub random_sampling: bool,
-    /// Measurement requests proposed per GP round (top-k batched
-    /// acquisition; see [`crate::thor::fit`]).  1 reproduces the
-    /// sequential loop bit-for-bit; fleet runs want ≥ the worker count.
-    pub batch: usize,
+    /// Measurement requests proposed per GP round per device (top-k
+    /// batched acquisition; see [`crate::thor::fit`]).  `Fixed(1)`
+    /// reproduces the sequential loop bit-for-bit; fleet runs want
+    /// `Fixed(worker count)` or `Auto` (sized each round from the live
+    /// same-class worker count).
+    pub batch: Batch,
     pub seed: u64,
 }
 
@@ -53,7 +75,7 @@ impl Default for ThorConfig {
             grid_n_2d: 13,
             time_surrogate: false,
             random_sampling: false,
-            batch: 1,
+            batch: Batch::Fixed(1),
             seed: 20_25,
         }
     }
@@ -124,6 +146,112 @@ impl ProfileReport {
     }
 }
 
+/// Which subtraction rule (eqs. 1–2) one profiling stage applies.
+enum StageKind {
+    /// Measured directly.
+    Output,
+    /// Eq. (1): subtract the predicted output-family energy.
+    Input,
+    /// Eq. (2): subtract predicted input- and output-family energies.
+    Hidden { tmpl: Group },
+}
+
+/// One family's place in a device's profiling plan.
+struct Stage {
+    family: String,
+    dim: usize,
+    x_max: Vec<f64>,
+    kind: StageKind,
+}
+
+/// A live (device, family) fit: the acquisition machine plus the
+/// already-fitted GPs its subtraction rule needs (cloned at activation
+/// — stage order within the device guarantees they exist).
+struct ActiveFit {
+    stage: Stage,
+    fit: FamilyFit,
+    in_gp: Option<StoredGp>,
+    out_gp: Option<StoredGp>,
+}
+
+impl ActiveFit {
+    /// Normalized proposal → measurement request (log channel grid,
+    /// exactly the mapping the single-class closures used).
+    fn request(&self, device: &str, p: &[f64], iterations: usize) -> MeasureRequest {
+        let channels: Vec<usize> = p
+            .iter()
+            .zip(&self.stage.x_max)
+            .map(|(&pi, &mx)| log_channel(pi, mx))
+            .collect();
+        MeasureRequest {
+            device: device.to_string(),
+            family: self.stage.family.clone(),
+            channels,
+            iterations,
+        }
+    }
+
+    /// Apply this stage's subtraction rule to one batch of raw
+    /// measurements.  The measured variant is rebuilt from the request
+    /// channels to read off the widths the subtracted groups saw — the
+    /// subtraction coordinates stay in lock-step with
+    /// [`crate::thor::profiler::VariantBuilder`] by construction.
+    fn fold(
+        &self,
+        in_tmpl: &Group,
+        out_tmpl: &Group,
+        reqs: &[MeasureRequest],
+        ms: &[crate::thor::measure::Measurement],
+    ) -> Vec<(f64, f64)> {
+        match &self.stage.kind {
+            StageKind::Output => {
+                ms.iter().map(|r| (r.energy_per_iter, r.device_seconds)).collect()
+            }
+            StageKind::Input => {
+                let out_gp = self.out_gp.as_ref().expect("stage order");
+                reqs.iter()
+                    .zip(ms)
+                    .map(|(req, r)| {
+                        let (_, fc_in) =
+                            profiler::input_variant(in_tmpl, out_tmpl, req.channels[0]);
+                        let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
+                        ((r.energy_per_iter - e_out.max(0.0)).max(1e-12), r.device_seconds)
+                    })
+                    .collect()
+            }
+            StageKind::Hidden { tmpl } => {
+                let in_gp = self.in_gp.as_ref().expect("stage order");
+                let out_gp = self.out_gp.as_ref().expect("stage order");
+                reqs.iter()
+                    .zip(ms)
+                    .map(|(req, r)| {
+                        let (_, thin, fc_in) = profiler::hidden_variant(
+                            in_tmpl,
+                            tmpl,
+                            out_tmpl,
+                            req.channels[0],
+                            req.channels[1],
+                        );
+                        let (e_in, _) = in_gp.predict_raw(&[thin as f64]);
+                        let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
+                        (
+                            (r.energy_per_iter - e_in.max(0.0) - e_out.max(0.0)).max(1e-12),
+                            r.device_seconds,
+                        )
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// One device class's progress through its profiling plan.
+struct DeviceRun {
+    device: String,
+    plan: VecDeque<Stage>,
+    active: Option<ActiveFit>,
+}
+
 /// THOR instance: a GP store plus configuration.
 pub struct Thor {
     pub store: GpStore,
@@ -170,16 +298,19 @@ impl Thor {
         );
     }
 
-    /// Profile every family of `reference` through a measurement backend
-    /// (idempotent per family: already-profiled families are skipped,
-    /// the paper's "one-time endeavor" reuse property).
+    /// Profile every family of `reference` for every device class of
+    /// the backend (idempotent per (device, family): already-profiled
+    /// entries are skipped, the paper's "one-time endeavor" reuse
+    /// property).
     ///
     /// The backend only measures; acquisition, subtractivity (eqs. 1–2)
     /// and GP fitting all run here, leader-side — which is what makes a
     /// local run and a fleet run of the same config produce the same
-    /// store.  Errors only when the backend does (e.g. the whole fleet
-    /// disconnected); the in-process [`LocalMeasurer`] is infallible on
-    /// families of its own reference model.
+    /// store.  Multi-class backends are driven round-interleaved (see
+    /// the module docs) so a heterogeneous fleet stays saturated.
+    /// Errors only when the backend does (e.g. every worker of a
+    /// scheduled class disconnected); the in-process [`LocalMeasurer`]
+    /// is infallible on families of its own reference model.
     pub fn profile(
         &mut self,
         m: &mut dyn Measurer,
@@ -187,7 +318,6 @@ impl Thor {
     ) -> Result<ProfileReport, MeasureError> {
         let parsed = parse(reference);
         let rg = ranges(&parsed);
-        let dev_name = m.device().to_string();
         let iterations = self.cfg.iterations;
         let mut report = ProfileReport::default();
 
@@ -196,123 +326,109 @@ impl Thor {
         let out_fam = out_tmpl.key.id();
         let in_fam = in_tmpl.key.id();
 
-        // --- stage 1: output family, measured directly -------------------
-        if !self.store.contains(&dev_name, &out_fam) {
-            let out_max = rg.out_max as f64;
-            let outcome = fit_family_with(
-                |ps: &[Vec<f64>]| {
-                    let reqs: Vec<MeasureRequest> = ps
-                        .iter()
-                        .map(|p| MeasureRequest {
-                            family: out_fam.clone(),
-                            channels: vec![log_channel(p[0], out_max)],
-                            iterations,
-                        })
-                        .collect();
-                    let ms = m.measure_batch(&reqs)?;
-                    Ok(ms.iter().map(|r| (r.energy_per_iter, r.device_seconds)).collect())
-                },
-                1,
-                &self.cfg.fit_cfg(1),
-            )?;
-            self.record(&mut report, &dev_name, &out_fam, vec![out_max], outcome);
-        }
-
-        // --- stage 2: input family via eq. (1) ----------------------------
-        if !self.store.contains(&dev_name, &in_fam) {
-            let in_max = rg.in_max as f64;
-            let out_gp = self.store.get(&dev_name, &out_fam).expect("stage order").clone();
-            let outcome = fit_family_with(
-                |ps: &[Vec<f64>]| {
-                    let reqs: Vec<MeasureRequest> = ps
-                        .iter()
-                        .map(|p| MeasureRequest {
-                            family: in_fam.clone(),
-                            channels: vec![log_channel(p[0], in_max)],
-                            iterations,
-                        })
-                        .collect();
-                    let ms = m.measure_batch(&reqs)?;
-                    Ok(reqs
-                        .iter()
-                        .zip(&ms)
-                        .map(|(req, r)| {
-                            // Rebuild the variant the backend measured to
-                            // read off the FC width the output group saw —
-                            // the subtraction coordinates stay in lock-step
-                            // with VariantBuilder by construction.
-                            let (_, fc_in) =
-                                profiler::input_variant(&in_tmpl, &out_tmpl, req.channels[0]);
-                            let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
-                            (
-                                (r.energy_per_iter - e_out.max(0.0)).max(1e-12),
-                                r.device_seconds,
-                            )
-                        })
-                        .collect())
-                },
-                1,
-                &self.cfg.fit_cfg(1),
-            )?;
-            self.record(&mut report, &dev_name, &in_fam, vec![in_max], outcome);
-        }
-
-        // --- stage 3: each hidden family via eq. (2) ----------------------
-        for (fi, fam) in parsed.families.iter().enumerate() {
-            if fam.position != Position::Hidden {
-                continue;
+        // Identical per-device plan: the subtraction chain fixes the
+        // stage order (out → in → hidden families in parsed order).
+        let make_plan = || -> VecDeque<Stage> {
+            let mut plan = VecDeque::new();
+            plan.push_back(Stage {
+                family: out_fam.clone(),
+                dim: 1,
+                x_max: vec![rg.out_max as f64],
+                kind: StageKind::Output,
+            });
+            plan.push_back(Stage {
+                family: in_fam.clone(),
+                dim: 1,
+                x_max: vec![rg.in_max as f64],
+                kind: StageKind::Input,
+            });
+            for (fi, fam) in parsed.families.iter().enumerate() {
+                if fam.position != Position::Hidden {
+                    continue;
+                }
+                let tmpl = parsed.template(fam).unwrap().clone();
+                let (a_max, b_max) = rg.hidden_max[fi];
+                plan.push_back(Stage {
+                    family: fam.id(),
+                    dim: 2,
+                    x_max: vec![a_max.max(2) as f64, b_max.max(2) as f64],
+                    kind: StageKind::Hidden { tmpl },
+                });
             }
-            let fam_id = fam.id();
-            if self.store.contains(&dev_name, &fam_id) {
-                continue;
+            plan
+        };
+
+        let mut devs: Vec<DeviceRun> = m
+            .devices()
+            .into_iter()
+            .map(|device| DeviceRun { device, plan: make_plan(), active: None })
+            .collect();
+
+        loop {
+            // Gather one acquisition round per device into a joint
+            // batch; (device index, proposal count, request offset).
+            let mut reqs: Vec<MeasureRequest> = Vec::new();
+            let mut spans: Vec<(usize, usize, usize)> = Vec::new();
+            for di in 0..devs.len() {
+                // Advance this device until it has proposals in flight
+                // or its plan is exhausted; finishing one family
+                // activates the next in the same round.
+                loop {
+                    if devs[di].active.is_none() {
+                        let device = devs[di].device.clone();
+                        let stage = loop {
+                            match devs[di].plan.pop_front() {
+                                // idempotency: skip already-fitted families
+                                Some(s) if self.store.contains(&device, &s.family) => continue,
+                                s => break s,
+                            }
+                        };
+                        let Some(stage) = stage else { break };
+                        let fit = FamilyFit::new(stage.dim, &self.cfg.fit_cfg(stage.dim));
+                        let (in_gp, out_gp) = match stage.kind {
+                            StageKind::Output => (None, None),
+                            StageKind::Input => (
+                                None,
+                                Some(self.store.get(&device, &out_fam).expect("stage order").clone()),
+                            ),
+                            StageKind::Hidden { .. } => (
+                                Some(self.store.get(&device, &in_fam).expect("stage order").clone()),
+                                Some(self.store.get(&device, &out_fam).expect("stage order").clone()),
+                            ),
+                        };
+                        devs[di].active = Some(ActiveFit { stage, fit, in_gp, out_gp });
+                    }
+                    let occ = m.occupancy(&devs[di].device);
+                    let device = devs[di].device.clone();
+                    let active = devs[di].active.as_mut().unwrap();
+                    match active.fit.propose(occ) {
+                        Some(ps) => {
+                            let off = reqs.len();
+                            for p in &ps {
+                                reqs.push(active.request(&device, p, iterations));
+                            }
+                            spans.push((di, ps.len(), off));
+                            break;
+                        }
+                        None => {
+                            let af = devs[di].active.take().unwrap();
+                            let Stage { family, x_max, .. } = af.stage;
+                            let outcome = af.fit.finish();
+                            self.record(&mut report, &device, &family, x_max, outcome);
+                        }
+                    }
+                }
             }
-            let tmpl = parsed.template(fam).unwrap().clone();
-            let (a_max, b_max) = rg.hidden_max[fi];
-            let (a_max, b_max) = (a_max.max(2) as f64, b_max.max(2) as f64);
-            let in_gp = self.store.get(&dev_name, &in_fam).expect("stage order").clone();
-            let out_gp = self.store.get(&dev_name, &out_fam).expect("stage order").clone();
-            let outcome = fit_family_with(
-                |ps: &[Vec<f64>]| {
-                    let reqs: Vec<MeasureRequest> = ps
-                        .iter()
-                        .map(|p| MeasureRequest {
-                            family: fam_id.clone(),
-                            channels: vec![
-                                log_channel(p[0], a_max),
-                                log_channel(p[1], b_max),
-                            ],
-                            iterations,
-                        })
-                        .collect();
-                    let ms = m.measure_batch(&reqs)?;
-                    Ok(reqs
-                        .iter()
-                        .zip(&ms)
-                        .map(|(req, r)| {
-                            // Rebuild the measured variant to read off the
-                            // thin input width and FC width — subtraction
-                            // coordinates stay in lock-step with
-                            // VariantBuilder by construction.
-                            let (_, thin, fc_in) = profiler::hidden_variant(
-                                &in_tmpl,
-                                &tmpl,
-                                &out_tmpl,
-                                req.channels[0],
-                                req.channels[1],
-                            );
-                            let (e_in, _) = in_gp.predict_raw(&[thin as f64]);
-                            let (e_out, _) = out_gp.predict_raw(&[fc_in as f64]);
-                            (
-                                (r.energy_per_iter - e_in.max(0.0) - e_out.max(0.0)).max(1e-12),
-                                r.device_seconds,
-                            )
-                        })
-                        .collect())
-                },
-                2,
-                &self.cfg.fit_cfg(2),
-            )?;
-            self.record(&mut report, &dev_name, &fam_id, vec![a_max, b_max], outcome);
+            if reqs.is_empty() {
+                break; // every device exhausted its plan
+            }
+            let ms = m.measure_batch(&reqs)?;
+            for (di, n, off) in spans {
+                let active = devs[di].active.as_mut().unwrap();
+                let results =
+                    active.fold(&in_tmpl, &out_tmpl, &reqs[off..off + n], &ms[off..off + n]);
+                active.fit.absorb(&results);
+            }
         }
         Ok(report)
     }
@@ -405,7 +521,7 @@ mod tests {
     #[test]
     fn measurer_driven_profile_with_per_job_backend_and_batch() {
         let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
-        let mut thor = Thor::new(ThorConfig { batch: 3, ..ThorConfig::quick() });
+        let mut thor = Thor::new(ThorConfig { batch: Batch::Fixed(3), ..ThorConfig::quick() });
         let mut m = LocalMeasurer::per_job(devices::xavier(), 42, &reference);
         let report = thor.profile(&mut m, &reference).unwrap();
         assert_eq!(report.families.len(), 5);
@@ -418,12 +534,45 @@ mod tests {
         // per-request seeding makes it a pure function of the config.
         let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
         let run = || {
-            let mut thor = Thor::new(ThorConfig { batch: 2, ..ThorConfig::quick() });
+            let mut thor = Thor::new(ThorConfig { batch: Batch::Fixed(2), ..ThorConfig::quick() });
             let mut m = LocalMeasurer::per_job(devices::tx2(), 7, &reference);
             thor.profile(&mut m, &reference).unwrap();
             thor.store.to_json().to_string()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn multi_class_profile_equals_per_class_profiles_merged() {
+        // The heterogeneous driver contract, at the in-process level:
+        // one multi-class backend profiled in one pipeline run produces
+        // the same store as per-class runs merged — interleaving classes
+        // never perturbs a class's fit.  (The fleet-level version over
+        // real sockets lives in rust/tests/backend_equiv.rs.)
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let cfg = ThorConfig { batch: Batch::Fixed(2), ..ThorConfig::quick() };
+        let mut hetero = Thor::new(cfg);
+        let mut m = LocalMeasurer::per_job_fleet(
+            vec![devices::xavier(), devices::tx2()],
+            42,
+            &reference,
+        );
+        let report = hetero.profile(&mut m, &reference).unwrap();
+        assert_eq!(report.families.len(), 10, "5 families × 2 classes");
+
+        let mut merged = crate::thor::store::GpStore::new();
+        for profile in [devices::xavier(), devices::tx2()] {
+            let seed = crate::thor::profiler::class_seed(42, profile.name);
+            let mut solo = Thor::new(cfg);
+            let mut sm = LocalMeasurer::per_job(profile, seed, &reference);
+            solo.profile(&mut sm, &reference).unwrap();
+            merged.merge(solo.store);
+        }
+        assert_eq!(
+            hetero.store.to_json().to_string(),
+            merged.to_json().to_string(),
+            "multi-class store diverged from merged per-class stores"
+        );
     }
 
     #[test]

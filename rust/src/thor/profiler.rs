@@ -134,6 +134,29 @@ pub fn job_seed(base_seed: u64, family: &str, channels: &[usize], iterations: us
     h.finish()
 }
 
+/// Per-device-class measurement seed base: FNV-1a over (base seed ‖
+/// device class).  Heterogeneous runs extend the [`job_seed`] hash
+/// chain with the device class by folding the class in *here*, before
+/// the per-request fold — so two requests that agree on (family,
+/// channels, iterations) but target different classes never share a
+/// measurement seed, while single-class runs that pass `base_seed`
+/// straight to [`job_seed`] keep their PR-4 bit patterns (legacy
+/// stores, goldens and `fleet1`/`fleetN` outputs are unchanged).
+///
+/// The rule every class-aware backend follows: class `c` of a fleet
+/// with base seed `s` measures with per-job base `class_seed(s, c)` —
+/// [`crate::thor::measure::LocalMeasurer`]'s multi-class mode and
+/// [`crate::coordinator::DeviceWorker::with_class_seed`] both derive
+/// it from this one function, which is what makes a heterogeneous
+/// fleet store the byte-exact merge of per-class local stores
+/// (`rust/tests/backend_equiv.rs`).
+pub fn class_seed(base_seed: u64, device: &str) -> u64 {
+    let mut h = crate::util::hash::Fnv1a::new();
+    h.write(&base_seed.to_le_bytes());
+    h.write(device.as_bytes());
+    h.finish()
+}
+
 /// Channel ranges a family must be profiled over so that every later
 /// query (estimation or subtraction) stays inside the fitted region.
 pub struct Ranges {
@@ -311,6 +334,18 @@ mod tests {
         assert_ne!(base, job_seed(42, "maf", &[4, 8], 60));
         assert_ne!(base, job_seed(42, "fam", &[8, 4], 60));
         assert_ne!(base, job_seed(42, "fam", &[4, 8], 61));
+    }
+
+    #[test]
+    fn class_seed_separates_device_classes() {
+        // Same request, different class → different measurement seed
+        // chain; same class → stable.
+        assert_eq!(class_seed(42, "xavier"), class_seed(42, "xavier"));
+        assert_ne!(class_seed(42, "xavier"), class_seed(42, "tx2"));
+        assert_ne!(class_seed(42, "xavier"), class_seed(43, "xavier"));
+        let a = job_seed(class_seed(42, "xavier"), "fam", &[4], 60);
+        let b = job_seed(class_seed(42, "tx2"), "fam", &[4], 60);
+        assert_ne!(a, b, "classes share a per-request seed");
     }
 
     #[test]

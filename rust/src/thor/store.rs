@@ -129,6 +129,18 @@ impl GpStore {
         self.map.is_empty()
     }
 
+    /// Absorb another store (e.g. merge per-class stores into one
+    /// fleet artifact).  Key collisions resolve to `other`'s entry.
+    pub fn merge(&mut self, other: GpStore) {
+        self.map.extend(other.map);
+    }
+
+    /// Fitted families for one device class.
+    pub fn len_for(&self, device: &str) -> usize {
+        let prefix = format!("{device}|");
+        self.map.keys().filter(|k| k.starts_with(&prefix)).count()
+    }
+
     /// Total profiling + fitting cost per device (Table 1 rows).
     pub fn cost_seconds(&self, device: &str) -> (f64, f64) {
         let prefix = format!("{device}|");
@@ -213,6 +225,20 @@ mod tests {
         let a = st.get("xavier", "hid:conv3s1p:h14w14b10:bn-r-mp2").unwrap();
         let b = back.get("xavier", "hid:conv3s1p:h14w14b10:bn-r-mp2").unwrap();
         assert!((a.predict_raw(&[40.0]).0 - b.predict_raw(&[40.0]).0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_and_len_for_cover_multi_device_stores() {
+        let mut a = GpStore::new();
+        a.insert("xavier", "f1", toy_stored());
+        a.insert("xavier", "f2", toy_stored());
+        let mut b = GpStore::new();
+        b.insert("tx2", "f1", toy_stored());
+        a.merge(b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.len_for("xavier"), 2);
+        assert_eq!(a.len_for("tx2"), 1);
+        assert_eq!(a.len_for("server"), 0);
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! * `LocalMeasurer::per_job` vs a 1-worker fleet vs a 3-worker fleet —
 //!   byte-identical store JSON (extends PR 2's fleet-only determinism
 //!   test to the full active-learning loop across backends);
+//! * the **heterogeneous single-leader** fleet (3 classes × 2 workers,
+//!   one `serve_spec`) vs per-class `LocalMeasurer::per_job` stores
+//!   merged into one `GpStore` — byte-identical JSON at `Batch::Auto`
+//!   *and* `Batch::Fixed(1)` (class-scoped scheduling, per-class
+//!   `class_seed` derivation, and interleaved acquisition must all be
+//!   invisible in the artifact);
 //! * the batch-size-1 ≡ pre-refactor-scalar-loop equivalence lives next
 //!   to the loop itself (`thor::fit` test
 //!   `batch_size_1_is_bit_identical_to_prerefactor_scalar_loop`).
@@ -16,13 +22,18 @@
 //! CI runs this file under a 120-second timeout guard next to the fleet
 //! tests.
 
-use thor::coordinator::{DeviceWorker, FleetServer};
+use thor::coordinator::{class_seed, DeviceWorker, FleetServer, FleetSpec};
 use thor::model::{zoo, ModelGraph};
 use thor::simdevice::{devices, Device};
-use thor::thor::{LocalMeasurer, Thor, ThorConfig};
+use thor::thor::store::GpStore;
+use thor::thor::{Batch, LocalMeasurer, Thor, ThorConfig};
 
 const BASE_SEED: u64 = 42;
 const BATCH: usize = 3;
+
+/// Device classes of the heterogeneous fleet, 2 workers each.
+const CLASSES: [&str; 3] = ["xavier", "tx2", "server"];
+const PER_CLASS: usize = 2;
 
 fn reference() -> ModelGraph {
     // Small cnn5: 5 families (out, in, 3 hidden).
@@ -30,7 +41,7 @@ fn reference() -> ModelGraph {
 }
 
 fn cfg() -> ThorConfig {
-    ThorConfig { batch: BATCH, ..ThorConfig::quick() }
+    ThorConfig { batch: Batch::Fixed(BATCH), ..ThorConfig::quick() }
 }
 
 /// Store JSON from the in-process per-job-seeded backend.
@@ -66,6 +77,58 @@ fn fleet_store_json(n_workers: usize) -> String {
     run.store.to_json().to_string()
 }
 
+/// Store JSON from ONE leader serving the mixed fleet (2 workers per
+/// class), class-derived per-job seeds, in one `serve_spec`.
+fn hetero_fleet_store_json(batch: Batch) -> String {
+    let server = FleetServer::new(ThorConfig { batch, ..ThorConfig::quick() });
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+    let spec = FleetSpec::mixed(&CLASSES.map(|c| (c, PER_CLASS)));
+
+    let mut handles = Vec::new();
+    for (ci, class) in CLASSES.iter().enumerate() {
+        for w in 0..PER_CLASS {
+            let addr = addr.clone();
+            let reference = reference();
+            let profile = devices::by_name(class).expect("device class");
+            let dev_seed = 100 + (ci * PER_CLASS + w) as u64;
+            handles.push(std::thread::spawn(move || {
+                let mut worker = DeviceWorker::new(Device::new(profile, dev_seed), &reference)
+                    .with_class_seed(BASE_SEED);
+                worker.run(&addr)
+            }));
+        }
+    }
+
+    let run = bound.serve_spec(&reference(), spec).expect("heterogeneous fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    run.store.to_json().to_string()
+}
+
+/// Per-class `LocalMeasurer::per_job` stores (class-derived seeds, the
+/// effective per-class batch) merged into one `GpStore` — the oracle
+/// the heterogeneous fleet must reproduce byte-for-byte.
+fn merged_per_class_local_store_json(batch: Batch) -> String {
+    let mut merged = GpStore::new();
+    for class in CLASSES {
+        let profile = devices::by_name(class).expect("device class");
+        // Auto sizes each round from the class's live worker count,
+        // which a healthy 2-worker class holds at PER_CLASS all run.
+        let eff = match batch {
+            Batch::Auto => Batch::Fixed(PER_CLASS),
+            b => b,
+        };
+        let mut thor = Thor::new(ThorConfig { batch: eff, ..ThorConfig::quick() });
+        let mut m =
+            LocalMeasurer::per_job(profile, class_seed(BASE_SEED, class), &reference());
+        thor.profile(&mut m, &reference()).expect("local profile");
+        merged.merge(thor.store);
+    }
+    merged.to_json().to_string()
+}
+
 #[test]
 fn local_and_fleet_stores_are_byte_identical_at_1_and_3_workers() {
     let local = local_store_json();
@@ -79,5 +142,48 @@ fn local_and_fleet_stores_are_byte_identical_at_1_and_3_workers() {
     assert_eq!(
         local, fleet3,
         "3-worker fleet store diverged from the local per-job backend"
+    );
+}
+
+#[test]
+fn hetero_fleet_store_is_byte_identical_to_merged_per_class_local_stores() {
+    // Occupancy-adaptive batching: every class's rounds sized by its
+    // own 2 live workers.
+    let fleet_auto = hetero_fleet_store_json(Batch::Auto);
+    for c in CLASSES {
+        assert!(fleet_auto.contains(c), "heterogeneous store is missing class {c}");
+    }
+    let local_auto = merged_per_class_local_store_json(Batch::Auto);
+    assert_eq!(
+        fleet_auto, local_auto,
+        "heterogeneous fleet store (batch=auto) diverged from merged per-class local stores"
+    );
+
+    // Fixed batch 1: the sequential acquisition stream per class.
+    let fleet_b1 = hetero_fleet_store_json(Batch::Fixed(1));
+    let local_b1 = merged_per_class_local_store_json(Batch::Fixed(1));
+    assert_eq!(
+        fleet_b1, local_b1,
+        "heterogeneous fleet store (batch=1) diverged from merged per-class local stores"
+    );
+    assert_ne!(
+        fleet_auto, fleet_b1,
+        "auto (k=2) and batch=1 acquisition streams should differ — suspicious equality"
+    );
+}
+
+#[test]
+fn hetero_fleet_store_matches_one_shot_multi_class_local_backend() {
+    // The in-process multi-class backend (per-class seeded device map)
+    // profiled in ONE pipeline run is the third face of the same
+    // artifact.
+    let mut thor = Thor::new(ThorConfig { batch: Batch::Fixed(PER_CLASS), ..ThorConfig::quick() });
+    let profiles = CLASSES.map(|c| devices::by_name(c).expect("device class")).to_vec();
+    let mut m = LocalMeasurer::per_job_fleet(profiles, BASE_SEED, &reference());
+    thor.profile(&mut m, &reference()).expect("multi-class local profile");
+    assert_eq!(
+        thor.store.to_json().to_string(),
+        hetero_fleet_store_json(Batch::Auto),
+        "multi-class LocalMeasurer diverged from the heterogeneous fleet"
     );
 }

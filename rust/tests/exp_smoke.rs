@@ -108,6 +108,28 @@ fn fleetn_fits_every_device_type_concurrently() {
 }
 
 #[test]
+fn fleeth_single_leader_serves_all_three_classes() {
+    let rep = run("fleetH");
+    assert!(rep.error.is_none(), "{:?}", rep.error);
+    assert_eq!(rep.get_metric("devices").unwrap(), 3.0);
+    assert_eq!(rep.get_metric("families_fitted").unwrap(), 15.0, "5 families × 3 classes");
+    assert!(rep.get_metric("jobs_total").unwrap() > 0.0);
+    assert_eq!(rep.get_metric("jobs_requeued").unwrap(), 0.0);
+    for dev in ["xavier", "tx2", "server"] {
+        let m = rep.get_metric(&format!("mape_{dev}")).unwrap_or(f64::NAN);
+        assert!(m.is_finite() && m >= 0.0, "{dev} MAPE {m}");
+        assert_eq!(
+            rep.get_metric(&format!("families_{dev}")).unwrap(),
+            5.0,
+            "{dev} is missing families in the shared store"
+        );
+        assert!(rep.get_metric(&format!("jobs_{dev}")).unwrap() > 0.0, "{dev} ran no jobs");
+    }
+    // one table row per device class in the single shared report
+    assert_eq!(rep.tables[0].rows.len(), 3, "{:?}", rep.tables[0].rows);
+}
+
+#[test]
 fn mape_pair_runs_on_every_device() {
     for dev in ["xavier", "tx2"] {
         let (thor_m, flops_m, report) =

@@ -14,10 +14,10 @@
 //! CI runs this file under a 60-second timeout guard: any dead/live-lock
 //! in the leader loop fails fast instead of hanging the suite.
 
-use thor::coordinator::{DeviceWorker, FleetRun, FleetServer};
+use thor::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec};
 use thor::model::{zoo, ModelGraph};
 use thor::simdevice::{devices, Device};
-use thor::thor::ThorConfig;
+use thor::thor::{Batch, ThorConfig};
 
 const BASE_SEED: u64 = 42;
 
@@ -36,7 +36,7 @@ fn reference() -> ModelGraph {
 /// per GP round), never on the worker count, so stores stay comparable
 /// across 1-, 2- and 3-worker runs.
 fn run_fleet(n_workers: usize, die_after: Option<(usize, usize)>) -> FleetRun {
-    let server = FleetServer::new(ThorConfig { batch: 3, ..ThorConfig::quick() });
+    let server = FleetServer::new(ThorConfig { batch: Batch::Fixed(3), ..ThorConfig::quick() });
     let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
     let addr = bound.local_addr().to_string();
 
@@ -114,6 +114,92 @@ fn store_is_independent_of_worker_count_and_all_workers_contribute() {
         three.per_worker.iter().all(|&n| n > 0),
         "idle worker in a healthy fleet: {:?}",
         three.per_worker
+    );
+}
+
+#[test]
+fn missing_device_class_fails_formation_with_a_descriptive_error() {
+    // A heterogeneous serve where one requested class never says Hello
+    // must be a hard error after the grace window — never a silently
+    // class-less store (the pre-fix behavior was to proceed with the
+    // partial fleet even when a whole class was absent).
+    let server = FleetServer::new(ThorConfig { batch: Batch::Auto, ..ThorConfig::quick() });
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+
+    // Only the xavier worker shows up; tx2 never connects.
+    let reference_x = reference();
+    let handle = std::thread::spawn(move || {
+        let mut worker =
+            DeviceWorker::new(Device::new(devices::xavier(), 100), &reference_x)
+                .with_class_seed(BASE_SEED);
+        worker.run(&addr)
+    });
+
+    let spec = FleetSpec::mixed(&[("xavier", 1), ("tx2", 1)])
+        .with_grace(std::time::Duration::from_millis(300));
+    let err = match bound.serve_spec(&reference(), spec) {
+        Ok(_) => panic!("serve must fail when a whole requested class is missing"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("tx2"), "error does not name the missing class: {msg}");
+    assert!(
+        msg.to_lowercase().contains("never said hello"),
+        "error does not describe the formation failure: {msg}"
+    );
+    let _ = handle.join();
+}
+
+#[test]
+fn hetero_fleet_worker_death_requeues_within_the_class() {
+    // Mixed fleet, one tx2 worker dies mid-stream: its job must be
+    // re-measured by the surviving tx2 worker, every job resolving
+    // exactly once per class, and the run still completes all classes.
+    let server = FleetServer::new(ThorConfig { batch: Batch::Auto, ..ThorConfig::quick() });
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+    let spec = FleetSpec::mixed(&[("xavier", 2), ("tx2", 2)]);
+
+    let mut handles = Vec::new();
+    for (i, class) in ["xavier", "xavier", "tx2", "tx2"].iter().enumerate() {
+        let addr = addr.clone();
+        let reference = reference();
+        let profile = devices::by_name(class).expect("device class");
+        // The last-connecting tx2 worker dies upon its 3rd job.  (Which
+        // connection id it gets is racy; dying after a fixed job count
+        // keeps the scenario valid either way.)
+        let limit = (i == 3).then_some(2);
+        handles.push(std::thread::spawn(move || {
+            let mut worker = DeviceWorker::new(Device::new(profile, 100 + i as u64), &reference)
+                .with_class_seed(BASE_SEED);
+            match limit {
+                Some(k) => worker.run_limited(&addr, k),
+                None => worker.run(&addr),
+            }
+        }));
+    }
+
+    let run = bound.serve_spec(&reference(), spec).expect("hetero fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    assert!(run.requeued >= 1, "no job was re-queued on the tx2 worker death");
+    assert_eq!(
+        run.jobs_done, run.jobs_submitted,
+        "job(s) lost or double-counted after worker death"
+    );
+    assert_eq!(run.store.len(), 10, "store missing families: 5 per class expected");
+    for (class, n) in &run.per_class {
+        assert!(*n > 0, "class {class} completed no jobs");
+    }
+    // The dying worker is tx2-class, so xavier's ledger is untouched:
+    // per-class done == submitted holds for both (exactly-once), which
+    // run.jobs_done == run.jobs_submitted plus the per_class sum checks.
+    assert_eq!(
+        run.per_class.iter().map(|(_, n)| n).sum::<usize>(),
+        run.jobs_done,
+        "per-class counts do not add up to the total"
     );
 }
 
