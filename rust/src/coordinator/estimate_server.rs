@@ -1,0 +1,523 @@
+//! Estimation-serving daemon (`thor serve-estimates`): the query-heavy,
+//! fit-rarely half of the paper's value proposition.  Profiling pays for
+//! measurements once; after that, estimation is a few GP posteriors per
+//! model — cheap enough to serve at high rate to schedulers and fleet
+//! scorers.  This server loads fitted [`GpStore`] artifacts as shared
+//! immutable state (posterior factors α and K⁻¹ are precomputed once at
+//! load, via the store's workspace-threaded `from_json`) and answers
+//! `EstimateRequest` / `EstimateBatch` messages over the same
+//! newline-delimited JSON protocol the fleet uses
+//! ([`crate::coordinator::protocol`]).
+//!
+//! Concurrency model: thread-per-core accept/worker loop — N worker
+//! threads share one `TcpListener` (via `try_clone`) and each `accept`s
+//! its own connections, so a connection is handled start-to-finish by
+//! one thread with zero cross-thread handoff.  All workers share one
+//! [`SharedEstimateCache`] (sharded `RwLock` read-through memo) and one
+//! hot-swappable store slot.  A client disconnect — clean, mid-line, or
+//! mid-request — just returns that worker to its accept loop; it can
+//! never wedge the daemon or poison a cache shard (the cache recovers
+//! poisoned locks by design).
+//!
+//! Responses are **bit-identical** to a local [`crate::thor::estimate`]
+//! call against the same store: the batch path coalesces same-family GP
+//! queries across a request but each point's posterior is computed
+//! independently (`estimate_batch_shared`'s contract, pinned by tests
+//! here and in `tests/serve.rs`).
+//!
+//! Hot reload: [`EstimateServerHandle::swap_store`] atomically replaces
+//! the store snapshot; in-flight requests finish against the snapshot
+//! they started with, and the generation-stamped cache lazily discards
+//! entries from older snapshots (see [`crate::thor::store`]).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::protocol::Msg;
+use crate::model::spec::parse_spec;
+use crate::model::ModelGraph;
+use crate::thor::estimator::{estimate_batch_shared, estimate_shared, SharedEstimateCache};
+use crate::thor::store::GpStore;
+
+/// The hot-swappable store slot: workers clone the inner `Arc` per
+/// request (an atomic refcount bump under a briefly-held read lock), so
+/// every request serves against one immutable snapshot while
+/// [`EstimateServerHandle::swap_store`] can replace it at any time.
+type StoreSlot = Arc<RwLock<Arc<GpStore>>>;
+
+/// Counters one worker thread accumulates; summed at shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Connections accepted (shutdown-unblocking dummies excluded).
+    pub connections: u64,
+    /// Estimate requests served (an `EstimateBatch` counts once).
+    pub requests: u64,
+    /// Requests answered with an error (plus malformed lines).
+    pub errors: u64,
+}
+
+impl ServeStats {
+    fn absorb(&mut self, other: ServeStats) {
+        self.connections += other.connections;
+        self.requests += other.requests;
+        self.errors += other.errors;
+    }
+}
+
+/// Entry point: bind, then [`BoundEstimateServer::start`].
+pub struct EstimateServer;
+
+impl EstimateServer {
+    /// Bind `addr` (supports port 0 for an OS-assigned port) with the
+    /// store to serve.  The store should come from
+    /// [`GpStore::load`]/`from_json`, which precompute every family's
+    /// posterior factors at load — nothing is fitted per request.
+    pub fn bind(addr: &str, store: GpStore) -> Result<BoundEstimateServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(BoundEstimateServer {
+            listener,
+            addr,
+            store: Arc::new(RwLock::new(Arc::new(store))),
+            cache: Arc::new(SharedEstimateCache::default()),
+        })
+    }
+}
+
+/// Bound but not yet serving — read [`BoundEstimateServer::local_addr`]
+/// first when bound to an ephemeral port (the fleet-server idiom).
+pub struct BoundEstimateServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    store: StoreSlot,
+    cache: Arc<SharedEstimateCache>,
+}
+
+impl BoundEstimateServer {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Spawn the worker pool and start serving.  `threads == 0` means
+    /// one per available core (min 2).  Each worker `accept`s on its own
+    /// clone of the listener and owns a connection until the client
+    /// disconnects, so up to `threads` connections are served
+    /// concurrently (serving-tier clients hold short-lived or pooled
+    /// connections).
+    pub fn start(self, threads: usize) -> Result<EstimateServerHandle> {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).max(2)
+        } else {
+            threads
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let listener = self.listener.try_clone()?;
+            let (slot, cache, stop) = (self.store.clone(), self.cache.clone(), stop.clone());
+            workers.push(std::thread::spawn(move || worker_loop(listener, slot, cache, stop)));
+        }
+        Ok(EstimateServerHandle {
+            addr: self.addr,
+            store: self.store,
+            cache: self.cache,
+            stop,
+            workers,
+        })
+    }
+}
+
+/// A running daemon: the owner's handle for reload and shutdown.
+pub struct EstimateServerHandle {
+    addr: SocketAddr,
+    store: StoreSlot,
+    cache: Arc<SharedEstimateCache>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<ServeStats>>,
+}
+
+impl EstimateServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared cache statistics (hits/misses/entries).
+    pub fn cache(&self) -> &SharedEstimateCache {
+        &self.cache
+    }
+
+    /// Hot-reload: atomically replace the served store.  In-flight
+    /// requests finish on the old snapshot; the next request of each
+    /// worker sees the new one, and the generation-stamped cache
+    /// invalidates lazily — no stale estimate can ever be served.
+    pub fn swap_store(&self, store: GpStore) {
+        *self.store.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(store);
+    }
+
+    /// Stop accepting, unblock the workers, and join them.  Waits for
+    /// in-flight connections to close (workers re-check the stop flag
+    /// between requests).
+    pub fn shutdown(self) -> ServeStats {
+        self.stop.store(true, Ordering::Relaxed);
+        // Each blocked accept() needs one connection to wake up; extras
+        // sit in the backlog and die with the listener.
+        for _ in 0..self.workers.len() {
+            let _ = TcpStream::connect(self.addr);
+        }
+        let mut total = ServeStats::default();
+        for h in self.workers {
+            if let Ok(s) = h.join() {
+                total.absorb(s);
+            }
+        }
+        total
+    }
+
+    /// Block until the workers exit (the CLI's serve-forever mode; only
+    /// an external `shutdown`-style signal ends it).
+    pub fn join(self) -> ServeStats {
+        let mut total = ServeStats::default();
+        for h in self.workers {
+            if let Ok(s) = h.join() {
+                total.absorb(s);
+            }
+        }
+        total
+    }
+}
+
+fn worker_loop(
+    listener: TcpListener,
+    slot: StoreSlot,
+    cache: Arc<SharedEstimateCache>,
+    stop: Arc<AtomicBool>,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::Relaxed) {
+                    break; // shutdown-unblocking dummy connection
+                }
+                stats.connections += 1;
+                handle_conn(stream, &slot, &cache, &stop, &mut stats);
+            }
+            // Transient accept failure (e.g. EMFILE, aborted handshake):
+            // keep the loop alive; only the stop flag ends a worker.
+            Err(_) => continue,
+        }
+    }
+    stats
+}
+
+/// Serve one connection until the client disconnects.  Every exit path
+/// returns to the caller's accept loop — a half-written line, a dropped
+/// socket or a malformed request only ends *this* connection.
+fn handle_conn(
+    stream: TcpStream,
+    slot: &StoreSlot,
+    cache: &SharedEstimateCache,
+    stop: &AtomicBool,
+    stats: &mut ServeStats,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let mut reader = BufReader::new(read_half);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return, // client gone (EOF or mid-line abort)
+            Ok(_) => {}
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Some(msg) = Msg::decode(&line) else {
+            // Framing is broken; answer once, then drop the connection
+            // rather than guessing at message alignment.
+            stats.errors += 1;
+            let err = Msg::EstimateError { id: 0, error: "malformed request line".into() };
+            let _ = writer.write_all(err.encode().as_bytes());
+            return;
+        };
+        // One immutable snapshot per request (Arc clone, not a copy).
+        let store: Arc<GpStore> = slot.read().unwrap_or_else(|e| e.into_inner()).clone();
+        let reply = match msg {
+            Msg::EstimateRequest { id, device, model } => {
+                stats.requests += 1;
+                match serve_one(&store, &device, &model, cache) {
+                    Ok((energy_per_iter, variance)) => {
+                        Msg::EstimateReply { id, energy_per_iter, variance }
+                    }
+                    Err(error) => {
+                        stats.errors += 1;
+                        Msg::EstimateError { id, error }
+                    }
+                }
+            }
+            Msg::EstimateBatch { id, queries } => {
+                stats.requests += 1;
+                Msg::EstimateBatchReply { id, results: serve_batch(&store, &queries, cache) }
+            }
+            // A polite client close; also lets `nc`-style probes exit.
+            Msg::Shutdown => return,
+            other => {
+                stats.errors += 1;
+                Msg::EstimateError {
+                    id: 0,
+                    error: format!("unsupported message on an estimate connection: {other:?}"),
+                }
+            }
+        };
+        if writer.write_all(reply.encode().as_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+fn serve_one(
+    store: &GpStore,
+    device: &str,
+    model_spec: &str,
+    cache: &SharedEstimateCache,
+) -> Result<(f64, f64), String> {
+    let g = parse_spec(model_spec).map_err(|e| e.to_string())?;
+    estimate_shared(store, device, &g, cache)
+        .map(|e| (e.energy_per_iter, e.variance))
+        .map_err(|e| e.to_string())
+}
+
+/// Per-query outcomes in query order; spec parse failures consume only
+/// their own slot, and the valid remainder still coalesces through one
+/// [`estimate_batch_shared`] call.
+fn serve_batch(
+    store: &GpStore,
+    queries: &[(String, String)],
+    cache: &SharedEstimateCache,
+) -> Vec<Result<(f64, f64), String>> {
+    let parsed: Vec<Result<ModelGraph, String>> =
+        queries.iter().map(|(_, m)| parse_spec(m).map_err(|e| e.to_string())).collect();
+    let valid: Vec<(usize, (&str, &ModelGraph))> = queries
+        .iter()
+        .zip(&parsed)
+        .enumerate()
+        .filter_map(|(i, ((device, _), p))| p.as_ref().ok().map(|g| (i, (device.as_str(), g))))
+        .collect();
+    let sub: Vec<(&str, &ModelGraph)> = valid.iter().map(|(_, q)| *q).collect();
+    let answers = estimate_batch_shared(store, &sub, cache);
+    let mut out: Vec<Result<(f64, f64), String>> =
+        parsed.into_iter().map(|p| p.map(|_| (0.0, 0.0))).collect();
+    for ((i, _), a) in valid.into_iter().zip(answers) {
+        out[i] = a.map(|e| (e.energy_per_iter, e.variance)).map_err(|e| e.to_string());
+    }
+    out
+}
+
+/// Blocking client for the estimate protocol — used by the `serve1`
+/// experiment, the tests, and scriptable from the CLI.  One request in
+/// flight at a time; `id`s are still checked so a desynced server is an
+/// error, not a wrong answer.
+pub struct EstimateClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl EstimateClient {
+    pub fn connect(addr: &SocketAddr) -> Result<Self> {
+        let writer = TcpStream::connect(addr)?;
+        let reader = BufReader::new(writer.try_clone()?);
+        Ok(Self { reader, writer, next_id: 1 })
+    }
+
+    fn roundtrip(&mut self, msg: Msg) -> Result<Msg> {
+        self.writer.write_all(msg.encode().as_bytes())?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        Msg::decode(&line).ok_or_else(|| anyhow!("undecodable reply: {line:?}"))
+    }
+
+    fn take_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Estimate one model (a [`crate::model::spec`] string) on one
+    /// device class; returns (energy J/iter, variance).
+    pub fn estimate(&mut self, device: &str, model: &str) -> Result<(f64, f64)> {
+        let id = self.take_id();
+        let req =
+            Msg::EstimateRequest { id, device: device.to_string(), model: model.to_string() };
+        match self.roundtrip(req)? {
+            Msg::EstimateReply { id: rid, energy_per_iter, variance } if rid == id => {
+                Ok((energy_per_iter, variance))
+            }
+            Msg::EstimateError { id: rid, error } if rid == id => Err(anyhow!(error)),
+            other => Err(anyhow!("out-of-sync reply: {other:?}")),
+        }
+    }
+
+    /// Estimate a batch of `(device, model-spec)` queries in one
+    /// round-trip; per-query outcomes in query order.
+    pub fn estimate_batch(
+        &mut self,
+        queries: &[(String, String)],
+    ) -> Result<Vec<Result<(f64, f64), String>>> {
+        let id = self.take_id();
+        match self.roundtrip(Msg::EstimateBatch { id, queries: queries.to_vec() })? {
+            Msg::EstimateBatchReply { id: rid, results } if rid == id => Ok(results),
+            Msg::EstimateError { id: rid, error } if rid == id => Err(anyhow!(error)),
+            other => Err(anyhow!("out-of-sync reply: {other:?}")),
+        }
+    }
+
+    /// Write raw bytes (tests: malformed lines, partial requests).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.writer.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Read one reply line (tests, paired with [`EstimateClient::send_raw`]).
+    pub fn read_reply(&mut self) -> Result<Msg> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        Msg::decode(&line).ok_or_else(|| anyhow!("undecodable reply: {line:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::thor::estimator::estimate;
+    use crate::thor::store::GpStore;
+
+    /// A deterministic fitted store covering the cnn5 reference families
+    /// on `device` (quick profile — seconds, not minutes).
+    fn profiled_store(device: &str, seed: u64) -> GpStore {
+        let profile = crate::simdevice::devices::by_name(device).unwrap();
+        let mut dev = crate::simdevice::Device::new(profile, seed);
+        let mut thor =
+            crate::thor::Thor::new(crate::thor::ThorConfig::quick());
+        thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
+        thor.store
+    }
+
+    fn start_daemon(store: GpStore, threads: usize) -> EstimateServerHandle {
+        EstimateServer::bind("127.0.0.1:0", store).unwrap().start(threads).unwrap()
+    }
+
+    #[test]
+    fn serves_single_requests_bit_identical_to_local_estimate() {
+        let store = profiled_store("xavier", 11);
+        let spec = "cnn5:8,16,32,64:16";
+        let expect = estimate(&store, "xavier", &parse_spec(spec).unwrap()).unwrap();
+        let handle = start_daemon(store, 2);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        for _ in 0..3 {
+            let (e, v) = client.estimate("xavier", spec).unwrap();
+            assert_eq!(e.to_bits(), expect.energy_per_iter.to_bits());
+            assert_eq!(v.to_bits(), expect.variance.to_bits());
+        }
+        drop(client);
+        let stats = handle.shutdown();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn batch_replies_match_local_estimates_with_per_query_errors() {
+        let store = profiled_store("xavier", 11);
+        let specs = ["cnn5:8,16,32,64:16", "cnn5:4,8,16,32:16", "nope:1", "cnn5:16,32,64,128:16"];
+        let expected: Vec<Option<(u64, u64)>> = specs
+            .iter()
+            .map(|s| {
+                parse_spec(s).ok().map(|g| {
+                    let e = estimate(&store, "xavier", &g).unwrap();
+                    (e.energy_per_iter.to_bits(), e.variance.to_bits())
+                })
+            })
+            .collect();
+        let handle = start_daemon(store, 2);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        let queries: Vec<(String, String)> =
+            specs.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
+        let got = client.estimate_batch(&queries).unwrap();
+        assert_eq!(got.len(), specs.len());
+        for (g, e) in got.iter().zip(&expected) {
+            match (g, e) {
+                (Ok((ge, gv)), Some((ee, ev))) => {
+                    assert_eq!(ge.to_bits(), *ee);
+                    assert_eq!(gv.to_bits(), *ev);
+                }
+                (Err(msg), None) => assert!(msg.contains("unknown model family"), "{msg}"),
+                other => panic!("mismatched outcome: {other:?}"),
+            }
+        }
+        drop(client);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn unknown_device_and_malformed_lines_answer_errors() {
+        let store = profiled_store("xavier", 11);
+        let handle = start_daemon(store, 2);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        let err = client.estimate("oppo", "cnn5").unwrap_err();
+        assert!(err.to_string().contains("no fitted GP"), "{err}");
+        // Malformed line: one error reply, then the server drops the
+        // connection — and keeps serving new ones.
+        let mut bad = EstimateClient::connect(&handle.addr()).unwrap();
+        bad.send_raw(b"this is not json\n").unwrap();
+        match bad.read_reply().unwrap() {
+            Msg::EstimateError { id: 0, .. } => {}
+            other => panic!("expected EstimateError, got {other:?}"),
+        }
+        assert!(bad.read_reply().is_err(), "connection should be closed after framing break");
+        let (e, _) = client.estimate("xavier", "cnn5:8,16,32,64:16").unwrap();
+        assert!(e > 0.0);
+        drop(client);
+        drop(bad);
+        let stats = handle.shutdown();
+        assert!(stats.errors >= 2);
+    }
+
+    #[test]
+    fn swap_store_serves_the_new_fit_immediately() {
+        let store_a = profiled_store("xavier", 11);
+        let store_b = profiled_store("xavier", 99); // different profiling seed
+        let spec = "cnn5:8,16,32,64:16";
+        let g = parse_spec(spec).unwrap();
+        let ea = estimate(&store_a, "xavier", &g).unwrap().energy_per_iter;
+        let eb = estimate(&store_b, "xavier", &g).unwrap().energy_per_iter;
+        assert_ne!(ea.to_bits(), eb.to_bits(), "seeds must produce different fits");
+        let handle = start_daemon(store_a, 2);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        assert_eq!(client.estimate("xavier", spec).unwrap().0.to_bits(), ea.to_bits());
+        handle.swap_store(store_b);
+        assert_eq!(
+            client.estimate("xavier", spec).unwrap().0.to_bits(),
+            eb.to_bits(),
+            "hot reload must not serve stale cache entries"
+        );
+        drop(client);
+        handle.shutdown();
+    }
+}

@@ -20,6 +20,11 @@
 //! counts feed occupancy-adaptive batching
 //! ([`crate::thor::fit::Batch::Auto`]).
 //!
+//! The same protocol also carries the **estimation-serving** tier
+//! ([`estimate_server`], `thor serve-estimates`): a long-running daemon
+//! that loads fitted stores and answers estimate queries at high rate —
+//! the query-heavy, fit-rarely counterpart of the profiling fleet.
+//!
 //! Invariants (property-tested in `scheduler`, and promoted to
 //! integration level over real sockets in `rust/tests/fleet.rs` and
 //! `rust/tests/backend_equiv.rs`):
@@ -34,11 +39,15 @@
 //!   independent of worker count, scheduling, mid-run worker death, and
 //!   of whether the measurements ran locally or over the fleet.
 
+pub mod estimate_server;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
 pub mod worker;
 
+pub use estimate_server::{
+    BoundEstimateServer, EstimateClient, EstimateServer, EstimateServerHandle, ServeStats,
+};
 pub use protocol::Msg;
 pub use scheduler::{JobQueue, JobState};
 pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer, FleetSpec};

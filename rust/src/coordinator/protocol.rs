@@ -1,17 +1,59 @@
-//! Wire protocol: one JSON object per line.
+//! Wire protocol: one JSON object per line (newline-delimited JSON —
+//! **not** length-prefixed; framing is the `\n` terminator and nothing
+//! else).
 //!
-//! Numbers travel through [`crate::util::json`], whose f64 formatting
-//! is shortest-roundtrip — a `Result`'s energy reaches the leader with
-//! the exact bit pattern the worker measured, which the cross-backend
-//! store byte-equality (`rust/tests/backend_equiv.rs`) depends on.
+//! Floats travel through [`crate::util::json`], whose f64 formatting is
+//! shortest-roundtrip — a `Result`'s energy reaches the leader with the
+//! exact bit pattern the worker measured, which the cross-backend store
+//! byte-equality (`rust/tests/backend_equiv.rs`) depends on; the
+//! roundtrip property below pins the transport to `to_bits()` equality.
+//! Integer ids are a separate concern: an f64 only holds integers
+//! exactly up to 2^53, so ids travel as JSON numbers in the safe range
+//! and as decimal strings beyond it ([`id_to_json`]) — a u64 id
+//! roundtrips losslessly at any magnitude.
+//!
 //! Batched acquisition needs no protocol change: a batch is just
 //! several in-flight `Job`s at once.  Heterogeneous fleets need none
 //! either: `Hello::device` **is** the worker's device class — the
 //! leader's routing key ([`crate::coordinator::scheduler::JobQueue`]
 //! assigns same-class only), so a `Job` never names a device (the
 //! receiving worker is, by routing, of the right class).
+//!
+//! The estimation-serving daemon
+//! ([`crate::coordinator::estimate_server`]) shares this codec: an
+//! `EstimateRequest`/`EstimateBatch` carries a client-chosen correlation
+//! id (echoed in the reply so clients can pipeline), a device class and
+//! a model spec string ([`crate::model::spec`]).
 
 use crate::util::json::Json;
+
+/// Largest integer an f64 represents exactly (2^53).  Ids above this
+/// must not travel as JSON numbers: the `u64 → f64` cast would round,
+/// silently corrupting the id on roundtrip.
+const MAX_SAFE_INT: u64 = 1 << 53;
+
+/// Encode a u64 id losslessly: a JSON number within the f64-exact range,
+/// a decimal string beyond it.
+fn id_to_json(id: u64) -> Json {
+    if id <= MAX_SAFE_INT {
+        Json::Num(id as f64)
+    } else {
+        Json::Str(id.to_string())
+    }
+}
+
+/// Decode an id written by [`id_to_json`].  A JSON number outside the
+/// f64-exact integer range is rejected rather than rounded — a peer that
+/// encodes big ids as numbers corrupted them before they hit the wire.
+fn id_from_json(j: &Json) -> Option<u64> {
+    match j {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= MAX_SAFE_INT as f64 => {
+            Some(*n as u64)
+        }
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
 
 /// Protocol messages.
 #[derive(Clone, Debug, PartialEq)]
@@ -27,6 +69,25 @@ pub enum Msg {
     Idle,
     /// server → worker: profiling finished; worker exits.
     Shutdown,
+    /// client → daemon: estimate one model on one device class.  `id` is
+    /// a client-chosen correlation id, echoed verbatim in the reply;
+    /// `model` is a spec string parsed by [`crate::model::spec`].
+    EstimateRequest { id: u64, device: String, model: String },
+    /// client → daemon: estimate several `(device, model)` pairs in one
+    /// round-trip; the daemon coalesces same-family GP queries across
+    /// the whole batch.
+    EstimateBatch { id: u64, queries: Vec<(String, String)> },
+    /// daemon → client: successful single estimate (mean J/iter and
+    /// predictive variance), bit-identical to a local
+    /// [`crate::thor::estimate`] call against the same store.
+    EstimateReply { id: u64, energy_per_iter: f64, variance: f64 },
+    /// daemon → client: per-query outcomes for an `EstimateBatch`, in
+    /// query order; each entry is `Ok((energy, variance))` or a
+    /// per-query error string (one bad query does not fail the batch).
+    EstimateBatchReply { id: u64, results: Vec<Result<(f64, f64), String>> },
+    /// daemon → client: the request (or the whole connection's framing)
+    /// could not be served; `id` is 0 when the request id was unreadable.
+    EstimateError { id: u64, error: String },
 }
 
 impl Msg {
@@ -38,19 +99,70 @@ impl Msg {
             ]),
             Msg::Job { job_id, family, channels, iterations } => Json::obj(vec![
                 ("type", Json::str("job")),
-                ("job_id", Json::Num(*job_id as f64)),
+                ("job_id", id_to_json(*job_id)),
                 ("family", Json::str(family)),
                 ("channels", Json::arr_f64(&channels.iter().map(|&c| c as f64).collect::<Vec<_>>())),
                 ("iterations", Json::Num(*iterations as f64)),
             ]),
             Msg::Result { job_id, energy_per_iter, device_seconds } => Json::obj(vec![
                 ("type", Json::str("result")),
-                ("job_id", Json::Num(*job_id as f64)),
+                ("job_id", id_to_json(*job_id)),
                 ("energy_per_iter", Json::Num(*energy_per_iter)),
                 ("device_seconds", Json::Num(*device_seconds)),
             ]),
             Msg::Idle => Json::obj(vec![("type", Json::str("idle"))]),
             Msg::Shutdown => Json::obj(vec![("type", Json::str("shutdown"))]),
+            Msg::EstimateRequest { id, device, model } => Json::obj(vec![
+                ("type", Json::str("est")),
+                ("id", id_to_json(*id)),
+                ("device", Json::str(device)),
+                ("model", Json::str(model)),
+            ]),
+            Msg::EstimateBatch { id, queries } => Json::obj(vec![
+                ("type", Json::str("est_batch")),
+                ("id", id_to_json(*id)),
+                (
+                    "queries",
+                    Json::Arr(
+                        queries
+                            .iter()
+                            .map(|(d, m)| {
+                                Json::obj(vec![("device", Json::str(d)), ("model", Json::str(m))])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Msg::EstimateReply { id, energy_per_iter, variance } => Json::obj(vec![
+                ("type", Json::str("est_ok")),
+                ("id", id_to_json(*id)),
+                ("energy_per_iter", Json::Num(*energy_per_iter)),
+                ("variance", Json::Num(*variance)),
+            ]),
+            Msg::EstimateBatchReply { id, results } => Json::obj(vec![
+                ("type", Json::str("est_batch_ok")),
+                ("id", id_to_json(*id)),
+                (
+                    "results",
+                    Json::Arr(
+                        results
+                            .iter()
+                            .map(|r| match r {
+                                Ok((e, v)) => Json::obj(vec![
+                                    ("energy_per_iter", Json::Num(*e)),
+                                    ("variance", Json::Num(*v)),
+                                ]),
+                                Err(msg) => Json::obj(vec![("error", Json::str(msg))]),
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Msg::EstimateError { id, error } => Json::obj(vec![
+                ("type", Json::str("est_err")),
+                ("id", id_to_json(*id)),
+                ("error", Json::str(error)),
+            ]),
         }
     }
 
@@ -58,18 +170,61 @@ impl Msg {
         match j.get("type")?.as_str()? {
             "hello" => Some(Msg::Hello { device: j.get("device")?.as_str()?.to_string() }),
             "job" => Some(Msg::Job {
-                job_id: j.get("job_id")?.as_f64()? as u64,
+                job_id: id_from_json(j.get("job_id")?)?,
                 family: j.get("family")?.as_str()?.to_string(),
                 channels: j.get("channels")?.as_f64_vec()?.iter().map(|&c| c as usize).collect(),
                 iterations: j.get("iterations")?.as_usize()?,
             }),
             "result" => Some(Msg::Result {
-                job_id: j.get("job_id")?.as_f64()? as u64,
+                job_id: id_from_json(j.get("job_id")?)?,
                 energy_per_iter: j.get("energy_per_iter")?.as_f64()?,
                 device_seconds: j.get("device_seconds")?.as_f64()?,
             }),
             "idle" => Some(Msg::Idle),
             "shutdown" => Some(Msg::Shutdown),
+            "est" => Some(Msg::EstimateRequest {
+                id: id_from_json(j.get("id")?)?,
+                device: j.get("device")?.as_str()?.to_string(),
+                model: j.get("model")?.as_str()?.to_string(),
+            }),
+            "est_batch" => Some(Msg::EstimateBatch {
+                id: id_from_json(j.get("id")?)?,
+                queries: j
+                    .get("queries")?
+                    .as_arr()?
+                    .iter()
+                    .map(|q| {
+                        Some((
+                            q.get("device")?.as_str()?.to_string(),
+                            q.get("model")?.as_str()?.to_string(),
+                        ))
+                    })
+                    .collect::<Option<Vec<_>>>()?,
+            }),
+            "est_ok" => Some(Msg::EstimateReply {
+                id: id_from_json(j.get("id")?)?,
+                energy_per_iter: j.get("energy_per_iter")?.as_f64()?,
+                variance: j.get("variance")?.as_f64()?,
+            }),
+            "est_batch_ok" => Some(Msg::EstimateBatchReply {
+                id: id_from_json(j.get("id")?)?,
+                results: j
+                    .get("results")?
+                    .as_arr()?
+                    .iter()
+                    .map(|r| match r.get("error") {
+                        Some(e) => Some(Err(e.as_str()?.to_string())),
+                        None => Some(Ok((
+                            r.get("energy_per_iter")?.as_f64()?,
+                            r.get("variance")?.as_f64()?,
+                        ))),
+                    })
+                    .collect::<Option<Vec<_>>>()?,
+            }),
+            "est_err" => Some(Msg::EstimateError {
+                id: id_from_json(j.get("id")?)?,
+                error: j.get("error")?.as_str()?.to_string(),
+            }),
             _ => None,
         }
     }
@@ -89,39 +244,132 @@ mod tests {
     use crate::util::proptest::{check, Config};
     use crate::util::rng::Pcg64;
 
+    /// Ids across the whole u64 range: small, near the 2^53 boundary,
+    /// and far beyond it — the magnitudes that flushed out the old
+    /// `as f64` corruption.
+    fn arbitrary_id(r: &mut Pcg64) -> u64 {
+        match r.range_usize(0, 3) {
+            0 => r.next_u64() % 1_000_000,
+            1 => (1u64 << 53).wrapping_add(r.next_u64() % 8).wrapping_sub(4),
+            _ => r.next_u64(),
+        }
+    }
+
     fn arbitrary_msg(r: &mut Pcg64) -> Msg {
-        match r.range_usize(0, 4) {
+        match r.range_usize(0, 9) {
             0 => Msg::Hello { device: format!("dev{}", r.range_usize(0, 9)) },
             1 => Msg::Job {
-                job_id: r.next_u64() % 1_000_000,
+                job_id: arbitrary_id(r),
                 family: "hid:conv3s1p:h14w14b10:bn-r-mp2".into(),
                 channels: (0..r.range_usize(1, 2)).map(|_| r.range_usize(1, 512)).collect(),
                 iterations: r.range_usize(1, 1000),
             },
             2 => Msg::Result {
-                job_id: r.next_u64() % 1_000_000,
+                job_id: arbitrary_id(r),
                 energy_per_iter: r.range_f64(1e-6, 10.0),
                 device_seconds: r.range_f64(0.0, 100.0),
             },
             3 => Msg::Idle,
+            4 => Msg::EstimateRequest {
+                id: arbitrary_id(r),
+                device: format!("dev{}", r.range_usize(0, 9)),
+                model: "cnn5:8,16,32,64".into(),
+            },
+            5 => Msg::EstimateBatch {
+                id: arbitrary_id(r),
+                queries: (0..r.range_usize(0, 4))
+                    .map(|i| (format!("dev{}", r.range_usize(0, 9)), format!("m{i}")))
+                    .collect(),
+            },
+            6 => Msg::EstimateReply {
+                id: arbitrary_id(r),
+                energy_per_iter: r.range_f64(1e-6, 10.0),
+                variance: r.range_f64(0.0, 1.0),
+            },
+            7 => Msg::EstimateBatchReply {
+                id: arbitrary_id(r),
+                results: (0..r.range_usize(0, 4))
+                    .map(|i| {
+                        if r.range_usize(0, 4) == 0 {
+                            Err(format!("no family for query {i}"))
+                        } else {
+                            Ok((r.range_f64(1e-6, 10.0), r.range_f64(0.0, 1.0)))
+                        }
+                    })
+                    .collect(),
+            },
+            8 => Msg::EstimateError { id: arbitrary_id(r), error: "boom".into() },
             _ => Msg::Shutdown,
+        }
+    }
+
+    /// Structural equality with every f64 compared by `to_bits()` — the
+    /// contract the module doc promises (shortest-roundtrip bit-exact
+    /// transport), strictly stronger than the derived `PartialEq`.
+    fn bits_eq(a: &Msg, b: &Msg) -> bool {
+        let fe = |x: f64, y: f64| x.to_bits() == y.to_bits();
+        match (a, b) {
+            (
+                Msg::Result { job_id: ai, energy_per_iter: ae, device_seconds: ad },
+                Msg::Result { job_id: bi, energy_per_iter: be, device_seconds: bd },
+            ) => ai == bi && fe(*ae, *be) && fe(*ad, *bd),
+            (
+                Msg::EstimateReply { id: ai, energy_per_iter: ae, variance: av },
+                Msg::EstimateReply { id: bi, energy_per_iter: be, variance: bv },
+            ) => ai == bi && fe(*ae, *be) && fe(*av, *bv),
+            (
+                Msg::EstimateBatchReply { id: ai, results: ar },
+                Msg::EstimateBatchReply { id: bi, results: br },
+            ) => {
+                ai == bi
+                    && ar.len() == br.len()
+                    && ar.iter().zip(br).all(|(x, y)| match (x, y) {
+                        (Ok((xe, xv)), Ok((ye, yv))) => fe(*xe, *ye) && fe(*xv, *yv),
+                        (Err(xm), Err(ym)) => xm == ym,
+                        _ => false,
+                    })
+            }
+            _ => a == b,
         }
     }
 
     #[test]
     fn prop_roundtrip() {
-        check("msg json roundtrip", Config { cases: 200, seed: 31 }, arbitrary_msg, |m| {
+        check("msg json roundtrip", Config { cases: 400, seed: 31 }, arbitrary_msg, |m| {
             let line = m.encode();
             let back = Msg::decode(&line).ok_or("decode failed")?;
-            // floats survive with full precision through our writer
-            match (m, &back) {
-                (Msg::Result { energy_per_iter: a, .. }, Msg::Result { energy_per_iter: b, .. }) => {
-                    crate::prop_assert!((a - b).abs() < 1e-12 * a.abs().max(1.0), "{a} vs {b}");
-                }
-                _ => crate::prop_assert!(m == &back, "{m:?} vs {back:?}"),
-            }
+            // every id exactly, every float bit-for-bit
+            crate::prop_assert!(bits_eq(m, &back), "{m:?} vs {back:?}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn large_job_ids_roundtrip_exactly() {
+        for id in [0, 1, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, u64::MAX - 1, u64::MAX] {
+            let m = Msg::Result { job_id: id, energy_per_iter: 1.0, device_seconds: 2.0 };
+            let back = Msg::decode(&m.encode()).expect("decode");
+            match back {
+                Msg::Result { job_id, .. } => assert_eq!(job_id, id, "id corrupted on the wire"),
+                other => panic!("wrong variant: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn id_codec_rejects_unsafe_numbers() {
+        // A number past 2^53 was rounded before it hit the wire; decoding
+        // it would silently alias some other job. Hard error instead.
+        assert_eq!(id_from_json(&Json::Num(((1u64 << 53) + 2) as f64)), None);
+        assert_eq!(id_from_json(&Json::Num(-1.0)), None);
+        assert_eq!(id_from_json(&Json::Num(1.5)), None);
+        assert_eq!(id_from_json(&Json::Str("not a number".into())), None);
+        // In-range numbers and decimal strings both decode.
+        assert_eq!(id_from_json(&Json::Num(42.0)), Some(42));
+        assert_eq!(id_from_json(&Json::Str(u64::MAX.to_string())), Some(u64::MAX));
+        // Small ids stay plain JSON numbers (wire-compatible with old peers).
+        assert!(matches!(id_to_json(7), Json::Num(_)));
+        assert!(matches!(id_to_json(u64::MAX), Json::Str(_)));
     }
 
     #[test]
@@ -129,5 +377,15 @@ mod tests {
         assert!(Msg::decode("{}").is_none());
         assert!(Msg::decode("not json").is_none());
         assert!(Msg::decode(r#"{"type":"job"}"#).is_none()); // missing fields
+        assert!(Msg::decode(r#"{"type":"est","id":1,"device":"xavier"}"#).is_none());
+    }
+
+    #[test]
+    fn estimate_request_wire_shape() {
+        let m = Msg::EstimateRequest { id: 3, device: "xavier".into(), model: "cnn5".into() };
+        let line = m.encode();
+        assert!(line.contains(r#""type":"est""#), "{line}");
+        assert!(line.ends_with('\n'), "newline-delimited framing");
+        assert_eq!(Msg::decode(&line), Some(m));
     }
 }

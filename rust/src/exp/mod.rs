@@ -16,9 +16,10 @@
 //! | [`pruning_exp`] | fig13 (energy-aware pruning case study)              |
 //! | [`ablation`]    | a14 (point budget), a15 (kernels), a16 (iterations)  |
 //! | [`fleet_exp`]   | fleet1 + fleetN + fleetH (fleet profiling, A5.2)     |
+//! | [`serve_exp`]   | serve1 (estimation-serving daemon under load)        |
 //!
 //! Experiment ids: `fig2 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! fig13 a14 a15 a16 fleet1 fleetN fleetH` (`tab1` aliases `fig8`).
+//! fig13 a14 a15 a16 fleet1 fleetN fleetH serve1` (`tab1` aliases `fig8`).
 //!
 //! # Entry points
 //!
@@ -72,6 +73,7 @@ pub mod pruning_exp;
 pub mod registry;
 pub mod report;
 pub mod runner;
+pub mod serve_exp;
 pub mod tables;
 
 pub use registry::{by_id, ids, Experiment, Subtask, SubtaskOutput};
@@ -81,7 +83,6 @@ pub use runner::{Runner, SuiteResult};
 use crate::baselines::flops_lr::FlopsLr;
 use crate::model::flops::model_train_flops;
 use crate::model::sampler::{sample_n, Family};
-use crate::model::zoo;
 use crate::simdevice::{devices, Device};
 use crate::thor::{Thor, ThorConfig};
 use crate::util::stats::{mape, mean};
@@ -171,17 +172,10 @@ pub fn fit_flops_lr(dev: &mut Device, cfg: &ExpConfig) -> FlopsLr {
 }
 
 /// Reference (full-width) model per family, used to profile THOR.
+/// Canonical definition lives in [`crate::model::spec`] so the serving
+/// tier's model specs resolve to the exact graphs profiling used.
 pub fn reference_model(fam: Family) -> crate::model::ModelGraph {
-    match fam {
-        Family::LeNet5 => zoo::lenet5(&[6, 16, 120, 84], 10),
-        Family::Cnn5 => zoo::cnn5(&[32, 64, 128, 256], 28, 10),
-        Family::Har => zoo::har(&[32, 64, 128], 10),
-        Family::Lstm => zoo::lstm(64, &[128, 128], 2000, 32, 10),
-        Family::Transformer => zoo::transformer(4, 256, 4, 32, 2000, 10),
-        Family::ResNet20 => zoo::resnet(20, 16, 10),
-        Family::ResNet56 => zoo::resnet(56, 16, 10),
-        Family::ResNet110 => zoo::resnet(110, 16, 10),
-    }
+    crate::model::spec::reference(fam)
 }
 
 /// MAPE of THOR and FLOPs-LR on one (device, family) pair.

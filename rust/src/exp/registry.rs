@@ -3,8 +3,8 @@
 //! (`thor exp --list`), the bench harness, and the golden-run tests.
 //!
 //! Adding an experiment = implement the trait in `tables.rs` /
-//! `figures.rs` / `ablation.rs` / `pruning_exp.rs` / `fleet_exp.rs` and
-//! append it to [`registry`].  Order in [`registry`] is the canonical
+//! `figures.rs` / `ablation.rs` / `pruning_exp.rs` / `fleet_exp.rs` /
+//! `serve_exp.rs` and append it to [`registry`].  Order in [`registry`] is the canonical
 //! presentation order (paper order) and is preserved by the
 //! multi-threaded runner.
 //!
@@ -35,7 +35,7 @@
 use std::any::Any;
 
 use crate::exp::report::ExpReport;
-use crate::exp::{ablation, figures, fleet_exp, pruning_exp, tables, ExpConfig};
+use crate::exp::{ablation, figures, fleet_exp, pruning_exp, serve_exp, tables, ExpConfig};
 
 /// Type-erased output of one subtask, downcast by the experiment's
 /// [`Experiment::merge`].
@@ -132,6 +132,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(fleet_exp::Fleet1),
         Box::new(fleet_exp::FleetN),
         Box::new(fleet_exp::FleetH),
+        Box::new(serve_exp::Serve1),
     ]
 }
 
@@ -180,6 +181,7 @@ mod tests {
         assert_eq!(by_id("fleet1").unwrap().id(), "fleet1");
         assert_eq!(by_id("fleetN").unwrap().id(), "fleetN");
         assert_eq!(by_id("fleetH").unwrap().id(), "fleetH");
+        assert_eq!(by_id("serve1").unwrap().id(), "serve1");
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! `serve1` — the estimation-serving daemon under concurrent load.
+//!
+//! Profiles one deterministic store (xavier, cnn5 reference), stands up
+//! a loopback [`EstimateServer`] with a worker per client, then hammers
+//! it from [`N_CLIENTS`] client threads, each sending both single
+//! `EstimateRequest`s and coalescing `EstimateBatch`es over
+//! [`SPECS`]-many cnn5 width variants.  Every reply is compared
+//! bit-for-bit against a direct [`estimate`] call made *before* the
+//! daemon took the store — the serving tier's core contract
+//! (`byte_stable == 1.0`).
+//!
+//! Determinism: the report contains only scheduling-independent values
+//! (query counts, the byte-stability fraction, final cache entry count,
+//! protocol request/error totals).  Throughput and latency are
+//! wall-clock and therefore go to **stderr only** (`eprintln!`), never
+//! into the report or its golden.  (Cache hit/miss *splits* are racy
+//! across client threads — two threads can miss the same key
+//! concurrently — so they stay out of the report too; the final entry
+//! count is a pure function of the query set.)
+
+use std::time::Instant;
+
+use crate::coordinator::{EstimateClient, EstimateServer};
+use crate::exp::registry::Experiment;
+use crate::exp::report::ExpReport;
+use crate::exp::ExpConfig;
+use crate::model::spec::parse_spec;
+use crate::model::zoo;
+use crate::simdevice::{devices, Device};
+use crate::thor::estimator::estimate;
+use crate::thor::Thor;
+
+/// Concurrent client threads (and daemon worker threads — each client
+/// holds its connection for the whole run, so workers ≥ clients).
+const N_CLIENTS: usize = 4;
+
+/// The query mix: cnn5 width variants, all covered by one profile of
+/// the cnn5 reference (that is the point of per-family GPs).
+const SPECS: [&str; 6] = [
+    "cnn5:8,16,32,64:16",
+    "cnn5:4,8,16,32:16",
+    "cnn5:16,32,64,128:16",
+    "cnn5:32,64,128,256:16",
+    "cnn5:24,48,96,20:16",
+    "cnn5:3,30,60,100:16",
+];
+
+const DEVICE: &str = "xavier";
+
+pub struct Serve1;
+
+impl Experiment for Serve1 {
+    fn id(&self) -> &'static str {
+        "serve1"
+    }
+
+    fn description(&self) -> &'static str {
+        "estimation-serving daemon: 4 clients x 6 models over loopback, replies bit-identical to local estimate()"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(
+            self.id(),
+            "estimate-serving daemon under concurrent load (loopback)",
+            cfg,
+            &[DEVICE],
+        );
+        let rounds = if cfg.quick { 8 } else { 50 };
+
+        // Fit once, locally — the daemon never fits.
+        let profile = devices::by_name(DEVICE).expect("device");
+        let mut dev = Device::new(profile, cfg.seed);
+        let mut thor = Thor::new(cfg.thor_cfg());
+        thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
+        let store = thor.store;
+        let families = store.len();
+
+        // Ground truth *before* the daemon takes the store: the exact
+        // bits a local estimate() produces per spec.
+        let expected: Vec<(u64, u64)> = SPECS
+            .iter()
+            .map(|s| {
+                let e = estimate(&store, DEVICE, &parse_spec(s).expect("spec")).expect("covered");
+                (e.energy_per_iter.to_bits(), e.variance.to_bits())
+            })
+            .collect();
+
+        let handle = EstimateServer::bind("127.0.0.1:0", store)
+            .expect("bind loopback")
+            .start(N_CLIENTS)
+            .expect("start daemon");
+        let addr = handle.addr();
+
+        let t_all = Instant::now();
+        let mut joins = Vec::new();
+        for _ in 0..N_CLIENTS {
+            let expected = expected.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut client = EstimateClient::connect(&addr).expect("connect");
+                let batch: Vec<(String, String)> =
+                    SPECS.iter().map(|s| (DEVICE.to_string(), s.to_string())).collect();
+                let (mut ok, mut total) = (0usize, 0usize);
+                let mut lat_us: Vec<f64> = Vec::with_capacity(rounds * (SPECS.len() + 1));
+                for _ in 0..rounds {
+                    for (si, spec) in SPECS.iter().enumerate() {
+                        let t0 = Instant::now();
+                        let (e, v) = client.estimate(DEVICE, spec).expect("estimate");
+                        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                        total += 1;
+                        if (e.to_bits(), v.to_bits()) == expected[si] {
+                            ok += 1;
+                        }
+                    }
+                    let t0 = Instant::now();
+                    let got = client.estimate_batch(&batch).expect("batch");
+                    lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                    for (g, want) in got.iter().zip(&expected) {
+                        total += 1;
+                        if let Ok((e, v)) = g {
+                            if (e.to_bits(), v.to_bits()) == *want {
+                                ok += 1;
+                            }
+                        }
+                    }
+                }
+                (ok, total, lat_us)
+            }));
+        }
+        let (mut ok, mut total) = (0usize, 0usize);
+        let mut lat_us: Vec<f64> = Vec::new();
+        for j in joins {
+            let (o, t, l) = j.join().expect("client thread");
+            ok += o;
+            total += t;
+            lat_us.extend(l);
+        }
+        let wall = t_all.elapsed().as_secs_f64();
+        let cache_entries = handle.cache().len();
+        let stats = handle.shutdown();
+
+        // Wall-clock numbers: stderr only, never the report (goldens).
+        lat_us.sort_by(f64::total_cmp);
+        let p99 = lat_us[((lat_us.len() as f64 * 0.99) as usize).min(lat_us.len() - 1)];
+        eprintln!(
+            "serve1: {total} query answers over {} round-trips in {wall:.2}s \
+             ({:.0} rt/s), p99 round-trip {p99:.0} us  [wall-clock; stderr only]",
+            lat_us.len(),
+            lat_us.len() as f64 / wall.max(1e-9),
+        );
+
+        rep.push_table(
+            "serving-tier load (loopback daemon)",
+            &["clients", "models", "rounds", "answers checked", "bit-identical"],
+            vec![vec![
+                format!("{N_CLIENTS}"),
+                format!("{}", SPECS.len()),
+                format!("{rounds}"),
+                format!("{total}"),
+                format!("{ok}"),
+            ]],
+        );
+        rep.metric("n_queries", total as f64);
+        rep.metric("byte_stable", ok as f64 / total as f64);
+        rep.metric("clients", N_CLIENTS as f64);
+        rep.metric("models", SPECS.len() as f64);
+        rep.metric("families", families as f64);
+        rep.metric("cache_entries", cache_entries as f64);
+        rep.metric("protocol_requests", stats.requests as f64);
+        rep.metric("protocol_errors", stats.errors as f64);
+        rep.note(format!(
+            "{N_CLIENTS} concurrent clients x {rounds} rounds: {ok}/{total} daemon answers \
+             bit-identical to local estimate(); {} family GPs served, {} cache entries \
+             (throughput/latency on stderr — wall-clock never enters the report)",
+            families, cache_entries
+        ));
+        rep
+    }
+}

@@ -247,6 +247,16 @@ impl GpModel {
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Option<Self> {
+        Self::from_json_with(&mut FitWorkspace::new(), j)
+    }
+
+    /// [`GpModel::from_json`] through a caller-owned workspace.  The
+    /// artifact stores (xs, ys, hyper) but not the posterior, so loading
+    /// rebuilds α and K⁻¹ — through [`GpModel::fit_fixed_with`]'s
+    /// scratch-free `chol_inverse_into` path here, so a store load
+    /// precomputes every family's posterior factors exactly once with
+    /// one shared scratch (bit-identical to the naive path; pinned).
+    pub fn from_json_with(ws: &mut FitWorkspace, j: &crate::util::json::Json) -> Option<Self> {
         let kind = match j.get("kind")?.as_str()? {
             "matern52" => KernelKind::Matern52,
             "rbf" => KernelKind::Rbf,
@@ -260,7 +270,7 @@ impl GpModel {
         };
         let xs: Option<Vec<Vec<f64>>> = j.get("xs")?.as_arr()?.iter().map(|x| x.as_f64_vec()).collect();
         let ys = j.get("ys")?.as_f64_vec()?;
-        Self::fit_fixed(kind, hyper, xs?, &ys)
+        Self::fit_fixed_with(ws, kind, hyper, xs?, &ys)
     }
 }
 

@@ -8,6 +8,9 @@
 //!             structured report, `--list` for the registry
 //!   serve     run the fleet fitting leader (TCP)
 //!   worker    run a device worker against a leader
+//!   serve-estimates
+//!             run the estimation-serving daemon: load fitted store
+//!             artifacts and answer est/est_batch queries over TCP
 //!   devices   list the simulated device fleet
 
 use anyhow::{anyhow, Result};
@@ -22,42 +25,38 @@ use thor::util::cli::{parse, Spec};
 fn specs() -> Vec<Spec> {
     vec![
         Spec { name: "device", takes_value: true, help: "device name (oppo|iphone|xavier|tx2|server)" },
-        Spec { name: "model", takes_value: true, help: "model family (lenet5|cnn5|har|lstm|transformer|resnet20|...)" },
-        Spec { name: "store", takes_value: true, help: "GP store JSON path (default thor_store.json)" },
+        Spec { name: "model", takes_value: true, help: "model family (lenet5|cnn5|...); estimate also takes spec strings like cnn5:8,16,32,64" },
+        Spec { name: "store", takes_value: true, help: "GP store JSON path (default thor_store.json); serve-estimates: comma-separated list, merged left-to-right" },
         Spec { name: "seed", takes_value: true, help: "rng seed (default 2025)" },
         Spec { name: "quick", takes_value: false, help: "reduced sample counts" },
         Spec { name: "iterations", takes_value: true, help: "profiling iterations per measurement (default 500)" },
         Spec { name: "batch", takes_value: true, help: "acquisition batch per GP round: integer or 'auto' (live same-class worker count; profile default 1, serve default auto)" },
-        Spec { name: "addr", takes_value: true, help: "leader address (default 127.0.0.1:7707)" },
+        Spec { name: "addr", takes_value: true, help: "serve/worker: leader address (default 127.0.0.1:7707); serve-estimates: bind address (default 127.0.0.1:7708)" },
         Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1; per class with --devices)" },
         Spec { name: "devices", takes_value: true, help: "serve: comma-separated device classes of a heterogeneous fleet (e.g. xavier,tx2,server)" },
         Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
         Spec { name: "list", takes_value: false, help: "exp: list registered experiment ids" },
         Spec { name: "json", takes_value: true, help: "exp: write structured suite report to this path" },
-        Spec { name: "threads", takes_value: true, help: "exp: worker threads (default: all cores, min 2)" },
+        Spec { name: "threads", takes_value: true, help: "exp/serve-estimates: worker threads (default: all cores, min 2)" },
         Spec { name: "help", takes_value: false, help: "print usage" },
     ]
 }
 
 fn family_by_name(name: &str) -> Result<Family> {
-    Ok(match name {
-        "lenet5" => Family::LeNet5,
-        "cnn5" => Family::Cnn5,
-        "har" => Family::Har,
-        "lstm" => Family::Lstm,
-        "transformer" => Family::Transformer,
-        "resnet20" => Family::ResNet20,
-        "resnet56" => Family::ResNet56,
-        "resnet110" => Family::ResNet110,
-        other => return Err(anyhow!("unknown model family '{other}'")),
-    })
+    Family::by_name(name).ok_or_else(|| anyhow!("unknown model family '{name}'"))
 }
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = parse(&argv, &specs()).map_err(|e| anyhow!("{e}\n{}", thor::util::cli::usage("thor", &specs())))?;
     if args.has("help") || args.positional().is_empty() {
-        println!("{}", thor::util::cli::usage("thor <profile|estimate|exp|serve|worker|devices>", &specs()));
+        println!(
+            "{}",
+            thor::util::cli::usage(
+                "thor <profile|estimate|exp|serve|worker|serve-estimates|devices>",
+                &specs()
+            )
+        );
         return Ok(());
     }
     let cmd = args.positional()[0].as_str();
@@ -99,10 +98,11 @@ fn main() -> Result<()> {
         }
         "estimate" => {
             let dev_name = args.get_str("device", "xavier");
-            let fam = family_by_name(args.get_str("model", "cnn5"))?;
             let store = thor::thor::store::GpStore::load(&store_path)?
                 .ok_or_else(|| anyhow!("cannot parse {store_path:?}"))?;
-            let g = exp::reference_model(fam);
+            // Full spec grammar (`cnn5:8,16,32,64:16`), not just family
+            // names — the same strings the serving daemon accepts.
+            let g = thor::model::spec::parse_spec(args.get_str("model", "cnn5"))?;
             let est = thor::thor::estimator::estimate(&store, dev_name, &g)?;
             println!("model {}  on {dev_name}:", g.name);
             for (fam_id, feats, e) in &est.per_layer {
@@ -192,6 +192,42 @@ fn main() -> Result<()> {
             };
             store.save(&store_path)?;
             println!("saved {} family GPs to {store_path:?}", store.len());
+        }
+        "serve-estimates" => {
+            let addr = args.get_str("addr", "127.0.0.1:7708");
+            let threads = args.get_usize("threads", 0)?;
+            // `--store` may name several artifacts (one per fleet run);
+            // merge left-to-right, later artifacts winning on key clash.
+            let mut store = thor::thor::store::GpStore::default();
+            let mut n_artifacts = 0usize;
+            for path in args
+                .get_str("store", "thor_store.json")
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+            {
+                let p = std::path::Path::new(path);
+                let s = thor::thor::store::GpStore::load(p)?
+                    .ok_or_else(|| anyhow!("cannot parse {p:?}"))?;
+                println!("loaded {} family GPs from {p:?}", s.len());
+                store.merge(s);
+                n_artifacts += 1;
+            }
+            if n_artifacts == 0 {
+                return Err(anyhow!("--store named no artifact"));
+            }
+            let families = store.len();
+            let handle = thor::coordinator::EstimateServer::bind(addr, store)?.start(threads)?;
+            println!(
+                "serving estimates on {} ({families} family GPs from {n_artifacts} artifact(s); \
+                 newline-delimited JSON, message types est/est_batch)",
+                handle.addr()
+            );
+            let stats = handle.join();
+            println!(
+                "estimate daemon exited: {} connections, {} requests, {} errors",
+                stats.connections, stats.requests, stats.errors
+            );
         }
         "worker" => {
             let addr = args.get_str("addr", "127.0.0.1:7707");

@@ -8,6 +8,7 @@
 
 pub mod flops;
 pub mod sampler;
+pub mod spec;
 pub mod zoo;
 
 /// Layer type plus the *structural* hyper-parameters that the paper's

@@ -34,6 +34,24 @@ impl Family {
         }
     }
 
+    /// Inverse of [`Family::name`] (the CLI's and the estimate daemon's
+    /// model-spec family token).
+    pub fn by_name(name: &str) -> Option<Family> {
+        Family::ALL.iter().copied().find(|f| f.name() == name)
+    }
+
+    /// Every family, in declaration order.
+    pub const ALL: [Family; 8] = [
+        Family::LeNet5,
+        Family::Cnn5,
+        Family::Har,
+        Family::Lstm,
+        Family::Transformer,
+        Family::ResNet20,
+        Family::ResNet56,
+        Family::ResNet110,
+    ];
+
     pub fn fig8_families() -> [Family; 4] {
         [Family::LeNet5, Family::Cnn5, Family::Har, Family::Lstm]
     }
@@ -106,6 +124,14 @@ mod tests {
                 assert!(model_train_flops(&g) > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn by_name_inverts_name_for_every_family() {
+        for f in Family::ALL {
+            assert_eq!(Family::by_name(f.name()), Some(f));
+        }
+        assert_eq!(Family::by_name("vgg16"), None);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Textual model specs — how a client names a model over the wire.
+//!
+//! The estimate daemon (and the `thor estimate` CLI) receive models as
+//! strings, not graphs.  A spec is
+//!
+//! ```text
+//! <family>[:w1,w2,...[:img[:batch]]]
+//! ```
+//!
+//! where `<family>` is a [`Family::name`] token.  A bare family name
+//! resolves to the canonical full-width reference model (the one
+//! profiling uses, so a freshly profiled store always covers it);
+//! optional channel widths select a variant of the same layer families
+//! — cheap to serve, since one profile covers every width:
+//!
+//! - `cnn5` → reference `cnn5` (widths 32,64,128,256 at img 28)
+//! - `cnn5:8,16,32,64` → those widths, default img/batch
+//! - `cnn5:8,16,32,64:16:10` → explicit img and batch
+//! - `lenet5:6,16,120,84` / `har:32,64,128` → widths (+ optional batch)
+//! - `resnet20:8` → width 8 (+ optional batch); same for resnet56/110
+//! - `lstm` / `transformer` → reference only (their shape space is not
+//!   a flat width vector; variants are out of scope for specs)
+
+use super::sampler::Family;
+use super::{zoo, ModelGraph};
+
+#[derive(Debug, thiserror::Error)]
+pub enum SpecError {
+    #[error("unknown model family '{0}'")]
+    UnknownFamily(String),
+    #[error("bad width list '{0}': expected {1} comma-separated positive integers")]
+    BadWidths(String, usize),
+    #[error("bad numeric field '{0}'")]
+    BadNumber(String),
+    #[error("family '{0}' takes no '{1}' field")]
+    ExtraField(&'static str, String),
+}
+
+/// Canonical full-width reference model per family — the model profiling
+/// runs against, so its families are exactly a fresh store's families.
+pub fn reference(fam: Family) -> ModelGraph {
+    match fam {
+        Family::LeNet5 => zoo::lenet5(&[6, 16, 120, 84], 10),
+        Family::Cnn5 => zoo::cnn5(&[32, 64, 128, 256], 28, 10),
+        Family::Har => zoo::har(&[32, 64, 128], 10),
+        Family::Lstm => zoo::lstm(64, &[128, 128], 2000, 32, 10),
+        Family::Transformer => zoo::transformer(4, 256, 4, 32, 2000, 10),
+        Family::ResNet20 => zoo::resnet(20, 16, 10),
+        Family::ResNet56 => zoo::resnet(56, 16, 10),
+        Family::ResNet110 => zoo::resnet(110, 16, 10),
+    }
+}
+
+fn parse_widths(s: &str, n: usize) -> Result<Vec<usize>, SpecError> {
+    let ws: Vec<usize> = s
+        .split(',')
+        .map(|t| t.trim().parse::<usize>().ok().filter(|&w| w > 0))
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| SpecError::BadWidths(s.to_string(), n))?;
+    if ws.len() != n {
+        return Err(SpecError::BadWidths(s.to_string(), n));
+    }
+    Ok(ws)
+}
+
+fn parse_num(s: &str) -> Result<usize, SpecError> {
+    s.trim().parse::<usize>().ok().filter(|&v| v > 0).ok_or_else(|| SpecError::BadNumber(s.to_string()))
+}
+
+/// Parse a model spec string into a graph (see the module doc for the
+/// grammar).  Deterministic: the same spec always yields the same graph.
+pub fn parse_spec(spec: &str) -> Result<ModelGraph, SpecError> {
+    let mut parts = spec.trim().split(':');
+    let fam_tok = parts.next().unwrap_or("");
+    let fam = Family::by_name(fam_tok).ok_or_else(|| SpecError::UnknownFamily(fam_tok.to_string()))?;
+    let fields: Vec<&str> = parts.collect();
+    if fields.is_empty() {
+        return Ok(reference(fam));
+    }
+    let extra = |i: usize| -> Result<(), SpecError> {
+        match fields.get(i) {
+            Some(f) => Err(SpecError::ExtraField(fam.name(), f.to_string())),
+            None => Ok(()),
+        }
+    };
+    match fam {
+        Family::Cnn5 => {
+            let w = parse_widths(fields[0], 4)?;
+            let img = fields.get(1).map(|s| parse_num(s)).transpose()?.unwrap_or(28);
+            let batch = fields.get(2).map(|s| parse_num(s)).transpose()?.unwrap_or(10);
+            extra(3)?;
+            Ok(zoo::cnn5(&[w[0], w[1], w[2], w[3]], img, batch))
+        }
+        Family::LeNet5 => {
+            let w = parse_widths(fields[0], 4)?;
+            let batch = fields.get(1).map(|s| parse_num(s)).transpose()?.unwrap_or(10);
+            extra(2)?;
+            Ok(zoo::lenet5(&[w[0], w[1], w[2], w[3]], batch))
+        }
+        Family::Har => {
+            let w = parse_widths(fields[0], 3)?;
+            let batch = fields.get(1).map(|s| parse_num(s)).transpose()?.unwrap_or(10);
+            extra(2)?;
+            Ok(zoo::har(&[w[0], w[1], w[2]], batch))
+        }
+        Family::ResNet20 | Family::ResNet56 | Family::ResNet110 => {
+            let depth = match fam {
+                Family::ResNet20 => 20,
+                Family::ResNet56 => 56,
+                _ => 110,
+            };
+            let width = parse_num(fields[0])?;
+            let batch = fields.get(1).map(|s| parse_num(s)).transpose()?.unwrap_or(10);
+            extra(2)?;
+            Ok(zoo::resnet(depth, width, batch))
+        }
+        Family::Lstm | Family::Transformer => Err(SpecError::ExtraField(fam.name(), fields[0].to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thor::parse::parse;
+
+    #[test]
+    fn bare_family_is_the_reference_model() {
+        for fam in Family::ALL {
+            let g = parse_spec(fam.name()).unwrap();
+            assert_eq!(g.layers, reference(fam).layers, "{}", fam.name());
+            g.check_dims().unwrap();
+        }
+    }
+
+    #[test]
+    fn width_variants_share_the_reference_families() {
+        // The whole point of specs: any width variant of a family is
+        // covered by the profile of its reference model.
+        let reference_fams: Vec<String> =
+            parse(&reference(Family::Cnn5)).families.iter().map(|f| f.id()).collect();
+        for spec in ["cnn5:8,16,32,64", "cnn5:4,8,16,32:28", "cnn5:32,64,128,256:28:10"] {
+            let g = parse_spec(spec).unwrap();
+            g.check_dims().unwrap();
+            for f in parse(&g).families {
+                assert!(reference_fams.contains(&f.id()), "{spec}: family {} not covered", f.id());
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_fields_are_honored() {
+        let g = parse_spec("cnn5:8,16,32,64:16:4").unwrap();
+        let r = parse_spec("cnn5:8,16,32,64").unwrap();
+        assert_ne!(g.layers, r.layers, "img/batch fields must matter");
+        let l = parse_spec("lenet5:6,16,120,84:2").unwrap();
+        l.check_dims().unwrap();
+        let rn = parse_spec("resnet20:8").unwrap();
+        rn.check_dims().unwrap();
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        assert!(matches!(parse_spec("vgg16"), Err(SpecError::UnknownFamily(_))));
+        assert!(matches!(parse_spec("cnn5:1,2,3"), Err(SpecError::BadWidths(..))));
+        assert!(matches!(parse_spec("cnn5:a,b,c,d"), Err(SpecError::BadWidths(..))));
+        assert!(matches!(parse_spec("cnn5:8,16,32,64:0"), Err(SpecError::BadNumber(_))));
+        assert!(matches!(parse_spec("cnn5:8,16,32,64:16:10:9"), Err(SpecError::ExtraField(..))));
+        assert!(matches!(parse_spec("lstm:64"), Err(SpecError::ExtraField(..))));
+        assert!(matches!(parse_spec(""), Err(SpecError::UnknownFamily(_))));
+    }
+
+    #[test]
+    fn specs_are_deterministic() {
+        let a = parse_spec("resnet56:12:4").unwrap();
+        let b = parse_spec("resnet56:12:4").unwrap();
+        assert_eq!(a.layers, b.layers);
+    }
+}

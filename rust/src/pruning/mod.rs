@@ -61,7 +61,9 @@ pub fn prune_cnn5(
 
     // §Perf: one memo cache across the whole candidate sweep — the few
     // cnn5 families are re-queried at overlapping widths on every try,
-    // and cached values are bit-identical to fresh predictions.
+    // and cached values are bit-identical to fresh predictions.  The
+    // cache is generation-stamped against the store, so it stays valid
+    // even if the guiding Thor re-profiles mid-sweep.
     let mut cache = EstimateCache::new();
     let mut estimate = |g: &ModelGraph| -> f64 {
         match &guidance {

@@ -13,12 +13,24 @@
 //! to the scalar per-group loop (asserted by tests): predictions are
 //! scattered back and summed in group order, so even the float
 //! accumulation order is unchanged.
+//!
+//! Caches validate against [`GpStore::generation`]: a re-profiled or
+//! hot-reloaded store automatically invalidates memoized predictions, so
+//! no caller has to remember to drop its cache.  The serving tier uses
+//! [`SharedEstimateCache`] — the same memo sharded behind per-shard
+//! `RwLock`s so daemon worker threads read concurrently — and
+//! [`estimate_batch_shared`], which coalesces same-family GP queries
+//! across an entire request batch into single `predict_raw_batch` calls
+//! while keeping every individual answer bit-identical to [`estimate`].
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use crate::model::ModelGraph;
 use crate::thor::parse::{parse, Position};
 use crate::thor::store::GpStore;
+use crate::util::hash::Fnv1a;
 
 #[derive(Debug, thiserror::Error)]
 pub enum EstimateError {
@@ -63,14 +75,18 @@ fn features(g: &crate::thor::parse::Group) -> Vec<f64> {
 /// at the same widths skip the GP entirely; cached values are exactly
 /// what `predict_raw` would return, so results are unchanged.
 ///
-/// **Precondition:** the cache is a memo of one fixed [`GpStore`]
-/// snapshot.  It has no invalidation hook, so if a family is
-/// (re)profiled after entries were cached, drop the cache and start a
-/// fresh one — stale hits would silently mix old-GP and new-GP values.
+/// The cache is a memo of one [`GpStore`] snapshot, identified by its
+/// generation stamp: [`estimate_cached`] compares the stamp on every
+/// call and drops all entries when the store has mutated since they
+/// were filled, so re-profiling a family (or handing the same cache a
+/// different store) can never serve a stale hit.
 #[derive(Default)]
 pub struct EstimateCache {
     /// `"{device}|{family}"` (the [`GpStore`] key convention) → memo.
     map: HashMap<String, HashMap<Vec<u64>, (f64, f64)>>,
+    /// [`GpStore::generation`] the entries were computed against
+    /// (0 = empty, matches no store).
+    generation: u64,
     pub hits: u64,
     pub misses: u64,
 }
@@ -87,12 +103,160 @@ impl EstimateCache {
     pub fn is_empty(&self) -> bool {
         self.map.values().all(|m| m.is_empty())
     }
+
+    /// Drop every entry unless it was computed against exactly this
+    /// store state.  Hit/miss counters survive (they are observability,
+    /// not correctness).
+    fn validate(&mut self, store: &GpStore) {
+        if self.generation != store.generation() {
+            self.map.clear();
+            self.generation = store.generation();
+        }
+    }
+}
+
+/// Number of shards a [`SharedEstimateCache`] defaults to — enough to
+/// keep writer collisions rare at daemon thread counts (a shard is
+/// picked per (device, family), and reads take shared locks anyway).
+const DEFAULT_SHARDS: usize = 16;
+
+/// One lock's worth of [`SharedEstimateCache`] state.
+#[derive(Default)]
+struct CacheShard {
+    /// [`GpStore::generation`] this shard's entries were computed
+    /// against (0 = empty).  Checked under the lock on every access, so
+    /// a hot-reloaded store lazily invalidates shard by shard.
+    generation: u64,
+    map: HashMap<String, HashMap<Vec<u64>, (f64, f64)>>,
+}
+
+/// [`EstimateCache`] for the serving tier: the same
+/// `(device|family, feature-bits) → (mean, var)` memo, sharded by
+/// `(device|family)` hash behind per-shard `RwLock`s so many daemon
+/// threads resolve hits concurrently and writers only contend within
+/// one family's shard.  Generation-stamped per shard against the store,
+/// exactly like [`EstimateCache::validate`].
+///
+/// Entries are pure functions of `(store generation, device, family,
+/// features)`, so racing writers can only ever insert identical values
+/// — the cache is write-idempotent, and lock poisoning is recovered
+/// from (`into_inner`) rather than propagated: a thread that dies
+/// mid-request cannot poison a shard for everyone else.
+pub struct SharedEstimateCache {
+    shards: Vec<RwLock<CacheShard>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SharedEstimateCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_SHARDS)
+    }
+}
+
+impl SharedEstimateCache {
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            shards: (0..n_shards.max(1)).map(|_| RwLock::default()).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_for(&self, key: &str) -> &RwLock<CacheShard> {
+        let mut h = Fnv1a::new();
+        h.write(key.as_bytes());
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total memoized entries across all shards (deterministic for a
+    /// fixed query set: entries are keyed by content, not by timing).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let sh = s.read().unwrap_or_else(|e| e.into_inner());
+                sh.map.values().map(|m| m.len()).sum::<usize>()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// f64 features as exact hash keys (bit patterns; the features are
 /// channel counts, so NaN never appears).
 fn feat_key(feats: &[f64]) -> Vec<u64> {
     feats.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Per-query precomputation shared by every estimation path: parsed
+/// groups flattened to features, family ids, and group indices per
+/// family.
+struct QueryPlan {
+    n: usize,
+    feats: Vec<Vec<f64>>,
+    fam_ids: Vec<String>,
+    assignment: Vec<usize>,
+    /// Group indices per family (first-appearance order = group order of
+    /// each family's first member, so the "first missing family" error
+    /// is the same one the scalar loop would report).
+    by_fam: Vec<Vec<usize>>,
+}
+
+fn plan(model: &ModelGraph) -> QueryPlan {
+    let parsed = parse(model);
+    let n = parsed.groups.len();
+    let feats: Vec<Vec<f64>> = parsed.groups.iter().map(features).collect();
+    let fam_ids: Vec<String> = parsed.families.iter().map(|f| f.id()).collect();
+    let mut by_fam: Vec<Vec<usize>> = vec![Vec::new(); fam_ids.len()];
+    for (gi, &fi) in parsed.assignment.iter().enumerate() {
+        by_fam[fi].push(gi);
+    }
+    QueryPlan { n, feats, fam_ids, assignment: parsed.assignment, by_fam }
+}
+
+impl QueryPlan {
+    /// The first family (in family order, counting only families with
+    /// members) missing from the store — the error [`estimate`]'s scalar
+    /// loop would report.
+    fn first_missing(&self, store: &GpStore, device: &str) -> Option<EstimateError> {
+        for (fi, gidx) in self.by_fam.iter().enumerate() {
+            if !gidx.is_empty() && !store.contains(device, &self.fam_ids[fi]) {
+                return Some(EstimateError::MissingFamily(
+                    self.fam_ids[fi].clone(),
+                    device.to_string(),
+                ));
+            }
+        }
+        None
+    }
+
+    /// Fold resolved per-group (mean, var) pairs in group order — the
+    /// same float accumulation order as the scalar per-group loop.
+    fn fold(self, per_layer_mv: &[(f64, f64)]) -> Estimate {
+        let mut energy = 0.0;
+        let mut variance = 0.0;
+        let mut per_layer = Vec::with_capacity(self.n);
+        for (gi, feat) in self.feats.into_iter().enumerate() {
+            let (m, v) = per_layer_mv[gi];
+            let m = m.max(0.0); // energies are physical
+            energy += m;
+            variance += v;
+            per_layer.push((self.fam_ids[self.assignment[gi]].clone(), feat, m));
+        }
+        Estimate { energy_per_iter: energy, variance, per_layer }
+    }
 }
 
 /// Estimate a model's per-iteration training energy on `device`.
@@ -111,18 +275,9 @@ pub fn estimate_cached(
     model: &ModelGraph,
     cache: &mut EstimateCache,
 ) -> Result<Estimate, EstimateError> {
-    let parsed = parse(model);
-    let n = parsed.groups.len();
-    let feats: Vec<Vec<f64>> = parsed.groups.iter().map(features).collect();
-    let fam_ids: Vec<String> = parsed.families.iter().map(|f| f.id()).collect();
-
-    // group indices per family (first-appearance order = group order of
-    // each family's first member, so the "first missing family" error is
-    // the same one the scalar loop would report)
-    let mut by_fam: Vec<Vec<usize>> = vec![Vec::new(); fam_ids.len()];
-    for (gi, &fi) in parsed.assignment.iter().enumerate() {
-        by_fam[fi].push(gi);
-    }
+    cache.validate(store);
+    let p = plan(model);
+    let QueryPlan { n, ref feats, ref fam_ids, ref by_fam, .. } = p;
 
     let mut per_layer_mv: Vec<(f64, f64)> = vec![(0.0, 0.0); n];
     for (fi, gidx) in by_fam.iter().enumerate() {
@@ -173,19 +328,146 @@ pub fn estimate_cached(
         }
     }
 
-    // fold in group order: same float accumulation order as the scalar
-    // per-group loop
-    let mut energy = 0.0;
-    let mut variance = 0.0;
-    let mut per_layer = Vec::with_capacity(n);
-    for (gi, feat) in feats.into_iter().enumerate() {
-        let (m, v) = per_layer_mv[gi];
-        let m = m.max(0.0); // energies are physical
-        energy += m;
-        variance += v;
-        per_layer.push((fam_ids[parsed.assignment[gi]].clone(), feat, m));
+    Ok(p.fold(&per_layer_mv))
+}
+
+/// [`estimate`] against a [`SharedEstimateCache`] — the daemon's
+/// single-request path.  Identical results to [`estimate`] (it is the
+/// one-query case of [`estimate_batch_shared`]).
+pub fn estimate_shared(
+    store: &GpStore,
+    device: &str,
+    model: &ModelGraph,
+    cache: &SharedEstimateCache,
+) -> Result<Estimate, EstimateError> {
+    estimate_batch_shared(store, &[(device, model)], cache)
+        .pop()
+        .expect("one query in, one result out")
+}
+
+/// Estimate a whole batch of `(device, model)` queries against a shared
+/// concurrent cache, coalescing same-family GP queries **across the
+/// batch**: all cache-missed features of one `(device, family)` — from
+/// every query that touches it — go through one `predict_raw_batch`
+/// call.  Safe because batched GP prediction computes each point
+/// independently (pinned by `predict_raw_batch_matches_scalar_bitwise`),
+/// so batch composition never changes any individual answer: every
+/// returned estimate is bit-identical to a standalone [`estimate`] call,
+/// and errors match per query (one unknown family fails only its own
+/// query).  Results come back in query order.
+pub fn estimate_batch_shared(
+    store: &GpStore,
+    queries: &[(&str, &ModelGraph)],
+    cache: &SharedEstimateCache,
+) -> Vec<Result<Estimate, EstimateError>> {
+    let plans: Vec<QueryPlan> = queries.iter().map(|(_, m)| plan(m)).collect();
+    let errs: Vec<Option<EstimateError>> = queries
+        .iter()
+        .zip(&plans)
+        .map(|((device, _), p)| p.first_missing(store, device))
+        .collect();
+
+    // Gather wanted groups per "{device}|{family}" key across the whole
+    // batch, in first-appearance order (query order, then family order,
+    // then group order — deterministic, and within one query identical
+    // to the per-family order of `estimate_cached`).
+    struct Gather<'a> {
+        stored: &'a crate::thor::store::StoredGp,
+        /// (query index, group index) pairs wanting this family.
+        wants: Vec<(usize, usize)>,
     }
-    Ok(Estimate { energy_per_iter: energy, variance, per_layer })
+    let mut order: Vec<String> = Vec::new();
+    let mut gathers: HashMap<String, Gather<'_>> = HashMap::new();
+    for (qi, ((device, _), p)) in queries.iter().zip(&plans).enumerate() {
+        if errs[qi].is_some() {
+            continue;
+        }
+        for (fi, gidx) in p.by_fam.iter().enumerate() {
+            if gidx.is_empty() {
+                continue;
+            }
+            let fam = &p.fam_ids[fi];
+            let key = format!("{device}|{fam}");
+            let g = gathers.entry(key.clone()).or_insert_with(|| {
+                order.push(key);
+                Gather {
+                    stored: store.get(device, fam).expect("validated by first_missing"),
+                    wants: Vec::new(),
+                }
+            });
+            g.wants.extend(gidx.iter().map(|&gi| (qi, gi)));
+        }
+    }
+
+    let generation = store.generation();
+    let mut per_query_mv: Vec<Vec<(f64, f64)>> =
+        plans.iter().map(|p| vec![(0.0, 0.0); p.n]).collect();
+    for key in &order {
+        let g = &gathers[key];
+        let shard = cache.shard_for(key);
+        let mut misses: Vec<((usize, usize), Vec<u64>)> = Vec::new();
+        {
+            // read pass: shared lock; a shard stamped by a different
+            // store state yields no hits (it is cleared lazily below)
+            let sh = shard.read().unwrap_or_else(|e| e.into_inner());
+            let fam_map = if sh.generation == generation { sh.map.get(key) } else { None };
+            for &(qi, gi) in &g.wants {
+                let k = feat_key(&plans[qi].feats[gi]);
+                match fam_map.and_then(|m| m.get(&k)) {
+                    Some(&mv) => {
+                        per_query_mv[qi][gi] = mv;
+                        cache.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        misses.push(((qi, gi), k));
+                        cache.misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        if misses.is_empty() {
+            continue;
+        }
+        // dedup identical features across the whole batch, then one GP
+        // call for this family
+        let mut uniq: Vec<Vec<f64>> = Vec::new();
+        let mut slot_of: HashMap<&[u64], usize> = HashMap::new();
+        let slots: Vec<usize> = misses
+            .iter()
+            .map(|((qi, gi), k)| {
+                *slot_of.entry(k.as_slice()).or_insert_with(|| {
+                    uniq.push(plans[*qi].feats[*gi].clone());
+                    uniq.len() - 1
+                })
+            })
+            .collect();
+        let mv = g.stored.predict_raw_batch(&uniq);
+        drop(slot_of);
+        // write pass: exclusive lock; restamp-and-clear if the shard was
+        // filled against some other store state.  Values are pure
+        // functions of (generation, key, features), so concurrent
+        // writers can only insert identical entries.
+        let mut sh = shard.write().unwrap_or_else(|e| e.into_inner());
+        if sh.generation != generation {
+            sh.map.clear();
+            sh.generation = generation;
+        }
+        let fam_map = sh.map.entry(key.clone()).or_default();
+        for (((qi, gi), k), &slot) in misses.into_iter().zip(&slots) {
+            per_query_mv[qi][gi] = mv[slot];
+            fam_map.insert(k, mv[slot]);
+        }
+    }
+
+    plans
+        .into_iter()
+        .zip(errs)
+        .zip(per_query_mv)
+        .map(|((p, err), mv)| match err {
+            Some(e) => Err(e),
+            None => Ok(p.fold(&mv)),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -341,6 +623,125 @@ mod tests {
             estimate(&store, "server", &g).unwrap().energy_per_iter.to_bits()
         );
         assert!((a.energy_per_iter - b.energy_per_iter).abs() > 1e-6, "devices must differ");
+    }
+
+    #[test]
+    fn reprofiling_never_serves_a_stale_hit() {
+        // The old contract ("drop the cache yourself on re-profile") is
+        // unenforceable from a daemon; the generation stamp enforces it.
+        let g = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let mut store = synthetic_store(&g, "xavier", 10.0);
+        let mut cache = EstimateCache::new();
+        let before = estimate_cached(&store, "xavier", &g, &mut cache).unwrap();
+        assert!(cache.len() > 0);
+        // re-profile the same families onto the same store: different GP
+        add_synthetic(&mut store, &g, "xavier", 3.0);
+        let after = estimate_cached(&store, "xavier", &g, &mut cache).unwrap();
+        let fresh = estimate(&store, "xavier", &g).unwrap();
+        assert_eq!(
+            after.energy_per_iter.to_bits(),
+            fresh.energy_per_iter.to_bits(),
+            "cache served a stale pre-reprofile hit"
+        );
+        assert!((before.energy_per_iter - after.energy_per_iter).abs() > 1e-6);
+        // and a cache filled from one store must not leak into another
+        let other = synthetic_store(&g, "xavier", 20.0);
+        let x = estimate_cached(&other, "xavier", &g, &mut cache).unwrap();
+        let y = estimate(&other, "xavier", &g).unwrap();
+        assert_eq!(x.energy_per_iter.to_bits(), y.energy_per_iter.to_bits());
+    }
+
+    #[test]
+    fn shared_cache_matches_estimate_bitwise() {
+        let g = zoo::resnet(20, 8, 10);
+        let store = synthetic_store(&g, "server", 3.0);
+        let cache = SharedEstimateCache::default();
+        // cold pass (all misses), then warm pass (all hits): both must
+        // equal the uncached scalar path bit-for-bit
+        for _ in 0..2 {
+            let est = estimate_shared(&store, "server", &g, &cache).unwrap();
+            let direct = estimate(&store, "server", &g).unwrap();
+            assert_eq!(est.energy_per_iter.to_bits(), direct.energy_per_iter.to_bits());
+            assert_eq!(est.variance.to_bits(), direct.variance.to_bits());
+        }
+        assert!(cache.hits() > 0 && cache.misses() > 0);
+        assert!(cache.len() < parse(&g).groups.len(), "dedup should collapse repeats");
+    }
+
+    #[test]
+    fn batch_coalescing_is_bit_identical_per_query() {
+        // Several models sharing families in one batch: coalesced GP
+        // calls must not perturb any individual answer.
+        let wide = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let narrow = zoo::cnn5(&[4, 8, 16, 32], 16, 10);
+        let mut store = synthetic_store(&wide, "xavier", 10.0);
+        add_synthetic(&mut store, &wide, "tx2", 4.0);
+        let cache = SharedEstimateCache::new(4);
+        let queries: Vec<(&str, &ModelGraph)> =
+            vec![("xavier", &wide), ("xavier", &narrow), ("tx2", &wide), ("xavier", &wide)];
+        let got = estimate_batch_shared(&store, &queries, &cache);
+        assert_eq!(got.len(), 4);
+        for ((device, model), r) in queries.iter().zip(&got) {
+            let direct = estimate(&store, device, model).unwrap();
+            let r = r.as_ref().unwrap();
+            assert_eq!(r.energy_per_iter.to_bits(), direct.energy_per_iter.to_bits());
+            assert_eq!(r.variance.to_bits(), direct.variance.to_bits());
+        }
+    }
+
+    #[test]
+    fn batch_errors_are_per_query() {
+        let g = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let store = synthetic_store(&g, "xavier", 10.0);
+        let cache = SharedEstimateCache::default();
+        let got = estimate_batch_shared(&store, &[("oppo", &g), ("xavier", &g)], &cache);
+        assert!(matches!(got[0], Err(EstimateError::MissingFamily(_, ref d)) if d == "oppo"));
+        let ok = got[1].as_ref().unwrap();
+        let direct = estimate(&store, "xavier", &g).unwrap();
+        assert_eq!(ok.energy_per_iter.to_bits(), direct.energy_per_iter.to_bits());
+    }
+
+    #[test]
+    fn shared_cache_invalidates_on_store_swap() {
+        // Hot reload: the same shared cache handed a mutated store must
+        // re-derive every value from the new GPs.
+        let g = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let cache = SharedEstimateCache::default();
+        let store_a = synthetic_store(&g, "xavier", 10.0);
+        let a = estimate_shared(&store_a, "xavier", &g, &cache).unwrap();
+        let store_b = synthetic_store(&g, "xavier", 3.0);
+        let b = estimate_shared(&store_b, "xavier", &g, &cache).unwrap();
+        let direct_b = estimate(&store_b, "xavier", &g).unwrap();
+        assert_eq!(b.energy_per_iter.to_bits(), direct_b.energy_per_iter.to_bits());
+        assert!((a.energy_per_iter - b.energy_per_iter).abs() > 1e-6);
+        // swap back: generation differs again (global counter), no alias
+        let a2 = estimate_shared(&store_a, "xavier", &g, &cache).unwrap();
+        assert_eq!(a2.energy_per_iter.to_bits(), a.energy_per_iter.to_bits());
+    }
+
+    #[test]
+    fn shared_cache_concurrent_readers_stay_bit_identical() {
+        use std::sync::Arc;
+        let g = zoo::resnet(20, 8, 10);
+        let store = Arc::new(synthetic_store(&g, "server", 5.0));
+        let g = Arc::new(g);
+        let cache = Arc::new(SharedEstimateCache::new(4));
+        let expect = estimate(&store, "server", &g).unwrap().energy_per_iter.to_bits();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (store, g, cache) = (store.clone(), g.clone(), cache.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let e = estimate_shared(&store, "server", &g, &cache).unwrap();
+                        assert_eq!(e.energy_per_iter.to_bits(), expect);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.hits() + cache.misses(), 8 * 50 * parse(&g).groups.len() as u64);
     }
 
     #[test]

@@ -26,7 +26,9 @@ pub mod pipeline;
 pub mod profiler;
 pub mod store;
 
-pub use estimator::Estimate;
+pub use estimator::{
+    estimate_batch_shared, estimate_shared, Estimate, EstimateCache, SharedEstimateCache,
+};
 pub use fit::Batch;
 pub use measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurement, Measurer};
 pub use parse::{FamilyKey, ParsedModel, Position};

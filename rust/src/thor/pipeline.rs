@@ -449,8 +449,9 @@ impl Thor {
     /// [`Thor::estimate`] with a caller-owned memo cache — thread one
     /// cache through a candidate sweep (e.g. the pruning search) so
     /// repeated family×width queries skip the GP.  Results are
-    /// bit-identical to [`Thor::estimate`].  The cache memoizes this
-    /// store's *current* GPs: drop it if [`Thor::profile`] runs again.
+    /// bit-identical to [`Thor::estimate`].  The cache validates
+    /// against the store's generation stamp, so it self-invalidates if
+    /// [`Thor::profile`] runs again between calls.
     pub fn estimate_cached(
         &self,
         device: &str,

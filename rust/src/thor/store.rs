@@ -2,11 +2,29 @@
 //! is a "one-time endeavor as the resulted models are reusable" — the
 //! store is that reuse boundary, serialized as JSON so the decoupled
 //! server (coordinator) can ship models across the wire and to disk.
+//!
+//! Every store carries a process-local **generation** stamp, refreshed
+//! from a global counter on each mutation (insert/merge/load).  Caches
+//! that memoize per-store predictions ([`crate::thor::EstimateCache`],
+//! [`crate::thor::SharedEstimateCache`]) validate against it, so
+//! re-profiling a family or hot-reloading a daemon's store invalidates
+//! stale entries automatically.  The stamp never enters the serialized
+//! artifact — store JSON stays byte-stable across runs.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::gp::GpModel;
+use crate::gp::{FitWorkspace, GpModel};
 use crate::util::json::Json;
+
+/// Process-wide mutation counter: every store mutation gets a stamp no
+/// other store instance has ever held, so a cache validated against one
+/// store can never alias a hit from another.
+static NEXT_GENERATION: AtomicU64 = AtomicU64::new(1);
+
+fn next_generation() -> u64 {
+    NEXT_GENERATION.fetch_add(1, Ordering::Relaxed)
+}
 
 /// A fitted family model plus its feature normalizers.
 #[derive(Clone, Debug)]
@@ -82,8 +100,15 @@ impl StoredGp {
     }
 
     pub fn from_json(j: &Json) -> Option<Self> {
+        Self::from_json_with(&mut FitWorkspace::new(), j)
+    }
+
+    /// [`StoredGp::from_json`] through a caller-owned fit workspace, so a
+    /// whole-store load shares one scratch across every family's
+    /// posterior (α, K⁻¹) reconstruction.
+    pub fn from_json_with(ws: &mut FitWorkspace, j: &Json) -> Option<Self> {
         Some(Self {
-            gp: GpModel::from_json(j.get("gp")?)?,
+            gp: GpModel::from_json_with(ws, j.get("gp")?)?,
             x_max: j.get("x_max")?.as_f64_vec()?,
             log_x: j.get("log_x")?.as_bool()?,
             log_y: j.get("log_y")?.as_bool()?,
@@ -95,9 +120,16 @@ impl StoredGp {
 }
 
 /// (device, family-id) → fitted GP.
-#[derive(Default)]
 pub struct GpStore {
     map: BTreeMap<String, StoredGp>,
+    /// See the module doc: refreshed on every mutation, never serialized.
+    generation: u64,
+}
+
+impl Default for GpStore {
+    fn default() -> Self {
+        Self { map: BTreeMap::new(), generation: next_generation() }
+    }
 }
 
 fn key(device: &str, family: &str) -> String {
@@ -109,8 +141,15 @@ impl GpStore {
         Self::default()
     }
 
+    /// The current mutation stamp.  Unique across all live stores in
+    /// this process; compare-and-clear caches against it.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
     pub fn insert(&mut self, device: &str, family: &str, gp: StoredGp) {
         self.map.insert(key(device, family), gp);
+        self.generation = next_generation();
     }
 
     pub fn get(&self, device: &str, family: &str) -> Option<&StoredGp> {
@@ -133,6 +172,7 @@ impl GpStore {
     /// fleet artifact).  Key collisions resolve to `other`'s entry.
     pub fn merge(&mut self, other: GpStore) {
         self.map.extend(other.map);
+        self.generation = next_generation();
     }
 
     /// Fitted families for one device class.
@@ -155,11 +195,15 @@ impl GpStore {
     }
 
     pub fn from_json(j: &Json) -> Option<Self> {
+        // One workspace across all families: each entry's posterior
+        // (α, K⁻¹) is rebuilt exactly once at load through the
+        // scratch-free `chol_inverse_into` path.
+        let mut ws = FitWorkspace::new();
         let mut map = BTreeMap::new();
         for (k, v) in j.as_obj()? {
-            map.insert(k.clone(), StoredGp::from_json(v)?);
+            map.insert(k.clone(), StoredGp::from_json_with(&mut ws, v)?);
         }
-        Some(Self { map })
+        Some(Self { map, generation: next_generation() })
     }
 
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
@@ -250,6 +294,33 @@ mod tests {
         let (d, f) = st.cost_seconds("xavier");
         assert!((d - 25.0).abs() < 1e-9);
         assert!((f - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn every_mutation_bumps_generation_and_instances_never_share() {
+        let mut a = GpStore::new();
+        let b = GpStore::new();
+        assert_ne!(a.generation(), b.generation(), "fresh stores must not alias");
+        let g0 = a.generation();
+        a.insert("xavier", "f1", toy_stored());
+        let g1 = a.generation();
+        assert_ne!(g0, g1, "insert must restamp");
+        let mut other = GpStore::new();
+        other.insert("tx2", "f1", toy_stored());
+        a.merge(other);
+        assert_ne!(a.generation(), g1, "merge must restamp");
+        // Reload from JSON is a new logical store: new stamp too.
+        let back = GpStore::from_json(&Json::parse(&a.to_json().to_string()).unwrap()).unwrap();
+        assert_ne!(back.generation(), a.generation());
+    }
+
+    #[test]
+    fn generation_never_enters_the_artifact() {
+        let mut st = GpStore::new();
+        st.insert("xavier", "f1", toy_stored());
+        let before = st.to_json().to_string();
+        st.insert("xavier", "f1", toy_stored()); // same content, new stamp
+        assert_eq!(before, st.to_json().to_string(), "artifact must stay byte-stable");
     }
 
     #[test]

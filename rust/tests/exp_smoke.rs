@@ -130,6 +130,21 @@ fn fleeth_single_leader_serves_all_three_classes() {
 }
 
 #[test]
+fn serve1_daemon_answers_are_byte_stable() {
+    let rep = run("serve1");
+    assert!(rep.error.is_none(), "{:?}", rep.error);
+    assert!(rep.get_metric("n_queries").unwrap() > 0.0);
+    assert_eq!(
+        rep.get_metric("byte_stable").unwrap(),
+        1.0,
+        "daemon answers diverged from local estimate()"
+    );
+    assert_eq!(rep.get_metric("protocol_errors").unwrap(), 0.0);
+    assert!(rep.get_metric("cache_entries").unwrap() > 0.0, "cache never populated");
+    assert_eq!(rep.get_metric("clients").unwrap(), 4.0);
+}
+
+#[test]
 fn mape_pair_runs_on_every_device() {
     for dev in ["xavier", "tx2"] {
         let (thor_m, flops_m, report) =

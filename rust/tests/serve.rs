@@ -1,0 +1,170 @@
+//! Integration tests for the estimation-serving daemon
+//! (`thor serve-estimates` / [`thor::coordinator::estimate_server`]):
+//! the serving tier's two load-bearing promises, checked over real
+//! loopback sockets.
+//!
+//! 1. **Bit-identity under concurrency** — any number of concurrent
+//!    clients, interleaving single and batch requests, receive answers
+//!    bit-for-bit equal to a direct local `estimate()` against the same
+//!    store.  The shared cache, batch coalescing, and thread scheduling
+//!    must never perturb a single ULP.
+//! 2. **Disconnect robustness** — a client dying mid-request (half a
+//!    line, garbage framing, or a silent drop) ends only its own
+//!    connection: the accept loop keeps serving and the shared cache is
+//!    neither poisoned nor corrupted (later answers stay bit-identical).
+
+use thor::coordinator::{EstimateClient, EstimateServer, EstimateServerHandle, Msg};
+use thor::model::spec::parse_spec;
+use thor::model::zoo;
+use thor::simdevice::{devices, Device};
+use thor::thor::estimator::estimate;
+use thor::thor::store::GpStore;
+use thor::thor::{Thor, ThorConfig};
+
+/// Deterministic fitted store covering the cnn5 families on one device.
+fn profiled_store(device: &str, seed: u64) -> GpStore {
+    let profile = devices::by_name(device).expect("device");
+    let mut dev = Device::new(profile, seed);
+    let mut thor = Thor::new(ThorConfig::quick());
+    thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
+    thor.store
+}
+
+const SPECS: [&str; 4] =
+    ["cnn5:8,16,32,64:16", "cnn5:4,8,16,32:16", "cnn5:16,32,64,128:16", "cnn5:24,48,96,20:16"];
+
+/// (energy, variance) bit patterns a local estimate() produces per spec.
+fn expected_bits(store: &GpStore, device: &str) -> Vec<(u64, u64)> {
+    SPECS
+        .iter()
+        .map(|s| {
+            let e = estimate(store, device, &parse_spec(s).unwrap()).unwrap();
+            (e.energy_per_iter.to_bits(), e.variance.to_bits())
+        })
+        .collect()
+}
+
+fn start_daemon(store: GpStore, threads: usize) -> EstimateServerHandle {
+    EstimateServer::bind("127.0.0.1:0", store).unwrap().start(threads).unwrap()
+}
+
+#[test]
+fn six_concurrent_clients_get_bit_identical_answers() {
+    const CLIENTS: usize = 6;
+    const ROUNDS: usize = 10;
+    let store = profiled_store("xavier", 21);
+    let expected = expected_bits(&store, "xavier");
+    let handle = start_daemon(store, CLIENTS);
+    let addr = handle.addr();
+
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let expected = expected.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = EstimateClient::connect(&addr).expect("connect");
+            let batch: Vec<(String, String)> =
+                SPECS.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
+            for r in 0..ROUNDS {
+                // Start each client at a different spec so the cache
+                // sees genuinely interleaved access patterns.
+                for i in 0..SPECS.len() {
+                    let si = (c + r + i) % SPECS.len();
+                    let (e, v) = client.estimate("xavier", SPECS[si]).expect("estimate");
+                    assert_eq!(
+                        (e.to_bits(), v.to_bits()),
+                        expected[si],
+                        "client {c} round {r} spec {si}: daemon answer diverged"
+                    );
+                }
+                let got = client.estimate_batch(&batch).expect("batch");
+                for (si, g) in got.iter().enumerate() {
+                    let (e, v) = g.as_ref().expect("batch entry");
+                    assert_eq!((e.to_bits(), v.to_bits()), expected[si], "batch spec {si}");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread");
+    }
+    let stats = handle.shutdown();
+    // >= not ==: a shutdown-unblocking dummy connect can in principle be
+    // counted if a worker's accept races the (relaxed) stop-flag store.
+    assert!(stats.connections >= CLIENTS as u64, "{} connections", stats.connections);
+    assert_eq!(stats.requests, (CLIENTS * ROUNDS * (SPECS.len() + 1)) as u64);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn killed_mid_request_clients_cannot_wedge_the_daemon_or_poison_the_cache() {
+    let store = profiled_store("xavier", 22);
+    let expected = expected_bits(&store, "xavier");
+    let handle = start_daemon(store, 3);
+    let addr = handle.addr();
+
+    // Warm the cache through a well-behaved client first.
+    let mut good = EstimateClient::connect(&addr).unwrap();
+    let (e, v) = good.estimate("xavier", SPECS[0]).unwrap();
+    assert_eq!((e.to_bits(), v.to_bits()), expected[0]);
+
+    // Abuse the daemon in every way a dying client can.
+    {
+        // Half a request line, then a silent drop (no newline ever comes).
+        let mut half = EstimateClient::connect(&addr).unwrap();
+        half.send_raw(b"{\"type\":\"est\",\"id\":1,\"dev").unwrap();
+        drop(half);
+    }
+    {
+        // Garbage framing: one error reply, then the server hangs up.
+        let mut garbage = EstimateClient::connect(&addr).unwrap();
+        garbage.send_raw(b"%%% not json at all %%%\n").unwrap();
+        match garbage.read_reply().unwrap() {
+            Msg::EstimateError { id: 0, .. } => {}
+            other => panic!("expected a framing error reply, got {other:?}"),
+        }
+        assert!(garbage.read_reply().is_err(), "connection must close after framing break");
+    }
+    {
+        // A valid request whose reply the client never reads.
+        let mut rude = EstimateClient::connect(&addr).unwrap();
+        rude.send_raw(
+            b"{\"type\":\"est\",\"id\":7,\"device\":\"xavier\",\"model\":\"cnn5:8,16,32,64:16\"}\n",
+        )
+        .unwrap();
+        drop(rude);
+    }
+
+    // The daemon must still serve — the original connection and fresh
+    // ones — with answers still bit-identical to the pre-abuse truth.
+    for (si, want) in expected.iter().enumerate() {
+        let (e, v) = good.estimate("xavier", SPECS[si]).unwrap();
+        assert_eq!((e.to_bits(), v.to_bits()), *want, "surviving connection, spec {si}");
+    }
+    drop(good);
+    for (si, want) in expected.iter().enumerate() {
+        let mut fresh = EstimateClient::connect(&addr).unwrap();
+        let (e, v) = fresh.estimate("xavier", SPECS[si]).unwrap();
+        assert_eq!((e.to_bits(), v.to_bits()), *want, "fresh connection, spec {si}");
+    }
+    let stats = handle.shutdown();
+    assert!(stats.errors >= 1, "the garbage line must have been counted");
+    assert!(!handle_is_wedged(stats.requests), "daemon stopped serving requests");
+}
+
+/// Trivial readability helper: by the time shutdown returns we must have
+/// served the warm-up, the rude request, and the 2×4 post-abuse sweeps.
+fn handle_is_wedged(requests_served: u64) -> bool {
+    requests_served < (1 + 1 + 2 * SPECS.len()) as u64
+}
+
+#[test]
+fn shutdown_message_is_a_polite_close_not_an_error() {
+    let store = profiled_store("xavier", 23);
+    let handle = start_daemon(store, 2);
+    let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+    client.send_raw(Msg::Shutdown.encode().as_bytes()).unwrap();
+    assert!(client.read_reply().is_err(), "server should close after Shutdown");
+    drop(client);
+    let stats = handle.shutdown();
+    assert_eq!(stats.errors, 0);
+}
