@@ -50,5 +50,5 @@ pub use estimate_server::{
 };
 pub use protocol::Msg;
 pub use scheduler::{JobQueue, JobState};
-pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer, FleetSpec};
+pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer, FleetSpec, ServeOptions};
 pub use worker::{class_seed, job_seed, DeviceWorker};

@@ -17,7 +17,11 @@
 //! either: `Hello::device` **is** the worker's device class — the
 //! leader's routing key ([`crate::coordinator::scheduler::JobQueue`]
 //! assigns same-class only), so a `Job` never names a device (the
-//! receiving worker is, by routing, of the right class).
+//! receiving worker is, by routing, of the right class).  Neither does
+//! worker rejoin: a restarted worker reconnects and re-`Hello`s, and
+//! the leader treats the new connection as a fresh worker id of the
+//! declared class — there is no resume token, because jobs lost with
+//! the old connection were already requeued on its disconnect.
 //!
 //! The estimation-serving daemon
 //! ([`crate::coordinator::estimate_server`]) shares this codec: an

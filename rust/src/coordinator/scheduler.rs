@@ -10,6 +10,14 @@
 //! heterogeneous fleet never measures a job on the wrong silicon: a
 //! dead worker's jobs re-queue, but only same-class peers can pick them
 //! up (class-scoped requeue falls out of class-scoped assignment).
+//!
+//! Worker ids are opaque here: the queue never enumerates workers, it
+//! only answers `assign(worker, class)` — which is what makes the fleet
+//! *elastic* for free.  A late-joining or rejoining worker (a fresh
+//! connection id the leader admits mid-round) starts taking same-class
+//! work on its first `assign`, and the exactly-once / class-affinity
+//! invariants hold under arbitrary join/death/rejoin schedules
+//! (property-tested in `rust/tests/properties.rs`).
 
 use std::collections::BTreeMap;
 

@@ -43,11 +43,31 @@
 //! ones legitimately diverge from healthy ones.  If an entire
 //! scheduled class dies, `serve` errors instead of emitting a
 //! class-less store.
+//!
+//! # Elasticity (worker rejoin, leader checkpoint/resume)
+//!
+//! The accept loop never stops: a worker may connect (or reconnect)
+//! at any point of the run.  A rejoining worker is simply a **new
+//! connection id** whose `Hello` folds it into its declared class —
+//! `live_of`, [`Measurer::occupancy`] (feeding `Batch::Auto`) and the
+//! batch-affinity routing all pick it up from the next event on, and
+//! the [`JobQueue`]'s class-scoped assignment admits the new id without
+//! special cases.  The dead id stays retired (its in-flight jobs were
+//! requeued on disconnect), so the exactly-once ledgers never conflate
+//! incarnations.
+//!
+//! A leader can additionally persist its progress
+//! ([`ServeOptions::checkpointer`]) and a successor can resume from the
+//! checkpoint ([`ServeOptions::resume`]): completed families load into
+//! the store, in-flight acquisition machines replay bit-identically
+//! from their journals (see [`crate::thor::checkpoint`]), so the
+//! resumed final store is byte-identical to an uninterrupted run's.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -55,8 +75,9 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::protocol::Msg;
 use crate::coordinator::scheduler::JobQueue;
 use crate::model::ModelGraph;
-use crate::thor::measure::{MeasureError, MeasureRequest, Measurement, Measurer};
-use crate::thor::pipeline::ThorConfig;
+use crate::thor::checkpoint::{Checkpoint, Checkpointer};
+use crate::thor::measure::{AbortAfter, MeasureError, MeasureRequest, Measurement, Measurer};
+use crate::thor::pipeline::{ProfileOptions, ThorConfig};
 use crate::thor::store::GpStore;
 use crate::thor::Thor;
 
@@ -73,7 +94,10 @@ pub struct FleetSpec {
     /// legacy mode: a single-class fleet whose class is learned from
     /// the first `Hello` (PR-4 behavior, bit-compatible).
     pub classes: Vec<(String, usize)>,
-    /// Total workers to accept (= sum of class counts when typed).
+    /// Expected initial fleet size (= sum of class counts when typed)
+    /// — the formation quorum, *not* an accept cap: the leader keeps
+    /// accepting connections after formation so workers can late-join
+    /// or rejoin mid-run.
     pub total: usize,
     /// Formation window (see [`FORMATION_GRACE`]); tests shrink it.
     pub grace: Duration,
@@ -108,9 +132,11 @@ pub struct FleetRun {
     pub jobs_submitted: usize,
     /// Jobs completed (each exactly once; duplicates are dropped).
     pub jobs_done: usize,
-    /// Completed jobs per worker index (connection order), length =
-    /// the spec's total.  Deterministic for homogeneous fleets; for
-    /// mixed fleets the id ↔ class mapping follows connection order,
+    /// Completed jobs per worker index (connection order).  Starts at
+    /// the spec's total and grows when workers late-join or rejoin —
+    /// a rejoining worker is a fresh connection id, so its two
+    /// incarnations occupy two slots.  Deterministic for healthy
+    /// homogeneous fleets; under churn the split is timing-dependent,
     /// so reports should aggregate [`FleetRun::per_class`] instead.
     pub per_worker: Vec<usize>,
     /// Completed jobs per device class, sorted by class name — a pure
@@ -194,12 +220,40 @@ impl BoundFleetServer {
     /// jobs disconnects — there is no partial-store fallback: a store
     /// must be a complete pure function of the config or nothing.
     pub fn serve_spec(self, reference: &ModelGraph, spec: FleetSpec) -> Result<FleetRun> {
+        self.serve_spec_with(reference, spec, ServeOptions::default())
+    }
+
+    /// [`BoundFleetServer::serve_spec`] with elasticity options:
+    /// resume from a leader checkpoint, write checkpoints as the run
+    /// progresses, and (tests/chaos only) die at a deterministic
+    /// joint-batch boundary.
+    pub fn serve_spec_with(
+        self,
+        reference: &ModelGraph,
+        spec: FleetSpec,
+        opts: ServeOptions<'_>,
+    ) -> Result<FleetRun> {
         let BoundFleetServer { cfg, listener, addr: _ } = self;
         let grace = spec.grace;
         let mut fleet = FleetMeasurer::accept(listener, spec, cfg.iterations);
         fleet.form(grace).map_err(|e| anyhow!("fleet formation failed: {e}"))?;
         let mut thor = Thor::new(cfg);
-        thor.profile(&mut fleet, reference).map_err(|e| anyhow!("fleet profiling failed: {e}"))?;
+        let mut popts = ProfileOptions::default();
+        if let Some(ck) = opts.resume {
+            // Completed families skip via store idempotency; in-flight
+            // machines replay from their journals at stage activation.
+            thor.store = ck.store;
+            popts.resume = ck.inflight;
+        }
+        popts.checkpointer = opts.checkpointer;
+        match opts.abort_after_rounds {
+            Some(limit) => {
+                let mut dying = AbortAfter::new(&mut fleet, limit);
+                thor.profile_with(&mut dying, reference, popts)
+            }
+            None => thor.profile_with(&mut fleet, reference, popts),
+        }
+        .map_err(|e| anyhow!("fleet profiling failed: {e}"))?;
         fleet.shutdown();
         let per_class: Vec<(String, usize)> = fleet
             .queue
@@ -214,11 +268,30 @@ impl BoundFleetServer {
             store: thor.store,
             jobs_submitted: fleet.queue.submitted(),
             jobs_done: fleet.queue.done(),
-            per_worker: fleet.per_worker,
+            per_worker: std::mem::take(&mut fleet.per_worker),
             per_class,
             requeued: fleet.requeued,
         })
     }
+}
+
+/// Elasticity knobs for [`BoundFleetServer::serve_spec_with`].
+#[derive(Default)]
+pub struct ServeOptions<'a> {
+    /// Resume from a previous leader's checkpoint: its store seeds this
+    /// run (completed families are never re-measured) and its journals
+    /// replay the in-flight acquisition machines bit-identically.
+    pub resume: Option<Checkpoint>,
+    /// Write an atomic checkpoint every k absorbed rounds (see
+    /// [`Checkpointer`]).
+    pub checkpointer: Option<&'a mut Checkpointer>,
+    /// Fault injection: after this many joint batches have been
+    /// measured and absorbed, the next one errors before any of its
+    /// jobs are submitted — the leader-kill analogue of
+    /// [`crate::coordinator::DeviceWorker::run_limited`], landing
+    /// exactly "between absorbs" so chaos tests kill leaders at a
+    /// deterministic, checkpointable boundary.
+    pub abort_after_rounds: Option<usize>,
 }
 
 /// The fleet as a measurement backend: a batch of requests (possibly
@@ -246,20 +319,35 @@ pub struct FleetMeasurer {
     /// Jobs carry this iteration count (the leader's ThorConfig) — kept
     /// here so the measurer can sanity-check request batches.
     iterations: usize,
+    /// Signals the accept thread to exit (see
+    /// [`FleetMeasurer::stop_accept`]).
+    accept_stop: Arc<AtomicBool>,
+    /// The listener's bound address — the stop path connects to it once
+    /// to unblock the accept thread.
+    local_addr: Option<SocketAddr>,
 }
 
 impl FleetMeasurer {
-    /// Start accepting up to `spec.total` connections on `listener`.
+    /// Start accepting connections on `listener` — indefinitely, not
+    /// capped at `spec.total`: elasticity means a worker may connect
+    /// (late-join) or reconnect (rejoin, a fresh id) at any point of
+    /// the run.  The thread exits when [`FleetMeasurer::stop_accept`]
+    /// fires or the event channel's receiver is gone.
     fn accept(listener: TcpListener, spec: FleetSpec, iterations: usize) -> Self {
         let (tx, rx) = mpsc::channel::<Event>();
         let accept_tx = tx.clone();
         let expect_workers = spec.total;
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let stop = accept_stop.clone();
+        let local_addr = listener.local_addr().ok();
         std::thread::spawn(move || {
             for (i, stream) in listener.incoming().enumerate() {
+                if stop.load(Ordering::SeqCst) {
+                    break; // the wake-up connect itself lands here
+                }
                 let Ok(stream) = stream else { break };
-                let _ = accept_tx.send(Event::Connected(i, stream));
-                if i + 1 >= expect_workers {
-                    break;
+                if accept_tx.send(Event::Connected(i, stream)).is_err() {
+                    break; // measurer dropped: nobody left to serve
                 }
             }
         });
@@ -277,6 +365,21 @@ impl FleetMeasurer {
             spec,
             started: Instant::now(),
             iterations,
+            accept_stop,
+            local_addr,
+        }
+    }
+
+    /// Stop the endless accept loop: raise the flag, then poke the
+    /// listener with one dummy connection so the blocking `accept`
+    /// returns and observes it (the estimate daemon's shutdown idiom).
+    /// Idempotent; called from [`FleetMeasurer::shutdown`] and `Drop`
+    /// so an erroring serve never leaks the thread or the port.
+    fn stop_accept(&mut self) {
+        if !self.accept_stop.swap(true, Ordering::SeqCst) {
+            if let Some(addr) = self.local_addr {
+                let _ = TcpStream::connect(addr);
+            }
         }
     }
 
@@ -391,6 +494,10 @@ impl FleetMeasurer {
                 });
             }
             Event::Message(w, Msg::Hello { device }) => {
+                // A rejoining worker arrives here as a brand-new id:
+                // this insert is the whole re-admission path — from the
+                // next `live_of`/`occupancy`/affinity computation on,
+                // the id serves its declared class like any founder.
                 self.helloed.insert(w);
                 if self.device_name.is_empty() {
                     self.device_name = device.clone();
@@ -400,9 +507,12 @@ impl FleetMeasurer {
             Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds }) => {
                 // exactly-once: stale/duplicate completions are dropped
                 if self.queue.complete(job_id, w) {
-                    if w < self.per_worker.len() {
-                        self.per_worker[w] += 1;
+                    // Late joiners/rejoiners have ids past the spec's
+                    // total: grow the ledger instead of dropping them.
+                    if w >= self.per_worker.len() {
+                        self.per_worker.resize(w + 1, 0);
                     }
+                    self.per_worker[w] += 1;
                     self.done.insert(job_id, Measurement { energy_per_iter, device_seconds });
                 }
             }
@@ -465,12 +575,22 @@ impl FleetMeasurer {
         self.queue.classes_outstanding().into_iter().find(|c| self.live_of(c).is_empty())
     }
 
-    /// Tell every remaining worker to exit.
+    /// Tell every remaining worker to exit and stop accepting new ones.
     pub fn shutdown(&mut self) {
         for (_, s) in self.writers.iter_mut() {
             let _ = s.write_all(Msg::Shutdown.encode().as_bytes());
         }
         self.writers.clear();
+        self.stop_accept();
+    }
+}
+
+impl Drop for FleetMeasurer {
+    /// The accept loop is endless by design; make sure an erroring or
+    /// aborted serve (e.g. the chaos experiments' injected leader
+    /// death) still releases the thread and the listening port.
+    fn drop(&mut self) {
+        self.stop_accept();
     }
 }
 

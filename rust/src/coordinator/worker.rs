@@ -6,6 +6,14 @@
 //! are shared with the in-process [`crate::thor::measure::LocalMeasurer`]
 //! so a fleet worker and a local per-job run execute the *same* code on
 //! the same request, which is what makes the backends byte-equivalent.
+//!
+//! Rejoin needs no protocol: a worker that died (or was restarted)
+//! simply connects again and sends a fresh `Hello` — the leader files
+//! the new connection under a new id and folds it back into its
+//! declared class (see the elasticity notes in
+//! [`crate::coordinator::server`]).  [`DeviceWorker::run_phases`]
+//! scripts such lifetimes for the chaos tests and the fleetE
+//! experiment.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -63,6 +71,27 @@ impl DeviceWorker {
     /// the re-queue path (`rust/tests/fleet.rs`).  Returns jobs completed.
     pub fn run_limited(&mut self, addr: &str, max_jobs: usize) -> Result<usize> {
         self.run_inner(addr, Some(max_jobs))
+    }
+
+    /// Scripted elastic lifetime, phase by phase: `Some(k)` dies with
+    /// the `k+1`-th job in flight ([`DeviceWorker::run_limited`]),
+    /// `None` serves until Shutdown or leader hang-up
+    /// ([`DeviceWorker::run`]).  A phase whose leader is already gone
+    /// (connection refused, reset mid-serve) is skipped rather than an
+    /// error — a chaos schedule cannot assume its leaders outlive the
+    /// script.  Returns total jobs completed across phases.
+    pub fn run_phases(&mut self, phases: &[(String, Option<usize>)]) -> usize {
+        let mut total = 0;
+        for (addr, limit) in phases {
+            let r = match limit {
+                Some(k) => self.run_limited(addr, *k),
+                None => self.run(addr),
+            };
+            if let Ok(n) = r {
+                total += n;
+            }
+        }
+        total
     }
 
     fn run_inner(&mut self, addr: &str, max_jobs: Option<usize>) -> Result<usize> {

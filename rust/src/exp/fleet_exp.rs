@@ -15,6 +15,13 @@
 //!   occupancy-adaptive (`Batch::Auto`) acquisition, one serve emitting
 //!   one multi-device store.  Reported with per-device MAPE and
 //!   per-class job counts.
+//! * `fleetE` — the elasticity chaos suite: the `fleetH` fleet on a
+//!   seeded chaos schedule — one worker per class dies mid-run and
+//!   rejoins as a fresh connection, the leader itself is killed between
+//!   absorbs and a successor resumes from its checkpoint
+//!   ([`crate::thor::checkpoint`]).  The headline metric is
+//!   `store_byte_equal`: the resumed store must be byte-identical to an
+//!   uninterrupted local per-job run of the same config.
 //!
 //! Workers run with deterministic per-job measurement seeds (per-class
 //! derived via [`crate::coordinator::class_seed`] in `fleetH`) and the
@@ -26,16 +33,18 @@
 //! one accept loop, the worker-id ↔ class mapping follows connection
 //! order, but the per-class totals are scheduling-independent.)
 
-use crate::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec};
+use crate::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec, ServeOptions};
 use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::{measured_energy, ExpConfig};
 use crate::model::zoo;
 use crate::model::ModelGraph;
 use crate::simdevice::{devices, Device};
+use crate::thor::checkpoint::{Checkpoint, Checkpointer};
 use crate::thor::estimator::estimate;
+use crate::thor::measure::LocalMeasurer;
 use crate::thor::store::GpStore;
-use crate::thor::{Batch, ThorConfig};
+use crate::thor::{Batch, Thor, ThorConfig};
 use crate::util::stats::mape;
 
 const N_WORKERS: usize = 3;
@@ -330,6 +339,193 @@ impl Experiment for FleetH {
             FLEETN_DEVICES.len(),
             run.jobs_done,
             FLEETN_DEVICES.len() * FLEETN_WORKERS
+        ));
+        rep
+    }
+}
+
+/// fleetE: one scheduled death + rejoin per class — worker 1 of each
+/// class drops its connection with this many jobs completed (the next
+/// job is left in flight and re-queued).
+const DIE_AFTER_JOBS: usize = 2;
+
+/// fleetE: leader A is killed before submitting this-plus-one-th joint
+/// batch — "between absorbs", the durability point every checkpoint
+/// write lands on, so the checkpoint it leaves behind covers exactly
+/// this many absorbed joint batches.
+const ABORT_AFTER_ROUNDS: usize = 6;
+
+pub struct FleetE;
+
+impl Experiment for FleetE {
+    fn id(&self) -> &'static str {
+        "fleetE"
+    }
+
+    fn description(&self) -> &'static str {
+        "elastic-fleet chaos: worker deaths and rejoins, leader killed mid-run, successor resumes from checkpoint"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(
+            self.id(),
+            "elastic fleet chaos (worker rejoin + leader checkpoint/resume)",
+            cfg,
+            &FLEETN_DEVICES,
+        );
+        let reference = fleet_reference();
+        // Fixed batches, not Auto: chaos timing must never reach the
+        // proposal stream.  Under Auto a death would shrink a class's
+        // occupancy and with it the round size, making the store depend
+        // on *when* the death lands; under Fixed + per-class/per-job
+        // seeds every metric below is a pure function of the config.
+        let thor_cfg = ThorConfig { batch: Batch::Fixed(FLEETN_WORKERS), ..cfg.thor_cfg() };
+        let spec = FleetSpec::mixed(&FLEETN_DEVICES.map(|d| (d, FLEETN_WORKERS)));
+
+        // Both leaders bind up front so the chaos script can name its
+        // phases; leader B's listen backlog queues worker connections
+        // until it actually serves.
+        let bound_a = FleetServer::new(thor_cfg).bind("127.0.0.1:0").expect("bind leader A");
+        let bound_b = FleetServer::new(thor_cfg).bind("127.0.0.1:0").expect("bind leader B");
+        let addr_a = bound_a.local_addr().to_string();
+        let addr_b = bound_b.local_addr().to_string();
+
+        let ckpt_path = std::env::temp_dir()
+            .join(format!("thor_fleete_{}_{}.json", std::process::id(), cfg.seed));
+        let _ = std::fs::remove_file(&ckpt_path);
+
+        // The chaos script, per class: worker 0 is steady and follows
+        // the leaders; worker 1 dies with its third job in flight
+        // (re-queue path), rejoins leader A as a fresh connection id,
+        // then follows to leader B.  Phases whose leader is already
+        // gone are skipped by `run_phases` — the script never assumes
+        // its leaders outlive it.
+        let mut handles = Vec::new();
+        for (di, dev_name) in FLEETN_DEVICES.iter().enumerate() {
+            for w in 0..FLEETN_WORKERS {
+                let reference = reference.clone();
+                let profile = devices::by_name(dev_name).expect("device");
+                let dev_seed = 100 + (di * FLEETN_WORKERS + w) as u64;
+                let phases: Vec<(String, Option<usize>)> = if w == 0 {
+                    vec![(addr_a.clone(), None), (addr_b.clone(), None)]
+                } else {
+                    vec![
+                        (addr_a.clone(), Some(DIE_AFTER_JOBS)),
+                        (addr_a.clone(), None),
+                        (addr_b.clone(), None),
+                    ]
+                };
+                let base_seed = cfg.seed;
+                handles.push(std::thread::spawn(move || {
+                    DeviceWorker::new(Device::new(profile, dev_seed), &reference)
+                        .with_class_seed(base_seed)
+                        .run_phases(&phases)
+                }));
+            }
+        }
+
+        // Phase A: checkpoint after every absorbed joint batch, then die
+        // at a deterministic batch boundary.
+        let mut ck_writer = Checkpointer::new(&ckpt_path, 1);
+        let leader_a_died = bound_a
+            .serve_spec_with(
+                &reference,
+                spec.clone(),
+                ServeOptions {
+                    resume: None,
+                    checkpointer: Some(&mut ck_writer),
+                    abort_after_rounds: Some(ABORT_AFTER_ROUNDS),
+                },
+            )
+            .is_err();
+
+        // Phase B: a successor leader resumes from leader A's last
+        // checkpoint — completed families load, in-flight machines
+        // replay, only the one unabsorbed batch is re-measured.
+        let ck = Checkpoint::load(&ckpt_path)
+            .expect("read checkpoint")
+            .expect("leader A checkpointed before dying");
+        let families_checkpointed = ck.store.len();
+        let inflight_resumed = ck.inflight.len();
+        let run = bound_b
+            .serve_spec_with(
+                &reference,
+                spec,
+                ServeOptions { resume: Some(ck), ..Default::default() },
+            )
+            .expect("resumed fleet serve");
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&ckpt_path);
+
+        // The correctness contract: the chaos run's final store is
+        // byte-identical to an uninterrupted in-process per-job run of
+        // the same config — deaths, rejoins and the leader handover left
+        // no trace in the fitted GPs.
+        let mut solo = Thor::new(thor_cfg);
+        let mut local = LocalMeasurer::per_job_fleet(
+            FLEETN_DEVICES.iter().map(|d| devices::by_name(d).expect("device")).collect(),
+            cfg.seed,
+            &reference,
+        );
+        solo.profile(&mut local, &reference).expect("uninterrupted local run");
+        let byte_equal = run.store.to_json().to_string() == solo.store.to_json().to_string();
+
+        let jobs_of = |c: &str| {
+            run.per_class.iter().find(|(cc, _)| cc == c).map_or(0, |(_, n)| *n)
+        };
+        let mapes: Vec<(&str, f64)> = FLEETN_DEVICES
+            .iter()
+            .map(|&d| (d, fleet_mape(&run.store, d, cfg)))
+            .collect();
+        rep.push_table(
+            "per-device results of the resumed leader (phase-B jobs only)",
+            &["device", "families", "phase-B jobs", "MAPE %"],
+            mapes
+                .iter()
+                .map(|(d, m)| {
+                    vec![
+                        d.to_string(),
+                        format!("{}", run.store.len_for(d)),
+                        format!("{}", jobs_of(d)),
+                        format!("{m:.1}"),
+                    ]
+                })
+                .collect(),
+        );
+        for (d, m) in &mapes {
+            rep.metric(&format!("mape_{d}"), *m);
+            rep.metric(&format!("jobs_{d}"), jobs_of(d) as f64);
+        }
+        rep.metric("leader_a_died", if leader_a_died { 1.0 } else { 0.0 });
+        rep.metric("checkpoint_writes", ck_writer.writes as f64);
+        rep.metric("families_checkpointed", families_checkpointed as f64);
+        rep.metric("inflight_resumed", inflight_resumed as f64);
+        rep.metric("families_fitted", run.store.len() as f64);
+        rep.metric("jobs_resumed_submitted", run.jobs_submitted as f64);
+        rep.metric("jobs_resumed_done", run.jobs_done as f64);
+        rep.metric("jobs_requeued_resumed", run.requeued as f64);
+        rep.metric("deaths_scheduled", FLEETN_DEVICES.len() as f64);
+        rep.metric("rejoins_scheduled", FLEETN_DEVICES.len() as f64);
+        rep.metric("store_byte_equal", if byte_equal { 1.0 } else { 0.0 });
+        rep.metric("devices", FLEETN_DEVICES.len() as f64);
+        rep.note(format!(
+            "leader A absorbed {ABORT_AFTER_ROUNDS} joint batches ({} checkpoint writes, \
+             {families_checkpointed} families done, {inflight_resumed} in flight) and was killed; \
+             leader B resumed and finished {} families from {} phase-B jobs; \
+             resumed store byte-equal to an uninterrupted run: {byte_equal}",
+            ck_writer.writes,
+            run.store.len(),
+            run.jobs_done,
+        ));
+        rep.note(format!(
+            "chaos schedule: {} worker deaths ({DIE_AFTER_JOBS} jobs each, third left in flight) \
+             and {} rejoins across {} classes; phase-A job splits are timing-dependent and \
+             deliberately unreported",
+            FLEETN_DEVICES.len(),
+            FLEETN_DEVICES.len(),
+            FLEETN_DEVICES.len(),
         ));
         rep
     }

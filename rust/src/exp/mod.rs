@@ -15,11 +15,12 @@
 //! | [`figures`]     | fig4, fig5, fig6, fig10, fig11                       |
 //! | [`pruning_exp`] | fig13 (energy-aware pruning case study)              |
 //! | [`ablation`]    | a14 (point budget), a15 (kernels), a16 (iterations)  |
-//! | [`fleet_exp`]   | fleet1 + fleetN + fleetH (fleet profiling, A5.2)     |
+//! | [`fleet_exp`]   | fleet1/fleetN/fleetH/fleetE (fleet profiling, A5.2)  |
 //! | [`serve_exp`]   | serve1 (estimation-serving daemon under load)        |
 //!
 //! Experiment ids: `fig2 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! fig13 a14 a15 a16 fleet1 fleetN fleetH serve1` (`tab1` aliases `fig8`).
+//! fig13 a14 a15 a16 fleet1 fleetN fleetH fleetE serve1` (`tab1` aliases
+//! `fig8`).
 //!
 //! # Entry points
 //!

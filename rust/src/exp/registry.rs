@@ -132,6 +132,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(fleet_exp::Fleet1),
         Box::new(fleet_exp::FleetN),
         Box::new(fleet_exp::FleetH),
+        Box::new(fleet_exp::FleetE),
         Box::new(serve_exp::Serve1),
     ]
 }
@@ -181,6 +182,7 @@ mod tests {
         assert_eq!(by_id("fleet1").unwrap().id(), "fleet1");
         assert_eq!(by_id("fleetN").unwrap().id(), "fleetN");
         assert_eq!(by_id("fleetH").unwrap().id(), "fleetH");
+        assert_eq!(by_id("fleetE").unwrap().id(), "fleetE");
         assert_eq!(by_id("serve1").unwrap().id(), "serve1");
     }
 

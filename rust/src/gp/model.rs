@@ -41,6 +41,12 @@ pub struct GpModel {
     pub xs: Vec<Vec<f64>>,
     /// Standardized targets.
     ys: Vec<f64>,
+    /// Raw targets as passed to the fit.  Kept so serialization is
+    /// bit-exact: re-deriving `y_mean + y_scale * y_std` rounds
+    /// differently than the original values, which would make a JSON
+    /// roundtrip perturb the refit posterior by ULPs — fatal for the
+    /// checkpoint/resume byte-identity contract (see thor::checkpoint).
+    ys_raw: Vec<f64>,
     /// Target standardization: y_std = (y − y_mean) / y_scale.
     pub y_mean: f64,
     pub y_scale: f64,
@@ -65,7 +71,7 @@ impl GpModel {
         let l = cholesky(&k)?;
         let alpha = chol_solve(&l, &ys);
         let kinv = chol_inverse(&l);
-        Some(Self { kind, hyper, xs, ys, y_mean, y_scale, alpha, kinv })
+        Some(Self { kind, hyper, xs, ys, ys_raw: ys_raw.to_vec(), y_mean, y_scale, alpha, kinv })
     }
 
     /// Fit with fixed hyper-parameters through a reusable [`FitWorkspace`]
@@ -95,7 +101,7 @@ impl GpModel {
         chol_solve_into(&ws.l, &ys, &mut ws.tmp, &mut alpha);
         let mut kinv = Mat::zeros(n, n);
         chol_inverse_into(&ws.l, &mut kinv, &mut ws.tmp);
-        Some(Self { kind, hyper, xs, ys, y_mean, y_scale, alpha, kinv })
+        Some(Self { kind, hyper, xs, ys, ys_raw: ys_raw.to_vec(), y_mean, y_scale, alpha, kinv })
     }
 
     /// Fit hyper-parameters by maximizing the log marginal likelihood with
@@ -229,9 +235,14 @@ impl GpModel {
     }
 
     /// Serialize to JSON (the store + the coordinator protocol).
+    ///
+    /// Emits the *raw* targets the model was fit on (not a
+    /// de-standardization of the internal targets), so that
+    /// `to_json → from_json → to_json` is byte-idempotent and the refit
+    /// posterior — rebuilt from bit-identical (hyper, xs, ys) — predicts
+    /// bit-identically to the original model.  Pinned below.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        let ys_raw: Vec<f64> = self.ys.iter().map(|y| self.y_mean + self.y_scale * y).collect();
         Json::obj(vec![
             ("kind", Json::str(match self.kind {
                 KernelKind::Matern52 => "matern52",
@@ -242,7 +253,7 @@ impl GpModel {
             ("variance", Json::Num(self.hyper.variance)),
             ("noise", Json::Num(self.hyper.noise)),
             ("xs", Json::Arr(self.xs.iter().map(|x| Json::arr_f64(x)).collect())),
-            ("ys", Json::arr_f64(&ys_raw)),
+            ("ys", Json::arr_f64(&self.ys_raw)),
         ])
     }
 
@@ -536,6 +547,29 @@ mod tests {
             let (m2, v2) = back.predict(&q);
             assert!((m1 - m2).abs() < 1e-6 * m1.abs().max(1.0), "{m1} {m2}");
             assert!((v1 - v2).abs() < 1e-6 * v1.abs().max(1e-9));
+        }
+    }
+
+    /// The checkpoint/resume byte-identity contract rests here: a model
+    /// reloaded from its JSON must predict bit-identically (the raw
+    /// targets are serialized verbatim, and the refit re-standardizes the
+    /// exact fit-time inputs), and re-serializing must reproduce the same
+    /// bytes (idempotence — the fleet store can be saved, resumed, and
+    /// saved again without drifting a single ULP).
+    #[test]
+    fn json_roundtrip_is_bit_exact_and_idempotent() {
+        let (xs, ys) = toy_1d(14, 0.25, 9);
+        let gp = GpModel::fit(KernelKind::Matern52, xs, &ys).unwrap();
+        let j1 = gp.to_json().to_string();
+        let back =
+            GpModel::from_json(&crate::util::json::Json::parse(&j1).unwrap()).unwrap();
+        let j2 = back.to_json().to_string();
+        assert_eq!(j1, j2, "to_json ∘ from_json must be byte-idempotent");
+        for q in [[0.0], [0.17], [0.5], [0.83], [1.0]] {
+            let (m1, v1) = gp.predict(&q);
+            let (m2, v2) = back.predict(&q);
+            assert_eq!(m1.to_bits(), m2.to_bits(), "mean drifted at {q:?}: {m1} vs {m2}");
+            assert_eq!(v1.to_bits(), v2.to_bits(), "variance drifted at {q:?}: {v1} vs {v2}");
         }
     }
 

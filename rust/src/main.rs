@@ -6,7 +6,9 @@
 //!   exp       run registered paper experiments: `thor exp <id>` or
 //!             `thor exp --all` (multi-threaded), `--json out.json` for the
 //!             structured report, `--list` for the registry
-//!   serve     run the fleet fitting leader (TCP)
+//!   serve     run the fleet fitting leader (TCP); `--checkpoint` +
+//!             `--resume` make it crash-tolerant (resume from acquired
+//!             points instead of re-measuring)
 //!   worker    run a device worker against a leader
 //!   serve-estimates
 //!             run the estimation-serving daemon: load fitted store
@@ -34,6 +36,9 @@ fn specs() -> Vec<Spec> {
         Spec { name: "addr", takes_value: true, help: "serve/worker: leader address (default 127.0.0.1:7707); serve-estimates: bind address (default 127.0.0.1:7708)" },
         Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1; per class with --devices)" },
         Spec { name: "devices", takes_value: true, help: "serve: comma-separated device classes of a heterogeneous fleet (e.g. xavier,tx2,server)" },
+        Spec { name: "checkpoint", takes_value: true, help: "serve: write an atomic leader checkpoint to this path as the run progresses" },
+        Spec { name: "checkpoint-every", takes_value: true, help: "serve: absorbed acquisition rounds between checkpoint writes (default 1)" },
+        Spec { name: "resume", takes_value: true, help: "serve: resume from a leader checkpoint instead of re-measuring (missing file = cold start)" },
         Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
         Spec { name: "list", takes_value: false, help: "exp: list registered experiment ids" },
         Spec { name: "json", takes_value: true, help: "exp: write structured suite report to this path" },
@@ -156,7 +161,7 @@ fn main() -> Result<()> {
             cfg.batch = Batch::parse(args.get_str("batch", "auto")).map_err(|e| anyhow!(e))?;
             let server = FleetServer::new(cfg);
             let reference = exp::reference_model(fam);
-            let store = match args.get("devices") {
+            let spec = match args.get("devices") {
                 Some(list) => {
                     // Heterogeneous single-leader fleet: one serve, one
                     // multi-device store, `workers` workers per class.
@@ -173,25 +178,58 @@ fn main() -> Result<()> {
                     if classes.is_empty() {
                         return Err(anyhow!("--devices given but no class named"));
                     }
-                    let spec = FleetSpec::mixed(&classes);
                     println!(
                         "fitting leader on {addr} (model {}, heterogeneous fleet: {} workers per class over {})",
                         fam.name(),
                         workers,
                         classes.iter().map(|(c, _)| *c).collect::<Vec<_>>().join(",")
                     );
-                    server.run_spec(addr, &reference, spec)?
+                    FleetSpec::mixed(&classes)
                 }
                 None => {
                     println!(
                         "fitting leader on {addr} (model {} , expecting {workers} workers)",
                         fam.name()
                     );
-                    server.run(addr, &reference, workers)?
+                    FleetSpec::untyped(workers)
                 }
             };
-            store.save(&store_path)?;
-            println!("saved {} family GPs to {store_path:?}", store.len());
+            // Elasticity: crash-loop operation passes the same path to
+            // --checkpoint and --resume; a missing resume file is a
+            // cold start, so the very first launch needs no special
+            // casing (a *corrupt* file is still a hard error).
+            let resume = match args.get("resume") {
+                Some(p) => {
+                    let path = std::path::Path::new(p);
+                    match thor::thor::checkpoint::Checkpoint::load(path)? {
+                        Some(ck) => {
+                            println!(
+                                "resuming from {path:?}: {} finished family GP(s), {} in flight",
+                                ck.store.len(),
+                                ck.inflight.len()
+                            );
+                            Some(ck)
+                        }
+                        None => {
+                            println!("checkpoint {path:?} not found — starting cold");
+                            None
+                        }
+                    }
+                }
+                None => None,
+            };
+            let every = args.get_usize("checkpoint-every", 1)?;
+            let mut writer = args
+                .get("checkpoint")
+                .map(|p| thor::thor::checkpoint::Checkpointer::new(p, every));
+            let opts = thor::coordinator::ServeOptions {
+                resume,
+                checkpointer: writer.as_mut(),
+                abort_after_rounds: None,
+            };
+            let run = server.bind(addr)?.serve_spec_with(&reference, spec, opts)?;
+            run.store.save(&store_path)?;
+            println!("saved {} family GPs to {store_path:?}", run.store.len());
         }
         "serve-estimates" => {
             let addr = args.get_str("addr", "127.0.0.1:7708");

@@ -1,0 +1,280 @@
+//! Leader checkpoint/resume for fleet profiling.
+//!
+//! A killed leader used to re-measure everything.  A [`Checkpoint`] makes
+//! the leader's progress durable: the completed families (the
+//! [`GpStore`] as fitted so far) plus, for every family still being
+//! acquired, the [`FamilyFit`] absorbed-round journal — the complete
+//! serializable description of the in-flight machine (see
+//! [`FamilyFit::replay`]).  On resume, completed families are skipped by
+//! the pipeline's store idempotency and in-flight machines are replayed
+//! bit-identically, so the **resumed final store is byte-identical to the
+//! uninterrupted run's** (the correctness contract, pinned in
+//! `tests/fleet.rs` and the fleetE chaos experiment).  The only work a
+//! resume repeats is the one proposed-but-unabsorbed batch that was in
+//! flight when the leader died — journals record absorbed rounds only.
+//!
+//! Byte-identity leans on two pins elsewhere:
+//! - `Json::Num` printing is shortest-roundtrip (util::json), so every
+//!   `f64` survives the file bit-exactly;
+//! - `GpModel::to_json` serializes the raw fit targets verbatim, so a
+//!   reloaded store's posteriors predict bit-identically (gp::model's
+//!   `json_roundtrip_is_bit_exact_and_idempotent`) — the replayed
+//!   machines' subtraction GPs therefore fold measurements into exactly
+//!   the values the original run folded.
+//!
+//! [`Checkpointer`] handles the durability side: atomic tmp-file +
+//! rename writes every `k` absorbed rounds, so a crash mid-write leaves
+//! the previous checkpoint intact, never a torn file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::thor::store::GpStore;
+use crate::util::json::Json;
+
+#[cfg(doc)]
+use crate::thor::fit::FamilyFit;
+
+/// The serializable acquisition history of one in-flight [`FamilyFit`]:
+/// the family dimension plus one `(occupancy, folded results)` entry per
+/// absorbed round, exactly as [`FamilyFit::journal`] reports it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FitJournal {
+    pub dim: usize,
+    pub rounds: Vec<(usize, Vec<(f64, f64)>)>,
+}
+
+impl FitJournal {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::Num(self.dim as f64)),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|(occ, results)| {
+                            Json::obj(vec![
+                                ("occ", Json::Num(*occ as f64)),
+                                (
+                                    "results",
+                                    Json::Arr(
+                                        results.iter().map(|&(e, dt)| Json::arr_f64(&[e, dt])).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let dim = j.get("dim")?.as_usize()?;
+        let mut rounds = Vec::new();
+        for r in j.get("rounds")?.as_arr()? {
+            let occ = r.get("occ")?.as_usize()?;
+            let mut results = Vec::new();
+            for pair in r.get("results")?.as_arr()? {
+                let v = pair.as_f64_vec()?;
+                if v.len() != 2 {
+                    return None;
+                }
+                results.push((v[0], v[1]));
+            }
+            rounds.push((occ, results));
+        }
+        Some(Self { dim, rounds })
+    }
+}
+
+/// The key an in-flight journal is filed under — the same
+/// `"{device}|{family}"` shape the store uses internally.
+pub fn inflight_key(device: &str, family: &str) -> String {
+    format!("{device}|{family}")
+}
+
+/// A durable snapshot of a profiling run: everything finished (the
+/// store) and everything in flight (per-family journals).
+#[derive(Default)]
+pub struct Checkpoint {
+    pub store: GpStore,
+    /// Keyed by [`inflight_key`].
+    pub inflight: BTreeMap<String, FitJournal>,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("store", self.store.to_json()),
+            (
+                "inflight",
+                Json::Obj(self.inflight.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let store = GpStore::from_json(j.get("store")?)?;
+        let mut inflight = BTreeMap::new();
+        for (k, v) in j.get("inflight")?.as_obj()? {
+            inflight.insert(k.clone(), FitJournal::from_json(v)?);
+        }
+        Some(Self { store, inflight })
+    }
+
+    /// `Ok(None)` when the file does not exist (a cold start, not an
+    /// error — crash-loop operation passes the same path to `--resume`
+    /// and `--checkpoint` from the first launch on).
+    pub fn load(path: &Path) -> std::io::Result<Option<Self>> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        match Json::parse(&text).ok().as_ref().and_then(Self::from_json) {
+            Some(ck) => Ok(Some(ck)),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("{path:?} is not a checkpoint artifact"),
+            )),
+        }
+    }
+}
+
+/// Periodic atomic checkpoint writer: counts absorbed rounds and, every
+/// `every`-th, serializes a [`Checkpoint`] to `<path>.tmp` and renames
+/// it over `path` — a crash between absorbs (or mid-write) always leaves
+/// the last complete checkpoint on disk.
+#[derive(Debug)]
+pub struct Checkpointer {
+    path: PathBuf,
+    every: usize,
+    pending: usize,
+    /// Completed atomic writes (observability + tests).
+    pub writes: usize,
+}
+
+impl Checkpointer {
+    /// `every` floors at 1 (write after every absorbed round).
+    pub fn new(path: impl Into<PathBuf>, every: usize) -> Self {
+        Self { path: path.into(), every: every.max(1), pending: 0, writes: 0 }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record `rounds` freshly absorbed rounds; writes a checkpoint (and
+    /// returns `true`) once the configured cadence is reached.
+    pub fn absorbed(
+        &mut self,
+        rounds: usize,
+        store: &GpStore,
+        inflight: &[(String, FitJournal)],
+    ) -> std::io::Result<bool> {
+        self.pending += rounds;
+        if self.pending < self.every {
+            return Ok(false);
+        }
+        self.pending = 0;
+        self.write_now(store, inflight)?;
+        Ok(true)
+    }
+
+    /// Unconditional atomic write of the current state.
+    pub fn write_now(
+        &mut self,
+        store: &GpStore,
+        inflight: &[(String, FitJournal)],
+    ) -> std::io::Result<()> {
+        let ck = Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("store", store.to_json()),
+            (
+                "inflight",
+                Json::Obj(inflight.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+            ),
+        ]);
+        let mut tmp = self.path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, ck.to_string())?;
+        std::fs::rename(&tmp, &self.path)?;
+        self.writes += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thor::fit::{FamilyFit, FitConfig};
+
+    fn surface(x: f64) -> f64 {
+        80.0 + 40.0 * (x * 2.0).min(1.0) + 10.0 * (3.0 * x).sin()
+    }
+
+    /// Drive a machine for `rounds` absorbed rounds and return its journal.
+    fn journal_after(cfg: &FitConfig, rounds: usize) -> FitJournal {
+        let mut fit = FamilyFit::new(1, cfg);
+        for _ in 0..rounds {
+            let ps = fit.propose(2).expect("machine ended early");
+            let results: Vec<(f64, f64)> = ps.iter().map(|p| (surface(p[0]), 0.5)).collect();
+            fit.absorb(&results);
+        }
+        FitJournal { dim: 1, rounds: fit.journal().to_vec() }
+    }
+
+    #[test]
+    fn journal_json_roundtrip_is_bit_exact() {
+        let cfg = FitConfig { max_points: 11, threshold_frac: 0.0, grid_n: 17, ..Default::default() };
+        let j = journal_after(&cfg, 3);
+        let parsed = Json::parse(&j.to_json().to_string()).unwrap();
+        let back = FitJournal::from_json(&parsed).unwrap();
+        assert_eq!(j, back, "journal must survive serialization bit-exactly");
+        // ...and a replay from the deserialized journal continues the
+        // machine exactly (the f64s are bit-identical, so this is the
+        // same guarantee fit.rs pins — here we pin the JSON hop).
+        let a = FamilyFit::replay(1, &cfg, &j.rounds).propose(2);
+        let b = FamilyFit::replay(1, &cfg, &back.rounds).propose(2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_and_missing_file_is_a_cold_start() {
+        let cfg = FitConfig { max_points: 11, threshold_frac: 0.0, grid_n: 17, ..Default::default() };
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("thor_ckpt_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        assert!(Checkpoint::load(&path).unwrap().is_none(), "missing file must read as None");
+
+        let mut w = Checkpointer::new(&path, 2);
+        let store = GpStore::new();
+        let inflight = vec![(inflight_key("xavier", "conv:f"), journal_after(&cfg, 2))];
+        // Cadence: 1 round pending — no write yet; the second reaches it.
+        assert!(!w.absorbed(1, &store, &inflight).unwrap());
+        assert!(!path.exists());
+        assert!(w.absorbed(1, &store, &inflight).unwrap());
+        assert_eq!(w.writes, 1);
+
+        let ck = Checkpoint::load(&path).unwrap().expect("checkpoint written");
+        assert_eq!(ck.store.len(), 0);
+        assert_eq!(ck.inflight.len(), 1);
+        assert_eq!(ck.inflight["xavier|conv:f"], inflight[0].1);
+        // No torn tmp file left behind.
+        let tmp = path.with_file_name(format!("{}.tmp", path.file_name().unwrap().to_string_lossy()));
+        assert!(!tmp.exists(), "atomic write must not leave {tmp:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_an_error_not_a_silent_cold_start() {
+        let path = std::env::temp_dir().join(format!("thor_ckpt_bad_{}.json", std::process::id()));
+        std::fs::write(&path, "{ not json").unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "corrupt artifacts must not be ignored");
+        let _ = std::fs::remove_file(&path);
+    }
+}

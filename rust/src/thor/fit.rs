@@ -213,6 +213,14 @@ pub struct FamilyFit {
     converged: bool,
     /// Proposals handed out by the last `propose`, awaiting `absorb`.
     pending: Option<Vec<Vec<f64>>>,
+    /// Occupancy passed to the `propose` that produced `pending`.
+    pending_occ: usize,
+    /// Absorbed-round history `(occupancy, folded results)` — with
+    /// `(dim, cfg)` a complete serializable description of the machine's
+    /// state, because every internal bit (RNG stream, warm-start chain,
+    /// workspace caches, acquired points) is a pure function of the
+    /// occupancy and result sequences.  See [`FamilyFit::replay`].
+    journal: Vec<(usize, Vec<(f64, f64)>)>,
     started: bool,
     ended: bool,
     t0: std::time::Instant,
@@ -236,6 +244,8 @@ impl FamilyFit {
             prev_hyper: None,
             converged: false,
             pending: None,
+            pending_occ: 1,
+            journal: Vec::new(),
             started: false,
             ended: false,
             t0: std::time::Instant::now(),
@@ -266,6 +276,7 @@ impl FamilyFit {
         if self.ended {
             return None;
         }
+        self.pending_occ = occupancy;
         if !self.started {
             self.started = true;
             // Starting points: the bounds (paper: "we use the upper and
@@ -357,10 +368,49 @@ impl FamilyFit {
     pub fn absorb(&mut self, results: &[(f64, f64)]) {
         let ps = self.pending.take().expect("absorb() without a proposed batch");
         assert_eq!(results.len(), ps.len(), "backend returned wrong batch size");
+        self.journal.push((self.pending_occ, results.to_vec()));
         for (p, &(e, dt)) in ps.into_iter().zip(results) {
             self.device_seconds += dt;
             self.pts.push((p, e, dt));
         }
+    }
+
+    /// The absorbed-round history: one `(occupancy, folded results)`
+    /// entry per absorbed batch, in order.  Proposed-but-unabsorbed
+    /// points are deliberately *not* recorded: after a crash they are
+    /// re-proposed identically by the replayed machine, so they are the
+    /// only measurements a resumed run repeats.
+    pub fn journal(&self) -> &[(usize, Vec<(f64, f64)>)] {
+        &self.journal
+    }
+
+    /// Reconstruct a machine bit-identically from an absorbed-round
+    /// journal (the leader-checkpoint resume path): a fresh machine is
+    /// driven through the recorded `(occupancy, results)` sequence, which
+    /// regenerates the proposals — and with them the RNG stream, the
+    /// warm-start hyper chain, and the workspace caches — exactly as the
+    /// original run produced them.  The next `propose` of the returned
+    /// machine is bit-identical to what the original machine would have
+    /// proposed (pinned in this module's tests).
+    ///
+    /// Panics if the journal is inconsistent with `(dim, cfg)` — e.g. a
+    /// round whose result count does not match the re-proposed batch, or
+    /// more rounds than the machine's end conditions admit.  A journal
+    /// produced by [`FamilyFit::journal`] under the same config never is.
+    pub fn replay(dim: usize, cfg: &FitConfig, journal: &[(usize, Vec<(f64, f64)>)]) -> Self {
+        let mut fit = Self::new(dim, cfg);
+        for (occ, results) in journal {
+            let ps = fit
+                .propose(*occ)
+                .expect("checkpoint journal extends past the machine's end conditions");
+            assert_eq!(
+                ps.len(),
+                results.len(),
+                "checkpoint journal round does not match the re-proposed batch"
+            );
+            fit.absorb(results);
+        }
+        fit
     }
 
     /// Fit the final energy GP over everything absorbed.
@@ -702,6 +752,59 @@ mod tests {
         let a = fit_family(|p| (surface_1d(p[0]), 0.5), 1, &cfg);
         let b = drive_machine(&cfg, 1, |p| (surface_1d(p[0]), 0.5));
         assert_outcomes_bit_equal(&a, &b, 1);
+    }
+
+    #[test]
+    fn replayed_machine_continues_bit_identically() {
+        // The leader-checkpoint contract: interrupt a machine after any
+        // absorbed round, replay its journal into a fresh machine, and
+        // the continuation — every remaining proposal and the final GP —
+        // must be bit-identical to the uninterrupted machine's.
+        let cfg = FitConfig { max_points: 13, threshold_frac: 0.0, grid_n: 33, batch: Batch::Fixed(2), ..Default::default() };
+        let measure = |p: &[f64]| (surface_1d(p[0]), 0.5);
+        let uninterrupted = drive_machine(&cfg, 1, measure);
+        for kill_after in 1..5usize {
+            // Drive the "doomed leader" for `kill_after` absorbed rounds.
+            let mut doomed = FamilyFit::new(1, &cfg);
+            for _ in 0..kill_after {
+                let ps = doomed.propose(1).expect("machine ended before the kill point");
+                let results: Vec<(f64, f64)> = ps.iter().map(|p| measure(p)).collect();
+                doomed.absorb(&results);
+            }
+            // The resumed leader sees only the serializable journal.
+            let journal: Vec<(usize, Vec<(f64, f64)>)> = doomed.journal().to_vec();
+            let mut resumed = FamilyFit::replay(1, &cfg, &journal);
+            // Lock-step comparison from the kill point onward.
+            loop {
+                let a = doomed.propose(1);
+                let b = resumed.propose(1);
+                assert_eq!(a, b, "kill_after={kill_after}: proposals diverged after replay");
+                let Some(ps) = a else { break };
+                let results: Vec<(f64, f64)> = ps.iter().map(|p| measure(p)).collect();
+                doomed.absorb(&results);
+                resumed.absorb(&results);
+            }
+            assert_outcomes_bit_equal(&resumed.finish(), &uninterrupted, 1);
+        }
+    }
+
+    #[test]
+    fn journal_records_occupancies_and_results_verbatim() {
+        let cfg = FitConfig { max_points: 9, threshold_frac: 0.0, grid_n: 17, batch: Batch::Auto, ..Default::default() };
+        let mut fit = FamilyFit::new(1, &cfg);
+        let mut occ = 3usize;
+        let mut expect = Vec::new();
+        while let Some(ps) = fit.propose(occ) {
+            let results: Vec<(f64, f64)> = ps.iter().map(|p| (surface_1d(p[0]), 0.25)).collect();
+            fit.absorb(&results);
+            expect.push((occ, results));
+            occ = if occ == 3 { 2 } else { 3 }; // churn: occupancy varies round to round
+        }
+        assert_eq!(fit.journal(), expect.as_slice());
+        // Replaying a varying-occupancy journal also lands bit-identically.
+        let replayed = FamilyFit::replay(1, &cfg, &expect);
+        assert_eq!(replayed.journal(), expect.as_slice());
+        assert_outcomes_bit_equal(&replayed.finish(), &fit.finish(), 1);
     }
 
     #[test]

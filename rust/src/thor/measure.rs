@@ -223,6 +223,47 @@ impl Measurer for LocalMeasurer<'_> {
     }
 }
 
+/// Fault-injection wrapper: delegates to the inner backend but fails the
+/// `limit+1`-th `measure_batch` *before* submitting it — the leader-side
+/// analogue of [`crate::coordinator::DeviceWorker::run_limited`], used by
+/// chaos tests and the fleetE experiment to kill a leader at a
+/// deterministic joint-batch boundary ("between absorbs": everything
+/// measured so far has been absorbed, nothing from the failed round was
+/// issued).
+pub struct AbortAfter<'m> {
+    inner: &'m mut dyn Measurer,
+    limit: usize,
+    calls: usize,
+}
+
+impl<'m> AbortAfter<'m> {
+    pub fn new(inner: &'m mut dyn Measurer, limit: usize) -> Self {
+        Self { inner, limit, calls: 0 }
+    }
+}
+
+impl Measurer for AbortAfter<'_> {
+    fn devices(&self) -> Vec<String> {
+        self.inner.devices()
+    }
+
+    fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
+        self.calls += 1;
+        if self.calls > self.limit {
+            return Err(MeasureError(format!(
+                "injected leader death before joint batch {} ({} requests unsent)",
+                self.calls,
+                reqs.len()
+            )));
+        }
+        self.inner.measure_batch(reqs)
+    }
+
+    fn occupancy(&self, device: &str) -> usize {
+        self.inner.occupancy(device)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

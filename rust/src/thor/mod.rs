@@ -18,6 +18,7 @@
 //! reusable across models sharing families — the paper's "one-time
 //! endeavor" property.
 
+pub mod checkpoint;
 pub mod estimator;
 pub mod fit;
 pub mod measure;
@@ -26,10 +27,11 @@ pub mod pipeline;
 pub mod profiler;
 pub mod store;
 
+pub use checkpoint::{Checkpoint, Checkpointer, FitJournal};
 pub use estimator::{
     estimate_batch_shared, estimate_shared, Estimate, EstimateCache, SharedEstimateCache,
 };
 pub use fit::Batch;
-pub use measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurement, Measurer};
+pub use measure::{AbortAfter, LocalMeasurer, MeasureError, MeasureRequest, Measurement, Measurer};
 pub use parse::{FamilyKey, ParsedModel, Position};
-pub use pipeline::{Thor, ThorConfig};
+pub use pipeline::{ProfileOptions, Thor, ThorConfig};

@@ -30,11 +30,12 @@
 //! pre-refactor pipeline, including the stateful
 //! [`LocalMeasurer::sequential`] device stream).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::gp::KernelKind;
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
+use crate::thor::checkpoint::{inflight_key, Checkpointer, FitJournal};
 use crate::thor::estimator::{estimate, estimate_cached, Estimate, EstimateCache, EstimateError};
 use crate::thor::fit::{Batch, FamilyFit, FitConfig, FitOutcome};
 use crate::thor::measure::{LocalMeasurer, MeasureError, MeasureRequest, Measurer};
@@ -252,6 +253,23 @@ struct DeviceRun {
     active: Option<ActiveFit>,
 }
 
+/// Elasticity knobs for [`Thor::profile_with`]: resume in-flight
+/// acquisition machines from a [`crate::thor::checkpoint::Checkpoint`]'s
+/// journals, and/or write checkpoints as the run progresses.  The plain
+/// [`Thor::profile`] is `profile_with` at defaults.
+#[derive(Default)]
+pub struct ProfileOptions<'a> {
+    /// In-flight journals to replay at stage activation, keyed by
+    /// [`inflight_key`].  Completed families resume for free through the
+    /// pipeline's store idempotency (set `Thor::store` from the
+    /// checkpoint's store before calling).
+    pub resume: BTreeMap<String, FitJournal>,
+    /// Periodic atomic checkpoint writer (counts absorbed rounds across
+    /// all devices).  A write failure fails the run: the operator asked
+    /// for durability, so losing it silently is not an option.
+    pub checkpointer: Option<&'a mut Checkpointer>,
+}
+
 /// THOR instance: a GP store plus configuration.
 pub struct Thor {
     pub store: GpStore,
@@ -315,6 +333,25 @@ impl Thor {
         &mut self,
         m: &mut dyn Measurer,
         reference: &ModelGraph,
+    ) -> Result<ProfileReport, MeasureError> {
+        self.profile_with(m, reference, ProfileOptions::default())
+    }
+
+    /// [`Thor::profile`] with elasticity: checkpoint journals to resume
+    /// from and/or a periodic checkpoint writer (see [`ProfileOptions`]).
+    ///
+    /// Resume is bit-exact: a replayed machine regenerates the RNG
+    /// stream, warm-start chain and proposals of the original run
+    /// ([`FamilyFit::replay`]), and the reloaded store's subtraction GPs
+    /// predict bit-identically (gp::model's roundtrip pin), so the final
+    /// store is byte-identical to an uninterrupted run's.  The only
+    /// repeated work is the joint batch that was proposed but not yet
+    /// absorbed when the previous leader died.
+    pub fn profile_with(
+        &mut self,
+        m: &mut dyn Measurer,
+        reference: &ModelGraph,
+        mut opts: ProfileOptions<'_>,
     ) -> Result<ProfileReport, MeasureError> {
         let parsed = parse(reference);
         let rg = ranges(&parsed);
@@ -384,7 +421,22 @@ impl Thor {
                             }
                         };
                         let Some(stage) = stage else { break };
-                        let fit = FamilyFit::new(stage.dim, &self.cfg.fit_cfg(stage.dim));
+                        // Resume path: an in-flight journal for this
+                        // family replays the machine bit-identically to
+                        // where the checkpointed leader left it.
+                        let fit_cfg = self.cfg.fit_cfg(stage.dim);
+                        let fit = match opts.resume.remove(&inflight_key(&device, &stage.family)) {
+                            Some(j) => {
+                                assert_eq!(
+                                    j.dim, stage.dim,
+                                    "checkpoint journal for {device}|{} disagrees with the \
+                                     reference model's family dimension",
+                                    stage.family
+                                );
+                                FamilyFit::replay(stage.dim, &fit_cfg, &j.rounds)
+                            }
+                            None => FamilyFit::new(stage.dim, &fit_cfg),
+                        };
                         let (in_gp, out_gp) = match stage.kind {
                             StageKind::Output => (None, None),
                             StageKind::Input => (
@@ -423,11 +475,35 @@ impl Thor {
                 break; // every device exhausted its plan
             }
             let ms = m.measure_batch(&reqs)?;
+            let n_rounds = spans.len();
             for (di, n, off) in spans {
                 let active = devs[di].active.as_mut().unwrap();
                 let results =
                     active.fold(&in_tmpl, &out_tmpl, &reqs[off..off + n], &ms[off..off + n]);
                 active.fit.absorb(&results);
+            }
+            // Durability point: everything measured so far is absorbed,
+            // nothing is outstanding — exactly the state a resumed
+            // leader can replay to.  (A machine whose journal is already
+            // complete checkpoints as in-flight and finishes on replay;
+            // `finish()` is deterministic, so that's byte-equivalent.)
+            if let Some(ck) = opts.checkpointer.as_deref_mut() {
+                let inflight: Vec<(String, FitJournal)> = devs
+                    .iter()
+                    .filter_map(|d| {
+                        d.active.as_ref().map(|af| {
+                            (
+                                inflight_key(&d.device, &af.stage.family),
+                                FitJournal {
+                                    dim: af.stage.dim,
+                                    rounds: af.fit.journal().to_vec(),
+                                },
+                            )
+                        })
+                    })
+                    .collect();
+                ck.absorbed(n_rounds, &self.store, &inflight)
+                    .map_err(|e| MeasureError(format!("checkpoint write failed: {e}")))?;
             }
         }
         Ok(report)

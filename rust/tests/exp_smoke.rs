@@ -130,6 +130,37 @@ fn fleeth_single_leader_serves_all_three_classes() {
 }
 
 #[test]
+fn fleete_chaos_run_resumes_byte_identically() {
+    let rep = run("fleetE");
+    assert!(rep.error.is_none(), "{:?}", rep.error);
+    assert_eq!(rep.get_metric("leader_a_died").unwrap(), 1.0, "fault injection never fired");
+    assert_eq!(
+        rep.get_metric("store_byte_equal").unwrap(),
+        1.0,
+        "resumed store diverged from the uninterrupted run"
+    );
+    assert_eq!(rep.get_metric("families_fitted").unwrap(), 15.0, "5 families × 3 classes");
+    assert!(rep.get_metric("checkpoint_writes").unwrap() >= 6.0);
+    // Leader A made real progress before dying, and leader B had real
+    // work left: the handover split the run in two non-trivial halves.
+    assert!(rep.get_metric("families_checkpointed").unwrap() >= 1.0);
+    assert!(rep.get_metric("families_checkpointed").unwrap() < 15.0);
+    assert!(rep.get_metric("inflight_resumed").unwrap() >= 1.0, "no in-flight machine resumed");
+    assert!(rep.get_metric("jobs_resumed_done").unwrap() > 0.0);
+    assert_eq!(
+        rep.get_metric("jobs_resumed_done").unwrap(),
+        rep.get_metric("jobs_resumed_submitted").unwrap(),
+        "resumed leader lost jobs"
+    );
+    assert_eq!(rep.get_metric("jobs_requeued_resumed").unwrap(), 0.0);
+    for dev in ["xavier", "tx2", "server"] {
+        let m = rep.get_metric(&format!("mape_{dev}")).unwrap_or(f64::NAN);
+        assert!(m.is_finite() && m >= 0.0, "{dev} MAPE {m}");
+    }
+    assert_eq!(rep.tables[0].rows.len(), 3, "{:?}", rep.tables[0].rows);
+}
+
+#[test]
 fn serve1_daemon_answers_are_byte_stable() {
     let rep = run("serve1");
     assert!(rep.error.is_none(), "{:?}", rep.error);

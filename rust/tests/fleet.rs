@@ -11,13 +11,24 @@
 //! seed) — so a 3-worker fleet, a 3-worker fleet with a mid-stream
 //! death, and a single worker must all produce byte-identical stores.
 //!
-//! CI runs this file under a 60-second timeout guard: any dead/live-lock
+//! The elasticity tests extend the same contract to worker *rejoin* (a
+//! dead worker reconnects as a fresh id and serves the rest of the run)
+//! and to leader *checkpoint/resume* (`thor::thor::checkpoint`): a
+//! leader killed between absorbs is replaced by a successor that resumes
+//! from its checkpoint, and the resumed final store must be
+//! byte-identical to the uninterrupted run's — with no measurement job
+//! ever re-issued for an already-absorbed point.
+//!
+//! CI runs this file under a 120-second timeout guard: any dead/live-lock
 //! in the leader loop fails fast instead of hanging the suite.
 
-use thor::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec};
+use thor::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec, ServeOptions};
 use thor::model::{zoo, ModelGraph};
 use thor::simdevice::{devices, Device};
-use thor::thor::{Batch, ThorConfig};
+use thor::thor::{
+    Batch, Checkpoint, Checkpointer, LocalMeasurer, MeasureError, MeasureRequest, Measurement,
+    Measurer, ProfileOptions, Thor, ThorConfig,
+};
 
 const BASE_SEED: u64 = 42;
 
@@ -201,6 +212,235 @@ fn hetero_fleet_worker_death_requeues_within_the_class() {
         run.jobs_done,
         "per-class counts do not add up to the total"
     );
+}
+
+#[test]
+fn dead_worker_rejoins_as_a_fresh_id_and_serves_the_rest_of_the_run() {
+    // Worker 1 completes one job, dies with its second in flight, then
+    // reconnects — the leader files the re-Hello as connection id 2 and
+    // folds it back into the class, so the ledger grows a third slot
+    // and the rejoined incarnation finishes real work.
+    let server = FleetServer::new(ThorConfig { batch: Batch::Fixed(3), ..ThorConfig::quick() });
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..2u64 {
+        let addr = addr.clone();
+        let reference = reference();
+        handles.push(std::thread::spawn(move || {
+            let mut worker = DeviceWorker::new(Device::new(devices::xavier(), 100 + w), &reference)
+                .with_per_job_seed(BASE_SEED);
+            if w == 0 {
+                worker.run(&addr).unwrap_or(0)
+            } else {
+                worker.run_phases(&[(addr.clone(), Some(1)), (addr, None)])
+            }
+        }));
+    }
+    let run = bound.serve(&reference(), 2).expect("fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+
+    assert!(run.requeued >= 1, "the death left no job to re-queue");
+    assert_eq!(run.jobs_done, run.jobs_submitted, "job(s) lost or double-counted");
+    // Two founders + one rejoined incarnation = three ledger slots; the
+    // rejoined id must have contributed (batch affinity round-robins
+    // over the live ids {0, 2} for the rest of the run).
+    assert_eq!(run.per_worker.len(), 3, "rejoin did not grow the ledger: {:?}", run.per_worker);
+    assert!(run.per_worker[2] > 0, "rejoined worker never served a job: {:?}", run.per_worker);
+    assert_eq!(
+        run.per_worker.iter().sum::<usize>(),
+        run.jobs_done,
+        "per-worker counts do not add up across incarnations"
+    );
+    // Exactly-once per class held across the death and the rejoin, and
+    // the store is still the pure function of the config.
+    let baseline = run_fleet(1, None);
+    assert_eq!(
+        run.store.to_json().to_string(),
+        baseline.store.to_json().to_string(),
+        "death + rejoin changed the fitted store"
+    );
+}
+
+/// A [`LocalMeasurer`] wrapper that logs every measured request and can
+/// fail on a chosen call — the in-process leader-kill fault: the error
+/// fires *before* the batch is measured or logged, so the log holds
+/// exactly the absorbed work.
+struct Recording {
+    inner: LocalMeasurer<'static>,
+    log: Vec<MeasureRequest>,
+    fail_after: Option<usize>,
+    calls: usize,
+}
+
+impl Recording {
+    fn new(reference: &ModelGraph, fail_after: Option<usize>) -> Self {
+        Self {
+            inner: LocalMeasurer::per_job(devices::xavier(), BASE_SEED, reference),
+            log: Vec::new(),
+            fail_after,
+            calls: 0,
+        }
+    }
+}
+
+impl Measurer for Recording {
+    fn devices(&self) -> Vec<String> {
+        self.inner.devices()
+    }
+
+    fn measure_batch(&mut self, reqs: &[MeasureRequest]) -> Result<Vec<Measurement>, MeasureError> {
+        self.calls += 1;
+        if self.fail_after.map_or(false, |k| self.calls > k) {
+            return Err(MeasureError("injected leader death".into()));
+        }
+        self.log.extend(reqs.iter().cloned());
+        self.inner.measure_batch(reqs)
+    }
+
+    fn occupancy(&self, device: &str) -> usize {
+        self.inner.occupancy(device)
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_byte_identical_and_never_remeasures_absorbed_points() {
+    let cfg = ThorConfig { batch: Batch::Fixed(2), ..ThorConfig::quick() };
+    let reference = reference();
+
+    // The uninterrupted run: final store S* and request log R*.
+    let mut star = Thor::new(cfg);
+    let mut m_star = Recording::new(&reference, None);
+    star.profile(&mut m_star, &reference).expect("uninterrupted profile");
+    let store_star = star.store.to_json().to_string();
+
+    // The doomed run: checkpoint after every absorbed batch, die on the
+    // 4th — between absorbs, the durability point.
+    let path =
+        std::env::temp_dir().join(format!("thor_fleet_resume_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut ck_writer = Checkpointer::new(&path, 1);
+    let mut doomed = Thor::new(cfg);
+    let mut m1 = Recording::new(&reference, Some(3));
+    let died = doomed
+        .profile_with(
+            &mut m1,
+            &reference,
+            ProfileOptions { checkpointer: Some(&mut ck_writer), ..Default::default() },
+        )
+        .is_err();
+    assert!(died, "fault injection never fired");
+    assert_eq!(ck_writer.writes, 3, "one checkpoint per absorbed batch");
+
+    // The successor: resume from the checkpoint and finish.
+    let ck = Checkpoint::load(&path).expect("read checkpoint").expect("checkpoint written");
+    assert!(!ck.inflight.is_empty(), "no in-flight machine to resume");
+    let mut resumed = Thor::new(cfg);
+    resumed.store = ck.store;
+    let mut m2 = Recording::new(&reference, None);
+    resumed
+        .profile_with(
+            &mut m2,
+            &reference,
+            ProfileOptions { resume: ck.inflight, ..Default::default() },
+        )
+        .expect("resumed profile");
+
+    assert_eq!(
+        resumed.store.to_json().to_string(),
+        store_star,
+        "resumed store diverged from the uninterrupted run"
+    );
+
+    // No measurement job is ever re-issued for an absorbed point: the
+    // doomed log followed by the resumed log is *exactly* the
+    // uninterrupted log, element for element.  (The injected failure
+    // fires before the 4th batch is measured, so that batch's requests
+    // appear once — re-proposed identically by the resumed machine.)
+    let mut joined = m1.log.clone();
+    joined.extend(m2.log.iter().cloned());
+    assert_eq!(joined, m_star.log, "resume re-measured absorbed points or skipped work");
+
+    // Atomic writes left no torn tmp file behind.
+    let tmp = path.with_file_name(format!(
+        "{}.tmp",
+        path.file_name().unwrap().to_string_lossy()
+    ));
+    assert!(!tmp.exists(), "atomic checkpoint write leaked {tmp:?}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn killed_leader_is_resumed_by_a_successor_over_real_sockets() {
+    // Socket-level version of the resume contract: leader A checkpoints
+    // and is killed after 3 joint batches; the workers fall through to
+    // leader B, which resumes from A's checkpoint.  The resumed store
+    // must be byte-identical to a healthy fleet's, on strictly fewer
+    // submitted jobs (the checkpointed work is never re-measured).
+    let cfg = ThorConfig { batch: Batch::Fixed(3), ..ThorConfig::quick() };
+    let bound_a = FleetServer::new(cfg).bind("127.0.0.1:0").expect("bind leader A");
+    let bound_b = FleetServer::new(cfg).bind("127.0.0.1:0").expect("bind leader B");
+    let addr_a = bound_a.local_addr().to_string();
+    let addr_b = bound_b.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..2u64 {
+        let reference = reference();
+        let phases = vec![(addr_a.clone(), None), (addr_b.clone(), None)];
+        handles.push(std::thread::spawn(move || {
+            DeviceWorker::new(Device::new(devices::xavier(), 100 + w), &reference)
+                .with_per_job_seed(BASE_SEED)
+                .run_phases(&phases)
+        }));
+    }
+
+    let path =
+        std::env::temp_dir().join(format!("thor_fleet_handover_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut ck_writer = Checkpointer::new(&path, 1);
+    let died = bound_a
+        .serve_spec_with(
+            &reference(),
+            FleetSpec::untyped(2),
+            ServeOptions {
+                resume: None,
+                checkpointer: Some(&mut ck_writer),
+                abort_after_rounds: Some(3),
+            },
+        )
+        .is_err();
+    assert!(died, "leader A's fault injection never fired");
+
+    let ck = Checkpoint::load(&path).expect("read checkpoint").expect("checkpoint written");
+    let resumed = bound_b
+        .serve_spec_with(
+            &reference(),
+            FleetSpec::untyped(2),
+            ServeOptions { resume: Some(ck), ..Default::default() },
+        )
+        .expect("resumed fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    let _ = std::fs::remove_file(&path);
+
+    let baseline = run_fleet(2, None);
+    assert_eq!(
+        resumed.store.to_json().to_string(),
+        baseline.store.to_json().to_string(),
+        "leader handover changed the fitted store"
+    );
+    assert!(
+        resumed.jobs_submitted < baseline.jobs_submitted,
+        "resume re-submitted checkpointed work: {} vs {} jobs",
+        resumed.jobs_submitted,
+        baseline.jobs_submitted
+    );
+    assert_eq!(resumed.jobs_done, resumed.jobs_submitted);
+    assert_eq!(resumed.requeued, 0, "no deaths were scheduled on leader B");
 }
 
 #[test]

@@ -297,6 +297,140 @@ fn prop_devices_produce_distinct_energy_profiles() {
     );
 }
 
+#[test]
+fn prop_elastic_jobqueue_exactly_once_under_join_death_rejoin() {
+    // The elasticity contract of the leader's scheduler: under arbitrary
+    // randomized schedules of submit / assign / complete / worker-death
+    // / same-class rejoin (fresh, strictly increasing ids — exactly how
+    // the accept loop files reconnections), every job completes exactly
+    // once, never on a foreign class, and the requeue ledger counts
+    // exactly the injected deaths-with-a-job-in-flight.
+    use std::collections::BTreeMap;
+    use thor::coordinator::JobQueue;
+    const CLASSES: [&str; 3] = ["xavier", "tx2", "server"];
+    check(
+        "elastic jobqueue",
+        Config { cases: 64, seed: 167 },
+        |r| {
+            (0..r.range_usize(20, 80))
+                .map(|_| (r.range_usize(0, 4) as u8, r.next_u64()))
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut q = JobQueue::new();
+            // id → class, dead or alive (the leader's Hello ledger);
+            // ids are never reused across incarnations.
+            let mut class_of: Vec<&str> = CLASSES.to_vec();
+            let mut live: Vec<usize> = (0..CLASSES.len()).collect();
+            let mut held: BTreeMap<usize, u64> = BTreeMap::new();
+            let mut completions: BTreeMap<u64, &str> = BTreeMap::new();
+            let mut submitted = 0usize;
+            let (mut deaths, mut deaths_with_job, mut rejoins, mut requeued_total) =
+                (0usize, 0usize, 0usize, 0usize);
+            for (op, salt) in ops {
+                let salt = *salt as usize;
+                match op {
+                    0 => {
+                        q.submit(CLASSES[salt % CLASSES.len()], "f", vec![salt % 7], 10);
+                        submitted += 1;
+                    }
+                    1 | 2 => {
+                        let w = live[salt % live.len()];
+                        if let Some(j) = q.assign(w, class_of[w]) {
+                            prop_assert!(
+                                j.device == class_of[w],
+                                "{} job assigned to a {} worker",
+                                j.device,
+                                class_of[w]
+                            );
+                            prop_assert!(held.insert(w, j.id).is_none(), "double assignment");
+                        }
+                    }
+                    3 => {
+                        if held.is_empty() {
+                            continue;
+                        }
+                        let w = *held.keys().nth(salt % held.len()).unwrap();
+                        let id = held.remove(&w).unwrap();
+                        prop_assert!(q.complete(id, w), "live completion rejected");
+                        prop_assert!(
+                            completions.insert(id, class_of[w]).is_none(),
+                            "job {id} completed twice"
+                        );
+                    }
+                    _ => {
+                        // Kill a random live worker, then rejoin its
+                        // class as a fresh id (the dead id stays retired).
+                        let w = live.swap_remove(salt % live.len());
+                        deaths += 1;
+                        let held_job = held.remove(&w);
+                        if held_job.is_some() {
+                            deaths_with_job += 1;
+                        }
+                        requeued_total += q.requeue_worker(w);
+                        if let Some(id) = held_job {
+                            prop_assert!(
+                                !q.complete(id, w),
+                                "stale result from dead incarnation accepted"
+                            );
+                        }
+                        class_of.push(class_of[w]);
+                        live.push(class_of.len() - 1);
+                        rejoins += 1;
+                    }
+                }
+            }
+            // At-most-one-outstanding means each death requeues exactly
+            // its held job (0 or 1): the ledger equals the fault count.
+            prop_assert!(
+                requeued_total == deaths_with_job,
+                "{requeued_total} requeued vs {deaths_with_job} deaths with a job in flight"
+            );
+            prop_assert!(rejoins == deaths, "every death rejoined");
+            // Drain with the surviving fleet — every class always has a
+            // live worker because kills pair with same-class rejoins.
+            for (w, id) in std::mem::take(&mut held) {
+                prop_assert!(q.complete(id, w), "drain completion rejected");
+                prop_assert!(completions.insert(id, class_of[w]).is_none(), "completed twice");
+            }
+            let mut guard = 0;
+            while q.pending() > 0 {
+                guard += 1;
+                prop_assert!(guard < 100_000, "drain did not terminate");
+                for &w in &live {
+                    if let Some(j) = q.assign(w, class_of[w]) {
+                        prop_assert!(j.device == class_of[w], "cross-class drain assignment");
+                        prop_assert!(q.complete(j.id, w), "drain completion rejected");
+                        prop_assert!(
+                            completions.insert(j.id, class_of[w]).is_none(),
+                            "completed twice"
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                completions.len() == submitted,
+                "{} completions for {submitted} submitted jobs",
+                completions.len()
+            );
+            prop_assert!(q.done() == submitted, "queue ledger disagrees");
+            prop_assert!(
+                CLASSES.iter().map(|c| q.done_for(c)).sum::<usize>() == q.done(),
+                "per-class ledgers do not add up"
+            );
+            // Exactly-once *per class*: every completion happened on a
+            // worker of the job's own class.
+            for (id, class) in &completions {
+                prop_assert!(
+                    q.get(*id).map(|j| j.device.as_str()) == Some(*class),
+                    "job {id} completed on foreign class {class}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
 /// A fan-out experiment with one deliberately panicking subtask, for
 /// injecting failure into a real suite run.
 struct SickFan;

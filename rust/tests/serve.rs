@@ -20,6 +20,7 @@ use thor::simdevice::{devices, Device};
 use thor::thor::estimator::estimate;
 use thor::thor::store::GpStore;
 use thor::thor::{Thor, ThorConfig};
+use thor::util::json::Json;
 
 /// Deterministic fitted store covering the cnn5 families on one device.
 fn profiled_store(device: &str, seed: u64) -> GpStore {
@@ -155,6 +156,77 @@ fn killed_mid_request_clients_cannot_wedge_the_daemon_or_poison_the_cache() {
 /// served the warm-up, the rude request, and the 2×4 post-abuse sweeps.
 fn handle_is_wedged(requests_served: u64) -> bool {
     requests_served < (1 + 1 + 2 * SPECS.len()) as u64
+}
+
+#[test]
+fn swap_store_under_concurrent_load_never_serves_torn_answers() {
+    // Hot reload while six clients hammer the daemon: every reply must
+    // come entirely from one store generation — the old or the new —
+    // never a mix.  Single answers must match one generation bit-for-bit
+    // and a coalesced batch must be all-old or all-new (the
+    // generation-stamped cache makes a torn batch the failure mode this
+    // test exists to catch).
+    const CLIENTS: usize = 6;
+    const ROUNDS: usize = 30;
+    const SWAPS: usize = 40;
+    let store_a = profiled_store("xavier", 31);
+    let store_b = profiled_store("xavier", 32);
+    let bits_a = expected_bits(&store_a, "xavier");
+    let bits_b = expected_bits(&store_b, "xavier");
+    assert_ne!(bits_a, bits_b, "profiling seeds must produce different fits");
+    // Each swap installs a fresh deserialization of the same fitted
+    // artifact: predictions are bit-identical across reloads (the GP
+    // JSON-roundtrip pin), but every reload carries a new cache
+    // generation — exactly the operator's `thor serve-estimates` reload
+    // path.
+    let json_a = store_a.to_json().to_string();
+    let json_b = store_b.to_json().to_string();
+    let reload = |s: &str| GpStore::from_json(&Json::parse(s).unwrap()).expect("reload store");
+
+    let handle = start_daemon(store_a, CLIENTS);
+    let addr = handle.addr();
+
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let (bits_a, bits_b) = (&bits_a, &bits_b);
+            scope.spawn(move || {
+                let mut client = EstimateClient::connect(&addr).expect("connect");
+                let batch: Vec<(String, String)> =
+                    SPECS.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
+                for r in 0..ROUNDS {
+                    for i in 0..SPECS.len() {
+                        let si = (c + r + i) % SPECS.len();
+                        let (e, v) = client.estimate("xavier", SPECS[si]).expect("estimate");
+                        let got = (e.to_bits(), v.to_bits());
+                        assert!(
+                            got == bits_a[si] || got == bits_b[si],
+                            "client {c} round {r} spec {si}: answer from neither generation"
+                        );
+                    }
+                    let got = client.estimate_batch(&batch).expect("batch");
+                    let bits: Vec<(u64, u64)> = got
+                        .iter()
+                        .map(|g| {
+                            let (e, v) = g.as_ref().expect("batch entry");
+                            (e.to_bits(), v.to_bits())
+                        })
+                        .collect();
+                    assert!(
+                        bits == *bits_a || bits == *bits_b,
+                        "client {c} round {r}: torn batch mixes store generations: {bits:?}"
+                    );
+                }
+            });
+        }
+        // The swapper, racing the clients: alternate B/A reloads.
+        for s in 0..SWAPS {
+            handle.swap_store(reload(if s % 2 == 0 { &json_b } else { &json_a }));
+            std::thread::yield_now();
+        }
+    });
+    let stats = handle.shutdown();
+    assert_eq!(stats.errors, 0, "swapping under load surfaced request errors");
+    assert_eq!(stats.requests, (CLIENTS * ROUNDS * (SPECS.len() + 1)) as u64);
 }
 
 #[test]
