@@ -29,16 +29,27 @@
 //! the store snapshot; in-flight requests finish against the snapshot
 //! they started with, and the generation-stamped cache lazily discards
 //! entries from older snapshots (see [`crate::thor::store`]).
+//!
+//! Deadline hardening ([`ServeTuning`]): every connection reads under a
+//! short socket poll, so a worker thread can never block indefinitely
+//! on one client.  A connection idle between requests past
+//! `idle_timeout` is reaped silently; a request line that trickles in
+//! slower than `line_timeout` (the slow-loris shape) or grows past
+//! `max_line_bytes` gets one `est_err` and the connection is dropped;
+//! writes carry `write_timeout` so a client that stops draining cannot
+//! pin a worker either.  One misbehaving client costs one bounded
+//! buffer and one error line — never a thread.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::protocol::Msg;
+use crate::coordinator::protocol::{Msg, MAX_LINE_BYTES};
 use crate::model::spec::parse_spec;
 use crate::model::ModelGraph;
 use crate::thor::estimator::{estimate_batch_shared, estimate_shared, SharedEstimateCache};
@@ -59,6 +70,8 @@ pub struct ServeStats {
     pub requests: u64,
     /// Requests answered with an error (plus malformed lines).
     pub errors: u64,
+    /// Connections reaped for idling past [`ServeTuning::idle_timeout`].
+    pub reaped: u64,
 }
 
 impl ServeStats {
@@ -66,6 +79,40 @@ impl ServeStats {
         self.connections += other.connections;
         self.requests += other.requests;
         self.errors += other.errors;
+        self.reaped += other.reaped;
+    }
+}
+
+/// Per-connection deadline knobs (see the module docs).  The defaults
+/// are generous — they exist to bound damage from misbehaving clients,
+/// not to police healthy ones; tests tighten them to milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeTuning {
+    /// Reap a connection with no request in progress after this long.
+    pub idle_timeout: Duration,
+    /// A request line must arrive (first byte to newline) within this
+    /// long, or the client is answered `est_err` and dropped — the
+    /// slow-loris bound.
+    pub line_timeout: Duration,
+    /// Socket write timeout: a client that stops draining its replies
+    /// errors the write instead of blocking the worker.
+    pub write_timeout: Duration,
+    /// Socket read-poll granularity — the worst-case extra latency for
+    /// noticing shutdown, idle expiry, or a stalled line.
+    pub poll: Duration,
+    /// Hard cap on one request line (bounds per-connection memory).
+    pub max_line_bytes: usize,
+}
+
+impl Default for ServeTuning {
+    fn default() -> Self {
+        Self {
+            idle_timeout: Duration::from_secs(60),
+            line_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            poll: Duration::from_millis(250),
+            max_line_bytes: MAX_LINE_BYTES,
+        }
     }
 }
 
@@ -85,6 +132,7 @@ impl EstimateServer {
             addr,
             store: Arc::new(RwLock::new(Arc::new(store))),
             cache: Arc::new(SharedEstimateCache::default()),
+            tuning: ServeTuning::default(),
         })
     }
 }
@@ -96,11 +144,26 @@ pub struct BoundEstimateServer {
     addr: SocketAddr,
     store: StoreSlot,
     cache: Arc<SharedEstimateCache>,
+    tuning: ServeTuning,
 }
 
 impl BoundEstimateServer {
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Override the connection deadlines (tests tighten these).
+    pub fn with_tuning(mut self, tuning: ServeTuning) -> Self {
+        self.tuning = tuning;
+        self
+    }
+
+    /// Bound the shared estimate cache to roughly `cap` entries total
+    /// (LRU per shard; `0` = unbounded, the default).  `thor
+    /// serve-estimates --cache-cap N`.
+    pub fn with_cache_cap(mut self, cap: usize) -> Self {
+        self.cache = Arc::new(SharedEstimateCache::bounded(cap));
+        self
     }
 
     /// Spawn the worker pool and start serving.  `threads == 0` means
@@ -116,11 +179,13 @@ impl BoundEstimateServer {
             threads
         };
         let stop = Arc::new(AtomicBool::new(false));
+        let tuning = self.tuning;
         let mut workers = Vec::with_capacity(threads);
         for _ in 0..threads {
             let listener = self.listener.try_clone()?;
             let (slot, cache, stop) = (self.store.clone(), self.cache.clone(), stop.clone());
-            workers.push(std::thread::spawn(move || worker_loop(listener, slot, cache, stop)));
+            workers
+                .push(std::thread::spawn(move || worker_loop(listener, slot, cache, stop, tuning)));
         }
         Ok(EstimateServerHandle {
             addr: self.addr,
@@ -196,6 +261,7 @@ fn worker_loop(
     slot: StoreSlot,
     cache: Arc<SharedEstimateCache>,
     stop: Arc<AtomicBool>,
+    tuning: ServeTuning,
 ) -> ServeStats {
     let mut stats = ServeStats::default();
     loop {
@@ -208,7 +274,7 @@ fn worker_loop(
                     break; // shutdown-unblocking dummy connection
                 }
                 stats.connections += 1;
-                handle_conn(stream, &slot, &cache, &stop, &mut stats);
+                handle_conn(stream, &slot, &cache, &stop, &tuning, &mut stats);
             }
             // Transient accept failure (e.g. EMFILE, aborted handshake):
             // keep the loop alive; only the stop flag ends a worker.
@@ -218,28 +284,150 @@ fn worker_loop(
     stats
 }
 
-/// Serve one connection until the client disconnects.  Every exit path
-/// returns to the caller's accept loop — a half-written line, a dropped
-/// socket or a malformed request only ends *this* connection.
+/// How one [`read_request_line`] call resolved.
+enum LineRead {
+    /// A complete request line landed in the buffer.
+    Line,
+    /// Clean EOF between requests.
+    Eof,
+    /// No request started within [`ServeTuning::idle_timeout`] — reap
+    /// silently (a pooled client going quiet is not an error).
+    Idle,
+    /// A line started but did not finish within
+    /// [`ServeTuning::line_timeout`] — the slow-loris shape.
+    SlowLine,
+    /// The line outgrew [`ServeTuning::max_line_bytes`].
+    TooLong,
+    /// The daemon is shutting down.
+    Stopped,
+    /// Mid-line EOF, invalid UTF-8, or a hard socket error.
+    Broken,
+}
+
+/// Read one `\n`-terminated line under the connection deadlines.  The
+/// socket carries a [`ServeTuning::poll`] read timeout, so this loop
+/// wakes every poll tick to check the stop flag and the idle/line
+/// clocks — a worker thread is never parked on a client for longer
+/// than one tick.  On `Line` the text (sans enforcement) is in `line`.
+fn read_request_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    tuning: &ServeTuning,
+    stop: &AtomicBool,
+) -> LineRead {
+    line.clear();
+    let mut pending: Vec<u8> = Vec::new();
+    let opened = Instant::now();
+    let mut line_start: Option<Instant> = None;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return LineRead::Stopped;
+        }
+        let consumed = match reader.fill_buf() {
+            Ok([]) => {
+                return if pending.is_empty() { LineRead::Eof } else { LineRead::Broken };
+            }
+            Ok(chunk) => {
+                if line_start.is_none() {
+                    line_start = Some(Instant::now());
+                }
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        if pending.len() + i + 1 > tuning.max_line_bytes {
+                            return LineRead::TooLong;
+                        }
+                        pending.extend_from_slice(&chunk[..=i]);
+                        i + 1
+                    }
+                    None => {
+                        if pending.len() + chunk.len() > tuning.max_line_bytes {
+                            return LineRead::TooLong;
+                        }
+                        pending.extend_from_slice(chunk);
+                        chunk.len()
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                // One poll tick elapsed with no bytes: check the clocks.
+                match line_start {
+                    None if opened.elapsed() >= tuning.idle_timeout => return LineRead::Idle,
+                    Some(started) if started.elapsed() >= tuning.line_timeout => {
+                        return LineRead::SlowLine;
+                    }
+                    _ => continue,
+                }
+            }
+            Err(_) => return LineRead::Broken,
+        };
+        reader.consume(consumed);
+        if pending.last() == Some(&b'\n') {
+            return match String::from_utf8(std::mem::take(&mut pending)) {
+                Ok(s) => {
+                    line.push_str(&s);
+                    LineRead::Line
+                }
+                Err(_) => LineRead::Broken,
+            };
+        }
+    }
+}
+
+/// Serve one connection until the client disconnects or trips a
+/// deadline.  Every exit path returns to the caller's accept loop — a
+/// half-written line, a dropped socket, a malformed request, or a
+/// deadline expiry only ends *this* connection.
 fn handle_conn(
     stream: TcpStream,
     slot: &StoreSlot,
     cache: &SharedEstimateCache,
     stop: &AtomicBool,
+    tuning: &ServeTuning,
     stats: &mut ServeStats,
 ) {
+    // try_clone shares the underlying file description, so the
+    // read/write timeouts below govern both halves; set them once.
+    if stream.set_read_timeout(Some(tuning.poll)).is_err()
+        || stream.set_write_timeout(Some(tuning.write_timeout)).is_err()
+    {
+        return;
+    }
     let Ok(read_half) = stream.try_clone() else { return };
     let mut writer = stream;
     let mut reader = BufReader::new(read_half);
     let mut line = String::new();
     loop {
-        if stop.load(Ordering::Relaxed) {
-            return;
-        }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) | Err(_) => return, // client gone (EOF or mid-line abort)
-            Ok(_) => {}
+        match read_request_line(&mut reader, &mut line, tuning, stop) {
+            LineRead::Line => {}
+            LineRead::Eof | LineRead::Broken | LineRead::Stopped => return,
+            LineRead::Idle => {
+                stats.reaped += 1;
+                return;
+            }
+            LineRead::SlowLine => {
+                stats.errors += 1;
+                let err = Msg::EstimateError {
+                    id: 0,
+                    error: format!(
+                        "request line stalled past the {:?} read deadline",
+                        tuning.line_timeout
+                    ),
+                };
+                let _ = writer.write_all(err.encode().as_bytes());
+                return;
+            }
+            LineRead::TooLong => {
+                stats.errors += 1;
+                let err = Msg::EstimateError {
+                    id: 0,
+                    error: format!("request line exceeds {} bytes", tuning.max_line_bytes),
+                };
+                let _ = writer.write_all(err.encode().as_bytes());
+                return;
+            }
         }
         if line.trim().is_empty() {
             continue;
@@ -497,6 +685,30 @@ mod tests {
         drop(bad);
         let stats = handle.shutdown();
         assert!(stats.errors >= 2);
+    }
+
+    #[test]
+    fn overlong_request_lines_get_one_error_then_drop() {
+        let store = profiled_store("xavier", 11);
+        let tuning = ServeTuning { max_line_bytes: 256, ..ServeTuning::default() };
+        let handle =
+            EstimateServer::bind("127.0.0.1:0", store).unwrap().with_tuning(tuning).start(2).unwrap();
+        let mut bad = EstimateClient::connect(&handle.addr()).unwrap();
+        // No newline at all: the cap must bound buffered bytes, not just
+        // completed lines.
+        bad.send_raw(&[b'x'; 512]).unwrap();
+        match bad.read_reply().unwrap() {
+            Msg::EstimateError { id: 0, error } => assert!(error.contains("exceeds"), "{error}"),
+            other => panic!("expected EstimateError, got {other:?}"),
+        }
+        assert!(bad.read_reply().is_err(), "connection should be closed after the cap trips");
+        // The daemon still serves well-formed clients afterwards.
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        assert!(client.estimate("xavier", "cnn5:8,16,32,64:16").unwrap().0 > 0.0);
+        drop(client);
+        drop(bad);
+        let stats = handle.shutdown();
+        assert!(stats.errors >= 1);
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Deterministic fault injection for the chaos tests and the straggler
+//! experiment (`fleetS`).
+//!
+//! A [`FaultPlan`] scripts the *slowness* failure modes that PR 7's
+//! death/rejoin chaos could not express: a worker that stalls for a
+//! while and recovers, a worker that hangs **without disconnecting**
+//! (the connection stays open, nothing ever comes back — the classic
+//! thermal-throttled straggler), and a chronically slow writer.  A
+//! slow-loris *client* (bytes trickled one at a time, newline withheld)
+//! is scripted with [`slow_loris_send`] against the estimation daemon.
+//!
+//! Everything here is a pure function of its inputs: a plan derived
+//! from a seed ([`FaultPlan::seeded`]) injects the same faults at the
+//! same job indices on every run, and the reconnect backoff schedule
+//! ([`reconnect_backoff`]) is a pure function of `(seed, attempt)` —
+//! chaos runs are reproducible byte-for-byte, which is what lets the
+//! fleetS golden assert `store_byte_equal == 1` instead of "usually
+//! recovers".
+//!
+//! Why stalls cannot corrupt the store: the PR-4 determinism contract
+//! makes every measurement a pure function of its request via
+//! [`crate::coordinator::worker::job_seed`], so when the leader
+//! speculatively re-issues a straggler's job
+//! ([`crate::coordinator::server`]) the duplicate completions are
+//! bitwise identical — whichever arrives first lands, the loser is
+//! dropped by the exactly-once queue, and the bytes are the same either
+//! way.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::hash::Fnv1a;
+use crate::util::rng::Pcg64;
+
+/// What a stalling worker does once its stall triggers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stall {
+    /// Sleep this long with the job in flight, then answer it and keep
+    /// serving — a device that throttled and recovered.  The leader may
+    /// have speculated the job elsewhere meanwhile; the late (bitwise
+    /// identical) duplicate is dropped by exactly-once completion.
+    Recover(Duration),
+    /// Never answer again, but keep the socket open — no Disconnected
+    /// event ever fires for this worker.  The worker still *reads* (so
+    /// the OS buffers never push back on the leader) and exits quietly
+    /// on `Shutdown` or leader hang-up.
+    Hang,
+}
+
+/// A deterministic per-worker fault script, threaded into
+/// [`crate::coordinator::DeviceWorker`] via
+/// [`crate::coordinator::DeviceWorker::with_faults`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Trigger the stall upon *receiving* the `k+1`-th job (after `k`
+    /// clean completions) — the same indexing as
+    /// [`crate::coordinator::DeviceWorker::run_limited`]'s death fault.
+    /// `None` = never stall.
+    pub stall_after_jobs: Option<usize>,
+    /// What the stall does; ignored unless `stall_after_jobs` is set.
+    pub stall: Option<Stall>,
+    /// Sleep this long before every `Result` write — a chronically slow
+    /// writer whose results arrive late but intact.
+    pub slow_write: Option<Duration>,
+}
+
+impl FaultPlan {
+    /// A worker that completes `jobs` jobs, then hangs without
+    /// disconnecting on the next one.
+    pub fn hang_after(jobs: usize) -> Self {
+        Self { stall_after_jobs: Some(jobs), stall: Some(Stall::Hang), ..Self::default() }
+    }
+
+    /// A worker that completes `jobs` jobs, stalls `stall` on the next
+    /// one, then recovers and keeps serving.
+    pub fn stall_after(jobs: usize, stall: Duration) -> Self {
+        Self {
+            stall_after_jobs: Some(jobs),
+            stall: Some(Stall::Recover(stall)),
+            ..Self::default()
+        }
+    }
+
+    /// A worker whose every result write is preceded by `per_write` of
+    /// dawdling.
+    pub fn slow_writer(per_write: Duration) -> Self {
+        Self { slow_write: Some(per_write), ..Self::default() }
+    }
+
+    /// Derive a plan from a seed: which fault, after how many jobs, and
+    /// how long, all pure functions of `seed` — the randomized-stall
+    /// property test draws its chaos from here so every failing case
+    /// replays exactly.
+    pub fn seeded(seed: u64) -> Self {
+        let mut r = Pcg64::new(seed);
+        let jobs = r.range_usize(1, 3);
+        match r.range_usize(0, 2) {
+            0 => Self::hang_after(jobs),
+            1 => Self::stall_after(jobs, Duration::from_millis(r.range_usize(150, 500) as u64)),
+            _ => Self::slow_writer(Duration::from_millis(r.range_usize(1, 20) as u64)),
+        }
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_noop(&self) -> bool {
+        self.stall_after_jobs.is_none() && self.slow_write.is_none()
+    }
+}
+
+/// Seeded exponential reconnect backoff: attempt `k` waits
+/// `10ms · 2^min(k,6)` plus a seeded jitter of up to the same again —
+/// deterministic per `(seed, attempt)`, so a reconnect schedule is as
+/// replayable as the faults that caused it, while distinct seeds
+/// decorrelate (no thundering herd when a fleet's workers all lose the
+/// same leader).
+pub fn reconnect_backoff(seed: u64, attempt: u32) -> Duration {
+    let base_ms = 10u64 << attempt.min(6);
+    let mut h = Fnv1a::new();
+    h.write(&seed.to_le_bytes());
+    h.write(&u64::from(attempt).to_le_bytes());
+    Duration::from_millis(base_ms + h.finish() % base_ms)
+}
+
+/// Slow-loris a byte string into `stream`: one byte per write, sleeping
+/// `per_byte` between writes.  Used against the estimation daemon to
+/// assert that a trickling client is reaped at the line deadline
+/// instead of holding a worker thread hostage (`rust/tests/serve.rs`).
+/// Returns how many bytes were accepted before the peer gave up on us.
+pub fn slow_loris_send(stream: &mut TcpStream, bytes: &[u8], per_byte: Duration) -> usize {
+    for (i, b) in bytes.iter().enumerate() {
+        if stream.write_all(std::slice::from_ref(b)).is_err() {
+            return i;
+        }
+        let _ = stream.flush();
+        std::thread::sleep(per_byte);
+    }
+    bytes.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_vary_across_seeds() {
+        for seed in 0..50u64 {
+            assert_eq!(FaultPlan::seeded(seed), FaultPlan::seeded(seed), "seed {seed} not pure");
+        }
+        // The generator covers all three fault kinds over a small seed
+        // sweep — a degenerate constant plan would make the randomized
+        // chaos tests vacuous.
+        let (mut hangs, mut recovers, mut slow) = (0, 0, 0);
+        for seed in 0..50u64 {
+            let p = FaultPlan::seeded(seed);
+            match (p.stall, p.slow_write) {
+                (Some(Stall::Hang), _) => hangs += 1,
+                (Some(Stall::Recover(_)), _) => recovers += 1,
+                (None, Some(_)) => slow += 1,
+                other => panic!("seeded plan is neither stall nor slow-write: {other:?}"),
+            }
+        }
+        assert!(hangs > 0 && recovers > 0 && slow > 0, "{hangs}/{recovers}/{slow}");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_grows_and_decorrelates() {
+        for attempt in 0..10 {
+            assert_eq!(reconnect_backoff(7, attempt), reconnect_backoff(7, attempt));
+        }
+        // Envelope: attempt k waits within [10·2^min(k,6), 2·10·2^min(k,6)) ms.
+        for attempt in 0..10u32 {
+            let ms = reconnect_backoff(7, attempt).as_millis() as u64;
+            let base = 10u64 << attempt.min(6);
+            assert!(ms >= base && ms < 2 * base, "attempt {attempt}: {ms}ms outside envelope");
+        }
+        // Different seeds land on different jitter somewhere in the
+        // schedule (decorrelation, not a fixed offset).
+        assert!(
+            (0..10).any(|a| reconnect_backoff(1, a) != reconnect_backoff(2, a)),
+            "seeds 1 and 2 share the whole backoff schedule"
+        );
+    }
+
+    #[test]
+    fn constructors_set_exactly_their_fault() {
+        let h = FaultPlan::hang_after(2);
+        assert_eq!(h.stall_after_jobs, Some(2));
+        assert_eq!(h.stall, Some(Stall::Hang));
+        assert!(h.slow_write.is_none());
+        let s = FaultPlan::stall_after(1, Duration::from_millis(100));
+        assert_eq!(s.stall, Some(Stall::Recover(Duration::from_millis(100))));
+        let w = FaultPlan::slow_writer(Duration::from_millis(5));
+        assert!(w.stall_after_jobs.is_none() && w.slow_write.is_some());
+        assert!(FaultPlan::default().is_noop());
+        assert!(!h.is_noop() && !s.is_noop() && !w.is_noop());
+    }
+}

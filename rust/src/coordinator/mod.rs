@@ -38,8 +38,16 @@
 //!   store is a pure function of (reference, config, base seed) —
 //!   independent of worker count, scheduling, mid-run worker death, and
 //!   of whether the measurements ran locally or over the fleet.
+//!
+//! The fault model is two-tier: workers that *die* disconnect and
+//! their jobs requeue (PR 7's elasticity); workers that *stall* stay
+//! connected and silent, and are handled by per-job deadlines with
+//! speculative re-issue ([`server::FleetSpec::with_deadline`]).  The
+//! [`faults`] module scripts both kinds deterministically for the chaos
+//! tests and the fleetS experiment.
 
 pub mod estimate_server;
+pub mod faults;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
@@ -47,8 +55,10 @@ pub mod worker;
 
 pub use estimate_server::{
     BoundEstimateServer, EstimateClient, EstimateServer, EstimateServerHandle, ServeStats,
+    ServeTuning,
 };
-pub use protocol::Msg;
+pub use faults::{reconnect_backoff, slow_loris_send, FaultPlan, Stall};
+pub use protocol::{read_line_capped, Msg, MAX_LINE_BYTES};
 pub use scheduler::{JobQueue, JobState};
 pub use server::{BoundFleetServer, FleetMeasurer, FleetRun, FleetServer, FleetSpec, ServeOptions};
 pub use worker::{class_seed, job_seed, DeviceWorker};

@@ -29,7 +29,65 @@
 //! id (echoed in the reply so clients can pipeline), a device class and
 //! a model spec string ([`crate::model::spec`]).
 
+use std::io::{self, BufRead};
+
 use crate::util::json::Json;
+
+/// Ceiling on one protocol line.  Every legitimate message is a few
+/// hundred bytes (the largest, a wide `EstimateBatch`, stays well under
+/// a megabyte), so a line still growing past this is a broken or
+/// hostile peer streaming bytes without a newline — readers bail out
+/// instead of buffering its stream forever ([`read_line_capped`]).
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Read one `\n`-terminated line like `BufRead::read_line`, but refuse
+/// to buffer more than `max` bytes: both coordinator tiers use this so
+/// a newline-less stream costs a bounded buffer and one
+/// `InvalidData` error, not unbounded memory.  On the cap (or invalid
+/// UTF-8) the offending bytes stay unconsumed — callers drop the
+/// connection, they never resynchronize.  Returns bytes read, newline
+/// included; `Ok(0)` is clean EOF.
+pub fn read_line_capped<R: BufRead>(r: &mut R, line: &mut String, max: usize) -> io::Result<usize> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                break; // EOF (mid-line EOF returns what arrived, like read_line)
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    if buf.len() + i + 1 > max {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("protocol line exceeds {max} bytes"),
+                        ));
+                    }
+                    buf.extend_from_slice(&chunk[..=i]);
+                    (true, i + 1)
+                }
+                None => {
+                    if buf.len() + chunk.len() > max {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("protocol line exceeds {max} bytes"),
+                        ));
+                    }
+                    buf.extend_from_slice(chunk);
+                    (false, chunk.len())
+                }
+            }
+        };
+        r.consume(used);
+        if done {
+            break;
+        }
+    }
+    let s = std::str::from_utf8(&buf)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    line.push_str(s);
+    Ok(buf.len())
+}
 
 /// Largest integer an f64 represents exactly (2^53).  Ids above this
 /// must not travel as JSON numbers: the `u64 → f64` cast would round,
@@ -382,6 +440,41 @@ mod tests {
         assert!(Msg::decode("not json").is_none());
         assert!(Msg::decode(r#"{"type":"job"}"#).is_none()); // missing fields
         assert!(Msg::decode(r#"{"type":"est","id":1,"device":"xavier"}"#).is_none());
+    }
+
+    #[test]
+    fn capped_reader_matches_read_line_and_rejects_overlong() {
+        use std::io::Cursor;
+        // Ordinary lines behave exactly like read_line.
+        let mut r = Cursor::new(b"hello\nworld\n".to_vec());
+        let mut line = String::new();
+        assert_eq!(read_line_capped(&mut r, &mut line, 64).unwrap(), 6);
+        assert_eq!(line, "hello\n");
+        line.clear();
+        assert_eq!(read_line_capped(&mut r, &mut line, 64).unwrap(), 6);
+        assert_eq!(line, "world\n");
+        line.clear();
+        assert_eq!(read_line_capped(&mut r, &mut line, 64).unwrap(), 0, "EOF");
+        // Mid-line EOF returns the partial line (read_line parity).
+        let mut r = Cursor::new(b"partial".to_vec());
+        line.clear();
+        assert_eq!(read_line_capped(&mut r, &mut line, 64).unwrap(), 7);
+        assert_eq!(line, "partial");
+        // A newline-less stream past the cap errors instead of buffering.
+        let mut r = Cursor::new(vec![b'x'; 1000]);
+        line.clear();
+        let err = read_line_capped(&mut r, &mut line, 100).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // A line whose newline lands past the cap errors too.
+        let mut long = vec![b'y'; 200];
+        long.push(b'\n');
+        let mut r = Cursor::new(long);
+        line.clear();
+        assert!(read_line_capped(&mut r, &mut line, 100).is_err());
+        // Invalid UTF-8 is a framing error, not a panic.
+        let mut r = Cursor::new(vec![0xff, 0xfe, b'\n']);
+        line.clear();
+        assert!(read_line_capped(&mut r, &mut line, 64).is_err());
     }
 
     #[test]

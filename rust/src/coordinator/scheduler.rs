@@ -44,6 +44,13 @@ pub struct Job {
     /// experiment).  Cleared when the worker dies, so pinned jobs never
     /// strand — they fall back to any same-class peer.
     pub affinity: Option<usize>,
+    /// Straggler speculation: a second worker also running this job
+    /// ([`JobQueue::speculate`]).  Invariant: `Some` only while the job
+    /// is `Assigned` — completion and requeue both clear it.  Either
+    /// runner's result completes the job (first wins); with per-job
+    /// seeding the two results are bitwise identical, so which one wins
+    /// never shows in the store.
+    pub speculated: Option<usize>,
 }
 
 /// FIFO queue with class-scoped, at-most-one-outstanding-job-per-worker
@@ -91,6 +98,7 @@ impl JobQueue {
                 iterations,
                 state: JobState::Queued,
                 affinity,
+                speculated: None,
             },
         );
         id
@@ -101,7 +109,7 @@ impl JobQueue {
     /// (at-most-one-outstanding invariant).  A worker never receives a
     /// job of another device class.
     pub fn assign(&mut self, worker: usize, class: &str) -> Option<Job> {
-        if self.jobs.values().any(|j| j.state == (JobState::Assigned { worker })) {
+        if self.busy(worker) {
             return None;
         }
         let id = self
@@ -118,12 +126,49 @@ impl JobQueue {
         Some(job.clone())
     }
 
-    /// Record completion; returns false if the job was not assigned to
-    /// this worker (stale/duplicate results are dropped).
+    /// A worker holding any job, primary or speculative — the
+    /// at-most-one-outstanding invariant counts both kinds of hold.
+    pub fn busy(&self, worker: usize) -> bool {
+        self.jobs
+            .values()
+            .any(|j| j.state == (JobState::Assigned { worker }) || j.speculated == Some(worker))
+    }
+
+    /// Issue a speculative duplicate of in-flight job `id` to a second
+    /// worker of the same class (straggler recovery): either runner's
+    /// result now completes the job, first wins.  Refused — `None` —
+    /// when the job is not in flight, the worker is its primary runner,
+    /// the class does not match, or the worker is busy.  An existing
+    /// speculative assignee is *replaced* (the leader re-speculates when
+    /// the first speculation stalled too); its late result becomes
+    /// stale, which is harmless because duplicates are bitwise
+    /// identical and dropped anyway.
+    pub fn speculate(&mut self, id: u64, worker: usize, class: &str) -> Option<Job> {
+        if self.busy(worker) {
+            return None;
+        }
+        let j = self.jobs.get_mut(&id)?;
+        match j.state {
+            JobState::Assigned { worker: primary } if primary != worker && j.device == class => {
+                j.speculated = Some(worker);
+                Some(j.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Record completion; returns false if the job was not held by this
+    /// worker — primary or speculative — (stale/duplicate results are
+    /// dropped).  First result wins: completion retires both holds.
     pub fn complete(&mut self, id: u64, worker: usize) -> bool {
         match self.jobs.get_mut(&id) {
-            Some(j) if j.state == (JobState::Assigned { worker }) => {
+            Some(j)
+                if j.state == (JobState::Assigned { worker })
+                    || (matches!(j.state, JobState::Assigned { .. })
+                        && j.speculated == Some(worker)) =>
+            {
                 j.state = JobState::Done;
+                j.speculated = None;
                 true
             }
             _ => false,
@@ -133,17 +178,46 @@ impl JobQueue {
     /// A worker died: re-queue its in-flight jobs and strip its affinity
     /// from every live job (pinned-but-unassigned jobs would otherwise
     /// strand forever).  Re-queued jobs keep their device class, so only
-    /// same-class survivors can take them.  Returns the number of
-    /// re-queued jobs.
+    /// same-class survivors can take them.  A job whose dead primary
+    /// had a live speculative runner is not re-queued — the speculative
+    /// runner is *promoted* to primary (the job never left flight);
+    /// conversely a dead speculative runner just loses its hold.
+    /// Returns the number of re-queued jobs (promotions don't count —
+    /// nothing went back to the queue).
     pub fn requeue_worker(&mut self, worker: usize) -> usize {
         let mut n = 0;
         for j in self.jobs.values_mut() {
             if j.state == (JobState::Assigned { worker }) {
-                j.state = JobState::Queued;
-                n += 1;
+                match j.speculated.take() {
+                    Some(spec) if spec != worker => {
+                        j.state = JobState::Assigned { worker: spec };
+                    }
+                    _ => {
+                        j.state = JobState::Queued;
+                        n += 1;
+                    }
+                }
+            } else if j.speculated == Some(worker) {
+                j.speculated = None;
             }
             if j.affinity == Some(worker) {
                 j.affinity = None;
+            }
+        }
+        n
+    }
+
+    /// Strip `worker`'s affinity from every job without touching its
+    /// holds — the leader calls this when it marks a still-connected
+    /// worker as a suspected straggler, so jobs pinned to it fall back
+    /// to healthy same-class peers instead of stranding behind a worker
+    /// the assignment pump now skips.  Returns affinities cleared.
+    pub fn clear_affinity(&mut self, worker: usize) -> usize {
+        let mut n = 0;
+        for j in self.jobs.values_mut() {
+            if j.affinity == Some(worker) {
+                j.affinity = None;
+                n += 1;
             }
         }
         n
@@ -407,6 +481,107 @@ mod tests {
         );
         q.complete(jx, 0);
         assert_eq!(q.classes_outstanding(), vec!["tx2".to_string()]);
+    }
+
+    #[test]
+    fn speculation_first_result_wins_exactly_once() {
+        let mut q = JobQueue::new();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
+        // speculate to an idle same-class peer
+        let j = q.speculate(id, 1, "xavier").expect("speculation refused");
+        assert_eq!(j.id, id);
+        assert!(q.busy(0) && q.busy(1), "both runners hold the job");
+        // the speculative runner answers first; the straggler's late
+        // duplicate is stale
+        assert!(q.complete(id, 1));
+        assert!(!q.complete(id, 0), "duplicate completion accepted");
+        assert_eq!(q.done(), 1);
+        assert!(!q.busy(0) && !q.busy(1));
+    }
+
+    #[test]
+    fn speculation_primary_can_still_win() {
+        let mut q = JobQueue::new();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
+        q.speculate(id, 1, "xavier").unwrap();
+        assert!(q.complete(id, 0), "recovered straggler's first result rejected");
+        assert!(!q.complete(id, 1), "speculative duplicate accepted");
+        assert_eq!(q.done(), 1);
+    }
+
+    #[test]
+    fn speculate_refuses_bad_targets() {
+        let mut q = JobQueue::new();
+        let id = submit1(&mut q, vec![1]);
+        assert!(q.speculate(id, 1, "xavier").is_none(), "speculated a queued job");
+        assign1(&mut q, 0).unwrap();
+        assert!(q.speculate(id, 0, "xavier").is_none(), "speculated onto the primary");
+        assert!(q.speculate(id, 1, "tx2").is_none(), "speculated across classes");
+        assert!(q.speculate(9999, 1, "xavier").is_none(), "speculated a ghost job");
+        // a busy worker can't take a speculative copy either
+        submit1(&mut q, vec![2]);
+        assign1(&mut q, 1).unwrap();
+        assert!(q.speculate(id, 1, "xavier").is_none(), "busy worker took a speculation");
+        // and a speculative hold blocks regular assignment
+        q.complete(1, 1);
+        q.speculate(id, 1, "xavier").unwrap();
+        submit1(&mut q, vec![3]);
+        assert!(assign1(&mut q, 1).is_none(), "speculating worker double-assigned");
+    }
+
+    #[test]
+    fn dead_primary_promotes_speculative_runner() {
+        let mut q = JobQueue::new();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
+        q.speculate(id, 1, "xavier").unwrap();
+        // the hung primary finally disconnects: nothing re-queues (the
+        // speculative runner still has it) and its result completes
+        assert_eq!(q.requeue_worker(0), 0, "promoted job counted as re-queued");
+        assert!(q.complete(id, 1));
+        assert!(!q.complete(id, 0), "dead primary's late result accepted");
+    }
+
+    #[test]
+    fn dead_speculative_runner_leaves_primary_in_flight() {
+        let mut q = JobQueue::new();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
+        q.speculate(id, 1, "xavier").unwrap();
+        assert_eq!(q.requeue_worker(1), 0);
+        assert!(!q.busy(1), "dead speculative runner still holds the job");
+        assert!(q.complete(id, 0));
+        assert_eq!(q.done(), 1);
+    }
+
+    #[test]
+    fn respeculation_replaces_a_stalled_speculative_runner() {
+        let mut q = JobQueue::new();
+        let id = submit1(&mut q, vec![1]);
+        assign1(&mut q, 0).unwrap();
+        q.speculate(id, 1, "xavier").unwrap();
+        // the first speculation stalled too; move it to worker 2
+        q.speculate(id, 2, "xavier").unwrap();
+        assert!(!q.busy(1), "replaced runner still counted busy");
+        assert!(!q.complete(id, 1), "replaced runner's result accepted");
+        assert!(q.complete(id, 2));
+        assert_eq!(q.done(), 1);
+    }
+
+    #[test]
+    fn clear_affinity_unpins_without_touching_holds() {
+        let mut q = JobQueue::new();
+        let held = q.submit_to("xavier", "f", vec![1], 10, Some(0));
+        let pinned = q.submit_to("xavier", "f", vec![2], 10, Some(0));
+        assert_eq!(q.assign(0, "xavier").unwrap().id, held);
+        // worker 0 is now suspected: unpin its queued jobs so peers can
+        // take them, but its in-flight hold stays in place
+        assert_eq!(q.clear_affinity(0), 2);
+        assert_eq!(q.assign(1, "xavier").unwrap().id, pinned, "unpinned job not routable");
+        assert!(q.busy(0), "clear_affinity dropped an in-flight hold");
+        assert!(q.complete(held, 0));
     }
 
     #[test]

@@ -62,6 +62,24 @@
 //! the store, in-flight acquisition machines replay bit-identically
 //! from their journals (see [`crate::thor::checkpoint`]), so the
 //! resumed final store is byte-identical to an uninterrupted run's.
+//!
+//! # Stragglers (deadlines + speculative re-issue)
+//!
+//! Death is not the only failure: a worker can *stall* — stay
+//! connected, never answer (thermal throttling, DVFS collapse, a wedged
+//! runtime).  With a [`FleetSpec::with_deadline`] the leader watches
+//! every in-flight job; a job still unanswered at its deadline marks
+//! its holder a **suspect** (no new work, queued pins cleared) and is
+//! speculatively re-issued to an idle live same-class peer
+//! ([`JobQueue::speculate`]).  First result wins, the loser is dropped
+//! by exactly-once completion — and because per-job seeding makes both
+//! results bitwise identical, speculation can never perturb the store:
+//! the post-chaos store is byte-equal to a healthy run's (the fleetS
+//! golden).  A suspect that answers anything is healthy again; if every
+//! live worker of a class is suspect with an expired job and no peer to
+//! speculate to, `serve` errors rather than waiting forever.  Without a
+//! deadline (the default) behavior is exactly the pre-straggler
+//! blocking wait.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::io::{BufRead, BufReader, Write};
@@ -72,8 +90,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::protocol::Msg;
-use crate::coordinator::scheduler::JobQueue;
+use crate::coordinator::protocol::{read_line_capped, Msg, MAX_LINE_BYTES};
+use crate::coordinator::scheduler::{Job, JobQueue, JobState};
 use crate::model::ModelGraph;
 use crate::thor::checkpoint::{Checkpoint, Checkpointer};
 use crate::thor::measure::{AbortAfter, MeasureError, MeasureRequest, Measurement, Measurer};
@@ -101,12 +119,20 @@ pub struct FleetSpec {
     pub total: usize,
     /// Formation window (see [`FORMATION_GRACE`]); tests shrink it.
     pub grace: Duration,
+    /// Per-job straggler deadline: a job unanswered this long after
+    /// assignment marks its worker suspect and is speculatively
+    /// re-issued to a live same-class peer.  `None` (default) waits
+    /// forever — the pre-straggler behavior, byte-compatible.  Pick a
+    /// deadline comfortably above the slowest honest job: an honest
+    /// worker that merely crosses it is treated as a straggler (its
+    /// late result is still accepted if it wins the race).
+    pub job_deadline: Option<Duration>,
 }
 
 impl FleetSpec {
     /// Untyped single-class fleet of `total` workers (legacy mode).
     pub fn untyped(total: usize) -> Self {
-        Self { classes: Vec::new(), total, grace: FORMATION_GRACE }
+        Self { classes: Vec::new(), total, grace: FORMATION_GRACE, job_deadline: None }
     }
 
     /// Typed mixed fleet: `count` workers expected per named class.
@@ -114,12 +140,19 @@ impl FleetSpec {
         let classes: Vec<(String, usize)> =
             classes.iter().map(|(c, n)| (c.to_string(), *n)).collect();
         let total = classes.iter().map(|(_, n)| n).sum();
-        Self { classes, total, grace: FORMATION_GRACE }
+        Self { classes, total, grace: FORMATION_GRACE, job_deadline: None }
     }
 
     /// Override the formation window (tests).
     pub fn with_grace(mut self, grace: Duration) -> Self {
         self.grace = grace;
+        self
+    }
+
+    /// Arm the per-job straggler deadline (see
+    /// [`FleetSpec::job_deadline`]).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.job_deadline = Some(deadline);
         self
     }
 }
@@ -144,6 +177,10 @@ pub struct FleetRun {
     pub per_class: Vec<(String, usize)>,
     /// In-flight jobs re-queued because their worker disconnected.
     pub requeued: usize,
+    /// Speculative duplicates issued for jobs that crossed their
+    /// deadline (straggler recovery; zero without
+    /// [`FleetSpec::with_deadline`]).
+    pub speculated: usize,
 }
 
 /// The fleet fitting server.
@@ -271,6 +308,7 @@ impl BoundFleetServer {
             per_worker: std::mem::take(&mut fleet.per_worker),
             per_class,
             requeued: fleet.requeued,
+            speculated: fleet.speculated,
         })
     }
 }
@@ -312,6 +350,17 @@ pub struct FleetMeasurer {
     done: HashMap<u64, Measurement>,
     per_worker: Vec<usize>,
     requeued: usize,
+    /// Straggler bookkeeping (armed by [`FleetSpec::job_deadline`]):
+    /// job id → when its current watch started (assignment or the last
+    /// speculation).  Entries leave on completion or requeue.
+    watch: HashMap<u64, Instant>,
+    /// Workers whose job crossed its deadline without an answer: they
+    /// get no new work and no affinity pins until they show a sign of
+    /// life (any message clears the suspicion; disconnect retires it).
+    suspects: BTreeSet<usize>,
+    /// Speculative duplicates issued (reported in
+    /// [`FleetRun::speculated`]).
+    speculated: usize,
     /// First Hello's class — the untyped mode's single class.
     device_name: String,
     spec: FleetSpec,
@@ -361,6 +410,9 @@ impl FleetMeasurer {
             done: HashMap::new(),
             per_worker: vec![0; expect_workers],
             requeued: 0,
+            watch: HashMap::new(),
+            suspects: BTreeSet::new(),
+            speculated: 0,
             device_name: String::new(),
             spec,
             started: Instant::now(),
@@ -477,7 +529,11 @@ impl FleetMeasurer {
                     let mut reader = BufReader::new(read_stream);
                     loop {
                         let mut line = String::new();
-                        match reader.read_line(&mut line) {
+                        // Capped read: a worker streaming bytes without
+                        // a newline is a broken peer — disconnect it
+                        // (requeueing its jobs) instead of buffering
+                        // its stream without bound.
+                        match read_line_capped(&mut reader, &mut line, MAX_LINE_BYTES) {
                             Ok(0) | Err(_) => {
                                 let _ = reader_tx.send(Event::Disconnected(w));
                                 break;
@@ -493,48 +549,76 @@ impl FleetMeasurer {
                     }
                 });
             }
-            Event::Message(w, Msg::Hello { device }) => {
-                // A rejoining worker arrives here as a brand-new id:
-                // this insert is the whole re-admission path — from the
-                // next `live_of`/`occupancy`/affinity computation on,
-                // the id serves its declared class like any founder.
-                self.helloed.insert(w);
-                if self.device_name.is_empty() {
-                    self.device_name = device.clone();
-                }
-                self.class_of.entry(w).or_insert(device);
-            }
-            Event::Message(w, Msg::Result { job_id, energy_per_iter, device_seconds }) => {
-                // exactly-once: stale/duplicate completions are dropped
-                if self.queue.complete(job_id, w) {
-                    // Late joiners/rejoiners have ids past the spec's
-                    // total: grow the ledger instead of dropping them.
-                    if w >= self.per_worker.len() {
-                        self.per_worker.resize(w + 1, 0);
+            Event::Message(w, msg) => {
+                // Any message is a sign of life: a suspected straggler
+                // that answers (even with a stale duplicate) is healthy
+                // again and may take new work.
+                self.suspects.remove(&w);
+                match msg {
+                    Msg::Hello { device } => {
+                        // A rejoining worker arrives here as a brand-new
+                        // id: this insert is the whole re-admission path
+                        // — from the next `live_of`/`occupancy`/affinity
+                        // computation on, the id serves its declared
+                        // class like any founder.
+                        self.helloed.insert(w);
+                        if self.device_name.is_empty() {
+                            self.device_name = device.clone();
+                        }
+                        self.class_of.entry(w).or_insert(device);
                     }
-                    self.per_worker[w] += 1;
-                    self.done.insert(job_id, Measurement { energy_per_iter, device_seconds });
+                    Msg::Result { job_id, energy_per_iter, device_seconds } => {
+                        // exactly-once: stale/duplicate completions are
+                        // dropped (a straggler's late duplicate of a
+                        // speculated job lands here — bitwise identical
+                        // to the winner, so dropping it is byte-neutral)
+                        if self.queue.complete(job_id, w) {
+                            // Late joiners/rejoiners have ids past the
+                            // spec's total: grow the ledger instead of
+                            // dropping them.
+                            if w >= self.per_worker.len() {
+                                self.per_worker.resize(w + 1, 0);
+                            }
+                            self.per_worker[w] += 1;
+                            self.watch.remove(&job_id);
+                            self.done.insert(job_id, Measurement { energy_per_iter, device_seconds });
+                        }
+                    }
+                    _ => {}
                 }
             }
-            Event::Message(_, _) => {}
             Event::Disconnected(w) => {
                 // Re-queue the dead worker's in-flight jobs (affinity
                 // cleared, class kept — only same-class peers can take
                 // them): they keep their ids, so completion by another
-                // worker still resolves the original request.
+                // worker still resolves the original request.  A job
+                // whose dead primary had a speculative runner stays in
+                // flight under that runner (queue-level promotion).
                 self.requeued += self.queue.requeue_worker(w);
                 self.writers.remove(&w);
+                self.suspects.remove(&w);
+                // Re-queued jobs leave the deadline watch (they rejoin
+                // it on reassignment); promoted speculations keep their
+                // watch running.
+                let queue = &self.queue;
+                self.watch.retain(|id, _| {
+                    matches!(queue.get(*id).map(|j| &j.state), Some(JobState::Assigned { .. }))
+                });
             }
         }
     }
 
     /// Send queued jobs to idle workers (sorted ids for determinism);
-    /// each worker only receives jobs of its own class.
+    /// each worker only receives jobs of its own class.  Suspected
+    /// stragglers are skipped until they show a sign of life.
     fn pump_assign(&mut self) {
         let untyped = self.spec.classes.is_empty();
         let mut worker_ids: Vec<usize> = self.writers.keys().copied().collect();
         worker_ids.sort_unstable();
         for w in worker_ids {
+            if self.suspects.contains(&w) {
+                continue;
+            }
             // Untyped legacy mode treats every connection as the single
             // fleet class (jobs are tagged with it too) — exactly the
             // PR-4 routing, so a mis-declared or not-yet-helloed worker
@@ -553,19 +637,119 @@ impl FleetMeasurer {
                 }
             };
             if let Some(job) = self.queue.assign(w, &class) {
-                let msg = Msg::Job {
-                    job_id: job.id,
-                    family: job.family.clone(),
-                    channels: job.channels.clone(),
-                    iterations: job.iterations,
-                };
-                if let Some(stream) = self.writers.get_mut(&w) {
-                    // A failed write surfaces as a reader-side
-                    // Disconnected event, which requeues the job.
-                    let _ = stream.write_all(msg.encode().as_bytes());
+                self.watch.insert(job.id, Instant::now());
+                self.send_job(w, &job);
+            }
+        }
+    }
+
+    /// Write one Job message to a worker.  A failed write surfaces as a
+    /// reader-side Disconnected event, which requeues the job.
+    fn send_job(&mut self, w: usize, job: &Job) {
+        let msg = Msg::Job {
+            job_id: job.id,
+            family: job.family.clone(),
+            channels: job.channels.clone(),
+            iterations: job.iterations,
+        };
+        if let Some(stream) = self.writers.get_mut(&w) {
+            let _ = stream.write_all(msg.encode().as_bytes());
+        }
+    }
+
+    /// Speculation candidates for a job of `class`: the same worker set
+    /// the assignment pump would route that class to, sorted by id.
+    fn peers_of(&self, class: &str) -> Vec<usize> {
+        if self.spec.classes.is_empty() {
+            let mut v: Vec<usize> = self
+                .writers
+                .keys()
+                .copied()
+                .filter(|w| self.helloed.contains(w))
+                .collect();
+            v.sort_unstable();
+            v
+        } else {
+            self.live_of(class)
+        }
+    }
+
+    /// How long the deadline-armed select loop may block: until the
+    /// nearest watched job crosses `deadline` (floored so a crossed
+    /// deadline cannot spin the loop hot), or one full `deadline` when
+    /// nothing is in flight.
+    fn next_deadline_wait(&self, deadline: Duration) -> Duration {
+        let now = Instant::now();
+        self.watch
+            .values()
+            .map(|t| (*t + deadline).saturating_duration_since(now))
+            .min()
+            .unwrap_or(deadline)
+            .max(Duration::from_millis(10))
+    }
+
+    /// Deadline expiry without a disconnect: mark the holders of every
+    /// expired job as suspects (no new work, pins cleared) and re-issue
+    /// each expired job speculatively to an idle live same-class peer.
+    /// When no peer is free *yet*, the watch re-arms and the job is
+    /// retried at the next expiry; when every live worker of the class
+    /// is itself a suspect, the class can never finish — hard error,
+    /// mirroring the dead-class rule.
+    fn reissue_stragglers(&mut self, deadline: Duration) -> Result<(), MeasureError> {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .watch
+            .iter()
+            .filter(|(_, t)| now.duration_since(**t) >= deadline)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in expired {
+            let (primary, spec_runner, class) = match self.queue.get(id) {
+                Some(Job { state: JobState::Assigned { worker }, speculated, device, .. }) => {
+                    (*worker, *speculated, device.clone())
+                }
+                _ => {
+                    self.watch.remove(&id);
+                    continue;
+                }
+            };
+            // Suspect the straggling holder(s); unpin their queued jobs
+            // so healthy peers can take them.
+            if self.suspects.insert(primary) {
+                self.queue.clear_affinity(primary);
+            }
+            if let Some(s) = spec_runner {
+                if self.suspects.insert(s) {
+                    self.queue.clear_affinity(s);
+                }
+            }
+            let peers = self.peers_of(&class);
+            let target = peers
+                .iter()
+                .copied()
+                .find(|w| !self.suspects.contains(w) && !self.queue.busy(*w));
+            match target {
+                Some(w2) => {
+                    if let Some(job) = self.queue.speculate(id, w2, &class) {
+                        self.speculated += 1;
+                        self.watch.insert(id, now);
+                        self.send_job(w2, &job);
+                    }
+                }
+                None => {
+                    if !peers.is_empty() && peers.iter().all(|w| self.suspects.contains(w)) {
+                        return Err(MeasureError(format!(
+                            "every live worker of device class '{class}' stalled past the \
+                             {deadline:?} job deadline with no healthy peer to speculate to"
+                        )));
+                    }
+                    // Healthy peers exist but are busy (or formation is
+                    // still settling): re-arm and retry at next expiry.
+                    self.watch.insert(id, now);
                 }
             }
         }
+        Ok(())
     }
 
     /// A scheduled class whose last live worker is gone, if any —
@@ -637,12 +821,22 @@ impl Measurer for FleetMeasurer {
             .iter()
             .map(|r| {
                 let live = live_by_class.entry(r.device.clone()).or_insert_with(|| {
+                    // Suspected stragglers take no pins: a job pinned to
+                    // a worker the pump skips would strand forever.
                     if untyped {
-                        let mut v: Vec<usize> = self.writers.keys().copied().collect();
+                        let mut v: Vec<usize> = self
+                            .writers
+                            .keys()
+                            .copied()
+                            .filter(|w| !self.suspects.contains(w))
+                            .collect();
                         v.sort_unstable();
                         v
                     } else {
                         self.live_of(&r.device)
+                            .into_iter()
+                            .filter(|w| !self.suspects.contains(w))
+                            .collect()
                     }
                 });
                 let i = seen_by_class.entry(r.device.clone()).or_insert(0);
@@ -673,10 +867,25 @@ impl Measurer for FleetMeasurer {
                     )));
                 }
             }
-            match self.rx.recv() {
-                Ok(ev) => self.on_event(ev),
-                Err(_) => {
-                    return Err(MeasureError("fleet event channel closed".into()));
+            match self.spec.job_deadline {
+                // No deadline: the pre-straggler blocking wait.
+                None => match self.rx.recv() {
+                    Ok(ev) => self.on_event(ev),
+                    Err(_) => {
+                        return Err(MeasureError("fleet event channel closed".into()));
+                    }
+                },
+                // Deadline armed: wait only until the nearest watched
+                // job would expire, then run straggler recovery.
+                Some(d) => {
+                    let wait = self.next_deadline_wait(d);
+                    match self.rx.recv_timeout(wait) {
+                        Ok(ev) => self.on_event(ev),
+                        Err(mpsc::RecvTimeoutError::Timeout) => self.reissue_stragglers(d)?,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            return Err(MeasureError("fleet event channel closed".into()));
+                        }
+                    }
                 }
             }
         }

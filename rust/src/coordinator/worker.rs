@@ -13,19 +13,35 @@
 //! declared class (see the elasticity notes in
 //! [`crate::coordinator::server`]).  [`DeviceWorker::run_phases`]
 //! scripts such lifetimes for the chaos tests and the fleetE
-//! experiment.
+//! experiment; [`DeviceWorker::run_reconnecting`] automates the same
+//! loop with seeded exponential backoff
+//! ([`crate::coordinator::faults::reconnect_backoff`]).
+//!
+//! Fault injection: a [`FaultPlan`] scripts stragglers — stalls that
+//! recover, hangs that never disconnect, chronically slow writes — so
+//! the leader's deadline/speculation machinery can be pinned against
+//! reproducible chaos (`rust/tests/fleet.rs`, the fleetS experiment).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Write};
 use std::net::TcpStream;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::protocol::Msg;
+use crate::coordinator::faults::{reconnect_backoff, FaultPlan, Stall};
+use crate::coordinator::protocol::{read_line_capped, Msg, MAX_LINE_BYTES};
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
 use crate::thor::profiler;
 
 pub use crate::thor::profiler::{class_seed, job_seed, VariantBuilder};
+
+/// How one connection ended — drives [`DeviceWorker::run_reconnecting`]:
+/// only an explicit `Shutdown` stops the reconnect loop; a hang-up (or
+/// connect error) schedules a backed-off retry.
+enum Exit {
+    Shutdown,
+    HungUp,
+}
 
 /// A worker process bound to one simulated device.
 pub struct DeviceWorker {
@@ -36,11 +52,20 @@ pub struct DeviceWorker {
     /// unset (default), the one stateful device carries DVFS/thermal
     /// state across jobs, like a physical device would.
     per_job_seed: Option<u64>,
+    /// Injected straggler faults (default: none).  The plan applies per
+    /// connection: a reconnecting worker re-arms its stall counter,
+    /// like a rebooted device re-entering the same thermal envelope.
+    faults: FaultPlan,
 }
 
 impl DeviceWorker {
     pub fn new(device: Device, reference: &ModelGraph) -> Self {
-        Self { device, builder: VariantBuilder::from_reference(reference), per_job_seed: None }
+        Self {
+            device,
+            builder: VariantBuilder::from_reference(reference),
+            per_job_seed: None,
+            faults: FaultPlan::default(),
+        }
     }
 
     /// Switch to deterministic per-job measurement seeds (fleet
@@ -61,16 +86,22 @@ impl DeviceWorker {
         self.with_per_job_seed(class_seed(base_seed, &class))
     }
 
+    /// Inject a straggler [`FaultPlan`] (chaos tests, fleetS).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Connect and serve until Shutdown.  Returns jobs completed.
     pub fn run(&mut self, addr: &str) -> Result<usize> {
-        self.run_inner(addr, None)
+        self.run_conn(addr, None).map(|(n, _)| n)
     }
 
     /// Connect and serve, but drop the connection upon *receiving* the
     /// `max_jobs + 1`-th job, leaving it unanswered — fault injection for
     /// the re-queue path (`rust/tests/fleet.rs`).  Returns jobs completed.
     pub fn run_limited(&mut self, addr: &str, max_jobs: usize) -> Result<usize> {
-        self.run_inner(addr, Some(max_jobs))
+        self.run_conn(addr, Some(max_jobs)).map(|(n, _)| n)
     }
 
     /// Scripted elastic lifetime, phase by phase: `Some(k)` dies with
@@ -94,21 +125,66 @@ impl DeviceWorker {
         total
     }
 
-    fn run_inner(&mut self, addr: &str, max_jobs: Option<usize>) -> Result<usize> {
+    /// Serve `addr`, reconnecting after connection loss (leader
+    /// hang-up, reset, refused connect) with seeded exponential backoff
+    /// — only an explicit `Shutdown` ends the loop early.  At most
+    /// `max_reconnects` reconnect attempts are spent; the wait before
+    /// retry `k` is [`reconnect_backoff`]`(backoff_seed, k)`, so the
+    /// whole retry schedule is a pure function of the seed.  Returns
+    /// total jobs completed across incarnations.
+    pub fn run_reconnecting(
+        &mut self,
+        addr: &str,
+        max_reconnects: usize,
+        backoff_seed: u64,
+    ) -> usize {
+        let mut total = 0;
+        for attempt in 0..=max_reconnects {
+            match self.run_conn(addr, None) {
+                Ok((n, Exit::Shutdown)) => return total + n,
+                Ok((n, Exit::HungUp)) => total += n,
+                Err(_) => {} // connect refused / reset: retry like a hang-up
+            }
+            if attempt < max_reconnects {
+                std::thread::sleep(reconnect_backoff(backoff_seed, attempt as u32));
+            }
+        }
+        total
+    }
+
+    fn run_conn(&mut self, addr: &str, max_jobs: Option<usize>) -> Result<(usize, Exit)> {
         let stream = TcpStream::connect(addr)?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = stream;
         writer.write_all(Msg::Hello { device: self.device.profile.name.to_string() }.encode().as_bytes())?;
         let mut done = 0;
+        let mut stalled = false;
         loop {
             let mut line = String::new();
-            if reader.read_line(&mut line)? == 0 {
-                break; // server hung up
+            if read_line_capped(&mut reader, &mut line, MAX_LINE_BYTES)? == 0 {
+                return Ok((done, Exit::HungUp)); // server hung up
             }
             match Msg::decode(&line) {
                 Some(Msg::Job { job_id, family, channels, iterations }) => {
                     if max_jobs.map_or(false, |m| done >= m) {
-                        break; // injected fault: die with the job in flight
+                        // injected fault: die with the job in flight
+                        return Ok((done, Exit::HungUp));
+                    }
+                    if !stalled && self.faults.stall_after_jobs == Some(done) {
+                        stalled = true;
+                        match self.faults.stall {
+                            Some(Stall::Hang) => {
+                                // Hang without disconnecting: hold the
+                                // job, keep the socket open, never
+                                // answer again.  From the leader's side
+                                // this is pure silence — no Disconnected
+                                // event — which is exactly the straggler
+                                // shape the deadline layer must survive.
+                                return self.hang_until_closed(&mut reader, done);
+                            }
+                            Some(Stall::Recover(d)) => std::thread::sleep(d),
+                            None => {}
+                        }
                     }
                     let g = self.builder.build(&family, &channels)?;
                     let (e, dt) = match self.per_job_seed {
@@ -119,6 +195,9 @@ impl DeviceWorker {
                         }
                         None => profiler::measure(&mut self.device, &g, iterations),
                     };
+                    if let Some(d) = self.faults.slow_write {
+                        std::thread::sleep(d);
+                    }
                     writer.write_all(
                         Msg::Result { job_id, energy_per_iter: e, device_seconds: dt }
                             .encode()
@@ -130,10 +209,27 @@ impl DeviceWorker {
                     std::thread::sleep(std::time::Duration::from_millis(5));
                     writer.write_all(Msg::Hello { device: self.device.profile.name.to_string() }.encode().as_bytes())?;
                 }
-                Some(Msg::Shutdown) => break,
+                Some(Msg::Shutdown) => return Ok((done, Exit::Shutdown)),
                 _ => return Err(anyhow!("unexpected message: {line}")),
             }
         }
-        Ok(done)
+    }
+
+    /// The hang-without-disconnect fault: keep reading (so the leader's
+    /// writes never block) but never reply; exit quietly on Shutdown,
+    /// hang-up, or any read error.  The leader only ever learns about
+    /// this worker again through its own deadline machinery.
+    fn hang_until_closed(&self, reader: &mut BufReader<TcpStream>, done: usize) -> Result<(usize, Exit)> {
+        loop {
+            let mut line = String::new();
+            match read_line_capped(reader, &mut line, MAX_LINE_BYTES) {
+                Ok(0) | Err(_) => return Ok((done, Exit::HungUp)),
+                Ok(_) => {
+                    if matches!(Msg::decode(&line), Some(Msg::Shutdown)) {
+                        return Ok((done, Exit::Shutdown));
+                    }
+                }
+            }
+        }
     }
 }

@@ -22,6 +22,14 @@
 //!   ([`crate::thor::checkpoint`]).  The headline metric is
 //!   `store_byte_equal`: the resumed store must be byte-identical to an
 //!   uninterrupted local per-job run of the same config.
+//! * `fleetS` — the straggler chaos suite: the same mixed fleet, but one
+//!   worker per class *hangs without disconnecting* mid-run
+//!   ([`crate::coordinator::FaultPlan`]) — the fault elasticity cannot
+//!   see.  Per-job deadlines ([`FleetSpec::with_deadline`]) detect the
+//!   silence and speculatively re-issue each held job to a healthy
+//!   same-class peer; per-job measurement seeds make the duplicate
+//!   results bitwise identical, so the headline metric is again
+//!   `store_byte_equal` against an uninterrupted solo run.
 //!
 //! Workers run with deterministic per-job measurement seeds (per-class
 //! derived via [`crate::coordinator::class_seed`] in `fleetH`) and the
@@ -33,7 +41,7 @@
 //! one accept loop, the worker-id ↔ class mapping follows connection
 //! order, but the per-class totals are scheduling-independent.)
 
-use crate::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec, ServeOptions};
+use crate::coordinator::{DeviceWorker, FaultPlan, FleetRun, FleetServer, FleetSpec, ServeOptions};
 use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
 use crate::exp::report::ExpReport;
 use crate::exp::{measured_energy, ExpConfig};
@@ -527,6 +535,145 @@ impl Experiment for FleetE {
             FLEETN_DEVICES.len(),
             FLEETN_DEVICES.len(),
         ));
+        rep
+    }
+}
+
+/// fleetS: worker 1 of each class hangs — connected, reading, never
+/// answering — upon receiving its this-plus-one-th job.
+const STALL_AFTER_JOBS: usize = 2;
+
+/// fleetS: the per-job straggler deadline.  Far above any healthy
+/// simulated job (milliseconds) so only the scripted hangs can expire
+/// it, far below "stuck forever" so the chaos run stays quick.
+const STALL_DEADLINE_MS: u64 = 750;
+
+pub struct FleetS;
+
+impl Experiment for FleetS {
+    fn id(&self) -> &'static str {
+        "fleetS"
+    }
+
+    fn description(&self) -> &'static str {
+        "straggler-fleet chaos: one worker per class hangs without disconnecting; deadlines + speculative re-issue finish the run byte-identically"
+    }
+
+    fn run(&self, cfg: &ExpConfig) -> ExpReport {
+        let mut rep = ExpReport::new(
+            self.id(),
+            "straggler fleet chaos (job deadlines + speculative re-issue)",
+            cfg,
+            &FLEETN_DEVICES,
+        );
+        let reference = fleet_reference();
+        // Fixed batches for the same reason fleetE uses them: straggler
+        // timing must never reach the proposal stream, so every fitted
+        // value is a pure function of the config.  Speculation itself is
+        // byte-neutral — duplicate completions of one job carry
+        // identical per-job-seeded measurements.
+        let thor_cfg = ThorConfig { batch: Batch::Fixed(FLEETN_WORKERS), ..cfg.thor_cfg() };
+        let spec = FleetSpec::mixed(&FLEETN_DEVICES.map(|d| (d, FLEETN_WORKERS)))
+            .with_deadline(std::time::Duration::from_millis(STALL_DEADLINE_MS));
+
+        let bound = FleetServer::new(thor_cfg).bind("127.0.0.1:0").expect("bind leader");
+        let addr = bound.local_addr().to_string();
+
+        // Worker 0 of each class is healthy; worker 1 hangs with its
+        // third job held.  A hung worker stays connected (no
+        // Disconnected event, no requeue) — only the deadline machinery
+        // can get its job back.
+        let mut handles = Vec::new();
+        for (di, dev_name) in FLEETN_DEVICES.iter().enumerate() {
+            for w in 0..FLEETN_WORKERS {
+                let reference = reference.clone();
+                let addr = addr.clone();
+                let profile = devices::by_name(dev_name).expect("device");
+                let dev_seed = 100 + (di * FLEETN_WORKERS + w) as u64;
+                let base_seed = cfg.seed;
+                handles.push(std::thread::spawn(move || {
+                    let mut worker = DeviceWorker::new(Device::new(profile, dev_seed), &reference)
+                        .with_class_seed(base_seed);
+                    if w == 1 {
+                        worker = worker.with_faults(FaultPlan::hang_after(STALL_AFTER_JOBS));
+                    }
+                    worker.run(&addr)
+                }));
+            }
+        }
+
+        let run = bound.serve_spec(&reference, spec).expect("straggler fleet serve");
+        for h in handles {
+            let _ = h.join();
+        }
+
+        // The correctness contract, straggler edition: hangs, expired
+        // deadlines and speculative duplicates left no trace — the
+        // store is byte-identical to an uninterrupted in-process
+        // per-job run of the same config.
+        let mut solo = Thor::new(thor_cfg);
+        let mut local = LocalMeasurer::per_job_fleet(
+            FLEETN_DEVICES.iter().map(|d| devices::by_name(d).expect("device")).collect(),
+            cfg.seed,
+            &reference,
+        );
+        solo.profile(&mut local, &reference).expect("uninterrupted local run");
+        let byte_equal = run.store.to_json().to_string() == solo.store.to_json().to_string();
+
+        let jobs_of = |c: &str| {
+            run.per_class.iter().find(|(cc, _)| cc == c).map_or(0, |(_, n)| *n)
+        };
+        let mapes: Vec<(&str, f64)> = FLEETN_DEVICES
+            .iter()
+            .map(|&d| (d, fleet_mape(&run.store, d, cfg)))
+            .collect();
+        rep.push_table(
+            "per-device results under one hung worker per class",
+            &["device", "families", "jobs done", "MAPE %"],
+            mapes
+                .iter()
+                .map(|(d, m)| {
+                    vec![
+                        d.to_string(),
+                        format!("{}", run.store.len_for(d)),
+                        format!("{}", jobs_of(d)),
+                        format!("{m:.1}"),
+                    ]
+                })
+                .collect(),
+        );
+        for (d, m) in &mapes {
+            rep.metric(&format!("mape_{d}"), *m);
+            rep.metric(&format!("jobs_{d}"), jobs_of(d) as f64);
+        }
+        rep.metric("stalls_scheduled", FLEETN_DEVICES.len() as f64);
+        // Exact speculation counts are timing-dependent (a loaded host
+        // can trip extra deadlines harmlessly); the invariant is that
+        // every scripted hang forced at least one re-issue.
+        rep.metric(
+            "speculation_per_stall_met",
+            if run.speculated >= FLEETN_DEVICES.len() { 1.0 } else { 0.0 },
+        );
+        rep.metric("jobs_submitted", run.jobs_submitted as f64);
+        rep.metric("jobs_done", run.jobs_done as f64);
+        rep.metric("jobs_requeued", run.requeued as f64);
+        rep.metric("families_fitted", run.store.len() as f64);
+        rep.metric("store_byte_equal", if byte_equal { 1.0 } else { 0.0 });
+        rep.metric("devices", FLEETN_DEVICES.len() as f64);
+        rep.note(format!(
+            "{} workers hung silently (job {} held in flight); the {STALL_DEADLINE_MS}ms \
+             job deadline re-issued each held job to the healthy same-class peer; \
+             {} jobs resolved exactly once; \
+             store byte-equal to an uninterrupted run: {byte_equal}",
+            FLEETN_DEVICES.len(),
+            STALL_AFTER_JOBS + 1,
+            run.jobs_done,
+        ));
+        rep.note(
+            "per-worker job splits and exact speculation counts are timing-dependent and \
+             deliberately unreported"
+                .to_string(),
+        );
         rep
     }
 }

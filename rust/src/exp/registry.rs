@@ -133,6 +133,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(fleet_exp::FleetN),
         Box::new(fleet_exp::FleetH),
         Box::new(fleet_exp::FleetE),
+        Box::new(fleet_exp::FleetS),
         Box::new(serve_exp::Serve1),
     ]
 }
@@ -183,6 +184,7 @@ mod tests {
         assert_eq!(by_id("fleetN").unwrap().id(), "fleetN");
         assert_eq!(by_id("fleetH").unwrap().id(), "fleetH");
         assert_eq!(by_id("fleetE").unwrap().id(), "fleetE");
+        assert_eq!(by_id("fleetS").unwrap().id(), "fleetS");
         assert_eq!(by_id("serve1").unwrap().id(), "serve1");
     }
 

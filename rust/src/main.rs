@@ -38,7 +38,10 @@ fn specs() -> Vec<Spec> {
         Spec { name: "devices", takes_value: true, help: "serve: comma-separated device classes of a heterogeneous fleet (e.g. xavier,tx2,server)" },
         Spec { name: "checkpoint", takes_value: true, help: "serve: write an atomic leader checkpoint to this path as the run progresses" },
         Spec { name: "checkpoint-every", takes_value: true, help: "serve: absorbed acquisition rounds between checkpoint writes (default 1)" },
+        Spec { name: "checkpoint-keep", takes_value: true, help: "serve: rotate the previous N checkpoints to <path>.1..<path>.N (default 0 = overwrite)" },
         Spec { name: "resume", takes_value: true, help: "serve: resume from a leader checkpoint instead of re-measuring (missing file = cold start)" },
+        Spec { name: "job-deadline", takes_value: true, help: "serve: per-job straggler deadline in milliseconds; expired jobs are speculatively re-issued to a healthy same-class worker (default: off)" },
+        Spec { name: "cache-cap", takes_value: true, help: "serve-estimates: bound the shared estimate cache to ~N entries, LRU-evicted (default 0 = unbounded)" },
         Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
         Spec { name: "list", takes_value: false, help: "exp: list registered experiment ids" },
         Spec { name: "json", takes_value: true, help: "exp: write structured suite report to this path" },
@@ -194,6 +197,10 @@ fn main() -> Result<()> {
                     FleetSpec::untyped(workers)
                 }
             };
+            let spec = match args.get_usize("job-deadline", 0)? {
+                0 => spec,
+                ms => spec.with_deadline(std::time::Duration::from_millis(ms as u64)),
+            };
             // Elasticity: crash-loop operation passes the same path to
             // --checkpoint and --resume; a missing resume file is a
             // cold start, so the very first launch needs no special
@@ -219,9 +226,10 @@ fn main() -> Result<()> {
                 None => None,
             };
             let every = args.get_usize("checkpoint-every", 1)?;
+            let keep = args.get_usize("checkpoint-keep", 0)?;
             let mut writer = args
                 .get("checkpoint")
-                .map(|p| thor::thor::checkpoint::Checkpointer::new(p, every));
+                .map(|p| thor::thor::checkpoint::Checkpointer::new(p, every).with_keep(keep));
             let opts = thor::coordinator::ServeOptions {
                 resume,
                 checkpointer: writer.as_mut(),
@@ -255,7 +263,10 @@ fn main() -> Result<()> {
                 return Err(anyhow!("--store named no artifact"));
             }
             let families = store.len();
-            let handle = thor::coordinator::EstimateServer::bind(addr, store)?.start(threads)?;
+            let cache_cap = args.get_usize("cache-cap", 0)?;
+            let handle = thor::coordinator::EstimateServer::bind(addr, store)?
+                .with_cache_cap(cache_cap)
+                .start(threads)?;
             println!(
                 "serving estimates on {} ({families} family GPs from {n_artifacts} artifact(s); \
                  newline-delimited JSON, message types est/est_batch)",

@@ -148,11 +148,21 @@ impl Checkpoint {
 /// `every`-th, serializes a [`Checkpoint`] to `<path>.tmp` and renames
 /// it over `path` — a crash between absorbs (or mid-write) always leaves
 /// the last complete checkpoint on disk.
+///
+/// With [`Checkpointer::with_keep`] the previous `keep` snapshots are
+/// rotated to `<path>.1` (newest history) … `<path>.N` (oldest) before
+/// each rename, so an operator can step back past a checkpoint that
+/// captured a bad state.  Writes also **compact** the in-flight set:
+/// journals with no absorbed rounds are omitted, since replaying an
+/// empty journal is exactly a cold start for that family — byte-neutral
+/// on resume, smaller on disk.
 #[derive(Debug)]
 pub struct Checkpointer {
     path: PathBuf,
     every: usize,
     pending: usize,
+    /// History snapshots to retain (`0` = overwrite in place, default).
+    keep: usize,
     /// Completed atomic writes (observability + tests).
     pub writes: usize,
 }
@@ -160,7 +170,14 @@ pub struct Checkpointer {
 impl Checkpointer {
     /// `every` floors at 1 (write after every absorbed round).
     pub fn new(path: impl Into<PathBuf>, every: usize) -> Self {
-        Self { path: path.into(), every: every.max(1), pending: 0, writes: 0 }
+        Self { path: path.into(), every: every.max(1), keep: 0, writes: 0, pending: 0 }
+    }
+
+    /// Retain the previous `keep` checkpoints as `<path>.1..=<path>.N`
+    /// (`thor serve --checkpoint-keep N`).
+    pub fn with_keep(mut self, keep: usize) -> Self {
+        self.keep = keep;
+        self
     }
 
     pub fn path(&self) -> &Path {
@@ -184,7 +201,8 @@ impl Checkpointer {
         Ok(true)
     }
 
-    /// Unconditional atomic write of the current state.
+    /// Unconditional atomic write of the current state (compacted; see
+    /// the type docs), rotating history first when `keep > 0`.
     pub fn write_now(
         &mut self,
         store: &GpStore,
@@ -195,16 +213,43 @@ impl Checkpointer {
             ("store", store.to_json()),
             (
                 "inflight",
-                Json::Obj(inflight.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+                Json::Obj(
+                    inflight
+                        .iter()
+                        .filter(|(_, v)| !v.rounds.is_empty())
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                ),
             ),
         ]);
         let mut tmp = self.path.as_os_str().to_owned();
         tmp.push(".tmp");
         let tmp = PathBuf::from(tmp);
         std::fs::write(&tmp, ck.to_string())?;
+        self.rotate();
         std::fs::rename(&tmp, &self.path)?;
         self.writes += 1;
         Ok(())
+    }
+
+    fn history_path(&self, i: usize) -> PathBuf {
+        let mut p = self.path.as_os_str().to_owned();
+        p.push(format!(".{i}"));
+        PathBuf::from(p)
+    }
+
+    /// Shift `<path>` → `<path>.1` → … → `<path>.keep`; the oldest
+    /// falls off the end.  Best-effort: a rotation failure (e.g. a
+    /// history file deleted underneath us) must never block the write
+    /// of the *current* checkpoint, which is the one that matters.
+    fn rotate(&self) {
+        if self.keep == 0 {
+            return;
+        }
+        for i in (1..self.keep).rev() {
+            let _ = std::fs::rename(self.history_path(i), self.history_path(i + 1));
+        }
+        let _ = std::fs::rename(&self.path, self.history_path(1));
     }
 }
 
@@ -267,6 +312,66 @@ mod tests {
         // No torn tmp file left behind.
         let tmp = path.with_file_name(format!("{}.tmp", path.file_name().unwrap().to_string_lossy()));
         assert!(!tmp.exists(), "atomic write must not leave {tmp:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rotation_keeps_a_bounded_history_of_loadable_snapshots() {
+        let cfg = FitConfig { max_points: 11, threshold_frac: 0.0, grid_n: 17, ..Default::default() };
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("thor_ckpt_rot_{}.json", std::process::id()));
+        let hist = |i: usize| {
+            path.with_file_name(format!(
+                "{}.{i}",
+                path.file_name().unwrap().to_string_lossy()
+            ))
+        };
+        for p in [path.clone(), hist(1), hist(2), hist(3)] {
+            let _ = std::fs::remove_file(p);
+        }
+
+        let store = GpStore::new();
+        let mut w = Checkpointer::new(&path, 1).with_keep(2);
+        // Four distinguishable writes: the journal grows one round each.
+        for rounds in 1..=4 {
+            let inflight = vec![(inflight_key("xavier", "conv:f"), journal_after(&cfg, rounds))];
+            w.write_now(&store, &inflight).unwrap();
+        }
+        assert_eq!(w.writes, 4);
+
+        // Newest on `path`, then one and two writes back; nothing older.
+        let rounds_at = |p: &Path| {
+            Checkpoint::load(p).unwrap().expect("snapshot must load").inflight["xavier|conv:f"]
+                .rounds
+                .len()
+        };
+        assert_eq!(rounds_at(&path), 4);
+        assert_eq!(rounds_at(&hist(1)), 3, "<path>.1 must be the previous snapshot");
+        assert_eq!(rounds_at(&hist(2)), 2, "<path>.2 must be two snapshots back");
+        assert!(!hist(3).exists(), "history beyond --checkpoint-keep must fall off");
+
+        for p in [path.clone(), hist(1), hist(2)] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn empty_journals_are_compacted_out_of_the_checkpoint() {
+        let cfg = FitConfig { max_points: 11, threshold_frac: 0.0, grid_n: 17, ..Default::default() };
+        let path =
+            std::env::temp_dir().join(format!("thor_ckpt_compact_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut w = Checkpointer::new(&path, 1);
+        let inflight = vec![
+            // Zero absorbed rounds: replay is identical to a cold start
+            // for this family, so the entry is pure dead weight.
+            (inflight_key("xavier", "conv:a"), FitJournal { dim: 1, rounds: Vec::new() }),
+            (inflight_key("xavier", "conv:f"), journal_after(&cfg, 2)),
+        ];
+        w.write_now(&GpStore::new(), &inflight).unwrap();
+        let ck = Checkpoint::load(&path).unwrap().unwrap();
+        assert_eq!(ck.inflight.len(), 1, "empty journals must be compacted out");
+        assert!(ck.inflight.contains_key("xavier|conv:f"));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -120,6 +120,21 @@ impl EstimateCache {
 /// picked per (device, family), and reads take shared locks anyway).
 const DEFAULT_SHARDS: usize = 16;
 
+/// One memoized posterior plus its recency stamp.  `used` is atomic so
+/// hits can refresh it under the shard's *shared* lock; it orders
+/// evictions only, never values, so the cache stays write-idempotent
+/// in everything that matters for correctness.
+struct CacheEntry {
+    mv: (f64, f64),
+    used: AtomicU64,
+}
+
+impl CacheEntry {
+    fn new(mv: (f64, f64), tick: u64) -> Self {
+        Self { mv, used: AtomicU64::new(tick) }
+    }
+}
+
 /// One lock's worth of [`SharedEstimateCache`] state.
 #[derive(Default)]
 struct CacheShard {
@@ -127,7 +142,13 @@ struct CacheShard {
     /// against (0 = empty).  Checked under the lock on every access, so
     /// a hot-reloaded store lazily invalidates shard by shard.
     generation: u64,
-    map: HashMap<String, HashMap<Vec<u64>, (f64, f64)>>,
+    map: HashMap<String, HashMap<Vec<u64>, CacheEntry>>,
+}
+
+impl CacheShard {
+    fn entries(&self) -> usize {
+        self.map.values().map(|m| m.len()).sum()
+    }
 }
 
 /// [`EstimateCache`] for the serving tier: the same
@@ -144,8 +165,14 @@ struct CacheShard {
 /// mid-request cannot poison a shard for everyone else.
 pub struct SharedEstimateCache {
     shards: Vec<RwLock<CacheShard>>,
+    /// Max entries per shard; `0` = unbounded (the default).  Enforced
+    /// after each write pass by evicting least-recently-used entries.
+    per_shard_cap: usize,
+    /// Monotonic recency clock shared by all shards.
+    tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl Default for SharedEstimateCache {
@@ -158,15 +185,58 @@ impl SharedEstimateCache {
     pub fn new(n_shards: usize) -> Self {
         Self {
             shards: (0..n_shards.max(1)).map(|_| RwLock::default()).collect(),
+            per_shard_cap: 0,
+            tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    /// A cache bounded to roughly `total_cap` entries across all shards
+    /// (each shard holds its even share; `0` = unbounded).  Eviction is
+    /// LRU per shard and only ever forgets memoized values — a bounded
+    /// cache re-misses where an unbounded one would hit, but every
+    /// served estimate stays bit-identical.
+    pub fn bounded(total_cap: usize) -> Self {
+        let mut c = Self::new(DEFAULT_SHARDS);
+        let n = c.shards.len();
+        c.per_shard_cap = if total_cap == 0 { 0 } else { (total_cap + n - 1) / n };
+        c
     }
 
     fn shard_for(&self, key: &str) -> &RwLock<CacheShard> {
         let mut h = Fnv1a::new();
         h.write(key.as_bytes());
         &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    /// Drop least-recently-used entries until `shard` is back under the
+    /// cap (to 7/8 of it, so a hot shard doesn't evict on every single
+    /// insert).  Called with the shard's write lock held.
+    fn enforce_cap(&self, sh: &mut CacheShard) {
+        if self.per_shard_cap == 0 || sh.entries() <= self.per_shard_cap {
+            return;
+        }
+        let target = (self.per_shard_cap * 7 / 8).max(1);
+        let mut by_age: Vec<(u64, String, Vec<u64>)> = sh
+            .map
+            .iter()
+            .flat_map(|(fam, m)| {
+                m.iter().map(|(k, e)| (e.used.load(Ordering::Relaxed), fam.clone(), k.clone()))
+            })
+            .collect();
+        by_age.sort_unstable();
+        let n_evict = by_age.len().saturating_sub(target);
+        for (_, fam, k) in by_age.into_iter().take(n_evict) {
+            if let Some(m) = sh.map.get_mut(&fam) {
+                m.remove(&k);
+                if m.is_empty() {
+                    sh.map.remove(&fam);
+                }
+            }
+        }
+        self.evictions.fetch_add(n_evict as u64, Ordering::Relaxed);
     }
 
     pub fn hits(&self) -> u64 {
@@ -177,15 +247,18 @@ impl SharedEstimateCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries evicted to stay under the [`SharedEstimateCache::bounded`]
+    /// cap (0 for an unbounded cache).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
     /// Total memoized entries across all shards (deterministic for a
     /// fixed query set: entries are keyed by content, not by timing).
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| {
-                let sh = s.read().unwrap_or_else(|e| e.into_inner());
-                sh.map.values().map(|m| m.len()).sum::<usize>()
-            })
+            .map(|s| s.read().unwrap_or_else(|e| e.into_inner()).entries())
             .sum()
     }
 
@@ -414,8 +487,12 @@ pub fn estimate_batch_shared(
             for &(qi, gi) in &g.wants {
                 let k = feat_key(&plans[qi].feats[gi]);
                 match fam_map.and_then(|m| m.get(&k)) {
-                    Some(&mv) => {
-                        per_query_mv[qi][gi] = mv;
+                    Some(e) => {
+                        per_query_mv[qi][gi] = e.mv;
+                        // Refresh recency under the shared lock (atomic
+                        // stamp; ordering races are harmless — any
+                        // recent tick keeps the entry hot).
+                        e.used.store(cache.tick.fetch_add(1, Ordering::Relaxed), Ordering::Relaxed);
                         cache.hits.fetch_add(1, Ordering::Relaxed);
                     }
                     None => {
@@ -455,8 +532,9 @@ pub fn estimate_batch_shared(
         let fam_map = sh.map.entry(key.clone()).or_default();
         for (((qi, gi), k), &slot) in misses.into_iter().zip(&slots) {
             per_query_mv[qi][gi] = mv[slot];
-            fam_map.insert(k, mv[slot]);
+            fam_map.insert(k, CacheEntry::new(mv[slot], cache.tick.fetch_add(1, Ordering::Relaxed)));
         }
+        cache.enforce_cap(&mut sh);
     }
 
     plans
@@ -742,6 +820,49 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(cache.hits() + cache.misses(), 8 * 50 * parse(&g).groups.len() as u64);
+    }
+
+    #[test]
+    fn bounded_shared_cache_evicts_and_stays_bit_identical() {
+        // Same model structure at many widths piles entries into the
+        // same few "{device}|{family}" shard keys, so a tiny cap must
+        // evict — and a bounded cache may only ever re-miss, never
+        // change an answer.
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let store = synthetic_store(&reference, "xavier", 4.0);
+        let unbounded = SharedEstimateCache::default();
+        let bounded = SharedEstimateCache::bounded(16); // one entry per shard
+        for i in 0..24usize {
+            let m = zoo::cnn5(&[4 + i, 8 + i, 16 + i, 32 + i], 16, 10);
+            let a = estimate_shared(&store, "xavier", &m, &unbounded).unwrap();
+            let b = estimate_shared(&store, "xavier", &m, &bounded).unwrap();
+            assert_eq!(a.energy_per_iter.to_bits(), b.energy_per_iter.to_bits());
+            assert_eq!(a.variance.to_bits(), b.variance.to_bits());
+        }
+        assert!(bounded.evictions() > 0, "a 16-entry cap must evict under 24 width variants");
+        assert_eq!(unbounded.evictions(), 0, "an unbounded cache never evicts");
+        assert!(bounded.len() <= 16, "cap violated: {} entries", bounded.len());
+        assert!(unbounded.len() > bounded.len());
+    }
+
+    #[test]
+    fn lru_keeps_recently_used_entries_over_cold_ones() {
+        let reference = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let store = synthetic_store(&reference, "xavier", 4.0);
+        let cache = SharedEstimateCache::bounded(160); // 10 per shard
+        let hot = reference.clone();
+        estimate_shared(&store, "xavier", &hot, &cache).unwrap();
+        for i in 0..20usize {
+            // a stream of cold width-variants, with the hot model
+            // re-touched after each — its recency stamps stay newest
+            let m = zoo::cnn5(&[5 + i, 9 + i, 17 + i, 33 + i], 16, 10);
+            estimate_shared(&store, "xavier", &m, &cache).unwrap();
+            estimate_shared(&store, "xavier", &hot, &cache).unwrap();
+        }
+        assert!(cache.evictions() > 0, "the cold stream must overflow the cap");
+        let misses_before = cache.misses();
+        estimate_shared(&store, "xavier", &hot, &cache).unwrap();
+        assert_eq!(cache.misses(), misses_before, "hot entries must survive LRU eviction");
     }
 
     #[test]

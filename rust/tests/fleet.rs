@@ -19,10 +19,23 @@
 //! byte-identical to the uninterrupted run's — with no measurement job
 //! ever re-issued for an already-absorbed point.
 //!
+//! The straggler tests cover the fault elasticity cannot see: a worker
+//! that *hangs without disconnecting* (`coordinator::FaultPlan`).
+//! Per-job deadlines (`FleetSpec::with_deadline`) detect the silence and
+//! speculatively re-issue the held job to a live peer; duplicate
+//! completions from a recovered straggler are deduped first-result-wins;
+//! and per-job seeds keep every one of these stores byte-identical to
+//! the healthy baseline.
+//!
 //! CI runs this file under a 120-second timeout guard: any dead/live-lock
 //! in the leader loop fails fast instead of hanging the suite.
 
-use thor::coordinator::{DeviceWorker, FleetRun, FleetServer, FleetSpec, ServeOptions};
+use std::time::{Duration, Instant};
+
+use thor::coordinator::{
+    reconnect_backoff, DeviceWorker, FaultPlan, FleetRun, FleetServer, FleetSpec, ServeOptions,
+    Stall,
+};
 use thor::model::{zoo, ModelGraph};
 use thor::simdevice::{devices, Device};
 use thor::thor::{
@@ -72,6 +85,126 @@ fn run_fleet(n_workers: usize, die_after: Option<(usize, usize)>) -> FleetRun {
         let _ = h.join();
     }
     run
+}
+
+/// Run a 2-worker loopback fleet where worker `faulty` carries `plan`
+/// and the leader enforces a `deadline_ms` per-job straggler deadline.
+fn run_straggler_fleet(faulty: usize, plan: FaultPlan, deadline_ms: u64) -> FleetRun {
+    let server = FleetServer::new(ThorConfig { batch: Batch::Fixed(3), ..ThorConfig::quick() });
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+
+    let mut handles = Vec::new();
+    for w in 0..2usize {
+        let addr = addr.clone();
+        let reference = reference();
+        let plan = if w == faulty { plan.clone() } else { FaultPlan::default() };
+        handles.push(std::thread::spawn(move || {
+            let mut worker =
+                DeviceWorker::new(Device::new(devices::xavier(), 100 + w as u64), &reference)
+                    .with_per_job_seed(BASE_SEED)
+                    .with_faults(plan);
+            worker.run(&addr)
+        }));
+    }
+
+    let spec =
+        FleetSpec::untyped(2).with_deadline(Duration::from_millis(deadline_ms));
+    let run = bound.serve_spec(&reference(), spec).expect("straggler fleet serve");
+    for h in handles {
+        let _ = h.join();
+    }
+    run
+}
+
+#[test]
+fn hung_worker_never_stalls_a_batch_past_its_deadline() {
+    // Worker 1 completes one job then hangs — connected, reading,
+    // silent.  No Disconnected event ever fires, so only the deadline
+    // machinery can recover its held job; the run must complete with
+    // the job speculatively re-issued to worker 0, and the store must
+    // show no trace of any of it.
+    let run = run_straggler_fleet(1, FaultPlan::hang_after(1), 300);
+    assert!(run.speculated >= 1, "the hang never forced a speculative re-issue");
+    assert_eq!(run.requeued, 0, "a hang must not look like a disconnect");
+    assert_eq!(run.jobs_done, run.jobs_submitted, "job(s) lost or double-counted");
+    assert_eq!(run.store.len(), 5, "store missing families after the hang");
+    let baseline = run_fleet(1, None);
+    assert_eq!(
+        run.store.to_json().to_string(),
+        baseline.store.to_json().to_string(),
+        "the hung worker changed the fitted store"
+    );
+}
+
+#[test]
+fn duplicate_completions_from_a_recovered_straggler_are_deduped() {
+    // Worker 1 stalls 900ms on its second job — far past the 250ms
+    // deadline — then *recovers and answers*.  By then the job has been
+    // speculatively re-issued, so the leader sees two completions; the
+    // queue takes the first and drops the duplicate, and per-job seeds
+    // make both results bitwise identical anyway.
+    let run =
+        run_straggler_fleet(1, FaultPlan::stall_after(1, Stall::Recover(Duration::from_millis(900))), 250);
+    assert!(run.speculated >= 1, "the stall never forced a speculative re-issue");
+    assert_eq!(
+        run.jobs_done, run.jobs_submitted,
+        "duplicate completion double-counted or job lost"
+    );
+    let baseline = run_fleet(1, None);
+    assert_eq!(
+        run.store.to_json().to_string(),
+        baseline.store.to_json().to_string(),
+        "the recovered straggler changed the fitted store"
+    );
+}
+
+#[test]
+fn reconnect_backoff_spends_its_budget_against_a_dead_leader() {
+    // Bind then immediately drop a listener: the port refuses connects.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind probe port");
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let reference = reference();
+    let mut worker = DeviceWorker::new(Device::new(devices::xavier(), 100), &reference)
+        .with_per_job_seed(BASE_SEED);
+    let t0 = Instant::now();
+    let done = worker.run_reconnecting(&addr, 2, 7);
+    assert_eq!(done, 0, "no leader, no jobs");
+    // Two inter-attempt waits, deterministic from the seed: the loop
+    // must actually have backed off, not hot-spun.
+    let floor = reconnect_backoff(7, 0) + reconnect_backoff(7, 1);
+    assert!(
+        t0.elapsed() >= floor,
+        "reconnect loop did not back off: {:?} < {floor:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn reconnecting_worker_finishes_a_healthy_serve_on_shutdown() {
+    // Against a healthy leader the reconnect loop must end on Shutdown
+    // without spending any reconnect budget, reporting the full job
+    // count — and the store is the usual pure function of the config.
+    let server = FleetServer::new(ThorConfig { batch: Batch::Fixed(3), ..ThorConfig::quick() });
+    let bound = server.bind("127.0.0.1:0").expect("bind ephemeral loopback port");
+    let addr = bound.local_addr().to_string();
+    let reference_w = reference();
+    let handle = std::thread::spawn(move || {
+        DeviceWorker::new(Device::new(devices::xavier(), 100), &reference_w)
+            .with_per_job_seed(BASE_SEED)
+            .run_reconnecting(&addr, 5, 11)
+    });
+    let run = bound.serve(&reference(), 1).expect("fleet serve");
+    let done = handle.join().expect("worker thread");
+    assert_eq!(done, run.jobs_done, "Shutdown must end the loop with the full job count");
+    let baseline = run_fleet(1, None);
+    assert_eq!(
+        run.store.to_json().to_string(),
+        baseline.store.to_json().to_string(),
+        "the reconnecting worker changed the fitted store"
+    );
 }
 
 #[test]

@@ -431,6 +431,196 @@ fn prop_elastic_jobqueue_exactly_once_under_join_death_rejoin() {
     );
 }
 
+#[test]
+fn prop_speculative_jobqueue_exactly_once_under_randomized_stalls() {
+    // The straggler contract of the leader's scheduler: under arbitrary
+    // randomized schedules of submit / assign / speculative re-issue /
+    // first-result-wins completion / stall-kill (of either the primary
+    // or the speculative runner), every job completes exactly once, the
+    // rival runner's duplicate result is always rejected, a worker never
+    // holds two jobs (primary or speculative), and the requeue ledger
+    // counts exactly the stalls that had no speculative runner to
+    // promote.
+    use std::collections::BTreeMap;
+    use thor::coordinator::JobQueue;
+    const CLASSES: [&str; 2] = ["xavier", "tx2"];
+    // Three workers per class, so re-speculation (replacing a stalled
+    // speculative runner with the remaining idle peer) is reachable.
+    const WORKERS: usize = 6; // worker w serves CLASSES[w % 2]
+    let class_of = |w: usize| CLASSES[w % CLASSES.len()];
+    check(
+        "speculative jobqueue",
+        Config { cases: 64, seed: 173 },
+        |r| {
+            (0..r.range_usize(30, 90))
+                .map(|_| (r.range_usize(0, 5) as u8, r.next_u64()))
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let mut q = JobQueue::new();
+            let mut primary: BTreeMap<u64, usize> = BTreeMap::new();
+            let mut spec: BTreeMap<u64, usize> = BTreeMap::new();
+            let mut completions: BTreeMap<u64, &str> = BTreeMap::new();
+            let mut submitted = 0usize;
+            let (mut dead_stalls, mut requeued_total) = (0usize, 0usize);
+            let busy_model = |primary: &BTreeMap<u64, usize>, spec: &BTreeMap<u64, usize>, w: usize| {
+                primary.values().any(|&p| p == w) || spec.values().any(|&s| s == w)
+            };
+            for (op, salt) in ops {
+                let salt = *salt as usize;
+                match op {
+                    0 => {
+                        q.submit(CLASSES[salt % CLASSES.len()], "f", vec![salt % 7], 10);
+                        submitted += 1;
+                    }
+                    1 => {
+                        let w = salt % WORKERS;
+                        if busy_model(&primary, &spec, w) {
+                            prop_assert!(
+                                q.assign(w, class_of(w)).is_none(),
+                                "worker {w} assigned while holding a job"
+                            );
+                        } else if let Some(j) = q.assign(w, class_of(w)) {
+                            prop_assert!(j.device == class_of(w), "cross-class assignment");
+                            primary.insert(j.id, w);
+                        }
+                    }
+                    2 => {
+                        // Speculative re-issue: duplicate a random
+                        // in-flight job to an idle same-class peer.  A
+                        // second speculation *replaces* the first (the
+                        // leader re-speculates when the first
+                        // speculation stalls too), freeing the old
+                        // assignee.
+                        if primary.is_empty() {
+                            continue;
+                        }
+                        let id = *primary.keys().nth(salt % primary.len()).unwrap();
+                        let holder = primary[&id];
+                        let class = class_of(holder);
+                        let idle: Vec<usize> = (0..WORKERS)
+                            .filter(|&w| {
+                                class_of(w) == class
+                                    && w != holder
+                                    && !busy_model(&primary, &spec, w)
+                            })
+                            .collect();
+                        let Some(&w) = idle.get(salt / 7 % idle.len().max(1)) else {
+                            continue;
+                        };
+                        let j = q.speculate(id, w, class);
+                        prop_assert!(j.is_some(), "eligible speculation refused for job {id}");
+                        spec.insert(id, w); // replaces (and frees) any prior assignee
+                    }
+                    3 => {
+                        // First result wins: complete by whichever
+                        // runner the schedule favours; the rival's
+                        // duplicate must then be rejected.
+                        if primary.is_empty() {
+                            continue;
+                        }
+                        let id = *primary.keys().nth(salt % primary.len()).unwrap();
+                        let holder = primary.remove(&id).unwrap();
+                        let rival = spec.remove(&id);
+                        let (winner, loser) = match rival {
+                            Some(s) if salt % 2 == 0 => (s, Some(holder)),
+                            Some(s) => (holder, Some(s)),
+                            None => (holder, None),
+                        };
+                        prop_assert!(q.complete(id, winner), "winning completion rejected");
+                        prop_assert!(
+                            completions.insert(id, class_of(winner)).is_none(),
+                            "job {id} completed twice"
+                        );
+                        if let Some(l) = loser {
+                            prop_assert!(
+                                !q.complete(id, l),
+                                "duplicate completion from the rival runner accepted"
+                            );
+                        }
+                    }
+                    4 => {
+                        // Stall-kill the primary runner.  With a
+                        // speculative runner in flight the job is
+                        // promoted, not re-queued; without one it goes
+                        // back to the queue.
+                        if primary.is_empty() {
+                            continue;
+                        }
+                        let id = *primary.keys().nth(salt % primary.len()).unwrap();
+                        let holder = primary.remove(&id).unwrap();
+                        let n = q.requeue_worker(holder);
+                        match spec.remove(&id) {
+                            Some(s) => {
+                                prop_assert!(n == 0, "promotion counted as a requeue");
+                                primary.insert(id, s);
+                            }
+                            None => {
+                                prop_assert!(n == 1, "stalled job not re-queued ({n})");
+                                dead_stalls += 1;
+                                requeued_total += n;
+                            }
+                        }
+                    }
+                    _ => {
+                        // Stall-kill the speculative runner: the job
+                        // stays with its primary, nothing re-queues.
+                        if spec.is_empty() {
+                            continue;
+                        }
+                        let id = *spec.keys().nth(salt % spec.len()).unwrap();
+                        let s = spec.remove(&id).unwrap();
+                        prop_assert!(
+                            q.requeue_worker(s) == 0,
+                            "killing a speculative runner re-queued a job"
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                requeued_total == dead_stalls,
+                "{requeued_total} requeues for {dead_stalls} unspeculated stalls"
+            );
+            // Drain: finish the in-flight holds, then pump the idle
+            // fleet until the queue is empty.
+            for (id, w) in std::mem::take(&mut primary) {
+                prop_assert!(q.complete(id, w), "drain completion rejected");
+                prop_assert!(completions.insert(id, class_of(w)).is_none(), "completed twice");
+            }
+            let mut guard = 0;
+            while q.pending() > 0 {
+                guard += 1;
+                prop_assert!(guard < 100_000, "drain did not terminate");
+                for w in 0..WORKERS {
+                    if let Some(j) = q.assign(w, class_of(w)) {
+                        prop_assert!(j.device == class_of(w), "cross-class drain assignment");
+                        prop_assert!(q.complete(j.id, w), "drain completion rejected");
+                        prop_assert!(
+                            completions.insert(j.id, class_of(w)).is_none(),
+                            "completed twice"
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                completions.len() == submitted,
+                "{} completions for {submitted} submitted jobs",
+                completions.len()
+            );
+            prop_assert!(q.done() == submitted, "queue ledger disagrees");
+            // Exactly-once *per class*: every completion — primary or
+            // speculative — happened on a worker of the job's own class.
+            for (id, class) in &completions {
+                prop_assert!(
+                    q.get(*id).map(|j| j.device.as_str()) == Some(*class),
+                    "job {id} completed on foreign class {class}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
 /// A fan-out experiment with one deliberately panicking subtask, for
 /// injecting failure into a real suite run.
 struct SickFan;

@@ -12,8 +12,17 @@
 //!    line, garbage framing, or a silent drop) ends only its own
 //!    connection: the accept loop keeps serving and the shared cache is
 //!    neither poisoned nor corrupted (later answers stay bit-identical).
+//! 3. **Deadline hardening** ([`thor::coordinator::ServeTuning`]) — a
+//!    slow-loris client trickling bytes cannot hold a worker thread past
+//!    the line deadline (one `est_err`, then the drop), and a connection
+//!    idling past the idle timeout is reaped so its thread returns to
+//!    the accept loop.
 
-use thor::coordinator::{EstimateClient, EstimateServer, EstimateServerHandle, Msg};
+use std::time::Duration;
+
+use thor::coordinator::{
+    slow_loris_send, EstimateClient, EstimateServer, EstimateServerHandle, Msg, ServeTuning,
+};
 use thor::model::spec::parse_spec;
 use thor::model::zoo;
 use thor::simdevice::{devices, Device};
@@ -239,4 +248,76 @@ fn shutdown_message_is_a_polite_close_not_an_error() {
     drop(client);
     let stats = handle.shutdown();
     assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn slow_loris_client_cannot_hold_a_worker_past_the_line_deadline() {
+    let store = profiled_store("xavier", 24);
+    let expected = expected_bits(&store, "xavier");
+    let tuning = ServeTuning {
+        line_timeout: Duration::from_millis(200),
+        poll: Duration::from_millis(25),
+        ..ServeTuning::default()
+    };
+    // ONE worker thread: if the loris held it past the deadline, the
+    // healthy client below could never be served.
+    let handle =
+        EstimateServer::bind("127.0.0.1:0", store).unwrap().with_tuning(tuning).start(1).unwrap();
+    let addr = handle.addr();
+
+    // A valid request trickled at 50ms/byte — it cannot complete its
+    // line within the 200ms deadline, so the server must cut it off.
+    const REQ: &[u8] =
+        b"{\"type\":\"est\",\"id\":1,\"device\":\"xavier\",\"model\":\"cnn5:8,16,32,64:16\"}\n";
+    let loris = std::thread::spawn(move || {
+        let mut stream = std::net::TcpStream::connect(addr).expect("loris connect");
+        slow_loris_send(&mut stream, REQ, Duration::from_millis(50))
+    });
+    // Let the loris win the single worker's accept first.
+    std::thread::sleep(Duration::from_millis(50));
+
+    // The healthy client queues behind the loris on the one worker; it
+    // gets served if and only if the loris is dropped at the deadline.
+    let mut client = EstimateClient::connect(&addr).expect("healthy connect");
+    let (e, v) = client.estimate("xavier", SPECS[0]).expect("healthy estimate");
+    assert_eq!((e.to_bits(), v.to_bits()), expected[0]);
+
+    let sent = loris.join().expect("loris thread");
+    assert!(sent < REQ.len(), "loris was never cut off (sent all {sent} bytes)");
+    drop(client);
+    let stats = handle.shutdown();
+    assert!(stats.errors >= 1, "the stalled line must be answered with one est_err: {stats:?}");
+}
+
+#[test]
+fn idle_connections_are_reaped_and_the_daemon_keeps_serving() {
+    let store = profiled_store("xavier", 25);
+    let expected = expected_bits(&store, "xavier");
+    let tuning = ServeTuning {
+        idle_timeout: Duration::from_millis(150),
+        poll: Duration::from_millis(25),
+        ..ServeTuning::default()
+    };
+    let handle =
+        EstimateServer::bind("127.0.0.1:0", store).unwrap().with_tuning(tuning).start(2).unwrap();
+
+    // One served request, then silence past the idle timeout.
+    let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+    let (e, v) = client.estimate("xavier", SPECS[0]).unwrap();
+    assert_eq!((e.to_bits(), v.to_bits()), expected[0]);
+    std::thread::sleep(Duration::from_millis(400));
+    assert!(
+        client.estimate("xavier", SPECS[0]).is_err(),
+        "idle connection should have been reaped"
+    );
+    // The reap returned its worker to the accept loop: fresh
+    // connections serve bit-identical answers.
+    let mut fresh = EstimateClient::connect(&handle.addr()).unwrap();
+    let (e, v) = fresh.estimate("xavier", SPECS[1]).unwrap();
+    assert_eq!((e.to_bits(), v.to_bits()), expected[1]);
+    drop(fresh);
+    drop(client);
+    let stats = handle.shutdown();
+    assert!(stats.reaped >= 1, "idle reap never fired: {stats:?}");
+    assert_eq!(stats.errors, 0, "an idle reap is silent, not an error");
 }
