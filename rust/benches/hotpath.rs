@@ -1,7 +1,10 @@
 //! `cargo bench --bench hotpath` — §Perf microbenchmarks for the
 //! optimization targets (EXPERIMENTS.md §Perf records before/after):
 //!
-//!   L3  GP fit engine: `GpModel::fit`, `fit_family`, batched predict
+//!   L3  GP fit engine: `GpModel::fit`, `fit_family`, batched predict,
+//!       and the PR-9 fit-time-vs-n sweep (exact vs sparse m=64 at
+//!       n ∈ {32, 128, 512, 2048}; `THOR_BENCH_EXACT_CAP` bounds the
+//!       cubic exact arms)
 //!   L3  estimate() (cnn5 + resnet56 batched-family path) / simulator
 //!       trace execution
 //!   L2+L1  artifact-backed batched GP posterior through PJRT
@@ -61,6 +64,53 @@ fn main() {
             black_box(&fit_ys),
         ));
     }));
+
+    // --- L3: fit-time-vs-n sweep, exact vs sparse (PR 9) --------------------
+    // The sparse backend's whole case: exact fitting is O(n³) per NLML
+    // evaluation, sparse is O(n·m²) at fixed m = 64 — the sweep makes the
+    // crossover visible in BENCH_pr9.json.  Exact arms above
+    // THOR_BENCH_EXACT_CAP (default 512) are skipped with a notice so the
+    // sweep stays tractable on slow machines; the sparse arm always runs
+    // (at n ≤ m it resolves exact by the `m < n` rule, so the n=32 pair
+    // doubles as a dispatch-overhead check).
+    {
+        use thor::gp::{FitWorkspace, GpBackend};
+        let exact_cap: usize = std::env::var("THOR_BENCH_EXACT_CAP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(512);
+        for n in [32usize, 128, 512, 2048] {
+            let xs: Vec<Vec<f64>> = (0..n)
+                .map(|i| vec![((i * 7) % n) as f64 / (n - 1) as f64, ((i * 5) % n) as f64 / (n - 1) as f64])
+                .collect();
+            let ys: Vec<f64> =
+                xs.iter().map(|x| (1.0 + 2.0 * x[0] + x[1] * x[1]).ln()).collect();
+            if n <= exact_cap {
+                results.push(bench(&format!("L3 fit-vs-n exact (n={n})"), budget, || {
+                    let mut ws = FitWorkspace::new();
+                    black_box(GpModel::fit_b(
+                        &mut ws,
+                        KernelKind::Matern52,
+                        black_box(xs.clone()),
+                        black_box(&ys),
+                        GpBackend::Exact,
+                    ));
+                }));
+            } else {
+                println!("(skipping exact fit at n={n}: above THOR_BENCH_EXACT_CAP={exact_cap})");
+            }
+            results.push(bench(&format!("L3 fit-vs-n sparse m=64 (n={n})"), budget, || {
+                let mut ws = FitWorkspace::new();
+                black_box(GpModel::fit_b(
+                    &mut ws,
+                    KernelKind::Matern52,
+                    black_box(xs.clone()),
+                    black_box(&ys),
+                    GpBackend::Sparse { m: 64 },
+                ));
+            }));
+        }
+    }
 
     // --- L3: full acquisition loop (warm refits after one full fit) ---------
     let fcfg = FitConfig { max_points: 16, grid_n: 33, threshold_frac: 0.0, ..Default::default() };

@@ -712,6 +712,34 @@ mod tests {
     }
 
     #[test]
+    fn sparse_backend_store_loads_and_serves_bit_identically() {
+        // PR 9 serving contract: a `--gp sparse:<m>` profiled artifact
+        // reloads through the same workspace-threaded `from_json` (the
+        // daemon's load path — posterior factors over the inducing basis
+        // precomputed once) and serves bit-identically to a local
+        // estimate against the reloaded store.
+        let profile = crate::simdevice::devices::by_name("xavier").unwrap();
+        let mut dev = crate::simdevice::Device::new(profile, 11);
+        let mut cfg = crate::thor::ThorConfig::quick();
+        cfg.gp_backend = crate::gp::GpBackend::Sparse { m: 6 };
+        let mut thor = crate::thor::Thor::new(cfg);
+        thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
+        let json = thor.store.to_json().to_string();
+        assert!(json.contains("\"backend\":\"sparse\""), "quick fits exceed m=6, so at least one family must go sparse");
+        let store = GpStore::from_json(&crate::util::json::Json::parse(&json).unwrap()).unwrap();
+        let spec = "cnn5:8,16,32,64:16";
+        let expect = estimate(&store, "xavier", &parse_spec(spec).unwrap()).unwrap();
+        let handle = start_daemon(store, 2);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        let (e, v) = client.estimate("xavier", spec).unwrap();
+        assert_eq!(e.to_bits(), expect.energy_per_iter.to_bits());
+        assert_eq!(v.to_bits(), expect.variance.to_bits());
+        drop(client);
+        let stats = handle.shutdown();
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
     fn swap_store_serves_the_new_fit_immediately() {
         let store_a = profiled_store("xavier", 11);
         let store_b = profiled_store("xavier", 99); // different profiling seed

@@ -1,0 +1,120 @@
+//! gpscale (PR 9, §Perf): sparse-vs-exact GP backend comparison.
+//!
+//! One controlled profile-and-estimate run per backend arm — exact
+//! first, then `sparse:<m>` at several inducing counts — on the Xavier
+//! CNN zoo.  Every arm reports its own MAPE against metered ground
+//! truth, and the merge computes each sparse arm's **estimate drift
+//! envelope** against the exact arm: the mean and max relative
+//! deviation of the per-model energy estimates.  The golden pin on this
+//! table is the repo's accuracy contract for the sparse backend — if a
+//! kernel or selection change moves the sparse posterior, this drifts
+//! and the golden diff shows exactly how much, per inducing count.
+//!
+//! Like the other controlled comparisons ([`crate::exp::ablation`]),
+//! every arm captures the *parent* config, so all arms share one test
+//! set and one device-noise seed; arm-to-arm differences isolate the
+//! backend treatment (plus whatever acquisition-path divergence the
+//! changed posterior induces — that end-to-end effect is deliberately
+//! in scope, since it is what `--gp sparse:<m>` ships).
+
+use crate::exp::registry::{Experiment, Subtask, SubtaskOutput};
+use crate::exp::report::ExpReport;
+use crate::exp::{measured_energy, reference_model, ExpConfig};
+use crate::gp::GpBackend;
+use crate::model::sampler::{sample_n, Family};
+use crate::simdevice::{devices, Device};
+use crate::thor::{Thor, ThorConfig};
+use crate::util::stats::mape;
+
+/// Sparse-vs-exact MAPE drift across inducing counts (the tentpole's
+/// evidence experiment).
+pub struct GpScale;
+
+/// Inducing counts swept by the sparse arms.  Chosen to straddle the
+/// quick-mode family budgets (1-D: 10 points, 2-D: 14): m = 4 and 8
+/// exercise the sparse path on every family, m = 12 only on the 2-D
+/// ones (1-D fits fall back exact by the `m < n` rule — the fallback is
+/// part of what the golden pins).
+const GPSCALE_M: [usize; 3] = [4, 8, 12];
+
+/// (per-model measured energy, per-model estimated energy) for one arm.
+type ArmOut = (Vec<f64>, Vec<f64>);
+
+impl GpScale {
+    fn arm(backend: GpBackend, cfg: &ExpConfig) -> ArmOut {
+        let profile = devices::by_name("xavier").unwrap();
+        let mut dev = Device::new(profile, cfg.seed);
+        let tcfg = ThorConfig { gp_backend: backend, ..cfg.thor_cfg() };
+        let mut thor = Thor::new(tcfg);
+        thor.profile_local(&mut dev, &reference_model(Family::Cnn5));
+        let test = sample_n(Family::Cnn5, cfg.n_test().min(25), cfg.seed + 1, 10);
+        let (mut actual, mut est) = (vec![], vec![]);
+        for g in &test {
+            actual.push(measured_energy(&mut dev, g, cfg.iterations(), 1));
+            est.push(thor.estimate("xavier", g).unwrap().energy_per_iter);
+        }
+        (actual, est)
+    }
+}
+
+impl Experiment for GpScale {
+    fn id(&self) -> &'static str {
+        "gpscale"
+    }
+
+    fn description(&self) -> &'static str {
+        "sparse-vs-exact GP backend: MAPE + estimate-drift envelope across inducing counts (Xavier)"
+    }
+
+    fn subtasks(&self, cfg: &ExpConfig) -> Vec<Subtask> {
+        let parent = *cfg; // shared across arms: controlled comparison
+        let mut subs = vec![Subtask::new("exact", move |_scfg: &ExpConfig| {
+            Self::arm(GpBackend::Exact, &parent)
+        })];
+        for m in GPSCALE_M {
+            subs.push(Subtask::new(format!("sparse-m{m}"), move |_scfg: &ExpConfig| {
+                Self::arm(GpBackend::Sparse { m }, &parent)
+            }));
+        }
+        subs
+    }
+
+    fn merge(&self, cfg: &ExpConfig, parts: Vec<SubtaskOutput>) -> ExpReport {
+        let mut rep =
+            ExpReport::new(self.id(), "sparse GP backend accuracy", cfg, &["xavier"]);
+        let arms: Vec<ArmOut> =
+            parts.into_iter().map(|p| *p.downcast::<ArmOut>().expect("gpscale arm")).collect();
+        let (_, exact_est) = &arms[0]; // declaration order: exact first
+        let mut rows = Vec::new();
+        for (i, (actual, est)) in arms.iter().enumerate() {
+            let label = if i == 0 {
+                "exact".to_string()
+            } else {
+                format!("sparse:{}", GPSCALE_M[i - 1])
+            };
+            let (mean_drift, max_drift) = if i == 0 {
+                (0.0, 0.0)
+            } else {
+                let rel: Vec<f64> = est
+                    .iter()
+                    .zip(exact_est)
+                    .map(|(s, e)| 100.0 * (s - e).abs() / e.abs().max(1e-12))
+                    .collect();
+                let max = rel.iter().cloned().fold(0.0f64, f64::max);
+                (rel.iter().sum::<f64>() / rel.len() as f64, max)
+            };
+            rows.push(vec![
+                label,
+                format!("{:.1}", mape(actual, est)),
+                format!("{mean_drift:.2}"),
+                format!("{max_drift:.2}"),
+            ]);
+        }
+        rep.push_table(
+            "",
+            &["backend", "MAPE %", "mean drift vs exact %", "max drift vs exact %"],
+            rows,
+        );
+        rep
+    }
+}

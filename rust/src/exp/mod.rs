@@ -17,10 +17,11 @@
 //! | [`ablation`]    | a14 (point budget), a15 (kernels), a16 (iterations)  |
 //! | [`fleet_exp`]   | fleet1/fleetN/fleetH/fleetE (fleet profiling, A5.2)  |
 //! | [`serve_exp`]   | serve1 (estimation-serving daemon under load)        |
+//! | [`gpscale`]     | gpscale (sparse-vs-exact GP backend drift, PR 9)     |
 //!
 //! Experiment ids: `fig2 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//! fig13 a14 a15 a16 fleet1 fleetN fleetH fleetE serve1` (`tab1` aliases
-//! `fig8`).
+//! fig13 a14 a15 a16 fleet1 fleetN fleetH fleetE fleetS serve1 gpscale`
+//! (`tab1` aliases `fig8`).
 //!
 //! # Entry points
 //!
@@ -70,6 +71,7 @@
 pub mod ablation;
 pub mod figures;
 pub mod fleet_exp;
+pub mod gpscale;
 pub mod pruning_exp;
 pub mod registry;
 pub mod report;

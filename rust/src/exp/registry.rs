@@ -4,7 +4,7 @@
 //!
 //! Adding an experiment = implement the trait in `tables.rs` /
 //! `figures.rs` / `ablation.rs` / `pruning_exp.rs` / `fleet_exp.rs` /
-//! `serve_exp.rs` and append it to [`registry`].  Order in [`registry`] is the canonical
+//! `serve_exp.rs` / `gpscale.rs` and append it to [`registry`].  Order in [`registry`] is the canonical
 //! presentation order (paper order) and is preserved by the
 //! multi-threaded runner.
 //!
@@ -35,7 +35,7 @@
 use std::any::Any;
 
 use crate::exp::report::ExpReport;
-use crate::exp::{ablation, figures, fleet_exp, pruning_exp, serve_exp, tables, ExpConfig};
+use crate::exp::{ablation, figures, fleet_exp, gpscale, pruning_exp, serve_exp, tables, ExpConfig};
 
 /// Type-erased output of one subtask, downcast by the experiment's
 /// [`Experiment::merge`].
@@ -135,6 +135,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(fleet_exp::FleetE),
         Box::new(fleet_exp::FleetS),
         Box::new(serve_exp::Serve1),
+        Box::new(gpscale::GpScale),
     ]
 }
 
@@ -186,6 +187,7 @@ mod tests {
         assert_eq!(by_id("fleetE").unwrap().id(), "fleetE");
         assert_eq!(by_id("fleetS").unwrap().id(), "fleetS");
         assert_eq!(by_id("serve1").unwrap().id(), "serve1");
+        assert_eq!(by_id("gpscale").unwrap().id(), "gpscale");
     }
 
     #[test]

@@ -91,7 +91,10 @@ pub fn top_k_variance(
         // allocation-free single-pass scan, first maximum wins.
         let mut best: Option<(usize, f64)> = None;
         for (i, q) in grid.points.iter().enumerate() {
-            // skip (numerically) already-profiled candidates
+            // skip (numerically) already-profiled candidates — gp.xs is
+            // the FULL training set even under the sparse backend (the
+            // inducing basis only drives the posterior), so a measured
+            // point is never re-proposed just because it isn't inducing
             if gp.xs.iter().any(|x| crate::gp::kernel::dist(x, q) < 1e-9) {
                 continue;
             }
@@ -237,6 +240,32 @@ mod tests {
         match top_k_variance(&gp, &grid, 0.0, 100.0, 10) {
             AcquireBatch::Next(ps) => assert_eq!(ps.len(), 3, "{ps:?}"), // 5 grid − 2 profiled
             other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_model_still_skips_all_profiled_points() {
+        // The sparse posterior predicts through the inducing basis, but
+        // the already-profiled skip must see the full training set: a
+        // grid identical to the training set leaves no candidates, even
+        // though only 6 of 21 points are inducing.
+        use crate::gp::{FitWorkspace, GpBackend};
+        let xs: Vec<Vec<f64>> = (0..21).map(|i| vec![i as f64 / 20.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 100.0 + 40.0 * (4.0 * x[0]).sin()).collect();
+        let mut ws = FitWorkspace::new();
+        let gp = GpModel::fit_b(
+            &mut ws,
+            KernelKind::Matern52,
+            xs,
+            &ys,
+            GpBackend::Sparse { m: 6 },
+        )
+        .unwrap();
+        assert_eq!(gp.inducing().len(), 6);
+        let grid = CandidateGrid::dim1(0.0, 1.0, 21);
+        match top_k_variance(&gp, &grid, 0.0, 100.0, 4) {
+            AcquireBatch::Converged(_) => {}
+            AcquireBatch::Next(ps) => panic!("non-inducing points re-proposed: {ps:?}"),
         }
     }
 }

@@ -8,10 +8,12 @@
 //! mean and variance; the max-variance acquisition drives guided profiling
 //! (active learning, Fig 4).
 //!
-//! Inducing sets are small (≤ `MAX_POINTS`), so fitting uses the native
-//! Cholesky path; *batched prediction* — the estimation hot path — can be
-//! offloaded to the AOT Pallas artifact through
-//! [`crate::runtime::GpExecutor`], which is bit-compatible with
+//! Per-family acquisition sets are small (≤ `MAX_POINTS`), so those fits
+//! use the exact native Cholesky path; fleet-scale stores cross over to
+//! the sparse inducing-point backend ([`GpBackend`], default crossover at
+//! `model::DEFAULT_SPARSE_THRESHOLD` points).  *Batched prediction* — the
+//! estimation hot path — can be offloaded to the AOT Pallas artifact
+//! through [`crate::runtime::GpExecutor`], which is bit-compatible with
 //! [`GpModel::predict`] (cross-checked in integration tests).
 
 pub mod acquisition;
@@ -19,7 +21,7 @@ pub mod kernel;
 pub mod model;
 
 pub use kernel::{DistGram, Kernel, KernelKind};
-pub use model::{FitWorkspace, GpHyper, GpModel};
+pub use model::{select_inducing, FitWorkspace, GpBackend, GpHyper, GpModel};
 
 /// Cap on profiled points per layer family (end condition 1, §3.3).
 pub const MAX_POINTS: usize = 64;

@@ -11,8 +11,19 @@
 //! acquisition loop's per-point refit from 3 starts × ~37 evals × O(n²)
 //! gram rebuilds into one warm descent over cached distances (see
 //! EXPERIMENTS.md §Perf for the before/after).
+//!
+//! Scale: past a few hundred points the exact O(n³) fit dominates, so
+//! [`GpBackend`] adds a sparse inducing-point backend (SoR mean, DTC
+//! variance): `m` inducing points are chosen from the training set by
+//! deterministic farthest-point selection ([`select_inducing`]), the
+//! Nyström-factored gram runs through the same cached [`DistGram`]
+//! statistics, and the hyper-fit is the same coordinate descent over the
+//! sparse NLML — O(n·m²) per evaluation instead of O(n³), O(m) per
+//! prediction instead of O(n).  The default [`GpBackend::Auto`] keeps
+//! every fit below its n-threshold on the exact path, so small-n fits
+//! (all of today's per-family stores) stay bit-identical to before.
 
-use crate::gp::kernel::{DistGram, Kernel, KernelKind};
+use crate::gp::kernel::{sq_dist, DistGram, Kernel, KernelKind};
 use crate::util::linalg::{
     chol_inverse, chol_inverse_into, chol_logdet, chol_solve, chol_solve_into, cholesky,
     cholesky_append_row, cholesky_into, Mat,
@@ -30,6 +41,121 @@ impl Default for GpHyper {
     fn default() -> Self {
         Self { lengthscale: 0.3, variance: 1.0, noise: 1e-3 }
     }
+}
+
+/// Default inducing-set size for the sparse backend.
+pub const DEFAULT_SPARSE_M: usize = 64;
+/// Default exact→sparse crossover: fits below this point count stay on
+/// the exact path.  Every store the pipeline builds today holds ≤
+/// [`crate::gp::MAX_POINTS`] = 64 points, so the default backend resolves
+/// to `Exact` everywhere — sparse only engages on fleet-scale stores.
+pub const DEFAULT_SPARSE_THRESHOLD: usize = 256;
+
+/// Which posterior the fit engine builds.
+///
+/// `Exact` is the original O(n³) path, bit-for-bit unchanged.  `Sparse`
+/// forces `m` inducing points (clamped to the exact path when `m ≥ n`,
+/// where the "approximation" would just be a permuted exact model).
+/// `Auto` — the default — crosses over from exact to sparse at
+/// `n_threshold` points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpBackend {
+    Exact,
+    Sparse { m: usize },
+    Auto { m: usize, n_threshold: usize },
+}
+
+impl Default for GpBackend {
+    fn default() -> Self {
+        Self::Auto { m: DEFAULT_SPARSE_M, n_threshold: DEFAULT_SPARSE_THRESHOLD }
+    }
+}
+
+impl GpBackend {
+    /// Resolve against a concrete point count: `Some(m)` = fit sparse
+    /// with `m` inducing points, `None` = fit exact.
+    pub fn resolve(self, n: usize) -> Option<usize> {
+        match self {
+            GpBackend::Exact => None,
+            GpBackend::Sparse { m } => (m < n).then_some(m),
+            GpBackend::Auto { m, n_threshold } => (n >= n_threshold && m < n).then_some(m),
+        }
+    }
+
+    /// Parse a CLI spelling: `exact`, `auto`, `sparse:<m>`, or
+    /// `auto:<m>:<n_threshold>`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "exact" => return Ok(Self::Exact),
+            "auto" => return Ok(Self::default()),
+            _ => {}
+        }
+        let err = || format!("bad --gp '{s}' (want exact | auto | sparse:<m> | auto:<m>:<n>)");
+        if let Some(m) = s.strip_prefix("sparse:") {
+            let m: usize = m.parse().map_err(|_| err())?;
+            if m == 0 {
+                return Err(err());
+            }
+            return Ok(Self::Sparse { m });
+        }
+        if let Some(rest) = s.strip_prefix("auto:") {
+            let (m, t) = rest.split_once(':').ok_or_else(err)?;
+            let m: usize = m.parse().map_err(|_| err())?;
+            let t: usize = t.parse().map_err(|_| err())?;
+            if m == 0 {
+                return Err(err());
+            }
+            return Ok(Self::Auto { m, n_threshold: t });
+        }
+        Err(err())
+    }
+}
+
+/// Deterministic farthest-point (max–min) inducing selection: a pure
+/// function of `(xs, m)` — no RNG state, no wall clock — so checkpoint
+/// replay and a JSON reload reproduce the same inducing set bit-for-bit.
+///
+/// The start index is derived from FNV-1a over (n, m); each subsequent
+/// pick maximizes the min squared distance to the chosen set (ties →
+/// lowest index).  Selection stops early when only duplicates of chosen
+/// points remain (max min-distance 0), so the effective set can be
+/// smaller than `m`.  Returned indices are sorted ascending.
+pub fn select_inducing(xs: &[Vec<f64>], m: usize) -> Vec<usize> {
+    let n = xs.len();
+    if m >= n {
+        return (0..n).collect();
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for word in [n as u64, m as u64] {
+        for byte in word.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    let start = (h % n as u64) as usize;
+    let mut chosen = vec![start];
+    let mut mind2: Vec<f64> = xs.iter().map(|x| sq_dist(x, &xs[start])).collect();
+    while chosen.len() < m {
+        let (mut bi, mut bd) = (0usize, -1.0f64);
+        for (i, &d) in mind2.iter().enumerate() {
+            if d > bd {
+                bd = d;
+                bi = i;
+            }
+        }
+        if bd <= 0.0 {
+            break; // only duplicates of chosen points remain
+        }
+        chosen.push(bi);
+        for (i, d) in mind2.iter_mut().enumerate() {
+            let nd = sq_dist(&xs[i], &xs[bi]);
+            if nd < *d {
+                *d = nd;
+            }
+        }
+    }
+    chosen.sort_unstable();
+    chosen
 }
 
 /// A fitted GP over normalized inputs (dimension 1 or 2) with
@@ -50,11 +176,21 @@ pub struct GpModel {
     /// Target standardization: y_std = (y − y_mean) / y_scale.
     pub y_mean: f64,
     pub y_scale: f64,
-    /// α = K⁻¹ y (standardized).
+    /// α = K⁻¹ y (standardized).  Sparse backend: the m-vector
+    /// σ⁻²·A⁻¹K_mn·y over the inducing basis — the posterior mean is
+    /// `k(q, basis)·α` either way.
     alpha: Vec<f64>,
     /// K⁻¹ (needed for predictive variance and for export to the Pallas
-    /// posterior artifact).
+    /// posterior artifact).  Sparse backend: the m×m matrix
+    /// K_mm⁻¹ − A⁻¹, so `σ² − k_qᵀ·kinv·k_q` is the DTC predictive
+    /// variance through the same quadratic-form code path.
     kinv: Mat,
+    /// Sorted training-set indices of the inducing points; empty = exact
+    /// backend (the basis is the full training set).
+    inducing: Vec<usize>,
+    /// The inducing points themselves (`xs[inducing[..]]`), cached so
+    /// prediction never re-gathers.
+    zs: Vec<Vec<f64>>,
 }
 
 impl GpModel {
@@ -71,7 +207,19 @@ impl GpModel {
         let l = cholesky(&k)?;
         let alpha = chol_solve(&l, &ys);
         let kinv = chol_inverse(&l);
-        Some(Self { kind, hyper, xs, ys, ys_raw: ys_raw.to_vec(), y_mean, y_scale, alpha, kinv })
+        Some(Self {
+            kind,
+            hyper,
+            xs,
+            ys,
+            ys_raw: ys_raw.to_vec(),
+            y_mean,
+            y_scale,
+            alpha,
+            kinv,
+            inducing: Vec::new(),
+            zs: Vec::new(),
+        })
     }
 
     /// Fit with fixed hyper-parameters through a reusable [`FitWorkspace`]
@@ -101,7 +249,145 @@ impl GpModel {
         chol_solve_into(&ws.l, &ys, &mut ws.tmp, &mut alpha);
         let mut kinv = Mat::zeros(n, n);
         chol_inverse_into(&ws.l, &mut kinv, &mut ws.tmp);
-        Some(Self { kind, hyper, xs, ys, ys_raw: ys_raw.to_vec(), y_mean, y_scale, alpha, kinv })
+        Some(Self {
+            kind,
+            hyper,
+            xs,
+            ys,
+            ys_raw: ys_raw.to_vec(),
+            y_mean,
+            y_scale,
+            alpha,
+            kinv,
+            inducing: Vec::new(),
+            zs: Vec::new(),
+        })
+    }
+
+    /// Sparse fit at fixed hypers: SoR/DTC posterior over the inducing
+    /// basis.  `forced` (the deserialization path) pins the inducing
+    /// indices stored in the artifact instead of re-running selection, so
+    /// old artifacts stay loadable even if the selection heuristic ever
+    /// changes.
+    fn fit_fixed_sparse(
+        ws: &mut FitWorkspace,
+        kind: KernelKind,
+        hyper: GpHyper,
+        xs: Vec<Vec<f64>>,
+        ys_raw: &[f64],
+        m_req: usize,
+        forced: Option<&[usize]>,
+    ) -> Option<Self> {
+        assert_eq!(xs.len(), ys_raw.len());
+        assert!(!xs.is_empty());
+        let (ys, y_mean, y_scale) = standardized(ys_raw);
+        ws.sync(&xs);
+        if let Some(idx) = forced {
+            ws.force_inducing(idx, m_req);
+        }
+        if !ws.prepare_sparse(kind, hyper, m_req) {
+            return None;
+        }
+        let sn2 = hyper.noise + DIAG_JITTER;
+        let mi = ws.sp.idx.len();
+        // b = K_mn y, c = A⁻¹ b  (same arithmetic as the sparse NLML)
+        ws.sparse_information(&ys);
+        // posterior mean factor over the basis: α = σ⁻² c
+        let alpha: Vec<f64> = ws.sp.c.iter().map(|&c| c / sn2).collect();
+        // posterior variance factor: K_mm⁻¹ − A⁻¹ (DTC)
+        let mut kinv = Mat::zeros(mi, mi);
+        chol_inverse_into(&ws.sp.lmm, &mut kinv, &mut ws.sp.tmp);
+        chol_inverse_into(&ws.sp.la, &mut ws.sp.ainv, &mut ws.sp.tmp);
+        for (k, a) in kinv.data.iter_mut().zip(&ws.sp.ainv.data) {
+            *k -= a;
+        }
+        let inducing = ws.sp.idx.clone();
+        let zs: Vec<Vec<f64>> = inducing.iter().map(|&i| xs[i].clone()).collect();
+        Some(Self {
+            kind,
+            hyper,
+            xs,
+            ys,
+            ys_raw: ys_raw.to_vec(),
+            y_mean,
+            y_scale,
+            alpha,
+            kinv,
+            inducing,
+            zs,
+        })
+    }
+
+    /// Backend-dispatching [`GpModel::fit_fixed_with`]: resolves the
+    /// backend at this point count, delegating verbatim to the exact path
+    /// (bit-identical) or fitting the sparse posterior.
+    pub fn fit_fixed_b(
+        ws: &mut FitWorkspace,
+        kind: KernelKind,
+        hyper: GpHyper,
+        xs: Vec<Vec<f64>>,
+        ys_raw: &[f64],
+        backend: GpBackend,
+    ) -> Option<Self> {
+        match backend.resolve(xs.len()) {
+            None => Self::fit_fixed_with(ws, kind, hyper, xs, ys_raw),
+            Some(m) => Self::fit_fixed_sparse(ws, kind, hyper, xs, ys_raw, m, None),
+        }
+    }
+
+    /// Backend-dispatching [`GpModel::fit_with`]: the same multi-start
+    /// coordinate descent, over the sparse NLML when the backend resolves
+    /// sparse at this n.
+    pub fn fit_b(
+        ws: &mut FitWorkspace,
+        kind: KernelKind,
+        xs: Vec<Vec<f64>>,
+        ys_raw: &[f64],
+        backend: GpBackend,
+    ) -> Option<Self> {
+        let m = match backend.resolve(xs.len()) {
+            None => return Self::fit_with(ws, kind, xs, ys_raw),
+            Some(m) => m,
+        };
+        let (ys, _, _) = standardized(ys_raw);
+        ws.sync(&xs);
+        let mut best: Option<(f64, GpHyper)> = None;
+        for &start in MULTI_STARTS {
+            let (h, score) = coord_descent_ws(ws, kind, &ys, start, Some(m));
+            if score.is_finite() && best.map_or(true, |(b, _)| score < b) {
+                best = Some((score, h));
+            }
+        }
+        let (_, hyper) = best?;
+        Self::fit_fixed_sparse(ws, kind, hyper, xs, ys_raw, m, None)
+    }
+
+    /// Backend-dispatching [`GpModel::fit_warm`]: warm single-start
+    /// descent over the backend's NLML, with the same stuck-detector
+    /// fallback to the full multi-start search.
+    pub fn fit_warm_b(
+        ws: &mut FitWorkspace,
+        kind: KernelKind,
+        xs: Vec<Vec<f64>>,
+        ys_raw: &[f64],
+        start: GpHyper,
+        backend: GpBackend,
+    ) -> Option<Self> {
+        let m = match backend.resolve(xs.len()) {
+            None => return Self::fit_warm(ws, kind, xs, ys_raw, start),
+            Some(m) => m,
+        };
+        let (ys, _, _) = standardized(ys_raw);
+        ws.sync(&xs);
+        let (h, score) = coord_descent_ws(ws, kind, &ys, start, Some(m));
+        let stuck = !score.is_finite()
+            || MULTI_STARTS
+                .iter()
+                .any(|&s| ws.nlml_b(kind, &ys, s, Some(m)).is_some_and(|v| v < score));
+        if stuck {
+            return Self::fit_b(ws, kind, xs, ys_raw, backend);
+        }
+        Self::fit_fixed_sparse(ws, kind, h, xs, ys_raw, m, None)
     }
 
     /// Fit hyper-parameters by maximizing the log marginal likelihood with
@@ -123,7 +409,7 @@ impl GpModel {
         ws.sync(&xs);
         let mut best: Option<(f64, GpHyper)> = None;
         for &start in MULTI_STARTS {
-            let (h, score) = coord_descent_ws(ws, kind, &ys, start);
+            let (h, score) = coord_descent_ws(ws, kind, &ys, start, None);
             if score.is_finite() && best.map_or(true, |(b, _)| score < b) {
                 best = Some((score, h));
             }
@@ -147,7 +433,7 @@ impl GpModel {
     ) -> Option<Self> {
         let (ys, _, _) = standardized(ys_raw);
         ws.sync(&xs);
-        let (h, score) = coord_descent_ws(ws, kind, &ys, start);
+        let (h, score) = coord_descent_ws(ws, kind, &ys, start, None);
         let stuck = !score.is_finite()
             || MULTI_STARTS
                 .iter()
@@ -162,6 +448,32 @@ impl GpModel {
         self.xs.len()
     }
 
+    /// The backend this model was fit with (derived from the stored
+    /// inducing set, so it survives serialization).
+    pub fn backend(&self) -> GpBackend {
+        if self.inducing.is_empty() {
+            GpBackend::Exact
+        } else {
+            GpBackend::Sparse { m: self.inducing.len() }
+        }
+    }
+
+    /// Training-set indices of the inducing points (empty for exact).
+    pub fn inducing(&self) -> &[usize] {
+        &self.inducing
+    }
+
+    /// The prediction basis: the full training set for the exact backend
+    /// (the original code path, untouched), the inducing points for the
+    /// sparse backend.  `alpha`/`kinv` are always sized to this basis.
+    fn basis(&self) -> &[Vec<f64>] {
+        if self.inducing.is_empty() {
+            &self.xs
+        } else {
+            &self.zs
+        }
+    }
+
     fn kernel(&self) -> Kernel {
         Kernel { kind: self.kind, lengthscale: self.hyper.lengthscale, variance: self.hyper.variance }
     }
@@ -171,7 +483,7 @@ impl GpModel {
     /// is comparable across refits of the same family).
     pub fn predict(&self, q: &[f64]) -> (f64, f64) {
         let kern = self.kernel();
-        let kstar = kern.cross(q, &self.xs);
+        let kstar = kern.cross(q, self.basis());
         let mean_std: f64 = kstar.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
         let tmp = self.kinv.matvec(&kstar);
         let var_std = (self.hyper.variance
@@ -188,14 +500,15 @@ impl GpModel {
     /// fused pass that accumulates both `kstar·α` and `kstarᵀK⁻¹kstar`
     /// (see EXPERIMENTS.md §Perf for the before/after).
     pub fn predict_batch(&self, qs: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
-        let n = self.xs.len();
+        let basis = self.basis();
+        let n = basis.len();
         let kern = self.kernel();
         let mut means = Vec::with_capacity(qs.len());
         let mut vars = Vec::with_capacity(qs.len());
         let mut kstar = vec![0.0f64; n];
         for q in qs {
             let mut mean_std = 0.0;
-            for (i, x) in self.xs.iter().enumerate() {
+            for (i, x) in basis.iter().enumerate() {
                 let k = kern.eval(q, x);
                 kstar[i] = k;
                 mean_std += k * self.alpha[i];
@@ -220,11 +533,13 @@ impl GpModel {
         (means, vars)
     }
 
-    /// Export (xs, alpha, kinv, hyper) for the AOT Pallas posterior
-    /// artifact (padding handled by the runtime).
+    /// Export (basis, alpha, kinv, hyper) for the AOT Pallas posterior
+    /// artifact (padding handled by the runtime).  For the sparse backend
+    /// the exported point set is the inducing basis — the artifact's
+    /// posterior formula is identical either way.
     pub fn export(&self) -> GpExport<'_> {
         GpExport {
-            xs: &self.xs,
+            xs: self.basis(),
             alpha: &self.alpha,
             kinv: &self.kinv,
             lengthscale: self.hyper.lengthscale,
@@ -243,7 +558,7 @@ impl GpModel {
     /// bit-identically to the original model.  Pinned below.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str(match self.kind {
                 KernelKind::Matern52 => "matern52",
                 KernelKind::Rbf => "rbf",
@@ -254,7 +569,19 @@ impl GpModel {
             ("noise", Json::Num(self.hyper.noise)),
             ("xs", Json::Arr(self.xs.iter().map(|x| Json::arr_f64(x)).collect())),
             ("ys", Json::arr_f64(&self.ys_raw)),
-        ])
+        ];
+        // Sparse models additionally record their inducing set — the
+        // artifact stays self-describing (a reload pins these indices
+        // instead of re-running selection), and exact models keep the
+        // exact byte layout older stores were written with.
+        if !self.inducing.is_empty() {
+            fields.push(("backend", Json::str("sparse")));
+            fields.push((
+                "inducing",
+                Json::Arr(self.inducing.iter().map(|&i| Json::Num(i as f64)).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &crate::util::json::Json) -> Option<Self> {
@@ -281,7 +608,24 @@ impl GpModel {
         };
         let xs: Option<Vec<Vec<f64>>> = j.get("xs")?.as_arr()?.iter().map(|x| x.as_f64_vec()).collect();
         let ys = j.get("ys")?.as_f64_vec()?;
-        Self::fit_fixed_with(ws, kind, hyper, xs?, &ys)
+        let xs = xs?;
+        if j.get("backend").and_then(|b| b.as_str()) == Some("sparse") {
+            let idx: Option<Vec<usize>> = j
+                .get("inducing")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|f| f as usize))
+                .collect();
+            let idx = idx?;
+            let valid = !idx.is_empty()
+                && idx.windows(2).all(|w| w[0] < w[1])
+                && *idx.last().unwrap() < xs.len();
+            if !valid {
+                return None;
+            }
+            return Self::fit_fixed_sparse(ws, kind, hyper, xs, &ys, idx.len(), Some(&idx));
+        }
+        Self::fit_fixed_with(ws, kind, hyper, xs, &ys)
     }
 }
 
@@ -305,6 +649,11 @@ const MULTI_STARTS: &[GpHyper] = &[
 
 /// Additive diagonal jitter on top of the fitted noise.
 const DIAG_JITTER: f64 = 1e-10;
+
+/// Jitter on the inducing gram K_mm's diagonal (it carries no noise
+/// term, so it needs its own regularization to stay factorizable when
+/// inducing points crowd together).
+const SPARSE_JITTER: f64 = 1e-8;
 
 /// Target standardization shared by every fit path: returns
 /// (standardized targets, y_mean, y_scale).
@@ -337,6 +686,44 @@ pub struct FitWorkspace {
     last_profile: Option<(KernelKind, f64, f64)>,
     /// (kind, hypers, n) of the factorization currently held in `l`.
     last_chol: Option<(KernelKind, GpHyper, usize)>,
+    /// Sparse-backend state (inducing selection + Nyström factors).
+    sp: SparseState,
+}
+
+/// Cached state of the sparse (inducing-point) fit path.  The inducing
+/// selection is keyed on (n, m_req) and the noise-independent factors
+/// (K_nm, K_mm, G = K_mn·K_nm, chol(K_mm)) on the scalar kernel profile,
+/// so the ~100 NLML evaluations of a coordinate descent rebuild the
+/// O(n·m²) part only when (ℓ, σ²) move — noise-only candidate moves cost
+/// O(m²) to reassemble A = K_mm + σ⁻²G plus one O(m³) factorization.
+#[derive(Default)]
+struct SparseState {
+    /// Sorted inducing indices into the synced point set.
+    idx: Vec<usize>,
+    /// (n, m_req) the selection in `idx` was computed for.
+    sel_key: Option<(usize, usize)>,
+    /// (kind, ℓ, σ², n, m) profile the Nyström factors below were built
+    /// at — noise excluded on purpose (it only enters through A).
+    profile: Option<(KernelKind, f64, f64, usize, usize)>,
+    /// K_nm: training × inducing cross-covariance.
+    knm: Mat,
+    /// K_mm + SPARSE_JITTER·I.
+    kmm: Mat,
+    /// G = K_mn·K_nm.
+    g: Mat,
+    /// chol(K_mm).
+    lmm: Mat,
+    /// A = K_mm + σ⁻²·G (rebuilt per noise value).
+    a: Mat,
+    /// chol(A).
+    la: Mat,
+    /// A⁻¹ scratch for the posterior assembly.
+    ainv: Mat,
+    /// b = K_mn·y.
+    b: Vec<f64>,
+    /// c = A⁻¹·b.
+    c: Vec<f64>,
+    tmp: Vec<f64>,
 }
 
 impl FitWorkspace {
@@ -353,6 +740,10 @@ impl FitWorkspace {
             self.xs.clear();
             self.gram.clear();
             self.last_chol = None;
+            // a replaced point set at the same length would otherwise
+            // alias the sparse selection/factor keys
+            self.sp.sel_key = None;
+            self.sp.profile = None;
         }
         if xs.len() != self.xs.len() {
             self.last_profile = None;
@@ -427,6 +818,126 @@ impl FitWorkspace {
                 + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln(),
         )
     }
+
+    /// Backend-dispatching NLML: `m = None` is the exact path, `Some(m)`
+    /// the sparse one.
+    fn nlml_b(&mut self, kind: KernelKind, ys: &[f64], h: GpHyper, m: Option<usize>) -> Option<f64> {
+        match m {
+            None => self.nlml(kind, ys, h),
+            Some(m) => self.nlml_sparse(kind, ys, h, m),
+        }
+    }
+
+    /// Pin the inducing selection (deserialization path): subsequent
+    /// sparse calls at the same (n, m_req) reuse exactly these indices.
+    fn force_inducing(&mut self, idx: &[usize], m_req: usize) {
+        if self.sp.idx != idx {
+            self.sp.idx = idx.to_vec();
+            self.sp.profile = None;
+        }
+        self.sp.sel_key = Some((self.gram.len(), m_req));
+    }
+
+    /// Select inducing points (cached on (n, m_req)) and build every
+    /// noise-independent sparse factor at (kind, ℓ, σ²); then assemble
+    /// and factor A = K_mm + σ⁻²·G for this noise.  All kernel entries
+    /// come from the cached [`DistGram`] statistics via
+    /// [`DistGram::kern_at`], so no distance is ever recomputed.
+    fn prepare_sparse(&mut self, kind: KernelKind, h: GpHyper, m_req: usize) -> bool {
+        let n = self.gram.len();
+        if self.sp.sel_key != Some((n, m_req)) {
+            self.sp.idx = select_inducing(&self.xs, m_req);
+            self.sp.sel_key = Some((n, m_req));
+            self.sp.profile = None;
+        }
+        let gram = &self.gram;
+        let sp = &mut self.sp;
+        let mi = sp.idx.len();
+        let kern = Kernel { kind, lengthscale: h.lengthscale, variance: h.variance };
+        if sp.profile != Some((kind, h.lengthscale, h.variance, n, mi)) {
+            sp.knm.resize(n, mi);
+            for i in 0..n {
+                for jj in 0..mi {
+                    sp.knm[(i, jj)] = gram.kern_at(&kern, i, sp.idx[jj]);
+                }
+            }
+            sp.kmm.resize(mi, mi);
+            for a in 0..mi {
+                for b in 0..=a {
+                    let v = gram.kern_at(&kern, sp.idx[a], sp.idx[b]);
+                    sp.kmm[(a, b)] = v;
+                    sp.kmm[(b, a)] = v;
+                }
+                sp.kmm[(a, a)] += SPARSE_JITTER;
+            }
+            sp.g.resize(mi, mi);
+            for a in 0..mi {
+                for b in 0..=a {
+                    let mut s = 0.0;
+                    for i in 0..n {
+                        s += sp.knm[(i, a)] * sp.knm[(i, b)];
+                    }
+                    sp.g[(a, b)] = s;
+                    sp.g[(b, a)] = s;
+                }
+            }
+            if !cholesky_into(&sp.kmm, &mut sp.lmm) {
+                sp.profile = None;
+                return false;
+            }
+            sp.profile = Some((kind, h.lengthscale, h.variance, n, mi));
+        }
+        // noise-dependent part, rebuilt every evaluation: A = K_mm + σ⁻²G
+        let sn2 = h.noise + DIAG_JITTER;
+        sp.a.resize(mi, mi);
+        for (a, (k, g)) in sp.a.data.iter_mut().zip(sp.kmm.data.iter().zip(&sp.g.data)) {
+            *a = k + g / sn2;
+        }
+        cholesky_into(&sp.a, &mut sp.la)
+    }
+
+    /// The information-form intermediates shared by the sparse NLML and
+    /// the sparse posterior: b = K_mn·y and c = A⁻¹·b.  Call after a
+    /// successful [`FitWorkspace::prepare_sparse`].
+    fn sparse_information(&mut self, ys: &[f64]) {
+        let sp = &mut self.sp;
+        let (n, mi) = (sp.knm.rows, sp.idx.len());
+        sp.b.resize(mi, 0.0);
+        for a in 0..mi {
+            let mut s = 0.0;
+            for i in 0..n {
+                s += sp.knm[(i, a)] * ys[i];
+            }
+            sp.b[a] = s;
+        }
+        sp.c.resize(mi, 0.0);
+        sp.tmp.resize(mi, 0.0);
+        let (b, c, tmp) = (&sp.b, &mut sp.c, &mut sp.tmp);
+        chol_solve_into(&sp.la, b, tmp, c);
+    }
+
+    /// Sparse (SoR) negative log marginal likelihood with `m` inducing
+    /// points: O(n·m²) worst case per evaluation (O(m³) on noise-only
+    /// moves) against the exact path's O(n³).
+    ///
+    /// With Q = K_nm·K_mm⁻¹·K_mn + σ²I and A = K_mm + σ⁻²·K_mn·K_nm:
+    ///   yᵀQ⁻¹y  = σ⁻²·(yᵀy − σ⁻²·bᵀA⁻¹b)        (Woodbury)
+    ///   log|Q|  = log|A| − log|K_mm| + n·log σ²   (determinant lemma)
+    fn nlml_sparse(&mut self, kind: KernelKind, ys: &[f64], h: GpHyper, m: usize) -> Option<f64> {
+        let n = self.gram.len();
+        assert_eq!(ys.len(), n, "workspace not synced to the target vector");
+        if !self.prepare_sparse(kind, h, m) {
+            return None;
+        }
+        self.sparse_information(ys);
+        let sn2 = h.noise + DIAG_JITTER;
+        let sp = &self.sp;
+        let yy: f64 = ys.iter().map(|y| y * y).sum();
+        let bc: f64 = sp.b.iter().zip(&sp.c).map(|(b, c)| b * c).sum();
+        let fit = (yy - bc / sn2) / sn2;
+        let logdet = chol_logdet(&sp.la) - chol_logdet(&sp.lmm) + n as f64 * sn2.ln();
+        Some(0.5 * fit + 0.5 * logdet + 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln())
+    }
 }
 
 /// Negative log marginal likelihood (standardized targets) — the naive
@@ -446,13 +957,15 @@ pub fn nlml(kind: KernelKind, xs: &[Vec<f64>], ys: &[f64], h: GpHyper) -> Option
 }
 
 /// Coordinate descent in log-space with shrinking step, over the
-/// workspace's cached distances.  Returns the best hypers and their NLML
-/// (`INFINITY` when no evaluation succeeded).
+/// workspace's cached distances.  `m = Some(_)` descends the sparse NLML
+/// instead of the exact one — same schedule, same bounds.  Returns the
+/// best hypers and their NLML (`INFINITY` when no evaluation succeeded).
 fn coord_descent_ws(
     ws: &mut FitWorkspace,
     kind: KernelKind,
     ys: &[f64],
     start: GpHyper,
+    m: Option<usize>,
 ) -> (GpHyper, f64) {
     let mut logs = [start.lengthscale.ln(), start.variance.ln(), start.noise.ln()];
     let bounds = [(-4.0, 2.0), (-4.0, 4.0), (-9.0, 0.0)];
@@ -460,7 +973,7 @@ fn coord_descent_ws(
     // start equals the previous fit's hypers bit-for-bit, which is what
     // lets `factor()`'s bordered-Cholesky fast path fire.
     let mut cur = start;
-    let mut best = ws.nlml(kind, ys, cur).unwrap_or(f64::INFINITY);
+    let mut best = ws.nlml_b(kind, ys, cur, m).unwrap_or(f64::INFINITY);
     let mut step = 0.8;
     for _sweep in 0..6 {
         for d in 0..3 {
@@ -468,7 +981,7 @@ fn coord_descent_ws(
                 let mut cand = logs;
                 cand[d] = (cand[d] + dir * step).clamp(bounds[d].0, bounds[d].1);
                 let cand_h = from_logs(cand);
-                if let Some(v) = ws.nlml(kind, ys, cand_h) {
+                if let Some(v) = ws.nlml_b(kind, ys, cand_h, m) {
                     if v < best {
                         best = v;
                         logs = cand;
@@ -758,5 +1271,203 @@ mod tests {
         let ys = [1.0, 2.0, 3.0];
         let gp = GpModel::fit(KernelKind::Matern52, xs, &ys);
         assert!(gp.is_some());
+    }
+
+    // ------------------------- sparse backend -------------------------
+
+    #[test]
+    fn gp_backend_parse_and_resolve() {
+        assert_eq!(GpBackend::parse("exact"), Ok(GpBackend::Exact));
+        assert_eq!(GpBackend::parse("auto"), Ok(GpBackend::default()));
+        assert_eq!(GpBackend::parse("sparse:16"), Ok(GpBackend::Sparse { m: 16 }));
+        assert_eq!(
+            GpBackend::parse("auto:32:100"),
+            Ok(GpBackend::Auto { m: 32, n_threshold: 100 })
+        );
+        for bad in ["", "sparse", "sparse:0", "sparse:x", "auto:8", "fitc:4"] {
+            assert!(GpBackend::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        // resolution: exact never sparsifies; sparse clamps m ≥ n back to
+        // exact; auto crosses over at the threshold
+        assert_eq!(GpBackend::Exact.resolve(10_000), None);
+        assert_eq!(GpBackend::Sparse { m: 8 }.resolve(40), Some(8));
+        assert_eq!(GpBackend::Sparse { m: 40 }.resolve(40), None);
+        let auto = GpBackend::default();
+        assert_eq!(auto.resolve(DEFAULT_SPARSE_THRESHOLD - 1), None);
+        assert_eq!(auto.resolve(DEFAULT_SPARSE_THRESHOLD), Some(DEFAULT_SPARSE_M));
+        // every store the pipeline builds today stays exact by default
+        assert_eq!(auto.resolve(crate::gp::MAX_POINTS), None);
+    }
+
+    #[test]
+    fn select_inducing_is_deterministic_sorted_and_dedups() {
+        let mut rng = Pcg64::new(77);
+        let xs: Vec<Vec<f64>> = (0..50).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let a = select_inducing(&xs, 12);
+        let b = select_inducing(&xs, 12);
+        assert_eq!(a, b, "selection must be a pure function of (xs, m)");
+        assert_eq!(a.len(), 12);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted unique: {a:?}");
+        assert!(a.iter().all(|&i| i < xs.len()));
+        // m ≥ n: everything is inducing
+        assert_eq!(select_inducing(&xs[..5], 8), vec![0, 1, 2, 3, 4]);
+        // duplicates collapse: only distinct locations get selected
+        let dup = vec![vec![0.1], vec![0.9], vec![0.1], vec![0.9], vec![0.5]];
+        let sel = select_inducing(&dup, 5);
+        assert_eq!(sel.len(), 3, "only 3 distinct locations: {sel:?}");
+    }
+
+    #[test]
+    fn sparse_fit_approximates_exact() {
+        let (xs, ys) = toy_1d(48, 0.3, 11);
+        let exact = GpModel::fit(KernelKind::Matern52, xs.clone(), &ys).unwrap();
+        let mut ws = FitWorkspace::new();
+        let sparse = GpModel::fit_b(
+            &mut ws,
+            KernelKind::Matern52,
+            xs,
+            &ys,
+            GpBackend::Sparse { m: 12 },
+        )
+        .unwrap();
+        assert_eq!(sparse.backend(), GpBackend::Sparse { m: 12 });
+        assert_eq!(sparse.inducing().len(), 12);
+        for i in 0..=20 {
+            let q = [0.05 + 0.9 * i as f64 / 20.0];
+            let (me, _) = exact.predict(&q);
+            let (ms, vs) = sparse.predict(&q);
+            assert!(
+                (me - ms).abs() < 5.0,
+                "sparse mean drifted at {q:?}: exact {me} vs sparse {ms}"
+            );
+            assert!(vs.is_finite() && vs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn sparse_variance_shrinks_near_data_grows_far() {
+        // DTC variance (not SoR): far from the inducing set the posterior
+        // variance must recover toward the prior, keeping the acquisition
+        // signal meaningful on sparse stores.
+        let (xs, ys) = toy_1d(40, 0.5, 12);
+        let mut ws = FitWorkspace::new();
+        let gp =
+            GpModel::fit_b(&mut ws, KernelKind::Matern52, xs, &ys, GpBackend::Sparse { m: 10 })
+                .unwrap();
+        let (_, v_near) = gp.predict(&[0.5]);
+        let (_, v_far) = gp.predict(&[4.0]);
+        assert!(v_far > 5.0 * v_near.max(1e-12), "near {v_near} far {v_far}");
+    }
+
+    #[test]
+    fn auto_crossover_below_threshold_is_bit_identical_to_exact() {
+        // The default-config contract: every fit below the crossover
+        // resolves to the exact path — same bytes, same bits, same JSON.
+        let (xs, ys) = toy_1d(14, 0.25, 13);
+        let exact = GpModel::fit(KernelKind::Matern52, xs.clone(), &ys).unwrap();
+        let mut ws = FitWorkspace::new();
+        let auto =
+            GpModel::fit_b(&mut ws, KernelKind::Matern52, xs, &ys, GpBackend::default()).unwrap();
+        assert_eq!(auto.backend(), GpBackend::Exact);
+        assert_eq!(auto.to_json().to_string(), exact.to_json().to_string());
+        for q in [[0.0], [0.31], [0.73], [1.0]] {
+            let (m1, v1) = exact.predict(&q);
+            let (m2, v2) = auto.predict(&q);
+            assert_eq!(m1.to_bits(), m2.to_bits());
+            assert_eq!(v1.to_bits(), v2.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_with_m_not_below_n_falls_back_to_exact() {
+        let (xs, ys) = toy_1d(10, 0.2, 14);
+        let exact = GpModel::fit(KernelKind::Matern52, xs.clone(), &ys).unwrap();
+        let mut ws = FitWorkspace::new();
+        let gp = GpModel::fit_b(
+            &mut ws,
+            KernelKind::Matern52,
+            xs,
+            &ys,
+            GpBackend::Sparse { m: 10 },
+        )
+        .unwrap();
+        assert_eq!(gp.backend(), GpBackend::Exact, "m ≥ n must resolve exact");
+        assert_eq!(gp.to_json().to_string(), exact.to_json().to_string());
+    }
+
+    /// Sparse counterpart of `json_roundtrip_is_bit_exact_and_idempotent`:
+    /// the artifact records the inducing indices, the reload pins them
+    /// (no re-selection), and the rebuilt posterior predicts
+    /// bit-identically — so sparse stores survive save → serve → save.
+    #[test]
+    fn sparse_json_roundtrip_is_bit_exact_and_idempotent() {
+        let (xs, ys) = toy_1d(40, 0.3, 15);
+        let mut ws = FitWorkspace::new();
+        let gp =
+            GpModel::fit_b(&mut ws, KernelKind::Matern52, xs, &ys, GpBackend::Sparse { m: 9 })
+                .unwrap();
+        let j1 = gp.to_json().to_string();
+        assert!(j1.contains("\"backend\":\"sparse\""), "sparse artifact must self-describe");
+        let back = GpModel::from_json(&crate::util::json::Json::parse(&j1).unwrap()).unwrap();
+        assert_eq!(back.inducing(), gp.inducing());
+        let j2 = back.to_json().to_string();
+        assert_eq!(j1, j2, "to_json ∘ from_json must be byte-idempotent");
+        for q in [[0.0], [0.17], [0.5], [0.83], [1.0]] {
+            let (m1, v1) = gp.predict(&q);
+            let (m2, v2) = back.predict(&q);
+            assert_eq!(m1.to_bits(), m2.to_bits(), "mean drifted at {q:?}: {m1} vs {m2}");
+            assert_eq!(v1.to_bits(), v2.to_bits(), "variance drifted at {q:?}: {v1} vs {v2}");
+        }
+    }
+
+    #[test]
+    fn sparse_fit_is_deterministic_across_workspace_reuse() {
+        // One dirty workspace (used for an unrelated exact fit first) and
+        // one fresh workspace must produce byte-identical sparse models:
+        // nothing about the cached state may leak into the result.
+        let (xs0, ys0) = toy_1d(9, 0.4, 16);
+        let (xs, ys) = toy_1d(36, 0.3, 17);
+        let mut dirty = FitWorkspace::new();
+        let _ = GpModel::fit_with(&mut dirty, KernelKind::Matern52, xs0, &ys0);
+        let a = GpModel::fit_b(
+            &mut dirty,
+            KernelKind::Matern52,
+            xs.clone(),
+            &ys,
+            GpBackend::Sparse { m: 8 },
+        )
+        .unwrap();
+        let b = GpModel::fit_b(
+            &mut FitWorkspace::new(),
+            KernelKind::Matern52,
+            xs,
+            &ys,
+            GpBackend::Sparse { m: 8 },
+        )
+        .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        for q in [[0.1], [0.6], [0.95]] {
+            assert_eq!(a.predict(&q).0.to_bits(), b.predict(&q).0.to_bits());
+            assert_eq!(a.predict(&q).1.to_bits(), b.predict(&q).1.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_nlml_noise_only_moves_match_full_rebuild() {
+        // The noise-only fast path (cached Nyström factors, rebuilt A)
+        // must produce the same NLML a cold workspace computes.
+        let (xs, ys) = toy_1d(30, 0.4, 18);
+        let (ys_std, _, _) = standardized(&ys);
+        let h1 = GpHyper { lengthscale: 0.4, variance: 1.2, noise: 1e-3 };
+        let h2 = GpHyper { noise: 3e-2, ..h1 };
+        let mut warm = FitWorkspace::new();
+        warm.sync(&xs);
+        let w1 = warm.nlml_sparse(KernelKind::Matern52, &ys_std, h1, 8);
+        let w2 = warm.nlml_sparse(KernelKind::Matern52, &ys_std, h2, 8);
+        let mut cold = FitWorkspace::new();
+        cold.sync(&xs);
+        let c2 = cold.nlml_sparse(KernelKind::Matern52, &ys_std, h2, 8);
+        assert!(w1.is_some());
+        assert_eq!(w2, c2, "noise-only sparse move diverged from cold rebuild");
     }
 }

@@ -19,6 +19,7 @@ use anyhow::{anyhow, Result};
 
 use thor::coordinator::{DeviceWorker, FleetServer, FleetSpec};
 use thor::exp::{self, Experiment};
+use thor::gp::GpBackend;
 use thor::model::sampler::Family;
 use thor::simdevice::{devices, Device};
 use thor::thor::{Batch, Thor, ThorConfig};
@@ -33,6 +34,7 @@ fn specs() -> Vec<Spec> {
         Spec { name: "quick", takes_value: false, help: "reduced sample counts" },
         Spec { name: "iterations", takes_value: true, help: "profiling iterations per measurement (default 500)" },
         Spec { name: "batch", takes_value: true, help: "acquisition batch per GP round: integer or 'auto' (live same-class worker count; profile default 1, serve default auto)" },
+        Spec { name: "gp", takes_value: true, help: "profile/serve: GP fit backend — exact | auto | sparse:<m> | auto:<m>:<n> (default auto: exact below the crossover threshold)" },
         Spec { name: "addr", takes_value: true, help: "serve/worker: leader address (default 127.0.0.1:7707); serve-estimates: bind address (default 127.0.0.1:7708)" },
         Spec { name: "workers", takes_value: true, help: "expected worker count for serve (default 1; per class with --devices)" },
         Spec { name: "devices", takes_value: true, help: "serve: comma-separated device classes of a heterogeneous fleet (e.g. xavier,tx2,server)" },
@@ -88,6 +90,7 @@ fn main() -> Result<()> {
             let mut cfg = if args.has("quick") { ThorConfig::quick() } else { ThorConfig::default() };
             cfg.iterations = args.get_usize("iterations", cfg.iterations)?;
             cfg.batch = Batch::parse(args.get_str("batch", "1")).map_err(|e| anyhow!(e))?;
+            cfg.gp_backend = GpBackend::parse(args.get_str("gp", "auto")).map_err(|e| anyhow!(e))?;
             let mut thor = Thor::new(cfg);
             if store_path.exists() {
                 if let Ok(Some(s)) = thor::thor::store::GpStore::load(&store_path) {
@@ -162,6 +165,7 @@ fn main() -> Result<()> {
             // default the acquisition batch to the live same-class
             // worker count so every worker has a job each GP round
             cfg.batch = Batch::parse(args.get_str("batch", "auto")).map_err(|e| anyhow!(e))?;
+            cfg.gp_backend = GpBackend::parse(args.get_str("gp", "auto")).map_err(|e| anyhow!(e))?;
             let server = FleetServer::new(cfg);
             let reference = exp::reference_model(fam);
             let spec = match args.get("devices") {

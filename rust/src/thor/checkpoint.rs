@@ -22,6 +22,12 @@
 //!   machines' subtraction GPs therefore fold measurements into exactly
 //!   the values the original run folded.
 //!
+//! Journals carry **no GP-backend state**: the sparse inducing selection
+//! is a pure function of the absorbed points and the [`FitConfig`]'s
+//! backend (`gp::select_inducing`), so a resume under `--gp sparse:<m>`
+//! re-derives the identical inducing set from the replayed points — the
+//! checkpoint schema did not change for PR 9.
+//!
 //! [`Checkpointer`] handles the durability side: atomic tmp-file +
 //! rename writes every `k` absorbed rounds, so a crash mid-write leaves
 //! the previous checkpoint intact, never a torn file.
@@ -33,7 +39,7 @@ use crate::thor::store::GpStore;
 use crate::util::json::Json;
 
 #[cfg(doc)]
-use crate::thor::fit::FamilyFit;
+use crate::thor::fit::{FamilyFit, FitConfig};
 
 /// The serializable acquisition history of one in-flight [`FamilyFit`]:
 /// the family dimension plus one `(occupancy, folded results)` entry per
@@ -286,6 +292,31 @@ mod tests {
         let a = FamilyFit::replay(1, &cfg, &j.rounds).propose(2);
         let b = FamilyFit::replay(1, &cfg, &back.rounds).propose(2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sparse_backend_journal_replays_identically_through_json() {
+        // The schema-stability pin for PR 9: a journal written by a
+        // sparse-backend run is byte-identical in shape to an exact one
+        // (no inducing indices on disk), and replaying it under the same
+        // sparse FitConfig proposes identically to the live machine.
+        use crate::gp::GpBackend;
+        let cfg = FitConfig {
+            max_points: 13,
+            threshold_frac: 0.0,
+            grid_n: 33,
+            backend: GpBackend::Sparse { m: 6 },
+            ..Default::default()
+        };
+        // 8 absorbed points > m = 6, so the replayed fits actually run
+        // the sparse path (below that the backend resolves exact).
+        let j = journal_after(&cfg, 8);
+        let back = FitJournal::from_json(&Json::parse(&j.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(j, back);
+        let a = FamilyFit::replay(1, &cfg, &j.rounds).propose(2);
+        let b = FamilyFit::replay(1, &cfg, &back.rounds).propose(2);
+        assert_eq!(a, b, "sparse replay must re-derive the same proposals after the JSON hop");
+        assert!(a.is_some(), "machine must still be mid-acquisition at 8 absorbed rounds");
     }
 
     #[test]

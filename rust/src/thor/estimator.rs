@@ -661,6 +661,62 @@ mod tests {
     }
 
     #[test]
+    fn sparse_backend_store_estimates_bit_identical_to_scalar_loop() {
+        // The estimator is backend-agnostic: a store whose family GPs were
+        // fitted sparse (inducing-point posterior) must flow through the
+        // batched plan, the scalar loop, and the cache with the same
+        // bit-identity contracts as exact stores.
+        use crate::gp::{FitWorkspace, GpBackend};
+        let g = zoo::resnet(20, 8, 10);
+        let parsed = parse(&g);
+        let mut store = GpStore::new();
+        let mut ws = FitWorkspace::new();
+        for fam in &parsed.families {
+            let tmpl = parsed.template(fam).unwrap();
+            let (dim, x_max) = match fam.position {
+                Position::Input => (1, vec![tmpl.anchor.c_out as f64 * 2.0]),
+                Position::Output => (1, vec![tmpl.anchor.c_in as f64 * 2.0]),
+                Position::Hidden => {
+                    (2, vec![tmpl.anchor.c_in as f64 * 2.0, tmpl.anchor.c_out as f64 * 2.0])
+                }
+            };
+            let grid: Vec<Vec<f64>> = if dim == 1 {
+                (0..25).map(|i| vec![i as f64 / 24.0]).collect()
+            } else {
+                let mut v = Vec::new();
+                for i in 0..7 {
+                    for j in 0..7 {
+                        v.push(vec![i as f64 / 6.0, j as f64 / 6.0]);
+                    }
+                }
+                v
+            };
+            let ys: Vec<f64> = grid.iter().map(|p| 4.0 * p.iter().sum::<f64>() + 1.0).collect();
+            let gp = GpModel::fit_b(&mut ws, KernelKind::Matern52, grid, &ys, GpBackend::Sparse { m: 8 })
+                .unwrap();
+            assert_eq!(gp.inducing().len(), 8, "family {} must actually fit sparse", fam.id());
+            store.insert(
+                "xavier",
+                &fam.id(),
+                StoredGp { gp, x_max, log_x: false, log_y: false, device_seconds: 1.0, fit_seconds: 0.1, converged: true },
+            );
+        }
+        let est = estimate(&store, "xavier", &g).unwrap();
+        let mut energy = 0.0;
+        for (i, grp) in parsed.groups.iter().enumerate() {
+            let stored = store.get("xavier", &grp.key.id()).unwrap();
+            let (m, _) = stored.predict_raw(&features(grp));
+            energy += m.max(0.0);
+            assert_eq!(est.per_layer[i].2.to_bits(), m.max(0.0).to_bits(), "group {i}");
+        }
+        assert_eq!(est.energy_per_iter.to_bits(), energy.to_bits());
+        let mut cache = EstimateCache::new();
+        let cached = estimate_cached(&store, "xavier", &g, &mut cache).unwrap();
+        assert_eq!(cached.energy_per_iter.to_bits(), est.energy_per_iter.to_bits());
+        assert_eq!(cached.variance.to_bits(), est.variance.to_bits());
+    }
+
+    #[test]
     fn cached_estimate_hits_and_matches() {
         let g = zoo::resnet(20, 8, 10);
         let store = synthetic_store(&g, "server", 3.0);

@@ -36,7 +36,7 @@
 //! machine and is bit-identical to the pre-machine loop.
 
 use crate::gp::acquisition::{top_k_variance, AcquireBatch, CandidateGrid};
-use crate::gp::{FitWorkspace, GpHyper, GpModel, KernelKind};
+use crate::gp::{FitWorkspace, GpBackend, GpHyper, GpModel, KernelKind};
 use crate::thor::measure::MeasureError;
 
 /// Acquisition batch sizing policy (see the module docs).
@@ -105,6 +105,11 @@ pub struct FitConfig {
     /// `Fixed(1)` reproduces the sequential loop bit-for-bit; fleet runs
     /// want `Fixed(worker count)` or `Auto` so every worker stays busy.
     pub batch: Batch,
+    /// GP fit backend: exact Cholesky, sparse inducing-point, or the
+    /// default `Auto` crossover (exact below its n-threshold, so per-family
+    /// acquisition fits — capped at `gp::MAX_POINTS` — stay bit-identical
+    /// to the historical exact path).
+    pub backend: GpBackend,
     pub seed: u64,
 }
 
@@ -119,6 +124,7 @@ impl Default for FitConfig {
             random_sampling: false,
             log_targets: true,
             batch: Batch::Fixed(1),
+            backend: GpBackend::default(),
             seed: 17,
         }
     }
@@ -303,8 +309,8 @@ impl FamilyFit {
         // Acquisition target: energy GP, or the time GP surrogate.
         let acq_ys = if cfg.time_surrogate { &ts } else { &es };
         let fitted = match self.prev_hyper {
-            Some(h) => GpModel::fit_warm(&mut self.ws, cfg.kind, xs.clone(), acq_ys, h),
-            None => GpModel::fit_with(&mut self.ws, cfg.kind, xs.clone(), acq_ys),
+            Some(h) => GpModel::fit_warm_b(&mut self.ws, cfg.kind, xs.clone(), acq_ys, h, cfg.backend),
+            None => GpModel::fit_b(&mut self.ws, cfg.kind, xs.clone(), acq_ys, cfg.backend),
         };
         let Some(acq_gp) = fitted else {
             self.ended = true;
@@ -424,9 +430,9 @@ impl FamilyFit {
         // surface gets a full multi-start search instead.
         let gp = match self.prev_hyper {
             Some(h) if !cfg.time_surrogate => {
-                GpModel::fit_warm(&mut self.ws, cfg.kind, xs, &es, h)
+                GpModel::fit_warm_b(&mut self.ws, cfg.kind, xs, &es, h, cfg.backend)
             }
-            _ => GpModel::fit_with(&mut self.ws, cfg.kind, xs, &es),
+            _ => GpModel::fit_b(&mut self.ws, cfg.kind, xs, &es, cfg.backend),
         }
         .expect("final GP fit failed");
         FitOutcome {
@@ -786,6 +792,68 @@ mod tests {
             }
             assert_outcomes_bit_equal(&resumed.finish(), &uninterrupted, 1);
         }
+    }
+
+    #[test]
+    fn sparse_backend_machine_replays_bit_identically() {
+        // PR 9 replay contract: the inducing selection is a pure function
+        // of (xs, m), so a journal replay under the sparse backend must
+        // re-derive the identical inducing set and continue bit-for-bit —
+        // no journal format change carries the selection.
+        use crate::gp::GpBackend;
+        let cfg = FitConfig {
+            max_points: 13,
+            threshold_frac: 0.0,
+            grid_n: 33,
+            batch: Batch::Fixed(2),
+            backend: GpBackend::Sparse { m: 6 },
+            ..Default::default()
+        };
+        let measure = |p: &[f64]| (surface_1d(p[0]), 0.5);
+        let uninterrupted = drive_machine(&cfg, 1, measure);
+        assert_eq!(
+            uninterrupted.gp.inducing().len(),
+            6,
+            "final fit (13 points) must actually exercise the sparse path"
+        );
+        let mut doomed = FamilyFit::new(1, &cfg);
+        for _ in 0..3 {
+            let ps = doomed.propose(1).expect("machine ended before the kill point");
+            let results: Vec<(f64, f64)> = ps.iter().map(|p| measure(p)).collect();
+            doomed.absorb(&results);
+        }
+        let journal: Vec<(usize, Vec<(f64, f64)>)> = doomed.journal().to_vec();
+        let mut resumed = FamilyFit::replay(1, &cfg, &journal);
+        loop {
+            let a = doomed.propose(1);
+            let b = resumed.propose(1);
+            assert_eq!(a, b, "sparse proposals diverged after replay");
+            let Some(ps) = a else { break };
+            let results: Vec<(f64, f64)> = ps.iter().map(|p| measure(p)).collect();
+            doomed.absorb(&results);
+            resumed.absorb(&results);
+        }
+        let out = resumed.finish();
+        assert_eq!(out.gp.inducing(), uninterrupted.gp.inducing());
+        assert_outcomes_bit_equal(&out, &uninterrupted, 1);
+    }
+
+    #[test]
+    fn default_backend_config_is_bit_identical_to_exact_backend() {
+        // The crossover guarantee at fit-loop scale: every fit in a
+        // default-config run sits far below DEFAULT_SPARSE_THRESHOLD, so
+        // `Auto` (the default) and a forced `Exact` produce byte-equal
+        // outcomes.
+        use crate::gp::GpBackend;
+        let base = FitConfig { max_points: 12, grid_n: 17, ..Default::default() };
+        let auto = fit_family(|p| (surface_1d(p[0]), 0.5), 1, &base);
+        let exact = fit_family(
+            |p| (surface_1d(p[0]), 0.5),
+            1,
+            &FitConfig { backend: GpBackend::Exact, ..base },
+        );
+        assert_outcomes_bit_equal(&auto, &exact, 1);
+        assert!(auto.gp.inducing().is_empty());
     }
 
     #[test]

@@ -32,7 +32,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::gp::KernelKind;
+use crate::gp::{GpBackend, KernelKind};
 use crate::model::ModelGraph;
 use crate::simdevice::Device;
 use crate::thor::checkpoint::{inflight_key, Checkpointer, FitJournal};
@@ -61,6 +61,12 @@ pub struct ThorConfig {
     /// `Fixed(worker count)` or `Auto` (sized each round from the live
     /// same-class worker count).
     pub batch: Batch,
+    /// GP fit backend ([`GpBackend`]): exact Cholesky, sparse
+    /// inducing-point, or the default `Auto` crossover.  Default-config
+    /// family fits (≤ `max_points_2d` points) sit far below the `Auto`
+    /// n-threshold, so stores stay byte-identical to the exact path
+    /// unless `sparse:<m>` is forced.
+    pub gp_backend: GpBackend,
     pub seed: u64,
 }
 
@@ -77,6 +83,7 @@ impl Default for ThorConfig {
             time_surrogate: false,
             random_sampling: false,
             batch: Batch::Fixed(1),
+            gp_backend: GpBackend::default(),
             seed: 20_25,
         }
     }
@@ -105,6 +112,7 @@ impl ThorConfig {
             random_sampling: self.random_sampling,
             log_targets: true,
             batch: self.batch,
+            backend: self.gp_backend,
             seed: self.seed,
         }
     }

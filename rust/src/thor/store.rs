@@ -272,6 +272,41 @@ mod tests {
     }
 
     #[test]
+    fn sparse_stored_gp_roundtrip_is_byte_idempotent() {
+        // PR 9: a sparse-backend store entry serializes its inducing set
+        // ("backend":"sparse") and reloads with the identical posterior —
+        // byte-idempotent JSON, bit-equal predictions through the raw
+        // (normalize + delta-method) path.
+        use crate::gp::{FitWorkspace, GpBackend};
+        let xs: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64 / 39.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (5.0 + 3.0 * (3.0 * x[0]).sin()).ln()).collect();
+        let mut ws = FitWorkspace::new();
+        let gp = GpModel::fit_b(&mut ws, KernelKind::Matern52, xs, &ys, GpBackend::Sparse { m: 9 })
+            .unwrap();
+        assert_eq!(gp.inducing().len(), 9);
+        let s = StoredGp {
+            gp,
+            x_max: vec![128.0],
+            log_x: true,
+            log_y: true,
+            device_seconds: 3.0,
+            fit_seconds: 0.0,
+            converged: true,
+        };
+        let j1 = s.to_json().to_string();
+        assert!(j1.contains("\"backend\":\"sparse\""), "{j1}");
+        let back = StoredGp::from_json(&Json::parse(&j1).unwrap()).unwrap();
+        let j2 = back.to_json().to_string();
+        assert_eq!(j1, j2, "sparse StoredGp JSON must be byte-idempotent");
+        for i in 0..9 {
+            let raw = [1.0 + 14.0 * i as f64];
+            let (m1, v1) = s.predict_raw(&raw);
+            let (m2, v2) = back.predict_raw(&raw);
+            assert_eq!((m1.to_bits(), v1.to_bits()), (m2.to_bits(), v2.to_bits()));
+        }
+    }
+
+    #[test]
     fn merge_and_len_for_cover_multi_device_stores() {
         let mut a = GpStore::new();
         a.insert("xavier", "f1", toy_stored());

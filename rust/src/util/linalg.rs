@@ -74,6 +74,11 @@ impl Mat {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len());
         (0..self.rows)
@@ -206,6 +211,60 @@ pub fn cholesky_append_row(l: &mut Mat, row: &[f64]) -> bool {
     }
     l[(n, n)] = s.sqrt();
     true
+}
+
+/// Rank-1 Cholesky *downdate* by row removal, companion to
+/// [`cholesky_append_row`]: given the factor `l` of an n×n SPD matrix A,
+/// shrink it in place to the factor of the (n−1)×(n−1) matrix obtained
+/// by deleting row and column `r` of A — without refactoring from
+/// scratch (O(n²) for the trailing block instead of O(n³) overall).
+///
+/// The leading r×r block of the factor is untouched, so those rows stay
+/// bit-identical to a from-scratch factorization of the reduced matrix;
+/// removing the *last* row is a pure truncation and therefore bit-exact
+/// everywhere.  For an interior row the trailing block is repaired by a
+/// hypotenuse-form rank-1 update (L₂₂L₂₂ᵀ + vvᵀ with v the removed
+/// column below the pivot), which performs different — though
+/// numerically equivalent — arithmetic from a fresh factorization.
+///
+/// The +vvᵀ update of an SPD trailing block is itself SPD, so this
+/// cannot fail on a valid factor.
+pub fn cholesky_remove_row(l: &mut Mat, r: usize) {
+    assert_eq!(l.rows, l.cols);
+    let n = l.rows;
+    assert!(r < n);
+    let m = n - 1;
+    // Save the removed column below the pivot before the shift clobbers it.
+    let v: Vec<f64> = (r + 1..n).map(|i| l[(i, r)]).collect();
+    // Drop row r and column r, re-striding front to back.  Safe in place:
+    // every source offset (si·n + sj with si ≥ i, sj ≥ j, n > m) is ≥ its
+    // destination offset (i·m + j), so reads always see original data.
+    for i in 0..m {
+        let si = if i < r { i } else { i + 1 };
+        for j in 0..m {
+            let sj = if j < r { j } else { j + 1 };
+            l.data[i * m + j] = l.data[si * n + sj];
+        }
+    }
+    l.data.truncate(m * m);
+    l.rows = m;
+    l.cols = m;
+    // Rank-1 update of the trailing block: rows r.. of the shifted factor
+    // currently satisfy L₂₂L₂₂ᵀ = A₂₂ − vvᵀ; fold vvᵀ back in column by
+    // column with stable hypotenuse rotations.
+    let mut v = v;
+    for k in r..m {
+        let lkk = l[(k, k)];
+        let vk = v[k - r];
+        let rr = (lkk * lkk + vk * vk).sqrt();
+        let c = rr / lkk;
+        let s = vk / lkk;
+        l[(k, k)] = rr;
+        for i in k + 1..m {
+            l[(i, k)] = (l[(i, k)] + s * v[i - r]) / c;
+            v[i - r] = c * v[i - r] - s * l[(i, k)];
+        }
+    }
 }
 
 /// Solve L x = b (forward substitution), L lower-triangular.
@@ -476,6 +535,96 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_cholesky_remove_row_matches_scratch() {
+        use crate::util::proptest::{check, Config};
+        check(
+            "cholesky downdate == from-scratch",
+            Config { cases: 60, seed: 22 },
+            |r| {
+                let n = r.range_usize(2, 14);
+                (n, r.range_usize(0, n - 1), r.next_u64())
+            },
+            |&(n, rm, seed)| {
+                let a = random_spd(n, seed);
+                let mut l = cholesky(&a).expect("full PD");
+                cholesky_remove_row(&mut l, rm);
+                // from-scratch factor of A with row/col `rm` deleted
+                let mut b = Mat::zeros(n - 1, n - 1);
+                for i in 0..n - 1 {
+                    let si = if i < rm { i } else { i + 1 };
+                    for j in 0..n - 1 {
+                        let sj = if j < rm { j } else { j + 1 };
+                        b[(i, j)] = a[(si, sj)];
+                    }
+                }
+                let want = cholesky(&b).expect("reduced PD");
+                for i in 0..n - 1 {
+                    for j in 0..n - 1 {
+                        let (got, w) = (l[(i, j)], want[(i, j)]);
+                        if i < rm {
+                            // leading block untouched: bit-identical
+                            crate::prop_assert!(
+                                got.to_bits() == w.to_bits(),
+                                "leading row L[{i}][{j}] = {got} vs {w} (rm={rm})"
+                            );
+                        } else {
+                            crate::prop_assert!(
+                                (got - w).abs() < 1e-9 * w.abs().max(1.0),
+                                "L[{i}][{j}] = {got} vs {w} (rm={rm})"
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cholesky_remove_last_row_is_bit_exact_truncation() {
+        let a = random_spd(10, 41);
+        let mut l = cholesky(&a).unwrap();
+        cholesky_remove_row(&mut l, 9);
+        let mut lead = Mat::zeros(9, 9);
+        for i in 0..9 {
+            for j in 0..9 {
+                lead[(i, j)] = a[(i, j)];
+            }
+        }
+        let want = cholesky(&lead).unwrap();
+        assert_eq!(l.data, want.data, "last-row downdate must be a pure truncation");
+    }
+
+    #[test]
+    fn cholesky_remove_then_append_roundtrips() {
+        // remove an interior row, append it back at the end: the result
+        // must factor the permuted matrix to tight tolerance
+        let a = random_spd(8, 55);
+        let mut l = cholesky(&a).unwrap();
+        cholesky_remove_row(&mut l, 3);
+        let order: Vec<usize> = (0..8).filter(|&i| i != 3).chain([3]).collect();
+        let row: Vec<f64> = order.iter().map(|&j| a[(3, j)]).collect();
+        assert!(cholesky_append_row(&mut l, &row));
+        let mut perm = Mat::zeros(8, 8);
+        for (i, &si) in order.iter().enumerate() {
+            for (j, &sj) in order.iter().enumerate() {
+                perm[(i, j)] = a[(si, sj)];
+            }
+        }
+        let want = cholesky(&perm).unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!(
+                    (l[(i, j)] - want[(i, j)]).abs() < 1e-9 * want[(i, j)].abs().max(1.0),
+                    "L[{i}][{j}] = {} vs {}",
+                    l[(i, j)],
+                    want[(i, j)]
+                );
+            }
+        }
     }
 
     #[test]

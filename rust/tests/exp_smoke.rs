@@ -176,6 +176,37 @@ fn serve1_daemon_answers_are_byte_stable() {
 }
 
 #[test]
+fn gpscale_sparse_arms_stay_close_to_exact() {
+    let rep = run("gpscale");
+    assert!(rep.error.is_none(), "{:?}", rep.error);
+    let table = &rep.tables[0];
+    assert_eq!(table.rows.len(), 4, "{:?}", table.rows); // exact + 3 sparse arms
+    assert_eq!(table.rows[0][0], "exact");
+    let mapes: Vec<f64> = table
+        .column("MAPE %")
+        .expect("mape column")
+        .iter()
+        .map(|c| c.parse().expect("numeric MAPE"))
+        .collect();
+    assert!(mapes.iter().all(|m| m.is_finite() && *m >= 0.0), "{mapes:?}");
+    let max_drift: Vec<f64> = table
+        .column("max drift vs exact %")
+        .expect("drift column")
+        .iter()
+        .map(|c| c.parse().expect("numeric drift"))
+        .collect();
+    assert_eq!(max_drift[0], 0.0, "exact arm must have zero drift by construction");
+    // The accuracy direction: more inducing points ⇒ the sparse posterior
+    // tracks exact more closely.  Tiny-scale bound is loose — the golden
+    // pins the exact envelope.
+    assert!(
+        max_drift[1] >= max_drift[3] || max_drift[3] < 5.0,
+        "m=12 should not drift more than m=4 (or must be small): {max_drift:?}"
+    );
+    assert!(max_drift.iter().all(|d| d.is_finite()), "{max_drift:?}");
+}
+
+#[test]
 fn mape_pair_runs_on_every_device() {
     for dev in ["xavier", "tx2"] {
         let (thor_m, flops_m, report) =

@@ -686,6 +686,78 @@ fn prop_subtask_fanout_reports_byte_identical_across_thread_counts() {
 }
 
 #[test]
+fn prop_sparse_gpscale_report_byte_identical_across_thread_counts() {
+    // PR 9 determinism contract (satellite): the sparse-backend arms of
+    // the gpscale experiment — inducing selection, Nyström factors, the
+    // coord-descent over the sparse NLML — serialize byte-identically at
+    // 1, 2 and 8 suite threads, exactly like every exact-path experiment.
+    let suites: Vec<_> = [1usize, 2, 8]
+        .iter()
+        .map(|&t| Runner::new(t).run(vec![by_id("gpscale").unwrap()], true, 11))
+        .collect();
+    let jsons: Vec<String> =
+        suites.iter().map(|s| s.reports[0].to_json().to_string()).collect();
+    assert!(suites[0].reports[0].error.is_none(), "{:?}", suites[0].reports[0].error);
+    assert_eq!(jsons[0], jsons[1], "gpscale diverged between 1 and 2 threads");
+    assert_eq!(jsons[0], jsons[2], "gpscale diverged between 1 and 8 threads");
+}
+
+#[test]
+fn prop_sparse_fit_deterministic_over_random_surfaces() {
+    // Over random training sets: a sparse fit is a pure function of
+    // (xs, ys, m) — byte-equal serialized model and bit-equal posterior
+    // whether the workspace is fresh or dirty from unrelated fits.
+    use thor::gp::{FitWorkspace, GpBackend, GpModel, KernelKind};
+    check(
+        "sparse fit determinism",
+        Config { cases: 25, seed: 97 },
+        |r| {
+            let n = r.range_usize(12, 40);
+            let m = r.range_usize(3, 10);
+            let xs: Vec<Vec<f64>> = (0..n).map(|_| vec![r.f64(), r.f64()]).collect();
+            let ys: Vec<f64> =
+                xs.iter().map(|x| (2.0 + x[0] + 3.0 * x[1] * x[1]).ln() + 0.01 * r.f64()).collect();
+            (xs, ys, m)
+        },
+        |(xs, ys, m)| {
+            let backend = GpBackend::Sparse { m: *m };
+            let mut fresh = FitWorkspace::new();
+            let a = GpModel::fit_b(&mut fresh, KernelKind::Matern52, xs.clone(), ys, backend);
+            // Dirty workspace: an unrelated exact fit first.
+            let mut dirty = FitWorkspace::new();
+            let other: Vec<Vec<f64>> = (0..7).map(|i| vec![i as f64 / 6.0, 0.3]).collect();
+            let oys: Vec<f64> = other.iter().map(|x| 1.0 + x[0]).collect();
+            let _ = GpModel::fit_with(&mut dirty, KernelKind::Matern52, other, &oys);
+            let b = GpModel::fit_b(&mut dirty, KernelKind::Matern52, xs.clone(), ys, backend);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    prop_assert!(
+                        a.to_json().to_string() == b.to_json().to_string(),
+                        "serialized models diverged (n={}, m={m})",
+                        xs.len()
+                    );
+                    for i in 0..8 {
+                        let q = vec![i as f64 / 7.0, 1.0 - i as f64 / 7.0];
+                        let (ma, va) = a.predict(&q);
+                        let (mb, vb) = b.predict(&q);
+                        prop_assert!(
+                            ma.to_bits() == mb.to_bits() && va.to_bits() == vb.to_bits(),
+                            "posterior diverged at {q:?}"
+                        );
+                    }
+                    Ok(())
+                }
+                (None, None) => Ok(()),
+                _ => {
+                    prop_assert!(false, "one fit succeeded, the other failed");
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
 fn prop_conv_kind_hash_eq_consistent() {
     // FamilyKey dedup relies on LayerKind Eq/Hash agreement.
     check(
