@@ -9,15 +9,28 @@
 //! newline-delimited JSON protocol the fleet uses
 //! ([`crate::coordinator::protocol`]).
 //!
-//! Concurrency model: thread-per-core accept/worker loop — N worker
-//! threads share one `TcpListener` (via `try_clone`) and each `accept`s
-//! its own connections, so a connection is handled start-to-finish by
-//! one thread with zero cross-thread handoff.  All workers share one
-//! [`SharedEstimateCache`] (sharded `RwLock` read-through memo) and one
-//! hot-swappable store slot.  A client disconnect — clean, mid-line, or
-//! mid-request — just returns that worker to its accept loop; it can
-//! never wedge the daemon or poison a cache shard (the cache recovers
-//! poisoned locks by design).
+//! Two concurrency models, selected by [`IoModel`] (`--io-model`):
+//!
+//! * **Reactor** (default): one readiness-driven event thread owns all
+//!   connections via non-blocking sockets and epoll/`poll(2)`
+//!   ([`crate::coordinator::reactor`]); decoded requests flow to a
+//!   fixed compute pool that drains pending queries in micro-batches,
+//!   coalescing same-`(device, family)` queries *across connections*
+//!   into single GP batch solves.  Connection count decouples from
+//!   thread count, and a slow reader costs a bounded buffer, not a
+//!   thread.
+//! * **Threads** (`--io-model threads`, kept for one release): the
+//!   original thread-per-connection accept/worker loop — N worker
+//!   threads share one `TcpListener` (via `try_clone`) and each
+//!   `accept`s its own connections, so a connection is handled
+//!   start-to-finish by one thread with zero cross-thread handoff.
+//!
+//! Both models share one [`SharedEstimateCache`] (sharded `RwLock`
+//! read-through memo) and one hot-swappable store slot, and answer
+//! byte-identically (the serve test suite runs under both).  A client
+//! disconnect — clean, mid-line, or mid-request — only ends that
+//! connection; it can never wedge the daemon or poison a cache shard
+//! (the cache recovers poisoned locks by design).
 //!
 //! Responses are **bit-identical** to a local [`crate::thor::estimate`]
 //! call against the same store: the batch path coalesces same-family GP
@@ -38,7 +51,10 @@
 //! `max_line_bytes` gets one `est_err` and the connection is dropped;
 //! writes carry `write_timeout` so a client that stops draining cannot
 //! pin a worker either.  One misbehaving client costs one bounded
-//! buffer and one error line — never a thread.
+//! buffer and one error line — never a thread.  The reactor adds
+//! `write_highwater` (read gating under write backpressure) and
+//! `max_inflight` (a cap on decoded-but-unanswered pipelined requests
+//! per connection).
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -50,6 +66,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::protocol::{Msg, MAX_LINE_BYTES};
+use crate::coordinator::reactor;
 use crate::model::spec::parse_spec;
 use crate::model::ModelGraph;
 use crate::thor::estimator::{estimate_batch_shared, estimate_shared, SharedEstimateCache};
@@ -59,9 +76,30 @@ use crate::thor::store::GpStore;
 /// request (an atomic refcount bump under a briefly-held read lock), so
 /// every request serves against one immutable snapshot while
 /// [`EstimateServerHandle::swap_store`] can replace it at any time.
-type StoreSlot = Arc<RwLock<Arc<GpStore>>>;
+pub(crate) type StoreSlot = Arc<RwLock<Arc<GpStore>>>;
 
-/// Counters one worker thread accumulates; summed at shutdown.
+/// Which serving core owns the sockets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoModel {
+    /// Thread-per-connection (the pre-reactor model; kept for one
+    /// release as `--io-model threads`).
+    Threads,
+    /// Readiness-driven event loop + compute pool (the default).
+    Reactor,
+}
+
+impl IoModel {
+    /// Parse the `--io-model` flag value.
+    pub fn parse(s: &str) -> Result<IoModel> {
+        match s {
+            "threads" => Ok(IoModel::Threads),
+            "reactor" => Ok(IoModel::Reactor),
+            other => Err(anyhow!("unknown io model {other:?} (expected reactor|threads)")),
+        }
+    }
+}
+
+/// Counters one serving thread accumulates; summed at shutdown.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeStats {
     /// Connections accepted (shutdown-unblocking dummies excluded).
@@ -72,6 +110,9 @@ pub struct ServeStats {
     pub errors: u64,
     /// Connections reaped for idling past [`ServeTuning::idle_timeout`].
     pub reaped: u64,
+    /// Requests answered inside a cross-connection micro-batch of ≥ 2
+    /// (reactor only; always 0 under `IoModel::Threads`).
+    pub coalesced: u64,
 }
 
 impl ServeStats {
@@ -80,6 +121,7 @@ impl ServeStats {
         self.requests += other.requests;
         self.errors += other.errors;
         self.reaped += other.reaped;
+        self.coalesced += other.coalesced;
     }
 }
 
@@ -102,6 +144,13 @@ pub struct ServeTuning {
     pub poll: Duration,
     /// Hard cap on one request line (bounds per-connection memory).
     pub max_line_bytes: usize,
+    /// Reactor only: stop reading from a connection while its buffered
+    /// unsent replies exceed this many bytes (backpressure for clients
+    /// that pipeline requests without draining replies).
+    pub write_highwater: usize,
+    /// Reactor only: cap on decoded-but-unanswered requests per
+    /// connection; further pipelined requests wait in the read buffer.
+    pub max_inflight: usize,
 }
 
 impl Default for ServeTuning {
@@ -112,6 +161,8 @@ impl Default for ServeTuning {
             write_timeout: Duration::from_secs(10),
             poll: Duration::from_millis(250),
             max_line_bytes: MAX_LINE_BYTES,
+            write_highwater: 1 << 20,
+            max_inflight: 1024,
         }
     }
 }
@@ -133,6 +184,8 @@ impl EstimateServer {
             store: Arc::new(RwLock::new(Arc::new(store))),
             cache: Arc::new(SharedEstimateCache::default()),
             tuning: ServeTuning::default(),
+            io_model: IoModel::Reactor,
+            coalesce_max: 32,
         })
     }
 }
@@ -145,6 +198,8 @@ pub struct BoundEstimateServer {
     store: StoreSlot,
     cache: Arc<SharedEstimateCache>,
     tuning: ServeTuning,
+    io_model: IoModel,
+    coalesce_max: usize,
 }
 
 impl BoundEstimateServer {
@@ -166,12 +221,26 @@ impl BoundEstimateServer {
         self
     }
 
-    /// Spawn the worker pool and start serving.  `threads == 0` means
-    /// one per available core (min 2).  Each worker `accept`s on its own
-    /// clone of the listener and owns a connection until the client
-    /// disconnects, so up to `threads` connections are served
-    /// concurrently (serving-tier clients hold short-lived or pooled
-    /// connections).
+    /// Select the serving core (`thor serve-estimates --io-model`).
+    pub fn with_io_model(mut self, io_model: IoModel) -> Self {
+        self.io_model = io_model;
+        self
+    }
+
+    /// Cap a reactor compute worker's micro-batch: it drains at most
+    /// this many pending requests per coalesced solve (`--coalesce-max`;
+    /// `1` disables cross-request coalescing, ignored under threads).
+    pub fn with_coalesce_max(mut self, coalesce_max: usize) -> Self {
+        self.coalesce_max = coalesce_max.max(1);
+        self
+    }
+
+    /// Start serving.  `threads == 0` means one per available core
+    /// (min 2).  Under [`IoModel::Threads`] that many workers each
+    /// `accept` and own whole connections, so at most `threads`
+    /// connections are served concurrently; under [`IoModel::Reactor`]
+    /// it sizes the compute pool while one event thread multiplexes any
+    /// number of connections.
     pub fn start(self, threads: usize) -> Result<EstimateServerHandle> {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).max(2)
@@ -180,21 +249,43 @@ impl BoundEstimateServer {
         };
         let stop = Arc::new(AtomicBool::new(false));
         let tuning = self.tuning;
-        let mut workers = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            let listener = self.listener.try_clone()?;
-            let (slot, cache, stop) = (self.store.clone(), self.cache.clone(), stop.clone());
-            workers
-                .push(std::thread::spawn(move || worker_loop(listener, slot, cache, stop, tuning)));
-        }
+        let inner = match self.io_model {
+            IoModel::Threads => {
+                let mut workers = Vec::with_capacity(threads);
+                for _ in 0..threads {
+                    let listener = self.listener.try_clone()?;
+                    let (slot, cache, stop) =
+                        (self.store.clone(), self.cache.clone(), stop.clone());
+                    workers.push(std::thread::spawn(move || {
+                        worker_loop(listener, slot, cache, stop, tuning)
+                    }));
+                }
+                HandleInner::Threads { workers }
+            }
+            IoModel::Reactor => HandleInner::Reactor(reactor::spawn(
+                self.listener,
+                self.store.clone(),
+                self.cache.clone(),
+                stop.clone(),
+                tuning,
+                threads,
+                self.coalesce_max,
+            )?),
+        };
         Ok(EstimateServerHandle {
             addr: self.addr,
             store: self.store,
             cache: self.cache,
             stop,
-            workers,
+            inner,
         })
     }
+}
+
+/// Model-specific running state behind [`EstimateServerHandle`].
+enum HandleInner {
+    Threads { workers: Vec<JoinHandle<ServeStats>> },
+    Reactor(reactor::ReactorHandle),
 }
 
 /// A running daemon: the owner's handle for reload and shutdown.
@@ -203,7 +294,7 @@ pub struct EstimateServerHandle {
     store: StoreSlot,
     cache: Arc<SharedEstimateCache>,
     stop: Arc<AtomicBool>,
-    workers: Vec<JoinHandle<ServeStats>>,
+    inner: HandleInner,
 }
 
 impl EstimateServerHandle {
@@ -217,42 +308,54 @@ impl EstimateServerHandle {
     }
 
     /// Hot-reload: atomically replace the served store.  In-flight
-    /// requests finish on the old snapshot; the next request of each
-    /// worker sees the new one, and the generation-stamped cache
-    /// invalidates lazily — no stale estimate can ever be served.
+    /// requests finish on the snapshot they started with; the next
+    /// request (or reactor micro-batch) sees the new one, and the
+    /// generation-stamped cache invalidates lazily — no stale estimate
+    /// can ever be served.
     pub fn swap_store(&self, store: GpStore) {
         *self.store.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(store);
     }
 
-    /// Stop accepting, unblock the workers, and join them.  Waits for
-    /// in-flight connections to close (workers re-check the stop flag
-    /// between requests).
+    /// Stop serving, unblock every thread, and join them.  The thread
+    /// model wakes blocked `accept()`s with dummy connections; the
+    /// reactor needs only its stop flag and wake pipe (no fd churn —
+    /// `tests/serve.rs` pins fd-count stability across 100 cycles).
     pub fn shutdown(self) -> ServeStats {
         self.stop.store(true, Ordering::Relaxed);
-        // Each blocked accept() needs one connection to wake up; extras
-        // sit in the backlog and die with the listener.
-        for _ in 0..self.workers.len() {
-            let _ = TcpStream::connect(self.addr);
-        }
-        let mut total = ServeStats::default();
-        for h in self.workers {
-            if let Ok(s) = h.join() {
-                total.absorb(s);
+        match self.inner {
+            HandleInner::Threads { workers } => {
+                // Each blocked accept() needs one connection to wake up;
+                // extras sit in the backlog and die with the listener.
+                for _ in 0..workers.len() {
+                    let _ = TcpStream::connect(self.addr);
+                }
+                let mut total = ServeStats::default();
+                for h in workers {
+                    if let Ok(s) = h.join() {
+                        total.absorb(s);
+                    }
+                }
+                total
             }
+            HandleInner::Reactor(r) => r.shutdown(),
         }
-        total
     }
 
-    /// Block until the workers exit (the CLI's serve-forever mode; only
-    /// an external `shutdown`-style signal ends it).
+    /// Block until the serving threads exit (the CLI's serve-forever
+    /// mode; only an external `shutdown`-style signal ends it).
     pub fn join(self) -> ServeStats {
-        let mut total = ServeStats::default();
-        for h in self.workers {
-            if let Ok(s) = h.join() {
-                total.absorb(s);
+        match self.inner {
+            HandleInner::Threads { workers } => {
+                let mut total = ServeStats::default();
+                for h in workers {
+                    if let Ok(s) = h.join() {
+                        total.absorb(s);
+                    }
+                }
+                total
             }
+            HandleInner::Reactor(r) => r.join(),
         }
-        total
     }
 }
 
@@ -475,7 +578,7 @@ fn handle_conn(
     }
 }
 
-fn serve_one(
+pub(crate) fn serve_one(
     store: &GpStore,
     device: &str,
     model_spec: &str,
@@ -490,7 +593,7 @@ fn serve_one(
 /// Per-query outcomes in query order; spec parse failures consume only
 /// their own slot, and the valid remainder still coalesces through one
 /// [`estimate_batch_shared`] call.
-fn serve_batch(
+pub(crate) fn serve_batch(
     store: &GpStore,
     queries: &[(String, String)],
     cache: &SharedEstimateCache,
@@ -514,9 +617,14 @@ fn serve_batch(
 }
 
 /// Blocking client for the estimate protocol — used by the `serve1`
-/// experiment, the tests, and scriptable from the CLI.  One request in
-/// flight at a time; `id`s are still checked so a desynced server is an
-/// error, not a wrong answer.
+/// experiment, the tests, and scriptable from the CLI.  The
+/// [`EstimateClient::estimate`] / [`EstimateClient::estimate_batch`]
+/// methods keep one request in flight at a time; `id`s are still
+/// checked so a desynced server is an error, not a wrong answer.  For
+/// pipelining, pair [`EstimateClient::submit`] (fire as many requests
+/// as you like) with [`EstimateClient::recv_single`] (collect replies,
+/// matching by correlation id — the reactor answers in completion
+/// order, not necessarily send order).
 pub struct EstimateClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -571,6 +679,34 @@ impl EstimateClient {
             Msg::EstimateBatchReply { id: rid, results } if rid == id => Ok(results),
             Msg::EstimateError { id: rid, error } if rid == id => Err(anyhow!(error)),
             other => Err(anyhow!("out-of-sync reply: {other:?}")),
+        }
+    }
+
+    /// Pipelined send: write one `EstimateRequest` without waiting for
+    /// the reply; returns the correlation id to match against
+    /// [`EstimateClient::recv_single`].  Any number may be in flight.
+    pub fn submit(&mut self, device: &str, model: &str) -> Result<u64> {
+        let id = self.take_id();
+        let req =
+            Msg::EstimateRequest { id, device: device.to_string(), model: model.to_string() };
+        self.writer.write_all(req.encode().as_bytes())?;
+        Ok(id)
+    }
+
+    /// Read one single-request reply (success or per-request error),
+    /// returning `(id, outcome)` so the caller can match pipelined
+    /// replies by correlation id in whatever order they complete.
+    pub fn recv_single(&mut self) -> Result<(u64, Result<(f64, f64), String>)> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        match Msg::decode(&line) {
+            Some(Msg::EstimateReply { id, energy_per_iter, variance }) => {
+                Ok((id, Ok((energy_per_iter, variance))))
+            }
+            Some(Msg::EstimateError { id, error }) => Ok((id, Err(error))),
+            other => Err(anyhow!("unexpected reply on a pipelined connection: {other:?}")),
         }
     }
 

@@ -23,7 +23,11 @@
 //! The same protocol also carries the **estimation-serving** tier
 //! ([`estimate_server`], `thor serve-estimates`): a long-running daemon
 //! that loads fitted stores and answers estimate queries at high rate —
-//! the query-heavy, fit-rarely counterpart of the profiling fleet.
+//! the query-heavy, fit-rarely counterpart of the profiling fleet.  Its
+//! default core is the readiness-driven [`reactor`] (one event thread
+//! multiplexing all connections, a compute pool coalescing queries
+//! across clients); `--io-model threads` keeps the original
+//! thread-per-connection loop for one release.
 //!
 //! Invariants (property-tested in `scheduler`, and promoted to
 //! integration level over real sockets in `rust/tests/fleet.rs` and
@@ -49,13 +53,14 @@
 pub mod estimate_server;
 pub mod faults;
 pub mod protocol;
+pub mod reactor;
 pub mod scheduler;
 pub mod server;
 pub mod worker;
 
 pub use estimate_server::{
-    BoundEstimateServer, EstimateClient, EstimateServer, EstimateServerHandle, ServeStats,
-    ServeTuning,
+    BoundEstimateServer, EstimateClient, EstimateServer, EstimateServerHandle, IoModel,
+    ServeStats, ServeTuning,
 };
 pub use faults::{reconnect_backoff, slow_loris_send, FaultPlan, Stall};
 pub use protocol::{read_line_capped, Msg, MAX_LINE_BYTES};

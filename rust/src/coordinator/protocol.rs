@@ -89,6 +89,84 @@ pub fn read_line_capped<R: BufRead>(r: &mut R, line: &mut String, max: usize) ->
     Ok(buf.len())
 }
 
+/// How a [`FrameBuf`] line extraction failed.  Both are connection-fatal
+/// for the reactor: `TooLong` earns one `est_err` then the drop (the
+/// same answer the blocking reader's cap gives), `Utf8` is a silent
+/// drop (framing is unrecoverable, matching the blocking path's
+/// `Broken`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// A line (terminated or still growing) exceeded the byte cap.
+    TooLong,
+    /// A complete line was not valid UTF-8.
+    Utf8,
+}
+
+/// Incremental newline framing over a per-connection byte buffer — the
+/// non-blocking counterpart of [`read_line_capped`]: the reactor feeds
+/// whatever `read()` returned via [`FrameBuf::push`] and pulls complete
+/// lines with [`FrameBuf::next_line`].  Cap semantics match the
+/// blocking reader exactly (a line errors when its bytes *including*
+/// the newline would exceed `max`, and a still-unterminated tail errors
+/// as soon as it alone exceeds `max`), so the two io models answer
+/// oversize abuse identically.
+///
+/// The caller must drain `next_line` until `Ok(None)` after each push;
+/// the buffer then holds at most one partial line, bounded by `max` —
+/// per-connection memory stays capped no matter what the peer streams.
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// Bytes already scanned for `\n` (avoids rescanning a long partial
+    /// line on every push).
+    scanned: usize,
+    max: usize,
+}
+
+impl FrameBuf {
+    pub fn new(max: usize) -> Self {
+        Self { buf: Vec::new(), scanned: 0, max }
+    }
+
+    /// Append bytes from the socket.  Infallible: caps are enforced in
+    /// [`FrameBuf::next_line`], which sees line boundaries.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Extract the next complete line, newline included (the shape
+    /// [`Msg::decode`] expects; it trims).  `Ok(None)` means no full
+    /// line is buffered yet.
+    pub fn next_line(&mut self) -> Result<Option<String>, FrameError> {
+        match self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+            Some(rel) => {
+                let end = self.scanned + rel; // index of the newline
+                if end + 1 > self.max {
+                    return Err(FrameError::TooLong);
+                }
+                let line_bytes: Vec<u8> = self.buf.drain(..=end).collect();
+                self.scanned = 0;
+                match String::from_utf8(line_bytes) {
+                    Ok(s) => Ok(Some(s)),
+                    Err(_) => Err(FrameError::Utf8),
+                }
+            }
+            None => {
+                self.scanned = self.buf.len();
+                if self.buf.len() > self.max {
+                    return Err(FrameError::TooLong);
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Whether an unterminated line is buffered (drives the reactor's
+    /// slow-loris clock: a partial line that stops growing times out).
+    pub fn has_partial(&self) -> bool {
+        !self.buf.is_empty()
+    }
+}
+
 /// Largest integer an f64 represents exactly (2^53).  Ids above this
 /// must not travel as JSON numbers: the `u64 → f64` cast would round,
 /// silently corrupting the id on roundtrip.
@@ -475,6 +553,83 @@ mod tests {
         let mut r = Cursor::new(vec![0xff, 0xfe, b'\n']);
         line.clear();
         assert!(read_line_capped(&mut r, &mut line, 64).is_err());
+    }
+
+    #[test]
+    fn frame_buf_reassembles_lines_across_arbitrary_splits() {
+        // Every split point of a two-line stream must yield the same
+        // two lines — the whole point of incremental framing.
+        let stream = b"{\"type\":\"idle\"}\n{\"type\":\"shutdown\"}\n";
+        for cut in 0..=stream.len() {
+            let mut fb = FrameBuf::new(MAX_LINE_BYTES);
+            fb.push(&stream[..cut]);
+            let mut lines = Vec::new();
+            while let Some(l) = fb.next_line().unwrap() {
+                lines.push(l);
+            }
+            fb.push(&stream[cut..]);
+            while let Some(l) = fb.next_line().unwrap() {
+                lines.push(l);
+            }
+            assert_eq!(lines.len(), 2, "cut at {cut}");
+            assert_eq!(lines[0], "{\"type\":\"idle\"}\n");
+            assert_eq!(lines[1], "{\"type\":\"shutdown\"}\n");
+            assert!(!fb.has_partial());
+        }
+    }
+
+    #[test]
+    fn frame_buf_cap_matches_blocking_reader_semantics() {
+        // Terminated line whose bytes incl. newline exceed the cap.
+        let mut fb = FrameBuf::new(8);
+        fb.push(b"123456789\n");
+        assert_eq!(fb.next_line(), Err(FrameError::TooLong));
+        // Exactly at the cap is fine (7 chars + newline = 8).
+        let mut fb = FrameBuf::new(8);
+        fb.push(b"1234567\n");
+        assert_eq!(fb.next_line().unwrap().as_deref(), Some("1234567\n"));
+        // A newline-less tail trips the cap as soon as it alone exceeds
+        // it — bounded memory even if the newline never comes.
+        let mut fb = FrameBuf::new(8);
+        fb.push(b"12345");
+        assert_eq!(fb.next_line(), Ok(None));
+        assert!(fb.has_partial());
+        fb.push(b"6789");
+        assert_eq!(fb.next_line(), Err(FrameError::TooLong));
+    }
+
+    #[test]
+    fn frame_buf_rejects_invalid_utf8_lines() {
+        let mut fb = FrameBuf::new(64);
+        fb.push(&[0xff, 0xfe, b'\n', b'o', b'k', b'\n']);
+        assert_eq!(fb.next_line(), Err(FrameError::Utf8));
+        // The bad line was consumed; the connection would be dropped
+        // anyway, but the buffer stays coherent.
+        assert_eq!(fb.next_line().unwrap().as_deref(), Some("ok\n"));
+    }
+
+    #[test]
+    fn frame_buf_pipelined_burst_decodes_in_order() {
+        // Many messages in one push — the pipelined-client shape.
+        let mut fb = FrameBuf::new(MAX_LINE_BYTES);
+        let mut wire = String::new();
+        for id in 0..64u64 {
+            wire.push_str(&Msg::EstimateRequest {
+                id,
+                device: "xavier".into(),
+                model: "cnn5:8,16,32,64:16".into(),
+            }
+            .encode());
+        }
+        fb.push(wire.as_bytes());
+        for id in 0..64u64 {
+            let line = fb.next_line().unwrap().expect("a full line per message");
+            match Msg::decode(&line) {
+                Some(Msg::EstimateRequest { id: got, .. }) => assert_eq!(got, id),
+                other => panic!("bad decode: {other:?}"),
+            }
+        }
+        assert_eq!(fb.next_line(), Ok(None));
     }
 
     #[test]

@@ -1,0 +1,865 @@
+//! Readiness-driven serving core (`--io-model reactor`, the default):
+//! one event thread owns **all** connections through non-blocking
+//! sockets and a [`Poller`] (epoll on Linux, `poll(2)` elsewhere on
+//! unix — see [`crate::util::sys::poll`]), and a fixed compute pool
+//! answers decoded queries.  Compared to the thread-per-connection
+//! model (kept as `--io-model threads`), connection count decouples
+//! from thread count: 10 000 mostly-idle connections cost 10 000 fd
+//! registrations and buffers, not 10 000 stacks.
+//!
+//! Data path: readable socket → per-connection [`FrameBuf`] reassembles
+//! newline-delimited frames across arbitrary TCP segmentation → decoded
+//! requests become [`Unit`]s on one shared pending queue → a compute
+//! worker drains up to `coalesce_max` units in a micro-batch
+//! ("whatever is queued now", zero added latency), snapshots the store
+//! once, and answers the whole batch through
+//! [`estimate_units_shared`] — so same-`(device, family)` queries from
+//! *different clients* coalesce into single GP batch solves.  Replies
+//! come back to the event thread over a completion list plus a
+//! [`WakePipe`], and are written under write-readiness with vectored
+//! writes; a client that stops draining gets a bounded write queue and
+//! read gating, never a blocked thread.
+//!
+//! Correctness contract (pinned by the unit test here and by
+//! `tests/serve.rs` running the whole suite under both io models):
+//! every reply is **byte-identical** to what the blocking path would
+//! have produced — coalescing composes through
+//! `estimate_batch_shared`'s bit-identity guarantee (PR 6) and error
+//! strings reuse the exact blocking-path formats.
+//!
+//! Deadlines are ported from [`ServeTuning`]: a partial line older than
+//! `line_timeout` (slow loris) gets one `est_err` and a close; a
+//! connection with nothing buffered, nothing in flight, and no bytes
+//! for `idle_timeout` is reaped silently; a write queue stalled past
+//! `write_timeout` is dropped.  Two new knobs bound memory per
+//! connection: `write_highwater` (stop reading while the write queue
+//! is that deep) and `max_inflight` (decoded-but-unanswered cap).
+//!
+//! Shutdown is cooperative and connection-free: the owner sets the
+//! stop flag and writes one byte to the wake pipe (no dummy
+//! `connect()`s — the fix for the thread model's shutdown idiom, and
+//! why 100 start/stop cycles hold fd count flat; see `tests/serve.rs`).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, IoSlice, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::estimate_server::{ServeStats, ServeTuning, StoreSlot};
+use crate::coordinator::protocol::{FrameBuf, FrameError, Msg};
+use crate::model::spec::parse_spec;
+use crate::model::ModelGraph;
+use crate::thor::estimator::{estimate_units_shared, SharedEstimateCache};
+use crate::thor::store::GpStore;
+use crate::util::sys::poll::{fd_of, Event, Poller, WakePipe};
+
+/// Token for the listening socket.
+const LISTENER: u64 = 0;
+/// Token for the wake pipe's read end.
+const WAKE: u64 = 1;
+/// First connection token; tokens increase monotonically and are never
+/// reused, so a stale completion can never be delivered to a newer
+/// connection that recycled the slot.
+const FIRST_CONN: u64 = 2;
+
+/// One decoded request, ready for the compute pool.
+enum Query {
+    Single { id: u64, device: String, model: String },
+    Batch { id: u64, queries: Vec<(String, String)> },
+}
+
+/// A queued unit of work: one protocol request from one connection.
+struct Unit {
+    token: u64,
+    query: Query,
+}
+
+/// One finished reply heading back to the event thread.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+    /// The reply is an `EstimateError` (single-request path only; batch
+    /// per-query errors are data, not protocol errors — blocking-path
+    /// parity).
+    errored: bool,
+    /// This reply was computed in a micro-batch of ≥ 2 units.
+    coalesced: bool,
+}
+
+/// State shared between the event thread and the compute pool.
+struct Shared {
+    pending: Mutex<VecDeque<Unit>>,
+    available: Condvar,
+    completed: Mutex<Vec<Completion>>,
+    wake: WakePipe,
+}
+
+/// Per-connection state owned by the event thread.
+struct Conn {
+    stream: TcpStream,
+    frame: FrameBuf,
+    /// Outbound reply queue; front buffer partially written up to
+    /// `wq_front_off`.
+    wq: VecDeque<Vec<u8>>,
+    wq_front_off: usize,
+    wq_bytes: usize,
+    idle_since: Instant,
+    /// Set while a *partial* line is buffered — the slow-loris clock.
+    /// Cleared on every completed line, so a pipelined client gated on
+    /// `max_inflight` is never misread as a loris.
+    line_start: Option<Instant>,
+    /// Set when the write queue is non-empty and the last flush made no
+    /// progress — the write-deadline clock.
+    write_stalled_since: Option<Instant>,
+    /// Decoded-but-unanswered requests (gates reading at `max_inflight`).
+    inflight: usize,
+    /// Graceful close requested: stop reading, flush owed replies, then
+    /// close once `inflight == 0` and the write queue drains.
+    closing: bool,
+    interest_r: bool,
+    interest_w: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, max_line_bytes: usize, now: Instant) -> Self {
+        Conn {
+            stream,
+            frame: FrameBuf::new(max_line_bytes),
+            wq: VecDeque::new(),
+            wq_front_off: 0,
+            wq_bytes: 0,
+            idle_since: now,
+            line_start: None,
+            write_stalled_since: None,
+            inflight: 0,
+            closing: false,
+            interest_r: true,
+            interest_w: false,
+        }
+    }
+}
+
+fn enqueue(c: &mut Conn, bytes: Vec<u8>) {
+    c.wq_bytes += bytes.len();
+    c.wq.push_back(bytes);
+}
+
+fn est_err(id: u64, error: String) -> Vec<u8> {
+    Msg::EstimateError { id, error }.encode().into_bytes()
+}
+
+/// Start the reactor: one event thread plus `compute_threads` workers.
+/// Fails up front (before any thread spawns) if the host has no
+/// readiness primitive — `--io-model threads` remains available there.
+pub(crate) fn spawn(
+    listener: TcpListener,
+    slot: StoreSlot,
+    cache: Arc<SharedEstimateCache>,
+    stop: Arc<AtomicBool>,
+    tuning: ServeTuning,
+    compute_threads: usize,
+    coalesce_max: usize,
+) -> Result<ReactorHandle> {
+    listener.set_nonblocking(true)?;
+    let mut poller = Poller::new()?;
+    let wake = WakePipe::new()?;
+    poller.register(fd_of(&listener), LISTENER, true, false)?;
+    poller.register(wake.read_fd(), WAKE, true, false)?;
+    let shared = Arc::new(Shared {
+        pending: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        completed: Mutex::new(Vec::new()),
+        wake,
+    });
+    let coalesce_max = coalesce_max.max(1);
+    let mut computes = Vec::with_capacity(compute_threads);
+    for _ in 0..compute_threads {
+        let (shared, slot, cache, stop) =
+            (shared.clone(), slot.clone(), cache.clone(), stop.clone());
+        computes.push(std::thread::spawn(move || {
+            compute_loop(&shared, &slot, &cache, &stop, coalesce_max)
+        }));
+    }
+    let event = {
+        let (shared, stop) = (shared.clone(), stop.clone());
+        std::thread::spawn(move || event_loop(listener, poller, &shared, &stop, &tuning))
+    };
+    Ok(ReactorHandle { shared, stop, event, computes })
+}
+
+/// Owner's handle to a running reactor (wrapped by
+/// [`crate::coordinator::estimate_server::EstimateServerHandle`]).
+pub(crate) struct ReactorHandle {
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    event: JoinHandle<ServeStats>,
+    computes: Vec<JoinHandle<()>>,
+}
+
+impl ReactorHandle {
+    /// Stop-flag + wake-pipe shutdown: no dummy connections, no fd
+    /// churn.  Joins every thread and returns the accumulated stats.
+    pub(crate) fn shutdown(self) -> ServeStats {
+        self.stop.store(true, Ordering::Relaxed);
+        self.shared.wake.wake();
+        {
+            // Take the lock so a worker that checked the flag just
+            // before the store cannot park and miss the notify.
+            let _q = self.shared.pending.lock().unwrap_or_else(|e| e.into_inner());
+            self.shared.available.notify_all();
+        }
+        for h in self.computes {
+            let _ = h.join();
+        }
+        self.event.join().unwrap_or_default()
+    }
+
+    /// Serve-forever mode: block until the event thread exits (an
+    /// external stop signal), then wind down the compute pool.
+    pub(crate) fn join(self) -> ServeStats {
+        let stats = self.event.join().unwrap_or_default();
+        self.stop.store(true, Ordering::Relaxed);
+        {
+            let _q = self.shared.pending.lock().unwrap_or_else(|e| e.into_inner());
+            self.shared.available.notify_all();
+        }
+        for h in self.computes {
+            let _ = h.join();
+        }
+        stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compute pool: drain micro-batches, answer them coalesced.
+// ---------------------------------------------------------------------------
+
+fn compute_loop(
+    shared: &Shared,
+    slot: &StoreSlot,
+    cache: &SharedEstimateCache,
+    stop: &AtomicBool,
+    coalesce_max: usize,
+) {
+    loop {
+        let units: Vec<Unit> = {
+            let mut q = shared.pending.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if !q.is_empty() {
+                    break;
+                }
+                q = shared.available.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+            let n = q.len().min(coalesce_max);
+            q.drain(..n).collect()
+        };
+        // One immutable store snapshot per micro-batch: a concurrent
+        // `swap_store` lands between batches, never inside one, so no
+        // unit ever sees a torn mix of fits.
+        let store: Arc<GpStore> = slot.read().unwrap_or_else(|e| e.into_inner()).clone();
+        let done = answer_units(&store, cache, units);
+        {
+            let mut c = shared.completed.lock().unwrap_or_else(|e| e.into_inner());
+            c.extend(done);
+        }
+        shared.wake.wake();
+    }
+}
+
+/// Parse state for one unit, kept so replies reassemble in request
+/// order after the coalesced solve.
+struct Prep {
+    token: u64,
+    id: u64,
+    batch: bool,
+    devices: Vec<String>,
+    parsed: Vec<Result<ModelGraph, String>>,
+}
+
+/// Answer a micro-batch of units with **one**
+/// [`estimate_units_shared`] call, so same-family queries across
+/// connections share GP batch solves.  Reply bytes and error strings
+/// are byte-identical to the blocking path's `serve_one`/`serve_batch`
+/// (pinned by [`tests::answer_units_matches_blocking_serve_helpers_byte_for_byte`]).
+fn answer_units(
+    store: &GpStore,
+    cache: &SharedEstimateCache,
+    units: Vec<Unit>,
+) -> Vec<Completion> {
+    let coalesced = units.len() > 1;
+    let preps: Vec<Prep> = units
+        .into_iter()
+        .map(|Unit { token, query }| match query {
+            Query::Single { id, device, model } => Prep {
+                token,
+                id,
+                batch: false,
+                parsed: vec![parse_spec(&model).map_err(|e| e.to_string())],
+                devices: vec![device],
+            },
+            Query::Batch { id, queries } => {
+                let parsed =
+                    queries.iter().map(|(_, m)| parse_spec(m).map_err(|e| e.to_string())).collect();
+                let devices = queries.into_iter().map(|(d, _)| d).collect();
+                Prep { token, id, batch: true, devices, parsed }
+            }
+        })
+        .collect();
+    let unit_queries: Vec<Vec<(&str, &ModelGraph)>> = preps
+        .iter()
+        .map(|p| {
+            p.devices
+                .iter()
+                .zip(&p.parsed)
+                .filter_map(|(d, g)| g.as_ref().ok().map(|g| (d.as_str(), g)))
+                .collect()
+        })
+        .collect();
+    let unit_answers = estimate_units_shared(store, &unit_queries, cache);
+    preps
+        .into_iter()
+        .zip(unit_answers)
+        .map(|(p, answers)| {
+            let mut answers = answers.into_iter();
+            if !p.batch {
+                let (msg, errored) = match p.parsed.into_iter().next().expect("single has 1 slot") {
+                    Err(e) => (Msg::EstimateError { id: p.id, error: e }, true),
+                    Ok(_) => match answers.next().expect("one answer per valid parse") {
+                        Ok(e) => (
+                            Msg::EstimateReply {
+                                id: p.id,
+                                energy_per_iter: e.energy_per_iter,
+                                variance: e.variance,
+                            },
+                            false,
+                        ),
+                        Err(e) => (Msg::EstimateError { id: p.id, error: e.to_string() }, true),
+                    },
+                };
+                Completion { token: p.token, bytes: msg.encode().into_bytes(), errored, coalesced }
+            } else {
+                let results: Vec<Result<(f64, f64), String>> = p
+                    .parsed
+                    .into_iter()
+                    .map(|pr| match pr {
+                        Err(e) => Err(e),
+                        Ok(_) => answers
+                            .next()
+                            .expect("one answer per valid parse")
+                            .map(|e| (e.energy_per_iter, e.variance))
+                            .map_err(|e| e.to_string()),
+                    })
+                    .collect();
+                let msg = Msg::EstimateBatchReply { id: p.id, results };
+                Completion {
+                    token: p.token,
+                    bytes: msg.encode().into_bytes(),
+                    errored: false,
+                    coalesced,
+                }
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Event loop.
+// ---------------------------------------------------------------------------
+
+fn event_loop(
+    listener: TcpListener,
+    mut poller: Poller,
+    shared: &Shared,
+    stop: &AtomicBool,
+    tuning: &ServeTuning,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN;
+    let mut events: Vec<Event> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut new_units: Vec<Unit> = Vec::new();
+    let mut to_close: Vec<u64> = Vec::new();
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let now = Instant::now();
+        let timeout = wait_timeout(&conns, tuning, now);
+        if poller.wait(&mut events, Some(timeout)).is_err() {
+            break;
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // Always drain the wake pipe (level-triggered: leftover bytes
+        // would spin the loop).
+        shared.wake.drain();
+        let now = Instant::now();
+
+        for ev in events.drain(..) {
+            match ev.token {
+                LISTENER => loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            let token = next_token;
+                            next_token += 1;
+                            if poller.register(fd_of(&stream), token, true, false).is_err() {
+                                continue;
+                            }
+                            stats.connections += 1;
+                            conns.insert(token, Conn::new(stream, tuning.max_line_bytes, now));
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                        // Transient accept failure (EMFILE, aborted
+                        // handshake): keep serving.
+                        Err(_) => break,
+                    }
+                },
+                WAKE => {}
+                token => {
+                    if let Some(c) = conns.get_mut(&token) {
+                        if ev.readable
+                            && c.interest_r
+                            && handle_readable(
+                                c,
+                                token,
+                                &mut scratch,
+                                tuning,
+                                now,
+                                &mut stats,
+                                &mut new_units,
+                            )
+                        {
+                            to_close.push(token);
+                        }
+                        // Writable readiness is consumed by the
+                        // maintenance flush below.
+                    }
+                }
+            }
+        }
+
+        // Hard-broken connections go away before replies are routed, so
+        // their completions (if any) are dropped, not mis-delivered.
+        close_all(&mut conns, &mut poller, &mut to_close);
+
+        publish(shared, &mut new_units);
+
+        // Route finished replies into per-connection write queues.
+        let done: Vec<Completion> = {
+            let mut c = shared.completed.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *c)
+        };
+        for completion in done {
+            if completion.errored {
+                stats.errors += 1;
+            }
+            if completion.coalesced {
+                stats.coalesced += 1;
+            }
+            if let Some(c) = conns.get_mut(&completion.token) {
+                c.inflight = c.inflight.saturating_sub(1);
+                c.idle_since = now;
+                enqueue(c, completion.bytes);
+            }
+            // else: the client vanished mid-request; drop the reply.
+        }
+
+        // Maintenance: timers, gated-line catch-up, flushing, interest.
+        for (&token, c) in conns.iter_mut() {
+            // Slow-loris: a partial line outlived the read deadline.
+            if let Some(started) = c.line_start {
+                if now.duration_since(started) >= tuning.line_timeout {
+                    stats.errors += 1;
+                    let deadline = tuning.line_timeout;
+                    enqueue(
+                        c,
+                        est_err(
+                            0,
+                            format!("request line stalled past the {deadline:?} read deadline"),
+                        ),
+                    );
+                    c.line_start = None;
+                    c.closing = true;
+                }
+            }
+            // Idle reap: nothing buffered, nothing owed, no bytes.
+            if !c.closing
+                && c.inflight == 0
+                && c.wq.is_empty()
+                && c.line_start.is_none()
+                && now.duration_since(c.idle_since) >= tuning.idle_timeout
+            {
+                stats.reaped += 1;
+                to_close.push(token);
+                continue;
+            }
+            // Catch-up: complete lines can sit in the frame buffer when
+            // the inflight gate paused decoding — no socket event will
+            // resume them, so this pass must.
+            if !c.closing
+                && c.inflight < tuning.max_inflight
+                && !drain_lines(c, token, tuning, now, &mut stats, &mut new_units)
+            {
+                to_close.push(token);
+                continue;
+            }
+            if !c.wq.is_empty() {
+                match flush(c) {
+                    Ok(progressed) => {
+                        if c.wq.is_empty() {
+                            c.write_stalled_since = None;
+                            c.idle_since = now;
+                        } else if progressed || c.write_stalled_since.is_none() {
+                            c.write_stalled_since = Some(now);
+                        }
+                    }
+                    Err(_) => {
+                        to_close.push(token);
+                        continue;
+                    }
+                }
+            }
+            if let Some(stalled) = c.write_stalled_since {
+                if !c.wq.is_empty() && now.duration_since(stalled) >= tuning.write_timeout {
+                    to_close.push(token);
+                    continue;
+                }
+            }
+            if c.closing && c.inflight == 0 && c.wq.is_empty() {
+                to_close.push(token);
+                continue;
+            }
+            // Reconcile poller interest with what this connection can
+            // actually make progress on: reading is gated by graceful
+            // close, the inflight cap, and write-queue backpressure.
+            let want_r = !c.closing
+                && c.inflight < tuning.max_inflight
+                && c.wq_bytes < tuning.write_highwater;
+            let want_w = !c.wq.is_empty();
+            if (want_r, want_w) != (c.interest_r, c.interest_w) {
+                if poller.reregister(fd_of(&c.stream), token, want_r, want_w).is_err() {
+                    to_close.push(token);
+                    continue;
+                }
+                c.interest_r = want_r;
+                c.interest_w = want_w;
+            }
+        }
+
+        close_all(&mut conns, &mut poller, &mut to_close);
+        // The catch-up drain may have decoded more requests.
+        publish(shared, &mut new_units);
+    }
+    stats
+}
+
+fn publish(shared: &Shared, new_units: &mut Vec<Unit>) {
+    if new_units.is_empty() {
+        return;
+    }
+    let mut q = shared.pending.lock().unwrap_or_else(|e| e.into_inner());
+    q.extend(new_units.drain(..));
+    drop(q);
+    shared.available.notify_all();
+}
+
+fn close_all(conns: &mut HashMap<u64, Conn>, poller: &mut Poller, to_close: &mut Vec<u64>) {
+    for token in to_close.drain(..) {
+        if let Some(c) = conns.remove(&token) {
+            let _ = poller.deregister(fd_of(&c.stream));
+        }
+    }
+}
+
+/// Smallest pending deadline across all connections, capped at the
+/// tuning poll tick (the worst-case latency for noticing shutdown).
+fn wait_timeout(conns: &HashMap<u64, Conn>, tuning: &ServeTuning, now: Instant) -> Duration {
+    let mut t = tuning.poll;
+    for c in conns.values() {
+        if let Some(started) = c.line_start {
+            t = t.min((started + tuning.line_timeout).saturating_duration_since(now));
+        }
+        if !c.closing && c.inflight == 0 && c.wq.is_empty() && c.line_start.is_none() {
+            t = t.min((c.idle_since + tuning.idle_timeout).saturating_duration_since(now));
+        }
+        if !c.wq.is_empty() {
+            if let Some(stalled) = c.write_stalled_since {
+                t = t.min((stalled + tuning.write_timeout).saturating_duration_since(now));
+            }
+        }
+    }
+    t
+}
+
+/// Drain the socket into the frame buffer and decode complete lines.
+/// Returns `true` to force-close (hard socket error or broken framing).
+fn handle_readable(
+    c: &mut Conn,
+    token: u64,
+    scratch: &mut [u8],
+    tuning: &ServeTuning,
+    now: Instant,
+    stats: &mut ServeStats,
+    new_units: &mut Vec<Unit>,
+) -> bool {
+    loop {
+        if c.closing || c.inflight >= tuning.max_inflight {
+            return false;
+        }
+        match (&c.stream).read(scratch) {
+            Ok(0) => {
+                // Clean EOF: any decoded-but-unanswered requests still
+                // get their replies flushed before the close.
+                c.closing = true;
+                return false;
+            }
+            Ok(n) => {
+                c.frame.push(&scratch[..n]);
+                if !drain_lines(c, token, tuning, now, stats, new_units) {
+                    return true;
+                }
+                if c.closing {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+}
+
+/// Decode buffered complete lines into units, maintaining the
+/// slow-loris clock: it runs only while a *partial* line is buffered.
+/// Returns `false` to force-close (invalid UTF-8 — the blocking path's
+/// silent `Broken`).
+fn drain_lines(
+    c: &mut Conn,
+    token: u64,
+    tuning: &ServeTuning,
+    now: Instant,
+    stats: &mut ServeStats,
+    new_units: &mut Vec<Unit>,
+) -> bool {
+    loop {
+        if c.closing || c.inflight >= tuning.max_inflight {
+            // Gated: leave remaining lines buffered (the maintenance
+            // pass resumes them); the loris clock is untouched — it was
+            // cleared by the last complete line, so a gated pipeline is
+            // never mistaken for a loris.
+            return true;
+        }
+        match c.frame.next_line() {
+            Ok(Some(line)) => {
+                c.line_start = None;
+                c.idle_since = now;
+                on_line(c, token, &line, stats, new_units);
+            }
+            Ok(None) => {
+                c.line_start =
+                    if c.frame.has_partial() { Some(c.line_start.unwrap_or(now)) } else { None };
+                return true;
+            }
+            Err(FrameError::TooLong) => {
+                stats.errors += 1;
+                enqueue(
+                    c,
+                    est_err(0, format!("request line exceeds {} bytes", tuning.max_line_bytes)),
+                );
+                c.line_start = None;
+                c.closing = true;
+                return true;
+            }
+            Err(FrameError::Utf8) => return false,
+        }
+    }
+}
+
+/// Handle one complete request line — the reactor twin of the blocking
+/// path's per-message match, with identical error strings and
+/// keep-open/close decisions.
+fn on_line(c: &mut Conn, token: u64, line: &str, stats: &mut ServeStats, new_units: &mut Vec<Unit>) {
+    if line.trim().is_empty() {
+        return;
+    }
+    let Some(msg) = Msg::decode(line) else {
+        stats.errors += 1;
+        enqueue(c, est_err(0, "malformed request line".into()));
+        c.closing = true;
+        return;
+    };
+    match msg {
+        Msg::EstimateRequest { id, device, model } => {
+            stats.requests += 1;
+            c.inflight += 1;
+            new_units.push(Unit { token, query: Query::Single { id, device, model } });
+        }
+        Msg::EstimateBatch { id, queries } => {
+            stats.requests += 1;
+            c.inflight += 1;
+            new_units.push(Unit { token, query: Query::Batch { id, queries } });
+        }
+        // A polite client close: flush anything owed, then hang up.
+        Msg::Shutdown => c.closing = true,
+        other => {
+            stats.errors += 1;
+            enqueue(
+                c,
+                est_err(0, format!("unsupported message on an estimate connection: {other:?}")),
+            );
+            // Connection stays open — blocking-path parity.
+        }
+    }
+}
+
+/// Write as much of the queue as the socket accepts, vectored (up to 16
+/// buffers per syscall).  Returns whether any bytes moved.
+fn flush(c: &mut Conn) -> io::Result<bool> {
+    let mut progressed = false;
+    while !c.wq.is_empty() {
+        let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(16.min(c.wq.len()));
+        for (i, buf) in c.wq.iter().take(16).enumerate() {
+            let start = if i == 0 { c.wq_front_off } else { 0 };
+            slices.push(IoSlice::new(&buf[start..]));
+        }
+        match (&c.stream).write_vectored(&slices) {
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::WriteZero, "socket accepted 0 bytes"))
+            }
+            Ok(mut n) => {
+                progressed = true;
+                c.wq_bytes -= n;
+                while n > 0 {
+                    let front_left = c.wq.front().expect("bytes imply a buffer").len()
+                        - c.wq_front_off;
+                    if n >= front_left {
+                        n -= front_left;
+                        c.wq.pop_front();
+                        c.wq_front_off = 0;
+                    } else {
+                        c.wq_front_off += n;
+                        n = 0;
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(progressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::estimate_server::{serve_batch, serve_one};
+    use crate::model::zoo;
+
+    fn profiled_store(device: &str, seed: u64) -> GpStore {
+        let profile = crate::simdevice::devices::by_name(device).unwrap();
+        let mut dev = crate::simdevice::Device::new(profile, seed);
+        let mut thor = crate::thor::Thor::new(crate::thor::ThorConfig::quick());
+        thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
+        thor.store
+    }
+
+    /// The coalescing contract: a micro-batch mixing valid singles, a
+    /// mixed batch, a parse error, and an unknown device produces
+    /// replies byte-identical to the blocking path's helpers, in unit
+    /// order, with the error/coalesced flags the stats layer expects.
+    #[test]
+    fn answer_units_matches_blocking_serve_helpers_byte_for_byte() {
+        let store = profiled_store("xavier", 11);
+        let cache = SharedEstimateCache::default();
+        let good = "cnn5:8,16,32,64:16";
+        let batch_queries: Vec<(String, String)> = vec![
+            ("xavier".into(), "cnn5:4,8,16,32:16".into()),
+            ("xavier".into(), "nope:1".into()),
+            ("oppo".into(), good.into()),
+        ];
+        let units = vec![
+            Unit {
+                token: 10,
+                query: Query::Single { id: 1, device: "xavier".into(), model: good.into() },
+            },
+            Unit { token: 11, query: Query::Batch { id: 2, queries: batch_queries.clone() } },
+            Unit {
+                token: 12,
+                query: Query::Single { id: 3, device: "xavier".into(), model: "nope:1".into() },
+            },
+            Unit {
+                token: 13,
+                query: Query::Single { id: 4, device: "oppo".into(), model: good.into() },
+            },
+        ];
+        let done = answer_units(&store, &cache, units);
+        assert_eq!(done.len(), 4);
+        assert!(done.iter().all(|c| c.coalesced), "micro-batch of 4 is coalesced");
+        assert_eq!([done[0].token, done[1].token, done[2].token, done[3].token], [10, 11, 12, 13]);
+
+        let fresh = SharedEstimateCache::default();
+        let (e, v) = serve_one(&store, "xavier", good, &fresh).unwrap();
+        let expect0 =
+            Msg::EstimateReply { id: 1, energy_per_iter: e, variance: v }.encode().into_bytes();
+        assert_eq!(done[0].bytes, expect0);
+        assert!(!done[0].errored);
+
+        let expect1 = Msg::EstimateBatchReply {
+            id: 2,
+            results: serve_batch(&store, &batch_queries, &fresh),
+        }
+        .encode()
+        .into_bytes();
+        assert_eq!(done[1].bytes, expect1);
+        assert!(!done[1].errored, "batch per-query errors are data, not protocol errors");
+
+        let parse_err = serve_one(&store, "xavier", "nope:1", &fresh).unwrap_err();
+        let expect2 = Msg::EstimateError { id: 3, error: parse_err }.encode().into_bytes();
+        assert_eq!(done[2].bytes, expect2);
+        assert!(done[2].errored);
+
+        let device_err = serve_one(&store, "oppo", good, &fresh).unwrap_err();
+        assert!(device_err.contains("no fitted GP"), "{device_err}");
+        let expect3 = Msg::EstimateError { id: 4, error: device_err }.encode().into_bytes();
+        assert_eq!(done[3].bytes, expect3);
+        assert!(done[3].errored);
+    }
+
+    /// A singleton unit must not be flagged coalesced (the stat counts
+    /// genuine cross-request micro-batches).
+    #[test]
+    fn singleton_units_are_not_counted_as_coalesced() {
+        let store = profiled_store("xavier", 11);
+        let cache = SharedEstimateCache::default();
+        let units = vec![Unit {
+            token: 2,
+            query: Query::Single {
+                id: 1,
+                device: "xavier".into(),
+                model: "cnn5:8,16,32,64:16".into(),
+            },
+        }];
+        let done = answer_units(&store, &cache, units);
+        assert_eq!(done.len(), 1);
+        assert!(!done[0].coalesced);
+        assert!(!done[0].errored);
+    }
+}

@@ -17,10 +17,19 @@
 //! across client threads — two threads can miss the same key
 //! concurrently — so they stay out of the report too; the final entry
 //! count is a pure function of the query set.)
+//!
+//! After the golden-pinned run, a **scaling comparison** (PR 10) stands
+//! the daemon up under each [`IoModel`] at 4× and 32× connections per
+//! serving thread and reports qps / p99 / worst first-reply to stderr —
+//! every reply still bit-checked.  With `THOR_SERVE_BENCH_JSON=<path>`
+//! (CI: `BENCH_pr10_serve.json`) the latency distributions are written
+//! as `{schema_version, benches: [...]}` rows via
+//! [`crate::util::bench::BenchResult::to_json`].  None of this enters
+//! the report: the golden is byte-stable across io models.
 
 use std::time::Instant;
 
-use crate::coordinator::{EstimateClient, EstimateServer};
+use crate::coordinator::{EstimateClient, EstimateServer, IoModel};
 use crate::exp::registry::Experiment;
 use crate::exp::report::ExpReport;
 use crate::exp::ExpConfig;
@@ -28,7 +37,10 @@ use crate::model::spec::parse_spec;
 use crate::model::zoo;
 use crate::simdevice::{devices, Device};
 use crate::thor::estimator::estimate;
+use crate::thor::store::GpStore;
 use crate::thor::Thor;
+use crate::util::bench::BenchResult;
+use crate::util::json::Json;
 
 /// Concurrent client threads (and daemon worker threads — each client
 /// holds its connection for the whole run, so workers ≥ clients).
@@ -74,6 +86,10 @@ impl Experiment for Serve1 {
         thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
         let store = thor.store;
         let families = store.len();
+        // The daemon takes the store by value; keep a serialized copy
+        // so the scaling comparison below can stand up fresh daemons
+        // against the identical fit.
+        let store_json = store.to_json().to_string();
 
         // Ground truth *before* the daemon takes the store: the exact
         // bits a local estimate() produces per spec.
@@ -173,6 +189,112 @@ impl Experiment for Serve1 {
              (throughput/latency on stderr — wall-clock never enters the report)",
             families, cache_entries
         ));
+
+        scaling_comparison(&store_json, &expected, cfg.quick);
         rep
+    }
+}
+
+/// Serving threads for the scaling comparison — deliberately small so
+/// the connection multipliers stress connections-per-thread, not cores.
+const SCALE_WORKERS: usize = 2;
+
+/// Threads-vs-reactor scaling sweep (PR 10).  Every reply is still
+/// bit-checked against `expected`; a mismatch panics the experiment.
+/// All timing output is wall-clock → stderr / bench JSON only.
+fn scaling_comparison(store_json: &str, expected: &[(u64, u64)], quick: bool) {
+    let rounds = if quick { 10 } else { 40 };
+    let mut results: Vec<BenchResult> = Vec::new();
+    for io in [IoModel::Threads, IoModel::Reactor] {
+        for mult in [4usize, 32] {
+            let conns = SCALE_WORKERS * mult;
+            let store = GpStore::from_json(&Json::parse(store_json).expect("store json"))
+                .expect("store roundtrip");
+            let handle = EstimateServer::bind("127.0.0.1:0", store)
+                .expect("bind loopback")
+                .with_io_model(io)
+                .start(SCALE_WORKERS)
+                .expect("start daemon");
+            let addr = handle.addr();
+            let t_all = Instant::now();
+            let mut joins = Vec::new();
+            for ci in 0..conns {
+                let expected = expected.to_vec();
+                joins.push(std::thread::spawn(move || {
+                    let mut client = EstimateClient::connect(&addr).expect("connect");
+                    let mut lat_ns: Vec<f64> = Vec::with_capacity(rounds);
+                    for r in 0..rounds {
+                        let si = (ci + r) % SPECS.len();
+                        let t0 = Instant::now();
+                        let (e, v) = client.estimate(DEVICE, SPECS[si]).expect("estimate");
+                        lat_ns.push(t0.elapsed().as_nanos() as f64);
+                        assert_eq!(
+                            (e.to_bits(), v.to_bits()),
+                            expected[si],
+                            "scaling sweep reply diverged from local estimate ({io:?}, x{mult})"
+                        );
+                    }
+                    lat_ns
+                }));
+            }
+            let mut all_ns: Vec<f64> = Vec::new();
+            let mut first_ns: Vec<f64> = Vec::new();
+            for j in joins {
+                let lat = j.join().expect("scaling client");
+                first_ns.push(lat[0]);
+                all_ns.extend(lat);
+            }
+            let wall = t_all.elapsed().as_secs_f64();
+            let stats = handle.shutdown();
+            let qps = all_ns.len() as f64 / wall.max(1e-9);
+            let p99 = percentile(&mut all_ns, 0.99);
+            let first_max = first_ns.iter().cloned().fold(0.0f64, f64::max);
+            let tag = match io {
+                IoModel::Threads => "threads",
+                IoModel::Reactor => "reactor",
+            };
+            eprintln!(
+                "serve1-scale[{tag} x{mult}]: {conns} conns / {SCALE_WORKERS} threads, \
+                 {} replies in {wall:.2}s ({qps:.0} qps), p99 {:.0} us, \
+                 worst first-reply {:.0} us, coalesced {}  [wall-clock; stderr only]",
+                all_ns.len(),
+                p99 / 1e3,
+                first_max / 1e3,
+                stats.coalesced,
+            );
+            results.push(summarize_ns(format!("serve1_scale/{tag}/conns_x{mult}/roundtrip"), all_ns));
+            results.push(summarize_ns(
+                format!("serve1_scale/{tag}/conns_x{mult}/first_reply"),
+                first_ns,
+            ));
+        }
+    }
+    if let Ok(path) = std::env::var("THOR_SERVE_BENCH_JSON") {
+        let json = Json::obj(vec![
+            ("schema_version", Json::Num(1.0)),
+            ("benches", Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+        ]);
+        match std::fs::write(&path, json.to_string()) {
+            Ok(()) => eprintln!("serve1-scale: wrote {} bench rows to {path}", results.len()),
+            Err(e) => eprintln!("serve1-scale: could not write {path}: {e}"),
+        }
+    }
+}
+
+fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    samples.sort_by(f64::total_cmp);
+    samples[((samples.len() as f64 * q) as usize).min(samples.len() - 1)]
+}
+
+fn summarize_ns(name: String, mut samples_ns: Vec<f64>) -> BenchResult {
+    samples_ns.sort_by(f64::total_cmp);
+    let n = samples_ns.len();
+    BenchResult {
+        name,
+        iters: n,
+        mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+        p50_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+        min_ns: samples_ns[0],
     }
 }

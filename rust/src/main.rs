@@ -44,6 +44,8 @@ fn specs() -> Vec<Spec> {
         Spec { name: "resume", takes_value: true, help: "serve: resume from a leader checkpoint instead of re-measuring (missing file = cold start)" },
         Spec { name: "job-deadline", takes_value: true, help: "serve: per-job straggler deadline in milliseconds; expired jobs are speculatively re-issued to a healthy same-class worker (default: off)" },
         Spec { name: "cache-cap", takes_value: true, help: "serve-estimates: bound the shared estimate cache to ~N entries, LRU-evicted (default 0 = unbounded)" },
+        Spec { name: "io-model", takes_value: true, help: "serve-estimates: serving core — reactor (readiness-driven event loop + compute pool, default) or threads (thread-per-connection, kept for one release)" },
+        Spec { name: "coalesce-max", takes_value: true, help: "serve-estimates: max pending requests a reactor compute worker drains into one coalesced GP solve (default 32; 1 disables coalescing)" },
         Spec { name: "all", takes_value: false, help: "exp: run every registered experiment" },
         Spec { name: "list", takes_value: false, help: "exp: list registered experiment ids" },
         Spec { name: "json", takes_value: true, help: "exp: write structured suite report to this path" },
@@ -268,12 +270,17 @@ fn main() -> Result<()> {
             }
             let families = store.len();
             let cache_cap = args.get_usize("cache-cap", 0)?;
+            let io_model =
+                thor::coordinator::IoModel::parse(args.get_str("io-model", "reactor"))?;
+            let coalesce_max = args.get_usize("coalesce-max", 32)?;
             let handle = thor::coordinator::EstimateServer::bind(addr, store)?
                 .with_cache_cap(cache_cap)
+                .with_io_model(io_model)
+                .with_coalesce_max(coalesce_max)
                 .start(threads)?;
             println!(
                 "serving estimates on {} ({families} family GPs from {n_artifacts} artifact(s); \
-                 newline-delimited JSON, message types est/est_batch)",
+                 io model {io_model:?}, newline-delimited JSON, message types est/est_batch)",
                 handle.addr()
             );
             let stats = handle.join();

@@ -548,6 +548,29 @@ pub fn estimate_batch_shared(
         .collect()
 }
 
+/// The reactor's micro-batch drain path: estimate several independent
+/// *units* (one unit = the queries of one protocol request — a single
+/// `est` is a one-query unit, an `est_batch` is a many-query unit)
+/// coalesced through **one** [`estimate_batch_shared`] call, then split
+/// back per unit.  This is what turns cross-connection coalescing on:
+/// same-`(device, family)` queries from different clients drained in
+/// one micro-batch share one `predict_raw_batch` call.
+///
+/// Bit-identity is inherited, not re-derived: `estimate_batch_shared`
+/// pins every individual answer to a standalone [`estimate`] regardless
+/// of batch composition, so flattening units together cannot perturb
+/// any reply.  Results come back unit-by-unit in unit order, each
+/// unit's answers in its own query order.
+pub fn estimate_units_shared(
+    store: &GpStore,
+    units: &[Vec<(&str, &ModelGraph)>],
+    cache: &SharedEstimateCache,
+) -> Vec<Vec<Result<Estimate, EstimateError>>> {
+    let flat: Vec<(&str, &ModelGraph)> = units.iter().flatten().copied().collect();
+    let mut answers = estimate_batch_shared(store, &flat, cache).into_iter();
+    units.iter().map(|u| answers.by_ref().take(u.len()).collect()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -821,6 +844,57 @@ mod tests {
             assert_eq!(r.energy_per_iter.to_bits(), direct.energy_per_iter.to_bits());
             assert_eq!(r.variance.to_bits(), direct.variance.to_bits());
         }
+    }
+
+    #[test]
+    fn unit_drain_is_bit_identical_and_splits_per_unit() {
+        // Three "connections" drained in one micro-batch: a single, a
+        // batch sharing families with it, and a single on another
+        // device.  Every answer must equal a standalone estimate()
+        // bit-for-bit, and errors must stay inside their own unit.
+        let wide = zoo::cnn5(&[8, 16, 32, 64], 16, 10);
+        let narrow = zoo::cnn5(&[4, 8, 16, 32], 16, 10);
+        let mut store = synthetic_store(&wide, "xavier", 10.0);
+        add_synthetic(&mut store, &wide, "tx2", 4.0);
+        let cache = SharedEstimateCache::new(4);
+        let units: Vec<Vec<(&str, &ModelGraph)>> = vec![
+            vec![("xavier", &wide)],
+            vec![("xavier", &narrow), ("oppo", &wide), ("tx2", &wide)],
+            vec![("tx2", &narrow)],
+        ];
+        let got = estimate_units_shared(&store, &units, &cache);
+        assert_eq!(got.len(), units.len());
+        for (unit, answers) in units.iter().zip(&got) {
+            assert_eq!(unit.len(), answers.len(), "unit arity preserved");
+            for ((device, model), a) in unit.iter().zip(answers) {
+                match estimate(&store, device, model) {
+                    Ok(direct) => {
+                        let a = a.as_ref().expect("unit answer");
+                        assert_eq!(a.energy_per_iter.to_bits(), direct.energy_per_iter.to_bits());
+                        assert_eq!(a.variance.to_bits(), direct.variance.to_bits());
+                    }
+                    Err(EstimateError::MissingFamily(_, dev)) => {
+                        assert!(
+                            matches!(a, Err(EstimateError::MissingFamily(_, ref d)) if *d == dev),
+                            "error must stay per-query: {a:?}"
+                        );
+                    }
+                }
+            }
+        }
+        // Empty units are legal (a drained request with zero queries)
+        // and must not shift the split.
+        let units2: Vec<Vec<(&str, &ModelGraph)>> =
+            vec![vec![], vec![("xavier", &wide)], vec![]];
+        let got2 = estimate_units_shared(&store, &units2, &cache);
+        assert_eq!(got2[0].len(), 0);
+        assert_eq!(got2[1].len(), 1);
+        assert_eq!(got2[2].len(), 0);
+        let direct = estimate(&store, "xavier", &wide).unwrap();
+        assert_eq!(
+            got2[1][0].as_ref().unwrap().energy_per_iter.to_bits(),
+            direct.energy_per_iter.to_bits()
+        );
     }
 
     #[test]

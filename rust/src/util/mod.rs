@@ -10,4 +10,5 @@ pub mod linalg;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sys;
 pub mod table;

@@ -1,0 +1,9 @@
+//! Thin OS-interface shims the repo would normally pull a crate for.
+//! Offline we have no `libc`/`mio`, so the handful of raw syscalls the
+//! reactor serving model needs (readiness polling, a wakeup pipe) live
+//! here behind a portable API — epoll on Linux, `poll(2)` on other unix
+//! ([`poll::Poller`]), and a stub that errors cleanly elsewhere.
+
+pub mod poll;
+
+pub use poll::{Event, Poller, WakePipe};

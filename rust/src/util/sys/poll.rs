@@ -1,0 +1,592 @@
+//! Readiness polling without `libc`/`mio`: a minimal [`Poller`] over
+//! raw-FFI `epoll` (Linux) with a portable `poll(2)` fallback on other
+//! unix, plus a [`WakePipe`] for waking a blocked wait from another
+//! thread.  Non-unix hosts get a stub whose constructor errors cleanly,
+//! so `--io-model reactor` degrades to a startup error there instead of
+//! a compile failure (`--io-model threads` remains fully portable).
+//!
+//! Semantics are deliberately the lowest common denominator the reactor
+//! needs: **level-triggered** readiness (an event repeats every wait
+//! until the condition is consumed), one interest set per fd, and a
+//! caller-chosen `u64` token per registration.  Error/hangup conditions
+//! are folded into `readable`/`writable` (and flagged via
+//! [`Event::hangup`]) so handlers discover them through the usual
+//! `read()`/`write()` return paths — the same convention mio and libuv
+//! settled on.
+
+use std::io;
+use std::time::Duration;
+
+/// File descriptor (matches `std::os::unix::io::RawFd` on unix; a dummy
+/// on other hosts so signatures stay portable).
+pub type Fd = i32;
+
+/// Extract the raw fd of a socket/pipe without the caller naming the
+/// unix-only `AsRawFd` trait (keeps the reactor compiling off-unix).
+#[cfg(unix)]
+pub fn fd_of<T: std::os::unix::io::AsRawFd>(t: &T) -> Fd {
+    t.as_raw_fd()
+}
+
+/// Non-unix stub: never reached at runtime ([`Poller::new`] errors
+/// first), but keeps call sites compiling.
+#[cfg(not(unix))]
+pub fn fd_of<T>(_t: &T) -> Fd {
+    -1
+}
+
+/// One readiness event from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token passed at registration.
+    pub token: u64,
+    /// Readable (includes EOF, peer hangup, and error conditions — a
+    /// `read()` will resolve them without blocking).
+    pub readable: bool,
+    /// Writable (includes error conditions — a `write()` will surface
+    /// them without blocking).
+    pub writable: bool,
+    /// The peer hung up or the fd errored; informational (the
+    /// readable/writable flags already route the handler correctly).
+    pub hangup: bool,
+}
+
+#[cfg(unix)]
+fn timeout_ms(t: Option<Duration>) -> i32 {
+    match t {
+        None => -1,
+        Some(d) if d.is_zero() => 0,
+        Some(d) => {
+            // Round sub-millisecond timeouts *up* so a short deadline
+            // polls once instead of busy-spinning at 0ms.
+            let ms = d.as_millis().max(1);
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linux: epoll.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{timeout_ms, Event, Fd};
+    use std::io;
+    use std::os::raw::c_int;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    /// Kernel ABI struct; packed on x86_64 (the one architecture where
+    /// the kernel's layout differs from natural C alignment).
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn cvt(ret: c_int) -> io::Result<c_int> {
+        if ret < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(ret)
+        }
+    }
+
+    fn mask(readable: bool, writable: bool) -> u32 {
+        let mut m = 0;
+        if readable {
+            m |= EPOLLIN | EPOLLRDHUP;
+        }
+        if writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub struct Poller {
+        epfd: Fd,
+        buf: Vec<EpollEvent>,
+    }
+
+    // The epoll fd is plain kernel state; moving it across threads is fine.
+    unsafe impl Send for Poller {}
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 256] })
+        }
+
+        fn ctl(&self, op: c_int, fd: Fd, token: u64, m: u32) -> io::Result<()> {
+            let mut ev = EpollEvent { events: m, data: token };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: Fd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, mask(r, w))
+        }
+
+        pub fn reregister(&mut self, fd: Fd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, mask(r, w))
+        }
+
+        pub fn deregister(&mut self, fd: Fd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let ms = timeout_ms(timeout);
+            let n = loop {
+                let r = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms)
+                };
+                if r >= 0 {
+                    break r as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+                // EINTR: retry (worst case we over-wait one timeout).
+            };
+            for i in 0..n {
+                let ev = self.buf[i];
+                let bits = ev.events;
+                let hup = bits & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0;
+                out.push(Event {
+                    token: ev.data,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                    hangup: hup,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Other unix: poll(2) over a registration table.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::{timeout_ms, Event, Fd};
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::time::Duration;
+
+    const POLLIN: c_short = 0x1;
+    const POLLOUT: c_short = 0x4;
+    const POLLERR: c_short = 0x8;
+    const POLLHUP: c_short = 0x10;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    struct Entry {
+        fd: Fd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    }
+
+    pub struct Poller {
+        entries: Vec<Entry>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { entries: Vec::new() })
+        }
+
+        pub fn register(&mut self, fd: Fd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            if self.entries.iter().any(|e| e.fd == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd registered"));
+            }
+            self.entries.push(Entry { fd, token, readable: r, writable: w });
+            Ok(())
+        }
+
+        pub fn reregister(&mut self, fd: Fd, token: u64, r: bool, w: bool) -> io::Result<()> {
+            let e = self
+                .entries
+                .iter_mut()
+                .find(|e| e.fd == fd)
+                .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "fd not registered"))?;
+            e.token = token;
+            e.readable = r;
+            e.writable = w;
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, fd: Fd) -> io::Result<()> {
+            let before = self.entries.len();
+            self.entries.retain(|e| e.fd != fd);
+            if self.entries.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = self
+                .entries
+                .iter()
+                .map(|e| PollFd {
+                    fd: e.fd,
+                    events: if e.readable { POLLIN } else { 0 }
+                        | if e.writable { POLLOUT } else { 0 },
+                    revents: 0,
+                })
+                .collect();
+            let ms = timeout_ms(timeout);
+            loop {
+                let r = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_uint, ms) };
+                if r >= 0 {
+                    break;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            }
+            for (pf, e) in fds.iter().zip(&self.entries) {
+                let bits = pf.revents;
+                if bits == 0 {
+                    continue;
+                }
+                let hup = bits & (POLLERR | POLLHUP) != 0;
+                out.push(Event {
+                    token: e.token,
+                    readable: bits & (POLLIN | POLLERR | POLLHUP) != 0,
+                    writable: bits & (POLLOUT | POLLERR | POLLHUP) != 0,
+                    hangup: hup,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Non-unix: constructor errors; nothing else is reachable.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(unix))]
+mod imp {
+    use super::{Event, Fd};
+    use std::io;
+    use std::time::Duration;
+
+    pub struct Poller;
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "readiness polling requires a unix host (epoll/poll)",
+            ))
+        }
+
+        pub fn register(&mut self, _: Fd, _: u64, _: bool, _: bool) -> io::Result<()> {
+            unreachable!("Poller::new always errors off-unix")
+        }
+
+        pub fn reregister(&mut self, _: Fd, _: u64, _: bool, _: bool) -> io::Result<()> {
+            unreachable!("Poller::new always errors off-unix")
+        }
+
+        pub fn deregister(&mut self, _: Fd) -> io::Result<()> {
+            unreachable!("Poller::new always errors off-unix")
+        }
+
+        pub fn wait(&mut self, _: &mut Vec<Event>, _: Option<Duration>) -> io::Result<()> {
+            unreachable!("Poller::new always errors off-unix")
+        }
+    }
+}
+
+pub use imp::Poller;
+
+// ---------------------------------------------------------------------------
+// WakePipe: a self-pipe for waking a blocked Poller::wait.
+// ---------------------------------------------------------------------------
+
+/// A non-blocking pipe whose read end is registered with the [`Poller`]:
+/// any thread calls [`WakePipe::wake`] to make a blocked `wait` return.
+/// Writes to a full pipe are dropped (a wake is already pending — the
+/// semantics are a saturating flag, not a counter), so `wake` never
+/// blocks and is safe from any thread.
+#[cfg(unix)]
+pub struct WakePipe {
+    r: Fd,
+    w: Fd,
+}
+
+#[cfg(unix)]
+mod wake_imp {
+    use super::{Fd, WakePipe};
+    use std::io;
+    use std::os::raw::c_int;
+
+    extern "C" {
+        fn close(fd: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+    }
+
+    #[cfg(target_os = "linux")]
+    fn make_pipe() -> io::Result<[Fd; 2]> {
+        extern "C" {
+            fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+        }
+        const O_NONBLOCK: c_int = 0o4000;
+        const O_CLOEXEC: c_int = 0o2000000;
+        let mut fds: [c_int; 2] = [-1, -1];
+        if unsafe { pipe2(fds.as_mut_ptr(), O_NONBLOCK | O_CLOEXEC) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(fds)
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    fn make_pipe() -> io::Result<[Fd; 2]> {
+        extern "C" {
+            fn pipe(fds: *mut c_int) -> c_int;
+            fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+        }
+        const F_SETFL: c_int = 4;
+        #[cfg(target_os = "macos")]
+        const O_NONBLOCK: c_int = 0x0004;
+        #[cfg(not(target_os = "macos"))]
+        const O_NONBLOCK: c_int = 0o4000;
+        let mut fds: [c_int; 2] = [-1, -1];
+        if unsafe { pipe(fds.as_mut_ptr()) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        for fd in fds {
+            if unsafe { fcntl(fd, F_SETFL, O_NONBLOCK) } < 0 {
+                let e = io::Error::last_os_error();
+                unsafe {
+                    close(fds[0]);
+                    close(fds[1]);
+                }
+                return Err(e);
+            }
+        }
+        Ok(fds)
+    }
+
+    impl WakePipe {
+        pub fn new() -> io::Result<WakePipe> {
+            let [r, w] = make_pipe()?;
+            Ok(WakePipe { r, w })
+        }
+
+        /// The end to register with the poller (read interest).
+        pub fn read_fd(&self) -> Fd {
+            self.r
+        }
+
+        /// Wake a blocked `wait`.  Never blocks; a full pipe means a
+        /// wake is already pending, which is all we need.
+        pub fn wake(&self) {
+            let buf = [1u8];
+            unsafe {
+                let _ = write(self.w, buf.as_ptr(), 1);
+            }
+        }
+
+        /// Consume pending wake bytes (call on the wake event, before
+        /// handling completions, so a wake arriving mid-drain re-arms).
+        pub fn drain(&self) {
+            let mut buf = [0u8; 64];
+            loop {
+                let n = unsafe { read(self.r, buf.as_mut_ptr(), buf.len()) };
+                if n <= 0 {
+                    break;
+                }
+            }
+        }
+    }
+
+    impl Drop for WakePipe {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.r);
+                close(self.w);
+            }
+        }
+    }
+}
+
+/// Non-unix stub (constructor errors, like [`Poller::new`]).
+#[cfg(not(unix))]
+pub struct WakePipe;
+
+#[cfg(not(unix))]
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        Err(io::Error::new(io::ErrorKind::Unsupported, "wake pipe requires a unix host"))
+    }
+
+    pub fn read_fd(&self) -> Fd {
+        -1
+    }
+
+    pub fn wake(&self) {}
+
+    pub fn drain(&self) {}
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    const SHORT: Duration = Duration::from_millis(500);
+
+    #[test]
+    fn wake_pipe_levels_and_drains() {
+        let mut p = Poller::new().unwrap();
+        let wp = WakePipe::new().unwrap();
+        p.register(wp.read_fd(), 7, true, false).unwrap();
+        let mut evs = Vec::new();
+
+        // Nothing pending: a zero timeout returns immediately, empty.
+        p.wait(&mut evs, Some(Duration::ZERO)).unwrap();
+        assert!(evs.is_empty());
+
+        // A wake (even several) makes wait return with the right token;
+        // level-triggered, so it repeats until drained.
+        wp.wake();
+        wp.wake();
+        p.wait(&mut evs, Some(SHORT)).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].readable);
+        p.wait(&mut evs, Some(SHORT)).unwrap();
+        assert!(!evs.is_empty(), "level-triggered: undrained pipe stays ready");
+        wp.drain();
+        p.wait(&mut evs, Some(Duration::ZERO)).unwrap();
+        assert!(evs.is_empty(), "drained pipe is quiet");
+    }
+
+    #[test]
+    fn socket_readable_and_writable_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        client.set_nonblocking(true).unwrap();
+
+        let mut p = Poller::new().unwrap();
+        // A fresh connected socket: writable, not readable.
+        p.register(fd_of(&client), 1, true, true).unwrap();
+        let mut evs = Vec::new();
+        p.wait(&mut evs, Some(SHORT)).unwrap();
+        assert!(evs.iter().any(|e| e.token == 1 && e.writable && !e.readable));
+
+        // Bytes from the peer flip it readable.
+        server.write_all(b"ping").unwrap();
+        server.flush().unwrap();
+        // Wait for readable (may need a few polls for loopback delivery).
+        let mut saw_readable = false;
+        for _ in 0..50 {
+            p.wait(&mut evs, Some(SHORT)).unwrap();
+            if evs.iter().any(|e| e.token == 1 && e.readable) {
+                saw_readable = true;
+                break;
+            }
+        }
+        assert!(saw_readable, "peer bytes never became readable");
+
+        // Interest is dynamic: read-only registration stops write events.
+        p.reregister(fd_of(&client), 1, true, false).unwrap();
+        p.wait(&mut evs, Some(SHORT)).unwrap();
+        assert!(evs.iter().all(|e| !e.writable || e.hangup));
+        let mut buf = [0u8; 8];
+        let mut c = &client;
+        assert_eq!(c.read(&mut buf).unwrap(), 4);
+
+        // Deregistered fds report nothing.
+        p.deregister(fd_of(&client)).unwrap();
+        server.write_all(b"more").unwrap();
+        p.wait(&mut evs, Some(Duration::from_millis(50))).unwrap();
+        assert!(evs.iter().all(|e| e.token != 1));
+    }
+
+    #[test]
+    fn hangup_reports_readable_for_eof_discovery() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        client.set_nonblocking(true).unwrap();
+        let mut p = Poller::new().unwrap();
+        p.register(fd_of(&client), 3, true, false).unwrap();
+        drop(server); // peer closes
+        let mut evs = Vec::new();
+        let mut saw = false;
+        for _ in 0..50 {
+            p.wait(&mut evs, Some(SHORT)).unwrap();
+            if let Some(e) = evs.iter().find(|e| e.token == 3) {
+                assert!(e.readable, "hangup must be discoverable via read()");
+                saw = true;
+                break;
+            }
+        }
+        assert!(saw, "peer close never surfaced");
+        let mut c = &client;
+        let mut buf = [0u8; 8];
+        assert_eq!(c.read(&mut buf).unwrap(), 0, "EOF");
+    }
+}

@@ -1,27 +1,36 @@
 //! Integration tests for the estimation-serving daemon
 //! (`thor serve-estimates` / [`thor::coordinator::estimate_server`]):
-//! the serving tier's two load-bearing promises, checked over real
-//! loopback sockets.
+//! the serving tier's load-bearing promises, checked over real loopback
+//! sockets **under both io models** ([`IoModel::Reactor`], the default,
+//! and [`IoModel::Threads`], the legacy thread-per-connection core).
 //!
 //! 1. **Bit-identity under concurrency** — any number of concurrent
 //!    clients, interleaving single and batch requests, receive answers
 //!    bit-for-bit equal to a direct local `estimate()` against the same
-//!    store.  The shared cache, batch coalescing, and thread scheduling
-//!    must never perturb a single ULP.
+//!    store.  The shared cache, batch coalescing (including the
+//!    reactor's cross-connection micro-batches), and scheduling must
+//!    never perturb a single ULP.
 //! 2. **Disconnect robustness** — a client dying mid-request (half a
 //!    line, garbage framing, or a silent drop) ends only its own
-//!    connection: the accept loop keeps serving and the shared cache is
+//!    connection: the daemon keeps serving and the shared cache is
 //!    neither poisoned nor corrupted (later answers stay bit-identical).
 //! 3. **Deadline hardening** ([`thor::coordinator::ServeTuning`]) — a
-//!    slow-loris client trickling bytes cannot hold a worker thread past
-//!    the line deadline (one `est_err`, then the drop), and a connection
-//!    idling past the idle timeout is reaped so its thread returns to
-//!    the accept loop.
+//!    slow-loris client trickling bytes cannot stall service past the
+//!    line deadline (one `est_err`, then the drop), and a connection
+//!    idling past the idle timeout is reaped.  Both behaviors are
+//!    identical across io models.
+//! 4. **Reactor extras** — pipelining (many in-flight correlation ids
+//!    on one connection), backpressure on clients that pipeline without
+//!    reading replies (`max_inflight` read gating, no reply lost), and
+//!    fd-stability across repeated start/shutdown cycles (the reactor's
+//!    stop-flag + wake-pipe shutdown makes no connections and leaks no
+//!    fds).
 
 use std::time::Duration;
 
 use thor::coordinator::{
-    slow_loris_send, EstimateClient, EstimateServer, EstimateServerHandle, Msg, ServeTuning,
+    slow_loris_send, EstimateClient, EstimateServer, EstimateServerHandle, IoModel, Msg,
+    ServeTuning,
 };
 use thor::model::spec::parse_spec;
 use thor::model::zoo;
@@ -31,6 +40,8 @@ use thor::thor::store::GpStore;
 use thor::thor::{Thor, ThorConfig};
 use thor::util::json::Json;
 
+const BOTH_MODELS: [IoModel; 2] = [IoModel::Reactor, IoModel::Threads];
+
 /// Deterministic fitted store covering the cnn5 families on one device.
 fn profiled_store(device: &str, seed: u64) -> GpStore {
     let profile = devices::by_name(device).expect("device");
@@ -38,6 +49,12 @@ fn profiled_store(device: &str, seed: u64) -> GpStore {
     let mut thor = Thor::new(ThorConfig::quick());
     thor.profile_local(&mut dev, &zoo::cnn5(&[32, 64, 128, 256], 16, 10));
     thor.store
+}
+
+/// Rebuild an identical store from its JSON artifact (profiling is the
+/// expensive step; each io-model pass gets its own copy of one fit).
+fn reload(json: &str) -> GpStore {
+    GpStore::from_json(&Json::parse(json).unwrap()).expect("reload store")
 }
 
 const SPECS: [&str; 4] =
@@ -54,111 +71,142 @@ fn expected_bits(store: &GpStore, device: &str) -> Vec<(u64, u64)> {
         .collect()
 }
 
-fn start_daemon(store: GpStore, threads: usize) -> EstimateServerHandle {
-    EstimateServer::bind("127.0.0.1:0", store).unwrap().start(threads).unwrap()
+fn start_daemon(store: GpStore, threads: usize, io: IoModel) -> EstimateServerHandle {
+    EstimateServer::bind("127.0.0.1:0", store).unwrap().with_io_model(io).start(threads).unwrap()
+}
+
+fn start_tuned(
+    store: GpStore,
+    threads: usize,
+    io: IoModel,
+    tuning: ServeTuning,
+) -> EstimateServerHandle {
+    EstimateServer::bind("127.0.0.1:0", store)
+        .unwrap()
+        .with_io_model(io)
+        .with_tuning(tuning)
+        .start(threads)
+        .unwrap()
 }
 
 #[test]
-fn six_concurrent_clients_get_bit_identical_answers() {
+fn six_concurrent_clients_get_bit_identical_answers_under_both_io_models() {
     const CLIENTS: usize = 6;
     const ROUNDS: usize = 10;
     let store = profiled_store("xavier", 21);
     let expected = expected_bits(&store, "xavier");
-    let handle = start_daemon(store, CLIENTS);
-    let addr = handle.addr();
+    let json = store.to_json().to_string();
+    for io in BOTH_MODELS {
+        let handle = start_daemon(reload(&json), CLIENTS, io);
+        let addr = handle.addr();
 
-    let mut joins = Vec::new();
-    for c in 0..CLIENTS {
-        let expected = expected.clone();
-        joins.push(std::thread::spawn(move || {
-            let mut client = EstimateClient::connect(&addr).expect("connect");
-            let batch: Vec<(String, String)> =
-                SPECS.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
-            for r in 0..ROUNDS {
-                // Start each client at a different spec so the cache
-                // sees genuinely interleaved access patterns.
-                for i in 0..SPECS.len() {
-                    let si = (c + r + i) % SPECS.len();
-                    let (e, v) = client.estimate("xavier", SPECS[si]).expect("estimate");
-                    assert_eq!(
-                        (e.to_bits(), v.to_bits()),
-                        expected[si],
-                        "client {c} round {r} spec {si}: daemon answer diverged"
-                    );
+        let mut joins = Vec::new();
+        for c in 0..CLIENTS {
+            let expected = expected.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut client = EstimateClient::connect(&addr).expect("connect");
+                let batch: Vec<(String, String)> =
+                    SPECS.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
+                for r in 0..ROUNDS {
+                    // Start each client at a different spec so the cache
+                    // sees genuinely interleaved access patterns.
+                    for i in 0..SPECS.len() {
+                        let si = (c + r + i) % SPECS.len();
+                        let (e, v) = client.estimate("xavier", SPECS[si]).expect("estimate");
+                        assert_eq!(
+                            (e.to_bits(), v.to_bits()),
+                            expected[si],
+                            "[{io:?}] client {c} round {r} spec {si}: daemon answer diverged"
+                        );
+                    }
+                    let got = client.estimate_batch(&batch).expect("batch");
+                    for (si, g) in got.iter().enumerate() {
+                        let (e, v) = g.as_ref().expect("batch entry");
+                        assert_eq!(
+                            (e.to_bits(), v.to_bits()),
+                            expected[si],
+                            "[{io:?}] batch spec {si}"
+                        );
+                    }
                 }
-                let got = client.estimate_batch(&batch).expect("batch");
-                for (si, g) in got.iter().enumerate() {
-                    let (e, v) = g.as_ref().expect("batch entry");
-                    assert_eq!((e.to_bits(), v.to_bits()), expected[si], "batch spec {si}");
-                }
-            }
-        }));
+            }));
+        }
+        for j in joins {
+            j.join().expect("client thread");
+        }
+        let stats = handle.shutdown();
+        // >= not ==: a shutdown-unblocking dummy connect can in principle
+        // be counted if a thread-model accept races the stop-flag store.
+        assert!(
+            stats.connections >= CLIENTS as u64,
+            "[{io:?}] {} connections",
+            stats.connections
+        );
+        assert_eq!(stats.requests, (CLIENTS * ROUNDS * (SPECS.len() + 1)) as u64, "[{io:?}]");
+        assert_eq!(stats.errors, 0, "[{io:?}]");
     }
-    for j in joins {
-        j.join().expect("client thread");
-    }
-    let stats = handle.shutdown();
-    // >= not ==: a shutdown-unblocking dummy connect can in principle be
-    // counted if a worker's accept races the (relaxed) stop-flag store.
-    assert!(stats.connections >= CLIENTS as u64, "{} connections", stats.connections);
-    assert_eq!(stats.requests, (CLIENTS * ROUNDS * (SPECS.len() + 1)) as u64);
-    assert_eq!(stats.errors, 0);
 }
 
 #[test]
 fn killed_mid_request_clients_cannot_wedge_the_daemon_or_poison_the_cache() {
     let store = profiled_store("xavier", 22);
     let expected = expected_bits(&store, "xavier");
-    let handle = start_daemon(store, 3);
-    let addr = handle.addr();
+    let json = store.to_json().to_string();
+    for io in BOTH_MODELS {
+        let handle = start_daemon(reload(&json), 3, io);
+        let addr = handle.addr();
 
-    // Warm the cache through a well-behaved client first.
-    let mut good = EstimateClient::connect(&addr).unwrap();
-    let (e, v) = good.estimate("xavier", SPECS[0]).unwrap();
-    assert_eq!((e.to_bits(), v.to_bits()), expected[0]);
+        // Warm the cache through a well-behaved client first.
+        let mut good = EstimateClient::connect(&addr).unwrap();
+        let (e, v) = good.estimate("xavier", SPECS[0]).unwrap();
+        assert_eq!((e.to_bits(), v.to_bits()), expected[0], "[{io:?}]");
 
-    // Abuse the daemon in every way a dying client can.
-    {
-        // Half a request line, then a silent drop (no newline ever comes).
-        let mut half = EstimateClient::connect(&addr).unwrap();
-        half.send_raw(b"{\"type\":\"est\",\"id\":1,\"dev").unwrap();
-        drop(half);
-    }
-    {
-        // Garbage framing: one error reply, then the server hangs up.
-        let mut garbage = EstimateClient::connect(&addr).unwrap();
-        garbage.send_raw(b"%%% not json at all %%%\n").unwrap();
-        match garbage.read_reply().unwrap() {
-            Msg::EstimateError { id: 0, .. } => {}
-            other => panic!("expected a framing error reply, got {other:?}"),
+        // Abuse the daemon in every way a dying client can.
+        {
+            // Half a request line, then a silent drop (no newline ever comes).
+            let mut half = EstimateClient::connect(&addr).unwrap();
+            half.send_raw(b"{\"type\":\"est\",\"id\":1,\"dev").unwrap();
+            drop(half);
         }
-        assert!(garbage.read_reply().is_err(), "connection must close after framing break");
-    }
-    {
-        // A valid request whose reply the client never reads.
-        let mut rude = EstimateClient::connect(&addr).unwrap();
-        rude.send_raw(
-            b"{\"type\":\"est\",\"id\":7,\"device\":\"xavier\",\"model\":\"cnn5:8,16,32,64:16\"}\n",
-        )
-        .unwrap();
-        drop(rude);
-    }
+        {
+            // Garbage framing: one error reply, then the server hangs up.
+            let mut garbage = EstimateClient::connect(&addr).unwrap();
+            garbage.send_raw(b"%%% not json at all %%%\n").unwrap();
+            match garbage.read_reply().unwrap() {
+                Msg::EstimateError { id: 0, .. } => {}
+                other => panic!("[{io:?}] expected a framing error reply, got {other:?}"),
+            }
+            assert!(
+                garbage.read_reply().is_err(),
+                "[{io:?}] connection must close after framing break"
+            );
+        }
+        {
+            // A valid request whose reply the client never reads.
+            let mut rude = EstimateClient::connect(&addr).unwrap();
+            rude.send_raw(
+                b"{\"type\":\"est\",\"id\":7,\"device\":\"xavier\",\"model\":\"cnn5:8,16,32,64:16\"}\n",
+            )
+            .unwrap();
+            drop(rude);
+        }
 
-    // The daemon must still serve — the original connection and fresh
-    // ones — with answers still bit-identical to the pre-abuse truth.
-    for (si, want) in expected.iter().enumerate() {
-        let (e, v) = good.estimate("xavier", SPECS[si]).unwrap();
-        assert_eq!((e.to_bits(), v.to_bits()), *want, "surviving connection, spec {si}");
+        // The daemon must still serve — the original connection and fresh
+        // ones — with answers still bit-identical to the pre-abuse truth.
+        for (si, want) in expected.iter().enumerate() {
+            let (e, v) = good.estimate("xavier", SPECS[si]).unwrap();
+            assert_eq!((e.to_bits(), v.to_bits()), *want, "[{io:?}] surviving conn, spec {si}");
+        }
+        drop(good);
+        for (si, want) in expected.iter().enumerate() {
+            let mut fresh = EstimateClient::connect(&addr).unwrap();
+            let (e, v) = fresh.estimate("xavier", SPECS[si]).unwrap();
+            assert_eq!((e.to_bits(), v.to_bits()), *want, "[{io:?}] fresh conn, spec {si}");
+        }
+        let stats = handle.shutdown();
+        assert!(stats.errors >= 1, "[{io:?}] the garbage line must have been counted");
+        assert!(!handle_is_wedged(stats.requests), "[{io:?}] daemon stopped serving requests");
     }
-    drop(good);
-    for (si, want) in expected.iter().enumerate() {
-        let mut fresh = EstimateClient::connect(&addr).unwrap();
-        let (e, v) = fresh.estimate("xavier", SPECS[si]).unwrap();
-        assert_eq!((e.to_bits(), v.to_bits()), *want, "fresh connection, spec {si}");
-    }
-    let stats = handle.shutdown();
-    assert!(stats.errors >= 1, "the garbage line must have been counted");
-    assert!(!handle_is_wedged(stats.requests), "daemon stopped serving requests");
 }
 
 /// Trivial readability helper: by the time shutdown returns we must have
@@ -172,9 +220,9 @@ fn swap_store_under_concurrent_load_never_serves_torn_answers() {
     // Hot reload while six clients hammer the daemon: every reply must
     // come entirely from one store generation — the old or the new —
     // never a mix.  Single answers must match one generation bit-for-bit
-    // and a coalesced batch must be all-old or all-new (the
-    // generation-stamped cache makes a torn batch the failure mode this
-    // test exists to catch).
+    // and a coalesced batch must be all-old or all-new; the reactor's
+    // one-snapshot-per-micro-batch rule makes this hold even when
+    // queries from several connections share a GP solve.
     const CLIENTS: usize = 6;
     const ROUNDS: usize = 30;
     const SWAPS: usize = 40;
@@ -190,134 +238,274 @@ fn swap_store_under_concurrent_load_never_serves_torn_answers() {
     // path.
     let json_a = store_a.to_json().to_string();
     let json_b = store_b.to_json().to_string();
-    let reload = |s: &str| GpStore::from_json(&Json::parse(s).unwrap()).expect("reload store");
 
-    let handle = start_daemon(store_a, CLIENTS);
-    let addr = handle.addr();
+    for io in BOTH_MODELS {
+        let handle = start_daemon(reload(&json_a), CLIENTS, io);
+        let addr = handle.addr();
 
-    std::thread::scope(|scope| {
-        for c in 0..CLIENTS {
-            let (bits_a, bits_b) = (&bits_a, &bits_b);
-            scope.spawn(move || {
-                let mut client = EstimateClient::connect(&addr).expect("connect");
-                let batch: Vec<(String, String)> =
-                    SPECS.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
-                for r in 0..ROUNDS {
-                    for i in 0..SPECS.len() {
-                        let si = (c + r + i) % SPECS.len();
-                        let (e, v) = client.estimate("xavier", SPECS[si]).expect("estimate");
-                        let got = (e.to_bits(), v.to_bits());
+        std::thread::scope(|scope| {
+            for c in 0..CLIENTS {
+                let (bits_a, bits_b) = (&bits_a, &bits_b);
+                scope.spawn(move || {
+                    let mut client = EstimateClient::connect(&addr).expect("connect");
+                    let batch: Vec<(String, String)> =
+                        SPECS.iter().map(|s| ("xavier".to_string(), s.to_string())).collect();
+                    for r in 0..ROUNDS {
+                        for i in 0..SPECS.len() {
+                            let si = (c + r + i) % SPECS.len();
+                            let (e, v) = client.estimate("xavier", SPECS[si]).expect("estimate");
+                            let got = (e.to_bits(), v.to_bits());
+                            assert!(
+                                got == bits_a[si] || got == bits_b[si],
+                                "[{io:?}] client {c} round {r} spec {si}: answer from neither \
+                                 generation"
+                            );
+                        }
+                        let got = client.estimate_batch(&batch).expect("batch");
+                        let bits: Vec<(u64, u64)> = got
+                            .iter()
+                            .map(|g| {
+                                let (e, v) = g.as_ref().expect("batch entry");
+                                (e.to_bits(), v.to_bits())
+                            })
+                            .collect();
                         assert!(
-                            got == bits_a[si] || got == bits_b[si],
-                            "client {c} round {r} spec {si}: answer from neither generation"
+                            bits == *bits_a || bits == *bits_b,
+                            "[{io:?}] client {c} round {r}: torn batch mixes store \
+                             generations: {bits:?}"
                         );
                     }
-                    let got = client.estimate_batch(&batch).expect("batch");
-                    let bits: Vec<(u64, u64)> = got
-                        .iter()
-                        .map(|g| {
-                            let (e, v) = g.as_ref().expect("batch entry");
-                            (e.to_bits(), v.to_bits())
-                        })
-                        .collect();
-                    assert!(
-                        bits == *bits_a || bits == *bits_b,
-                        "client {c} round {r}: torn batch mixes store generations: {bits:?}"
-                    );
-                }
-            });
-        }
-        // The swapper, racing the clients: alternate B/A reloads.
-        for s in 0..SWAPS {
-            handle.swap_store(reload(if s % 2 == 0 { &json_b } else { &json_a }));
-            std::thread::yield_now();
-        }
-    });
-    let stats = handle.shutdown();
-    assert_eq!(stats.errors, 0, "swapping under load surfaced request errors");
-    assert_eq!(stats.requests, (CLIENTS * ROUNDS * (SPECS.len() + 1)) as u64);
+                });
+            }
+            // The swapper, racing the clients: alternate B/A reloads.
+            for s in 0..SWAPS {
+                handle.swap_store(reload(if s % 2 == 0 { &json_b } else { &json_a }));
+                std::thread::yield_now();
+            }
+        });
+        let stats = handle.shutdown();
+        assert_eq!(stats.errors, 0, "[{io:?}] swapping under load surfaced request errors");
+        assert_eq!(stats.requests, (CLIENTS * ROUNDS * (SPECS.len() + 1)) as u64, "[{io:?}]");
+    }
 }
 
 #[test]
 fn shutdown_message_is_a_polite_close_not_an_error() {
     let store = profiled_store("xavier", 23);
-    let handle = start_daemon(store, 2);
-    let mut client = EstimateClient::connect(&handle.addr()).unwrap();
-    client.send_raw(Msg::Shutdown.encode().as_bytes()).unwrap();
-    assert!(client.read_reply().is_err(), "server should close after Shutdown");
-    drop(client);
-    let stats = handle.shutdown();
-    assert_eq!(stats.errors, 0);
+    let json = store.to_json().to_string();
+    for io in BOTH_MODELS {
+        let handle = start_daemon(reload(&json), 2, io);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        client.send_raw(Msg::Shutdown.encode().as_bytes()).unwrap();
+        assert!(client.read_reply().is_err(), "[{io:?}] server should close after Shutdown");
+        drop(client);
+        let stats = handle.shutdown();
+        assert_eq!(stats.errors, 0, "[{io:?}]");
+    }
 }
 
 #[test]
-fn slow_loris_client_cannot_hold_a_worker_past_the_line_deadline() {
+fn slow_loris_client_cannot_stall_service_past_the_line_deadline() {
     let store = profiled_store("xavier", 24);
     let expected = expected_bits(&store, "xavier");
+    let json = store.to_json().to_string();
     let tuning = ServeTuning {
         line_timeout: Duration::from_millis(200),
         poll: Duration::from_millis(25),
         ..ServeTuning::default()
     };
-    // ONE worker thread: if the loris held it past the deadline, the
-    // healthy client below could never be served.
-    let handle =
-        EstimateServer::bind("127.0.0.1:0", store).unwrap().with_tuning(tuning).start(1).unwrap();
-    let addr = handle.addr();
+    for io in BOTH_MODELS {
+        // ONE serving thread: under the thread model, if the loris held
+        // it past the deadline the healthy client below could never be
+        // served; under the reactor the event loop must cut the loris at
+        // the deadline while serving others throughout.
+        let handle = start_tuned(reload(&json), 1, io, tuning);
+        let addr = handle.addr();
 
-    // A valid request trickled at 50ms/byte — it cannot complete its
-    // line within the 200ms deadline, so the server must cut it off.
-    const REQ: &[u8] =
-        b"{\"type\":\"est\",\"id\":1,\"device\":\"xavier\",\"model\":\"cnn5:8,16,32,64:16\"}\n";
-    let loris = std::thread::spawn(move || {
-        let mut stream = std::net::TcpStream::connect(addr).expect("loris connect");
-        slow_loris_send(&mut stream, REQ, Duration::from_millis(50))
-    });
-    // Let the loris win the single worker's accept first.
-    std::thread::sleep(Duration::from_millis(50));
+        // A valid request trickled at 50ms/byte — it cannot complete its
+        // line within the 200ms deadline, so the server must cut it off.
+        const REQ: &[u8] =
+            b"{\"type\":\"est\",\"id\":1,\"device\":\"xavier\",\"model\":\"cnn5:8,16,32,64:16\"}\n";
+        let loris = std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).expect("loris connect");
+            slow_loris_send(&mut stream, REQ, Duration::from_millis(50))
+        });
+        // Let the loris win the single worker's accept first.
+        std::thread::sleep(Duration::from_millis(50));
 
-    // The healthy client queues behind the loris on the one worker; it
-    // gets served if and only if the loris is dropped at the deadline.
-    let mut client = EstimateClient::connect(&addr).expect("healthy connect");
-    let (e, v) = client.estimate("xavier", SPECS[0]).expect("healthy estimate");
-    assert_eq!((e.to_bits(), v.to_bits()), expected[0]);
+        // The healthy client gets served if and only if the loris cannot
+        // monopolize the serving core.
+        let mut client = EstimateClient::connect(&addr).expect("healthy connect");
+        let (e, v) = client.estimate("xavier", SPECS[0]).expect("healthy estimate");
+        assert_eq!((e.to_bits(), v.to_bits()), expected[0], "[{io:?}]");
 
-    let sent = loris.join().expect("loris thread");
-    assert!(sent < REQ.len(), "loris was never cut off (sent all {sent} bytes)");
-    drop(client);
-    let stats = handle.shutdown();
-    assert!(stats.errors >= 1, "the stalled line must be answered with one est_err: {stats:?}");
+        let sent = loris.join().expect("loris thread");
+        assert!(sent < REQ.len(), "[{io:?}] loris was never cut off (sent all {sent} bytes)");
+        drop(client);
+        let stats = handle.shutdown();
+        assert!(
+            stats.errors >= 1,
+            "[{io:?}] the stalled line must be answered with one est_err: {stats:?}"
+        );
+    }
 }
 
 #[test]
 fn idle_connections_are_reaped_and_the_daemon_keeps_serving() {
     let store = profiled_store("xavier", 25);
     let expected = expected_bits(&store, "xavier");
+    let json = store.to_json().to_string();
     let tuning = ServeTuning {
         idle_timeout: Duration::from_millis(150),
         poll: Duration::from_millis(25),
         ..ServeTuning::default()
     };
-    let handle =
-        EstimateServer::bind("127.0.0.1:0", store).unwrap().with_tuning(tuning).start(2).unwrap();
+    for io in BOTH_MODELS {
+        let handle = start_tuned(reload(&json), 2, io, tuning);
 
-    // One served request, then silence past the idle timeout.
-    let mut client = EstimateClient::connect(&handle.addr()).unwrap();
-    let (e, v) = client.estimate("xavier", SPECS[0]).unwrap();
-    assert_eq!((e.to_bits(), v.to_bits()), expected[0]);
-    std::thread::sleep(Duration::from_millis(400));
-    assert!(
-        client.estimate("xavier", SPECS[0]).is_err(),
-        "idle connection should have been reaped"
-    );
-    // The reap returned its worker to the accept loop: fresh
-    // connections serve bit-identical answers.
-    let mut fresh = EstimateClient::connect(&handle.addr()).unwrap();
-    let (e, v) = fresh.estimate("xavier", SPECS[1]).unwrap();
-    assert_eq!((e.to_bits(), v.to_bits()), expected[1]);
-    drop(fresh);
-    drop(client);
+        // One served request, then silence past the idle timeout.
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        let (e, v) = client.estimate("xavier", SPECS[0]).unwrap();
+        assert_eq!((e.to_bits(), v.to_bits()), expected[0], "[{io:?}]");
+        std::thread::sleep(Duration::from_millis(400));
+        assert!(
+            client.estimate("xavier", SPECS[0]).is_err(),
+            "[{io:?}] idle connection should have been reaped"
+        );
+        // The reap freed serving capacity: fresh connections serve
+        // bit-identical answers.
+        let mut fresh = EstimateClient::connect(&handle.addr()).unwrap();
+        let (e, v) = fresh.estimate("xavier", SPECS[1]).unwrap();
+        assert_eq!((e.to_bits(), v.to_bits()), expected[1], "[{io:?}]");
+        drop(fresh);
+        drop(client);
+        let stats = handle.shutdown();
+        assert!(stats.reaped >= 1, "[{io:?}] idle reap never fired: {stats:?}");
+        assert_eq!(stats.errors, 0, "[{io:?}] an idle reap is silent, not an error");
+    }
+}
+
+#[test]
+fn pipelined_client_matches_64_in_flight_replies_by_correlation_id() {
+    // One connection, 64 requests fired before any reply is read.  The
+    // reactor may answer out of send order (micro-batches complete on
+    // any compute worker); the contract is that every reply carries its
+    // request's correlation id and the right bits for *that* id's spec.
+    let store = profiled_store("xavier", 26);
+    let expected = expected_bits(&store, "xavier");
+    let json = store.to_json().to_string();
+    const IN_FLIGHT: usize = 64;
+    for io in BOTH_MODELS {
+        let handle = start_daemon(reload(&json), 2, io);
+        let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+        let mut id_spec = std::collections::HashMap::new();
+        for i in 0..IN_FLIGHT {
+            let si = i % SPECS.len();
+            let id = client.submit("xavier", SPECS[si]).expect("submit");
+            assert!(id_spec.insert(id, si).is_none(), "correlation ids must be unique");
+        }
+        for _ in 0..IN_FLIGHT {
+            let (id, outcome) = client.recv_single().expect("recv");
+            let si = *id_spec.get(&id).expect("reply id matches a submitted request");
+            let (e, v) = outcome.expect("pipelined estimate");
+            assert_eq!(
+                (e.to_bits(), v.to_bits()),
+                expected[si],
+                "[{io:?}] pipelined reply id {id} (spec {si}) diverged"
+            );
+            id_spec.remove(&id);
+        }
+        assert!(id_spec.is_empty(), "[{io:?}] every submitted id must be answered exactly once");
+        drop(client);
+        let stats = handle.shutdown();
+        assert_eq!(stats.requests, IN_FLIGHT as u64, "[{io:?}]");
+        assert_eq!(stats.errors, 0, "[{io:?}]");
+    }
+}
+
+#[test]
+fn unread_reply_backpressure_gates_the_rude_client_without_starving_the_polite_one() {
+    // Reactor-specific: a client that pipelines heavily while never
+    // reading replies gets read-gated (max_inflight + write_highwater)
+    // instead of ballooning server memory or wedging the loop.  A
+    // polite client on the same daemon stays served throughout, and
+    // when the rude client finally drains, every reply is present,
+    // correct, and matched by correlation id.  (The backlog is sized to
+    // fit default kernel socket buffers: the rude client's blocking
+    // submit loop must never deadlock against its own unread replies.)
+    const RUDE_REQUESTS: usize = 512;
+    let store = profiled_store("xavier", 27);
+    let expected = expected_bits(&store, "xavier");
+    let tuning = ServeTuning {
+        max_inflight: 8,
+        write_highwater: 4096,
+        poll: Duration::from_millis(25),
+        ..ServeTuning::default()
+    };
+    let handle = start_tuned(store, 2, IoModel::Reactor, tuning);
+    let addr = handle.addr();
+
+    let mut rude = EstimateClient::connect(&addr).unwrap();
+    let mut id_spec = std::collections::HashMap::new();
+    for i in 0..RUDE_REQUESTS {
+        let si = i % SPECS.len();
+        let id = rude.submit("xavier", SPECS[si]).expect("rude submit");
+        id_spec.insert(id, si);
+    }
+
+    // While the rude backlog is pending, a polite client must be served
+    // promptly and bit-identically.
+    let mut polite = EstimateClient::connect(&addr).unwrap();
+    for r in 0..20 {
+        let si = r % SPECS.len();
+        let (e, v) = polite.estimate("xavier", SPECS[si]).expect("polite estimate");
+        assert_eq!((e.to_bits(), v.to_bits()), expected[si], "polite round {r}");
+    }
+    drop(polite);
+
+    // Now drain: all RUDE_REQUESTS replies arrive, each correct for the
+    // id it carries.
+    for _ in 0..RUDE_REQUESTS {
+        let (id, outcome) = rude.recv_single().expect("rude recv");
+        let si = id_spec.remove(&id).expect("reply id matches a submitted request");
+        let (e, v) = outcome.expect("rude estimate");
+        assert_eq!((e.to_bits(), v.to_bits()), expected[si], "rude reply id {id}");
+    }
+    assert!(id_spec.is_empty(), "every rude request must be answered exactly once");
+    drop(rude);
     let stats = handle.shutdown();
-    assert!(stats.reaped >= 1, "idle reap never fired: {stats:?}");
-    assert_eq!(stats.errors, 0, "an idle reap is silent, not an error");
+    assert_eq!(stats.requests, (RUDE_REQUESTS + 20) as u64);
+    assert_eq!(stats.errors, 0);
+}
+
+/// The reactor shutdown fix: stop-flag + wake pipe, no dummy connects.
+/// 100 start/shutdown cycles must hold the process fd count flat —
+/// every cycle's listener, epoll fd, pipe pair, and any accepted
+/// connection are all closed on shutdown.
+#[cfg(target_os = "linux")]
+#[test]
+fn reactor_shutdown_does_not_leak_fds_across_100_cycles() {
+    fn open_fds() -> usize {
+        std::fs::read_dir("/proc/self/fd").expect("procfs").count()
+    }
+    let store = profiled_store("xavier", 28);
+    let expected = expected_bits(&store, "xavier");
+    let json = store.to_json().to_string();
+    let before = open_fds();
+    for cycle in 0..100 {
+        let handle = start_daemon(reload(&json), 1, IoModel::Reactor);
+        // Exercise accept + serve on a sample of cycles so the fd
+        // accounting covers live connections, not just idle daemons.
+        if cycle % 10 == 0 {
+            let mut client = EstimateClient::connect(&handle.addr()).unwrap();
+            let (e, v) = client.estimate("xavier", SPECS[0]).unwrap();
+            assert_eq!((e.to_bits(), v.to_bits()), expected[0], "cycle {cycle}");
+        }
+        handle.shutdown();
+    }
+    let after = open_fds();
+    assert!(
+        after <= before + 8,
+        "fd count grew across 100 reactor cycles: {before} -> {after}"
+    );
 }
